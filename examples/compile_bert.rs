@@ -1,0 +1,90 @@
+//! End-to-end driver (paper §IV-B): compile a real large model with both
+//! cost models and compare throughput — the headline experiment.
+//!
+//! Partitions BERT-large into fabric-sized subgraphs (paper footnote 1),
+//! anneals each under (a) the heuristic baseline and (b) the trained GNN,
+//! then measures everything with the simulator.
+//!
+//! Run after `examples/dataset_and_train.rs` (or pass `--ckpt`):
+//!   cargo run --release --example compile_bert -- --blocks 2
+//! `--blocks N` truncates BERT to N transformer blocks for a fast demo;
+//! omit it for all 24 (the full paper configuration).
+
+use std::sync::Arc;
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig};
+use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
+use rdacost::dfg::builders;
+use rdacost::placer::AnnealParams;
+use rdacost::runtime::Engine;
+use rdacost::train::ParamStore;
+use rdacost::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let seq = args.get_u64("seq", 32);
+    let graph = match args.get("blocks") {
+        Some(_) => builders::transformer_public(
+            "bert-large",
+            args.get_u64("blocks", 2),
+            seq,
+            1024,
+            4096,
+            16,
+        ),
+        None => builders::bert_large(seq),
+    };
+    let fabric = Fabric::new(FabricConfig::default());
+    println!(
+        "model: {} — {} ops, {} tensors",
+        graph.name,
+        graph.num_nodes(),
+        graph.num_edges()
+    );
+
+    let ckpt = args.get_or("ckpt", "results/example_gnn.ckpt");
+    let store = ParamStore::load(ckpt).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nrun `cargo run --release --example dataset_and_train` first")
+    })?;
+    let engine = Arc::new(Engine::new("artifacts")?);
+
+    let cfg = CompileConfig {
+        era: Era::Past,
+        anneal: AnnealParams { iterations: args.get_usize("iters", 300), ..AnnealParams::default() },
+        seed: 7,
+    };
+
+    println!("\ncompiling with heuristic cost model ...");
+    let mut heuristic = HeuristicCost::new();
+    let rep_h = compile(&graph, &fabric, &mut heuristic, &cfg)?;
+    println!(
+        "  {} subgraphs, total II {:.0} cycles/sample ({:.1}s)",
+        rep_h.subgraphs.len(),
+        rep_h.total_ii,
+        rep_h.wall_seconds
+    );
+
+    println!("compiling with learned cost model ...");
+    let mut learned = LearnedCost::from_store(engine, &store, Ablation::default())?;
+    let rep_l = compile(&graph, &fabric, &mut learned, &cfg)?;
+    println!(
+        "  {} subgraphs, total II {:.0} cycles/sample ({:.1}s)",
+        rep_l.subgraphs.len(),
+        rep_l.total_ii,
+        rep_l.wall_seconds
+    );
+
+    let dtp = rep_l.throughput_gain_pct(&rep_h);
+    println!("\nΔTP (learned vs heuristic): {dtp:+.1}%   (paper: +5.7% on BERT-large)");
+    for (h, l) in rep_h.subgraphs.iter().zip(&rep_l.subgraphs) {
+        println!(
+            "  {:<24} II {:>8.0} -> {:>8.0}  ({:+.1}%)",
+            h.name,
+            h.ii_cycles,
+            l.ii_cycles,
+            (1.0 - l.ii_cycles / h.ii_cycles) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! The paper's §IV-A pipeline, end to end, at demo scale:
+//!
+//! 1. generate a randomized-PnR dataset over the four building-block
+//!    families (paper: 5878 samples; here 600 for a ~1-minute run);
+//! 2. train the GNN throughput regressor (Rust drives the AOT train-step);
+//! 3. evaluate held-out RE + Spearman against the heuristic baseline;
+//! 4. save the checkpoint for `examples/compile_bert.rs`.
+//!
+//! Run: `cargo run --release --example dataset_and_train`
+
+use std::sync::Arc;
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::coordinator::generate_parallel;
+use rdacost::data::GenConfig;
+use rdacost::experiments::common::heuristic_metrics;
+use rdacost::metrics;
+use rdacost::runtime::Engine;
+use rdacost::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let fabric = Fabric::new(FabricConfig::default());
+
+    // 1. Dataset (the paper's randomized-SA decision sampler + simulator
+    //    labels, normalized by the theoretical bound).
+    let gen = GenConfig { total: 600, era: Era::Past, ..GenConfig::default() };
+    let t0 = std::time::Instant::now();
+    let ds = generate_parallel(&fabric, &gen, 42, 4)?;
+    println!("generated {} labelled PnR decisions in {:.1}s", ds.len(), t0.elapsed().as_secs_f64());
+    let labels: Vec<f64> = ds.samples.iter().map(|s| s.label() as f64).collect();
+    println!(
+        "  label spread: mean {:.3}, std {:.3} (labels are normalized throughput)",
+        metrics::mean(&labels),
+        metrics::stddev(&labels)
+    );
+
+    // 2. Train/test split + training.
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let folds = metrics::kfold(ds.len(), 5, 7);
+    let (train_idx, test_idx) = &folds[0];
+    let cfg = TrainConfig { epochs: 30, log_every: 10, ..TrainConfig::default() };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let rep = trainer.fit(&ds, train_idx)?;
+    println!(
+        "trained {} epochs in {:.1}s (mse {:.4} -> {:.4})",
+        rep.epochs_run, rep.wall_seconds, rep.loss_curve[0], rep.final_train_loss
+    );
+
+    // 3. Held-out comparison vs the heuristic.
+    let eval = trainer.evaluate(&ds, test_idx)?;
+    let (h_re, h_rank) = heuristic_metrics(&ds, test_idx);
+    println!("\nheld-out ({} samples):", eval.count);
+    println!("  GNN        RE {:.3}   rank {:.3}", eval.relative_error, eval.spearman);
+    println!("  heuristic  RE {h_re:.3}   rank {h_rank:.3}");
+
+    // 4. Checkpoint for the compile example.
+    std::fs::create_dir_all("results")?;
+    trainer.param_store().save("results/example_gnn.ckpt")?;
+    println!("\nsaved results/example_gnn.ckpt — next: examples/compile_bert.rs");
+    Ok(())
+}

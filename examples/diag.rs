@@ -1,0 +1,51 @@
+//! Cost-model diagnostic: per-family RE / rank (pooled and within-graph)
+//! of the heuristic baseline against the simulator, plus the bottleneck
+//! mix. Used while tuning the substrate (DESIGN.md "why the heuristic must
+//! lose") and handy when porting to a new fabric config.
+//!
+//! Run: `cargo run --release --example diag`
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::cost::HeuristicCost;
+use rdacost::data::draw_workload;
+use rdacost::dfg::WorkloadFamily;
+use rdacost::placer::{random_placement, Objective};
+use rdacost::router::route_all;
+use rdacost::sim;
+use rdacost::util::rng::Rng;
+use rdacost::metrics;
+
+fn main() -> anyhow::Result<()> {
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(3);
+    let mut h = HeuristicCost::new();
+    let mut bn = std::collections::BTreeMap::<&'static str, usize>::new();
+    for fam in WorkloadFamily::DATASET_FAMILIES {
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        let mut within_rhos = Vec::new();
+        for _ in 0..12 {
+            let g = draw_workload(fam, &mut rng);
+            let mut wp = Vec::new();
+            let mut wt = Vec::new();
+            for _ in 0..8 {
+                let p = random_placement(&g, &fabric, &mut rng)?;
+                let r = route_all(&fabric, &g, &p)?;
+                let rep = sim::measure(&fabric, &g, &p, &r, Era::Past)?;
+                let hp = h.score(&g, &fabric, &p, &r);
+                pred.push(hp); truth.push(rep.normalized_throughput);
+                wp.push(hp); wt.push(rep.normalized_throughput);
+                *bn.entry(rep.bottleneck.name()).or_insert(0) += 1;
+            }
+            within_rhos.push(metrics::spearman(&wp, &wt));
+        }
+        println!("{:<6} RE {:.3} rank {:.3} within-graph rank {:.3} truth-mean {:.3} truth-std {:.3}",
+            fam.name(),
+            metrics::relative_error(&pred, &truth),
+            metrics::spearman(&pred, &truth),
+            metrics::mean(&within_rhos),
+            metrics::mean(&truth), metrics::stddev(&truth));
+    }
+    println!("bottlenecks: {bn:?}");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Memory-stability probe: RSS must stay flat across thousands of PJRT
+//! train-step executions (regression test for the xla-0.1.6 `execute`
+//! input-buffer leak that `Executable::run_buffers` works around; see
+//! rust/src/runtime/engine.rs).
+//!
+//! Run: `cargo run --release --example memtest`
+
+use std::sync::Arc;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() {
+        if l.starts_with("VmRSS") {
+            let kb: f64 = l.split_whitespace().nth(1).unwrap().parse().unwrap();
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(rdacost::runtime::Engine::new("artifacts")?);
+    let fabric = rdacost::arch::Fabric::new(rdacost::arch::FabricConfig::default());
+    let cfg = rdacost::data::GenConfig { total: 0, ..Default::default() };
+    let mut rng = rdacost::util::rng::Rng::new(1);
+    let samples = rdacost::data::generate_family(rdacost::dfg::WorkloadFamily::Gemm, 64, &fabric, &cfg, &mut rng)?;
+    let ds = rdacost::data::Dataset { samples };
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let mut t = rdacost::train::Trainer::new(engine, rdacost::train::TrainConfig { epochs: 1, ..Default::default() })?;
+    println!("start rss {:.0} MB", rss_mb());
+    for i in 0..40 {
+        t.fit(&ds, &idx)?;
+        if i % 5 == 0 { println!("epoch {i}: rss {:.0} MB", rss_mb()); }
+    }
+    println!("end rss {:.0} MB", rss_mb());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: the whole system in one file.
+//!
+//! 1. Build a fabric and a workload DFG.
+//! 2. Place + route it with the heuristic-guided annealer.
+//! 3. Measure the result with the throughput simulator.
+//! 4. Load the AOT GNN artifacts and score the same decision with the
+//!    learned cost model (fresh random parameters here — see
+//!    `examples/dataset_and_train.rs` for actual training).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once).
+
+use std::sync::Arc;
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
+use rdacost::dfg::builders;
+use rdacost::placer::{anneal, AnnealParams, Objective};
+use rdacost::router::route_all;
+use rdacost::runtime::Engine;
+use rdacost::sim;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The hardware and the workload.
+    let fabric = Fabric::new(FabricConfig::default());
+    println!(
+        "fabric: {} PCUs, {} PMUs, {} links, peak {} MACs/cycle",
+        fabric.num_pcus(),
+        fabric.num_pmus(),
+        fabric.links().len(),
+        fabric.peak_macs_per_cycle()
+    );
+    let graph = builders::mha(32, 128, 4);
+    println!(
+        "workload: {} ({} ops, {} tensors, {:.1} MFLOPs/sample)",
+        graph.name,
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.total_flops() / 1e6
+    );
+
+    // 2. Place + route with the heuristic-guided annealer.
+    let mut rng = Rng::new(42);
+    let mut heuristic = HeuristicCost::new();
+    let params = AnnealParams { iterations: 500, ..AnnealParams::default() };
+    let (placement, _routing, log) = anneal(&graph, &fabric, &mut heuristic, &params, &mut rng)?;
+    println!(
+        "annealed: {} evaluations, heuristic score {:.3} -> {:.3}",
+        log.evaluations, log.initial_score, log.best_score
+    );
+    // The annealer returns its own routing; re-route cleanly for measurement.
+    let routing = route_all(&fabric, &graph, &placement)?;
+
+    // 3. Ground truth from the simulator.
+    let report = sim::measure(&fabric, &graph, &placement, &routing, Era::Past)?;
+    println!(
+        "simulator: II = {:.0} cycles/sample ({}-bound), normalized throughput {:.3}, \
+         latency {:.0} cycles",
+        report.ii_cycles,
+        report.bottleneck.name(),
+        report.normalized_throughput,
+        report.latency_cycles
+    );
+
+    // 4. Score the same decision with the learned cost model (untrained
+    //    parameters — demo of the serving path only).
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default())?;
+    let mut learned = LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default())?;
+    let pred = learned.score(&graph, &fabric, &placement, &routing);
+    println!("learned cost model (untrained) predicts: {pred:.3}");
+    println!("\nquickstart OK — next: examples/dataset_and_train.rs");
+    Ok(())
+}

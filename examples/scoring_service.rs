@@ -1,0 +1,88 @@
+//! The batched scoring service under concurrent load — the L3 coordination
+//! piece (vLLM-router-style size-or-deadline batching over PJRT).
+//!
+//! Spawns N annealer-like clients that each encode random PnR decisions and
+//! submit them for scoring; the dispatcher groups by bucket, pads to the
+//! AOT batch size, and executes one PJRT call per batch. Prints throughput
+//! and batch occupancy.
+//!
+//! Run: `cargo run --release --example scoring_service -- --clients 4 --requests 128`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::coordinator::ScoringService;
+use rdacost::cost::Ablation;
+use rdacost::data::draw_workload;
+use rdacost::dfg::WorkloadFamily;
+use rdacost::gnn;
+use rdacost::placer::random_placement;
+use rdacost::router::route_all;
+use rdacost::runtime::Engine;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::cli::Args;
+use rdacost::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let clients = args.get_usize("clients", 4);
+    let requests = args.get_usize("requests", 128);
+
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default())?;
+    let service = ScoringService::start(
+        engine,
+        &trainer.param_store(),
+        Ablation::default(),
+        32,
+        Duration::from_millis(4),
+    )?;
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let t0 = std::time::Instant::now();
+    let mut sums = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client = service.client();
+            let fabric = &fabric;
+            handles.push(scope.spawn(move || -> anyhow::Result<f64> {
+                let mut rng = Rng::new(1000 + c as u64);
+                let mut sum = 0.0;
+                for i in 0..requests {
+                    let fam = match i % 3 {
+                        0 => WorkloadFamily::Gemm,
+                        1 => WorkloadFamily::Ffn,
+                        _ => WorkloadFamily::Mha,
+                    };
+                    let graph = draw_workload(fam, &mut rng);
+                    let placement = random_placement(&graph, fabric, &mut rng)?;
+                    let routing = route_all(fabric, &graph, &placement)?;
+                    let enc = gnn::encode(&graph, fabric, &placement, &routing)?;
+                    sum += client.score(enc)?;
+                }
+                Ok(sum)
+            }));
+        }
+        for h in handles {
+            sums.push(h.join().unwrap().unwrap());
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (clients * requests) as f64;
+    let stats = &service.stats;
+    println!(
+        "scored {total} requests from {clients} clients in {dt:.2}s = {:.0} req/s",
+        total / dt
+    );
+    println!(
+        "batches: {} ({} full, {} deadline flushes), occupancy {:.2}",
+        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        stats.full_batches.load(std::sync::atomic::Ordering::Relaxed),
+        stats.deadline_flushes.load(std::sync::atomic::Ordering::Relaxed),
+        stats.occupancy(32)
+    );
+    println!("mean prediction {:.3}", sums.iter().sum::<f64>() / total);
+    Ok(())
+}

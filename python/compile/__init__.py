@@ -1,0 +1,5 @@
+"""Build-time-only package: the JAX/Pallas side of the three-layer stack.
+
+Nothing in here runs at PnR time — `make artifacts` lowers everything to
+HLO text once, and the rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,201 @@
+"""AOT lowering: JAX -> HLO text artifacts + manifest.
+
+Emits, per bucket (32/96, 64/192, 128/384 nodes/edges):
+
+  * ``gnn_infer_b1_<tag>.hlo.txt``  — single-graph scoring (the annealer's
+    hot path), Pallas-kernel-bearing;
+  * ``gnn_infer_b32_<tag>.hlo.txt`` — batched evaluation;
+  * ``gnn_train_b32_<tag>.hlo.txt`` — the fused train step (fwd+bwd+Adam).
+
+Plus ``manifest.json`` recording every artifact's input/output specs, the
+parameter list, the schema constants and the bucket table — the contract
+`rust/src/runtime/manifest.rs` validates against.
+
+HLO **text** is the interchange format, NOT `.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Must mirror rust/src/gnn/bucket.rs.
+BUCKETS = [(32, 96), (64, 192), (128, 384)]
+INFER_BATCHES = [1, 32]
+TRAIN_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def batch_specs(b, n, e):
+    """ShapeDtypeStructs of the 8 batch tensors, rust marshalling order."""
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((b, n), i32),                       # node_type
+        jax.ShapeDtypeStruct((b, n), i32),                       # node_stage
+        jax.ShapeDtypeStruct((b, n, model.NODE_FEAT_DIM), f32),  # node_feat
+        jax.ShapeDtypeStruct((b, n), f32),                       # node_mask
+        jax.ShapeDtypeStruct((b, e), i32),                       # edge_src
+        jax.ShapeDtypeStruct((b, e), i32),                       # edge_dst
+        jax.ShapeDtypeStruct((b, e, model.EDGE_FEAT_DIM), f32),  # edge_feat
+        jax.ShapeDtypeStruct((b, e), f32),                       # edge_mask
+    )
+
+
+BATCH_NAMES = [
+    "node_type", "node_stage", "node_feat", "node_mask",
+    "edge_src", "edge_dst", "edge_feat", "edge_mask",
+]
+
+
+def param_structs():
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model.param_specs()
+    ]
+
+
+def spec_of(name, s):
+    dtype = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    return {"name": name, "dtype": dtype, "shape": list(s.shape)}
+
+
+def lower_infer(b, n, e):
+    """Lower the inference entry for batch b, bucket (n, e)."""
+    params = param_structs()
+    batch = batch_specs(b, n, e)
+    flags = jax.ShapeDtypeStruct((model.ABLATION_FLAGS,), jnp.float32)
+
+    def entry(*flat):
+        p = list(flat[: len(params)])
+        bt = tuple(flat[len(params): len(params) + 8])
+        fl = flat[len(params) + 8]
+        return model.infer_fn(p, bt, fl)
+
+    args = tuple(params) + batch + (flags,)
+    lowered = jax.jit(entry).lower(*args)
+
+    inputs = [spec_of(nm, s) for nm, s in zip(model.PARAM_NAMES, params)]
+    inputs += [spec_of(nm, s) for nm, s in zip(BATCH_NAMES, batch)]
+    inputs.append(spec_of("flags", flags))
+    outputs = [spec_of("pred", jax.ShapeDtypeStruct((b,), jnp.float32))]
+    return lowered, inputs, outputs
+
+
+def lower_train(b, n, e):
+    """Lower the fused train step for batch b, bucket (n, e)."""
+    params = param_structs()
+    batch = batch_specs(b, n, e)
+    f32 = jnp.float32
+    step = jax.ShapeDtypeStruct((), f32)
+    labels = jax.ShapeDtypeStruct((b,), f32)
+    weights = jax.ShapeDtypeStruct((b,), f32)
+    flags = jax.ShapeDtypeStruct((model.ABLATION_FLAGS,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+
+    args = (
+        tuple(params) + tuple(params) + tuple(params) + (step,)
+        + batch + (labels, weights, flags, lr)
+    )
+    lowered = jax.jit(model.train_step_flat).lower(*args)
+
+    inputs = []
+    for prefix in ("", "m_", "v_"):
+        inputs += [
+            spec_of(prefix + nm, s) for nm, s in zip(model.PARAM_NAMES, params)
+        ]
+    inputs.append(spec_of("step", step))
+    inputs += [spec_of(nm, s) for nm, s in zip(BATCH_NAMES, batch)]
+    inputs += [
+        spec_of("labels", labels),
+        spec_of("weights", weights),
+        spec_of("flags", flags),
+        spec_of("lr", lr),
+    ]
+    outputs = []
+    for prefix in ("", "m_", "v_"):
+        outputs += [
+            spec_of(prefix + nm, s) for nm, s in zip(model.PARAM_NAMES, params)
+        ]
+    outputs += [
+        spec_of("step", step),
+        spec_of("loss", jax.ShapeDtypeStruct((), f32)),
+    ]
+    return lowered, inputs, outputs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = []
+
+    def emit(name, lowered, inputs, outputs):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        artifacts.append(
+            {"name": name, "file": path, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"  {name}: {len(text) / 1e6:.2f} MB of HLO text")
+
+    for n, e in BUCKETS:
+        tag = f"n{n}_e{e}"
+        for b in INFER_BATCHES:
+            print(f"lowering gnn_infer_b{b}_{tag} ...")
+            lowered, inputs, outputs = lower_infer(b, n, e)
+            emit(f"gnn_infer_b{b}_{tag}", lowered, inputs, outputs)
+        print(f"lowering gnn_train_b{TRAIN_BATCH}_{tag} ...")
+        lowered, inputs, outputs = lower_train(TRAIN_BATCH, n, e)
+        emit(f"gnn_train_b{TRAIN_BATCH}_{tag}", lowered, inputs, outputs)
+
+    manifest = {
+        "artifacts": artifacts,
+        "gnn": {
+            "hidden_dim": model.HIDDEN,
+            "num_layers": model.NUM_LAYERS,
+            "node_feat_dim": model.NODE_FEAT_DIM,
+            "edge_feat_dim": model.EDGE_FEAT_DIM,
+            "op_type_count": model.OP_TYPE_COUNT,
+            "max_stages": model.MAX_STAGES,
+            "unit_kind_count": model.UNIT_KIND_COUNT,
+            "ablation_flags": model.ABLATION_FLAGS,
+            "op_emb_dim": model.OP_EMB_DIM,
+            "stage_emb_dim": model.STAGE_EMB_DIM,
+        },
+        "buckets": [{"nodes": n, "edges": e} for n, e in BUCKETS],
+        "params": [
+            {"name": nm, "shape": list(shape)} for nm, shape in model.param_specs()
+        ],
+        "train_batch": TRAIN_BATCH,
+        "infer_batches": INFER_BATCHES,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(artifacts)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: one fused GNN message-passing layer.
+
+This is the compute hot-spot of the cost model: per scoring call the GNN
+runs K of these layers over the encoded PnR graph. The kernel fuses, per
+graph in the batch:
+
+  1. the two gathers (endpoint states along the padded edge list),
+  2. the per-edge message transform `W_E` (GraphSAGE-pool aggregation) and
+     the bidirectional elementwise max-scatter into the endpoints,
+  3. the node update transform `W_V` with its ReLU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's system
+trains its regressor on a GPU; on a TPU-shaped target the natural mapping
+is one *graph block* per grid step resident in VMEM — for the largest
+bucket (N=128, E=384, H=64) the working set is
+
+    node_h 128x64x4  =  32 KiB       edge_h 384x64x4 = 96 KiB
+    gathers/sums     < 224 KiB       W_E + W_V 2x(128x64x4) = 64 KiB
+
+well under a ~16 MiB VMEM budget, so `BlockSpec` simply tiles the batch
+dimension and each program instance does two MXU matmuls
+([N,2H]@[2H,H]). The gathers/scatters lower to vector-unit
+dynamic-slice/update sequences (what a GPU would do with shared-memory
+atomics).
+
+`interpret=True` is REQUIRED here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs everywhere (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mp_kernel(node_h_ref, edge_h_ref, src_ref, dst_ref, node_mask_ref,
+               edge_mask_ref, w_e_ref, b_e_ref, w_v_ref, b_v_ref, out_ref):
+    """Kernel body for one graph (grid walks the batch dimension)."""
+    # Block shapes carry a leading singleton batch dim; drop it.
+    node_h = node_h_ref[...][0]          # [N, H]
+    edge_h = edge_h_ref[...][0]          # [E, H]
+    src = src_ref[...][0]                # [E]
+    dst = dst_ref[...][0]                # [E]
+    node_mask = node_mask_ref[...][0]    # [N]
+    edge_mask = edge_mask_ref[...][0]    # [E]
+    w_e = w_e_ref[...]                   # [2H, H]
+    b_e = b_e_ref[...]                   # [H]
+    w_v = w_v_ref[...]                   # [2H, H]
+    b_v = b_v_ref[...]                   # [H]
+
+    em = edge_mask[:, None]
+
+    # (1) gathers along the edge list.
+    h_src = node_h[src]
+    h_dst = node_h[dst]
+
+    # (2) per-edge messages, both directions (the GraphSAGE-pool reading of
+    # Algorithm 1 line 10), ReLU'd so the zero baseline of the max-scatter
+    # is exact.
+    msg_fwd = jnp.maximum(
+        jnp.concatenate([edge_h, h_src], axis=-1) @ w_e + b_e, 0.0) * em
+    msg_bwd = jnp.maximum(
+        jnp.concatenate([edge_h, h_dst], axis=-1) @ w_e + b_e, 0.0) * em
+
+    # (3) elementwise max-scatter into endpoints + fused node update
+    # (MXU matmuls on real hardware).
+    zeros = jnp.zeros_like(node_h)
+    s = zeros.at[dst].max(msg_fwd).at[src].max(msg_bwd)
+    h_new = jnp.maximum(
+        jnp.concatenate([node_h, s], axis=-1) @ w_v + b_v, 0.0)
+    out_ref[...] = (h_new * node_mask[:, None])[None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mp_layer_batched(node_h, edge_h, src, dst, node_mask, edge_mask,
+                     w_e, b_e, w_v, b_v):
+    """Batched message-passing layer via `pallas_call`.
+
+    Args:
+      node_h:    f32[B, N, H]
+      edge_h:    f32[B, E, H]
+      src, dst:  i32[B, E]
+      node_mask: f32[B, N]
+      edge_mask: f32[B, E]
+      w_e, b_v etc.: shared weights (no batch dim)
+
+    Returns: f32[B, N, H]
+    """
+    b, n, h = node_h.shape
+    e = edge_h.shape[1]
+
+    def batch_spec(*trailing):
+        # One graph per program instance; weights broadcast.
+        return pl.BlockSpec((1,) + trailing, lambda i: (i,) + (0,) * len(trailing))
+
+    def full_spec(shape):
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    return pl.pallas_call(
+        _mp_kernel,
+        grid=(b,),
+        in_specs=[
+            batch_spec(n, h),          # node_h
+            batch_spec(e, h),          # edge_h
+            batch_spec(e),             # src
+            batch_spec(e),             # dst
+            batch_spec(n),             # node_mask
+            batch_spec(e),             # edge_mask
+            full_spec((2 * h, h)),     # w_e
+            full_spec((h,)),           # b_e
+            full_spec((2 * h, h)),     # w_v
+            full_spec((h,)),           # b_v
+        ],
+        out_specs=batch_spec(n, h),
+        out_shape=jax.ShapeDtypeStruct((b, n, h), node_h.dtype),
+        interpret=True,  # REQUIRED for CPU PJRT; see module docstring.
+    )(node_h, edge_h, src, dst, node_mask, edge_mask, w_e, b_e, w_v, b_v)

@@ -1,0 +1,222 @@
+"""Layer-2 JAX model: the GNN throughput regressor (paper §III).
+
+Architecture (Algorithm 1 + §III-B):
+
+  * node embedding x_v = [unit-kind one-hot ++ scalar features,
+                          op-type embedding (learnable),
+                          stage embedding (learnable)]      (§III-A)
+  * edge embedding x_e = fixed route-feature vector, projected
+  * K = 3 fused message-passing layers (the L1 Pallas kernel)
+  * masked mean pool -> h_G                                  (line 14)
+  * 3-layer MLP regressor with ReLU, sigmoid output in (0,1) (§III-B)
+
+The schema constants below MUST mirror `rust/src/gnn/schema.rs`; the AOT
+manifest records them and the rust side fails fast on drift.
+
+Ablation flags (runtime inputs, Table III + the abstract's
+annotation-removal claim): `flags = [use_node_emb, use_edge_emb,
+use_annotations]`. They multiply the respective feature groups so one set
+of artifacts serves every ablation row.
+
+Training (`train_step`): weighted-MSE loss, full backward, Adam — lowered
+as ONE fused HLO so the Rust trainer never crosses into python. The
+training graph uses the numerically-identical pure-jnp layer
+(`kernels.ref`) because Pallas interpret mode does not support AD; pytest
+asserts the two implementations agree to float tolerance, so parameters
+transfer exactly to the kernel-bearing inference artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gnn_aggr, ref
+
+# ---- schema (mirror of rust/src/gnn/schema.rs) ------------------------------
+UNIT_KIND_COUNT = 4
+NODE_SCALAR_COUNT = 6
+NODE_FEAT_DIM = UNIT_KIND_COUNT + NODE_SCALAR_COUNT  # 10
+EDGE_FEAT_DIM = 9
+OP_TYPE_COUNT = 14
+MAX_STAGES = 32
+ABLATION_FLAGS = 3
+
+# Indices of the "performance annotation" scalars inside node_feat
+# (log_flops, log_bytes) — zeroed when flags[2] == 0.
+ANNOT_SLICE = (UNIT_KIND_COUNT, UNIT_KIND_COUNT + 2)
+
+# ---- hyperparameters --------------------------------------------------------
+HIDDEN = 64
+OP_EMB_DIM = 8
+STAGE_EMB_DIM = 8
+NUM_LAYERS = 3
+HEAD_HIDDEN = 32
+
+# Adam
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def param_specs():
+    """Ordered (name, shape) list — the contract with the rust ParamStore."""
+    specs = [
+        ("op_emb", (OP_TYPE_COUNT, OP_EMB_DIM)),
+        ("stage_emb", (MAX_STAGES, STAGE_EMB_DIM)),
+        ("node_proj_w", (NODE_FEAT_DIM + OP_EMB_DIM + STAGE_EMB_DIM, HIDDEN)),
+        ("node_proj_b", (HIDDEN,)),
+        ("edge_proj_w", (EDGE_FEAT_DIM, HIDDEN)),
+        ("edge_proj_b", (HIDDEN,)),
+    ]
+    for k in range(NUM_LAYERS):
+        specs += [
+            (f"l{k}_we", (2 * HIDDEN, HIDDEN)),
+            (f"l{k}_we_b", (HIDDEN,)),
+            (f"l{k}_wv", (2 * HIDDEN, HIDDEN)),
+            (f"l{k}_wv_b", (HIDDEN,)),
+        ]
+    specs += [
+        ("head_w1", (HIDDEN, HEAD_HIDDEN)),
+        ("head_w1_b", (HEAD_HIDDEN,)),
+        ("head_w2", (HEAD_HIDDEN, HEAD_HIDDEN)),
+        ("head_w2_b", (HEAD_HIDDEN,)),
+        ("head_w3", (HEAD_HIDDEN, 1)),
+        ("head_w3_b", (1,)),
+    ]
+    return specs
+
+
+PARAM_NAMES = [name for name, _ in param_specs()]
+
+
+def init_params(key):
+    """Reference initializer (pytest uses it; the rust trainer re-implements
+    the same scheme from the manifest shapes)."""
+    params = []
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if name == "head_w3_b":
+            # Start the sigmoid near the label scale (normalized throughputs
+            # concentrate near zero); mirrors the rust Trainer initializer.
+            params.append(jnp.full(shape, -2.0, jnp.float32))
+        elif name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in)))
+    return params
+
+
+def _unpack(params):
+    return dict(zip(PARAM_NAMES, params))
+
+
+def _embed(p, node_type, node_stage, node_feat, edge_feat, flags):
+    """Build h_v^0 and h_e from raw inputs + ablation flags (one graph)."""
+    use_node, use_edge, use_annot = flags[0], flags[1], flags[2]
+
+    # Zero the performance-annotation scalars when ablated.
+    annot_mask = jnp.ones((NODE_FEAT_DIM,), jnp.float32)
+    annot_mask = annot_mask.at[ANNOT_SLICE[0]:ANNOT_SLICE[1]].set(use_annot)
+    nf = node_feat * annot_mask
+
+    op_e = p["op_emb"][node_type] * use_node          # [N, OP_EMB_DIM]
+    st_e = p["stage_emb"][node_stage] * use_node      # [N, STAGE_EMB_DIM]
+    x_v = jnp.concatenate([nf, op_e, st_e], axis=-1)
+    h0 = jnp.maximum(x_v @ p["node_proj_w"] + p["node_proj_b"], 0.0)
+
+    ef = edge_feat * use_edge
+    h_e = jnp.maximum(ef @ p["edge_proj_w"] + p["edge_proj_b"], 0.0)
+    return h0, h_e
+
+
+def _head(p, h_g):
+    h = jnp.maximum(h_g @ p["head_w1"] + p["head_w1_b"], 0.0)
+    h = jnp.maximum(h @ p["head_w2"] + p["head_w2_b"], 0.0)
+    out = h @ p["head_w3"] + p["head_w3_b"]
+    return jax.nn.sigmoid(out[..., 0])
+
+
+def forward(params, batch, flags, *, use_kernel):
+    """Batched forward pass -> predictions f32[B].
+
+    `batch` is the 8-tuple (node_type, node_stage, node_feat, node_mask,
+    edge_src, edge_dst, edge_feat, edge_mask) with leading batch dim.
+    `use_kernel` selects the Pallas kernel (inference artifacts) or the
+    pure-jnp reference (training artifact; see module docstring).
+    """
+    (node_type, node_stage, node_feat, node_mask,
+     edge_src, edge_dst, edge_feat, edge_mask) = batch
+    p = _unpack(params)
+
+    h0, h_e = jax.vmap(
+        lambda t, s, f, ef: _embed(p, t, s, f, ef, flags)
+    )(node_type, node_stage, node_feat, edge_feat)
+
+    h = h0 * node_mask[..., None]
+    h_e = h_e * edge_mask[..., None]
+
+    for k in range(NUM_LAYERS):
+        w_e, b_e = p[f"l{k}_we"], p[f"l{k}_we_b"]
+        w_v, b_v = p[f"l{k}_wv"], p[f"l{k}_wv_b"]
+        if use_kernel:
+            h = gnn_aggr.mp_layer_batched(
+                h, h_e, edge_src, edge_dst, node_mask, edge_mask,
+                w_e, b_e, w_v, b_v)
+        else:
+            h = jax.vmap(
+                lambda nh, eh, s, d, nm, em: ref.mp_layer_ref(
+                    nh, eh, s, d, nm, em, w_e, b_e, w_v, b_v)
+            )(h, h_e, edge_src, edge_dst, node_mask, edge_mask)
+
+    # Masked mean pool (Algorithm 1 line 14).
+    denom = jnp.maximum(node_mask.sum(-1, keepdims=True), 1.0)
+    h_g = (h * node_mask[..., None]).sum(-2) / denom
+
+    return _head(p, h_g)
+
+
+def infer_fn(params, batch, flags):
+    """The inference entry point lowered to HLO (kernel-bearing)."""
+    return (forward(params, batch, flags, use_kernel=True),)
+
+
+def loss_fn(params, batch, labels, weights, flags):
+    preds = forward(params, batch, flags, use_kernel=False)
+    w = weights / jnp.maximum(weights.sum(), 1.0)
+    return (w * (preds - labels) ** 2).sum()
+
+
+def train_step(params, adam_m, adam_v, step, batch, labels, weights, flags, lr):
+    """One fused SGD step: forward + backward + Adam. Returns
+    (new_params, new_m, new_v, new_step, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch, labels, weights, flags)
+    new_step = step + 1.0
+    b1c = 1.0 - ADAM_B1 ** new_step
+    b2c = 1.0 - ADAM_B2 ** new_step
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, adam_m, adam_v):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * (g * g)
+        m_hat = m / b1c
+        v_hat = v / b2c
+        new_params.append(p - lr * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS))
+        new_m.append(m)
+        new_v.append(v)
+    return new_params, new_m, new_v, new_step, loss
+
+
+def train_step_flat(*flat):
+    """Flat-argument wrapper for AOT lowering (matches the rust marshalling
+    order; see rust/src/train/trainer.rs)."""
+    n = len(PARAM_NAMES)
+    params = list(flat[:n])
+    adam_m = list(flat[n:2 * n])
+    adam_v = list(flat[2 * n:3 * n])
+    i = 3 * n
+    step = flat[i]
+    batch = tuple(flat[i + 1:i + 9])
+    labels, weights, flags, lr = flat[i + 9], flat[i + 10], flat[i + 11], flat[i + 12]
+    new_params, new_m, new_v, new_step, loss = train_step(
+        params, adam_m, adam_v, step, batch, labels, weights, flags, lr)
+    return tuple(new_params) + tuple(new_m) + tuple(new_v) + (new_step, loss)

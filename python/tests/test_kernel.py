@@ -1,0 +1,132 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is THE core correctness signal of the build step: training uses the
+reference implementation while inference artifacts carry the kernel, so
+any divergence here would silently corrupt every deployed prediction.
+Hypothesis sweeps shapes, batch sizes and adversarial index patterns.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gnn_aggr, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_case(rng, b, n, e, h, live_frac=1.0):
+    """Build a random batched layer input with padding."""
+    node_h = rng.normal(size=(b, n, h)).astype(np.float32)
+    edge_h = rng.normal(size=(b, e, h)).astype(np.float32)
+    live_n = max(1, int(n * live_frac))
+    live_e = max(0, int(e * live_frac))
+    node_mask = np.zeros((b, n), np.float32)
+    node_mask[:, :live_n] = 1.0
+    edge_mask = np.zeros((b, e), np.float32)
+    edge_mask[:, :live_e] = 1.0
+    src = rng.integers(0, live_n, size=(b, e)).astype(np.int32)
+    dst = rng.integers(0, live_n, size=(b, e)).astype(np.int32)
+    # Padding edges point at node 0 (as the rust encoder emits).
+    src[edge_mask == 0.0] = 0
+    dst[edge_mask == 0.0] = 0
+    # Zero padded node states like the model does.
+    node_h = node_h * node_mask[..., None]
+    edge_h = edge_h * edge_mask[..., None]
+    w_e = rng.normal(size=(2 * h, h)).astype(np.float32) / np.sqrt(2 * h)
+    b_e = rng.normal(size=(h,)).astype(np.float32) * 0.1
+    w_v = rng.normal(size=(2 * h, h)).astype(np.float32) / np.sqrt(2 * h)
+    b_v = rng.normal(size=(h,)).astype(np.float32) * 0.1
+    return node_h, edge_h, src, dst, node_mask, edge_mask, w_e, b_e, w_v, b_v
+
+
+def ref_batched(node_h, edge_h, src, dst, node_mask, edge_mask, w_e, b_e, w_v, b_v):
+    return jax.vmap(
+        lambda nh, eh, s, d, nm, em: ref.mp_layer_ref(
+            nh, eh, s, d, nm, em, w_e, b_e, w_v, b_v
+        )
+    )(node_h, edge_h, src, dst, node_mask, edge_mask)
+
+
+def assert_kernel_matches_ref(case):
+    got = gnn_aggr.mp_layer_batched(*[jnp.asarray(x) for x in case])
+    want = ref_batched(*[jnp.asarray(x) for x in case])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    assert_kernel_matches_ref(rand_case(rng, b=2, n=32, e=96, h=64))
+
+
+def test_kernel_matches_ref_all_buckets():
+    rng = np.random.default_rng(1)
+    for (n, e) in [(32, 96), (64, 192), (128, 384)]:
+        assert_kernel_matches_ref(rand_case(rng, b=1, n=n, e=e, h=64))
+
+
+def test_kernel_handles_padding():
+    rng = np.random.default_rng(2)
+    assert_kernel_matches_ref(rand_case(rng, b=3, n=32, e=96, h=64, live_frac=0.4))
+
+
+def test_padded_nodes_stay_zero():
+    rng = np.random.default_rng(3)
+    case = rand_case(rng, b=2, n=32, e=96, h=16, live_frac=0.5)
+    out = np.asarray(gnn_aggr.mp_layer_batched(*[jnp.asarray(x) for x in case]))
+    node_mask = case[4]
+    assert np.all(out[node_mask == 0.0] == 0.0)
+
+
+def test_no_edges_graph():
+    rng = np.random.default_rng(4)
+    case = rand_case(rng, b=1, n=16, e=8, h=8, live_frac=0.99)
+    # Kill all edges.
+    lst = list(case)
+    lst[5] = np.zeros_like(lst[5])  # edge_mask
+    lst[1] = np.zeros_like(lst[1])  # edge_h
+    assert_kernel_matches_ref(tuple(lst))
+
+
+def test_multigraph_edges():
+    """Multiple edges between the same pair must accumulate, not overwrite."""
+    rng = np.random.default_rng(5)
+    case = list(rand_case(rng, b=1, n=8, e=16, h=8))
+    case[2] = np.zeros((1, 16), np.int32)      # all src = 0
+    case[3] = np.ones((1, 16), np.int32)       # all dst = 1
+    assert_kernel_matches_ref(tuple(case))
+
+
+def test_deterministic():
+    rng = np.random.default_rng(6)
+    case = rand_case(rng, b=2, n=32, e=96, h=32)
+    a = np.asarray(gnn_aggr.mp_layer_batched(*[jnp.asarray(x) for x in case]))
+    b = np.asarray(gnn_aggr.mp_layer_batched(*[jnp.asarray(x) for x in case]))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    nh=st.sampled_from([(8, 16), (16, 48), (32, 96)]),
+    h=st.sampled_from([8, 16, 64]),
+    live=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, nh, h, live, seed):
+    n, e = nh
+    rng = np.random.default_rng(seed)
+    assert_kernel_matches_ref(rand_case(rng, b=b, n=n, e=e, h=h, live_frac=live))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_output_is_finite_and_nonnegative(seed):
+    """ReLU output: finite, >= 0 everywhere."""
+    rng = np.random.default_rng(seed)
+    case = rand_case(rng, b=2, n=16, e=48, h=16)
+    out = np.asarray(gnn_aggr.mp_layer_batched(*[jnp.asarray(x) for x in case]))
+    assert np.all(np.isfinite(out))
+    assert np.all(out >= 0.0)

@@ -1,0 +1,168 @@
+"""L2 model invariants: shapes, ablation semantics, kernel/ref agreement at
+the full-model level, and train-step behaviour (loss decreases, params
+update, Adam state advances)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, N, E = 4, 32, 96
+
+
+def rand_batch(rng, b=B, n=N, e=E, live_n=10, live_e=20):
+    node_type = rng.integers(0, model.OP_TYPE_COUNT, (b, n)).astype(np.int32)
+    node_stage = rng.integers(0, model.MAX_STAGES, (b, n)).astype(np.int32)
+    node_feat = rng.normal(size=(b, n, model.NODE_FEAT_DIM)).astype(np.float32)
+    node_mask = np.zeros((b, n), np.float32)
+    node_mask[:, :live_n] = 1.0
+    edge_src = rng.integers(0, live_n, (b, e)).astype(np.int32)
+    edge_dst = rng.integers(0, live_n, (b, e)).astype(np.int32)
+    edge_feat = rng.normal(size=(b, e, model.EDGE_FEAT_DIM)).astype(np.float32)
+    edge_mask = np.zeros((b, e), np.float32)
+    edge_mask[:, :live_e] = 1.0
+    # Padding edges to node 0, padded features zeroed (as the rust encoder).
+    edge_src[edge_mask == 0] = 0
+    edge_dst[edge_mask == 0] = 0
+    node_type[node_mask == 0] = 0
+    node_stage[node_mask == 0] = 0
+    node_feat[node_mask == 0] = 0.0
+    edge_feat[edge_mask == 0] = 0.0
+    return tuple(
+        jnp.asarray(x)
+        for x in (node_type, node_stage, node_feat, node_mask,
+                  edge_src, edge_dst, edge_feat, edge_mask)
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return rand_batch(np.random.default_rng(0))
+
+
+FLAGS_ON = jnp.ones((model.ABLATION_FLAGS,), jnp.float32)
+
+
+def test_param_specs_order_is_stable(params):
+    specs = model.param_specs()
+    assert len(specs) == len(params)
+    assert specs[0][0] == "op_emb"
+    assert specs[-1][0] == "head_w3_b"
+    for (name, shape), p in zip(specs, params):
+        assert tuple(shape) == p.shape, name
+
+
+def test_forward_shape_and_range(params, batch):
+    preds = model.forward(params, batch, FLAGS_ON, use_kernel=False)
+    assert preds.shape == (B,)
+    assert np.all(np.asarray(preds) > 0.0)
+    assert np.all(np.asarray(preds) < 1.0)
+
+
+def test_kernel_and_ref_paths_agree(params, batch):
+    a = model.forward(params, batch, FLAGS_ON, use_kernel=True)
+    b = model.forward(params, batch, FLAGS_ON, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_padding_invariance(params):
+    """A graph padded into a larger bucket must score identically."""
+    rng = np.random.default_rng(1)
+    small = rand_batch(rng, b=1, n=32, e=96, live_n=8, live_e=12)
+    # Copy the live region into a bigger bucket.
+    big = rand_batch(np.random.default_rng(99), b=1, n=64, e=192, live_n=8, live_e=12)
+    big = list(big)
+    for i, (s, axes) in enumerate(zip(small, [1, 1, 1, 1, 1, 1, 1, 1])):
+        arr = np.zeros_like(np.asarray(big[i]))
+        sl = np.asarray(s)
+        region = tuple(slice(0, d) for d in sl.shape)
+        arr[region] = sl
+        big[i] = jnp.asarray(arr)
+    pa = model.forward(params, small, FLAGS_ON, use_kernel=False)
+    pb = model.forward(params, tuple(big), FLAGS_ON, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), rtol=1e-5, atol=1e-6)
+
+
+def test_ablation_flags_change_predictions(params, batch):
+    full = np.asarray(model.forward(params, batch, FLAGS_ON, use_kernel=False))
+    no_node = np.asarray(
+        model.forward(params, batch, jnp.asarray([0.0, 1.0, 1.0]), use_kernel=False))
+    no_edge = np.asarray(
+        model.forward(params, batch, jnp.asarray([1.0, 0.0, 1.0]), use_kernel=False))
+    no_annot = np.asarray(
+        model.forward(params, batch, jnp.asarray([1.0, 1.0, 0.0]), use_kernel=False))
+    assert not np.allclose(full, no_node)
+    assert not np.allclose(full, no_edge)
+    assert not np.allclose(full, no_annot)
+
+
+def test_annotation_flag_only_touches_annot_scalars(params, batch):
+    """flags[2]=0 must equal zeroing node_feat[:, :, 4:6] manually."""
+    ablated = model.forward(
+        params, batch, jnp.asarray([1.0, 1.0, 0.0]), use_kernel=False)
+    lst = list(batch)
+    nf = np.asarray(lst[2]).copy()
+    nf[:, :, model.ANNOT_SLICE[0]:model.ANNOT_SLICE[1]] = 0.0
+    lst[2] = jnp.asarray(nf)
+    manual = model.forward(params, tuple(lst), FLAGS_ON, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(ablated), np.asarray(manual), rtol=1e-6)
+
+
+def test_train_step_decreases_loss(params, batch):
+    labels = jnp.asarray(np.random.default_rng(2).uniform(0.1, 0.9, B).astype(np.float32))
+    weights = jnp.ones((B,), jnp.float32)
+    p = [jnp.asarray(x) for x in params]
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    step = jnp.asarray(0.0)
+    lr = jnp.asarray(5e-3)
+    losses = []
+    jit_step = jax.jit(model.train_step)
+    for _ in range(60):
+        p, m, v, step, loss = jit_step(p, m, v, step, batch, labels, weights, FLAGS_ON, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+    assert float(step) == 60.0
+
+
+def test_train_step_flat_roundtrip(params, batch):
+    """The flat wrapper must agree with the structured step."""
+    labels = jnp.asarray(np.linspace(0.2, 0.8, B).astype(np.float32))
+    weights = jnp.ones((B,), jnp.float32)
+    p = [jnp.asarray(x) for x in params]
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    step = jnp.asarray(0.0)
+    lr = jnp.asarray(1e-3)
+    flags = FLAGS_ON
+
+    out_structured = model.train_step(p, m, v, step, batch, labels, weights, flags, lr)
+    flat_in = tuple(p) + tuple(m) + tuple(v) + (step,) + batch + (labels, weights, flags, lr)
+    out_flat = model.train_step_flat(*flat_in)
+
+    n = len(model.PARAM_NAMES)
+    np.testing.assert_allclose(
+        np.asarray(out_flat[0]), np.asarray(out_structured[0][0]), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out_flat[3 * n + 1]), np.asarray(out_structured[4]), rtol=1e-6)
+    assert len(out_flat) == 3 * n + 2
+
+
+def test_zero_weight_samples_are_ignored(params, batch):
+    """Padding rows (weight 0) must not influence the loss."""
+    labels = jnp.asarray([0.5, 0.5, 0.0, 0.0], jnp.float32)
+    w_half = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    loss_half = model.loss_fn(params, batch, labels, w_half, FLAGS_ON)
+    # Garbage labels in the masked slots must not matter.
+    labels2 = jnp.asarray([0.5, 0.5, 123.0, -55.0], jnp.float32)
+    loss_garbage = model.loss_fn(params, batch, labels2, w_half, FLAGS_ON)
+    np.testing.assert_allclose(float(loss_half), float(loss_garbage), rtol=1e-6)

@@ -1,0 +1,53 @@
+//! Encoder micro-benchmarks: PnR decision -> padded GNN tensors.
+//!
+//! `encode_into` runs once per scored candidate on the annealer hot path;
+//! the allocation-free reuse path must stay well under the PJRT dispatch
+//! cost (DESIGN.md §Perf, L3).
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::dfg::builders;
+use rdacost::gnn::{self, GraphTensors};
+use rdacost::placer::random_placement;
+use rdacost::router::route_all;
+use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(42);
+
+    for (name, graph) in [
+        ("gemm", builders::gemm_graph(64, 64, 64)),
+        ("mha", builders::mha(32, 128, 4)),
+        ("ffn", builders::ffn(64, 256, 1024)),
+    ] {
+        let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+        let routing = route_all(&fabric, &graph, &placement).unwrap();
+
+        // Fresh-allocation path.
+        b.bench(&format!("encode/alloc/{name}"), || {
+            black_box(gnn::encode(&graph, &fabric, &placement, &routing).unwrap())
+        });
+
+        // Reuse path (the hot one).
+        let bucket = gnn::select_bucket(graph.num_nodes(), graph.num_edges()).unwrap();
+        let mut scratch = GraphTensors::zeroed(bucket);
+        b.bench(&format!("encode/reuse/{name}"), || {
+            gnn::encode_into(&graph, &fabric, &placement, &routing, &mut scratch).unwrap();
+            black_box(scratch.live_nodes())
+        });
+    }
+
+    // Batch stacking (scoring-service path).
+    let graph = builders::mha(32, 128, 4);
+    let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = route_all(&fabric, &graph, &placement).unwrap();
+    let enc = gnn::encode(&graph, &fabric, &placement, &routing).unwrap();
+    let graphs: Vec<&GraphTensors> = (0..32).map(|_| &enc).collect();
+    b.bench("encode/stack_batch_32", || {
+        black_box(gnn::stack_batch(&graphs, enc.bucket, 32).unwrap())
+    });
+
+    b.write_csv("results/bench_encode.csv").unwrap();
+}

@@ -1,0 +1,46 @@
+//! Annealer benchmarks: SA iterations/sec under each objective — the
+//! end-to-end compile cost of every paper table is (iterations/sec) ×
+//! (iterations per subgraph) × (subgraphs).
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::cost::{HeuristicCost, OracleCost};
+use rdacost::dfg::builders;
+use rdacost::placer::{anneal, random_placement, AnnealParams};
+use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fabric = Fabric::new(FabricConfig::default());
+
+    // Fixed-size anneal runs (100 iterations) per objective.
+    let graph = builders::mha(32, 128, 4);
+    let params = AnnealParams { iterations: 100, ..AnnealParams::default() };
+
+    b.bench("placer/anneal100/heuristic/mha", || {
+        let mut rng = Rng::new(7);
+        let mut obj = HeuristicCost::new();
+        black_box(anneal(&graph, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+    });
+
+    b.bench("placer/anneal100/oracle/mha", || {
+        let mut rng = Rng::new(7);
+        let mut obj = OracleCost::new(Era::Past);
+        black_box(anneal(&graph, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+    });
+
+    // Initial placement generation.
+    b.bench("placer/random_placement/mha", || {
+        let mut rng = Rng::new(9);
+        black_box(random_placement(&graph, &fabric, &mut rng).unwrap())
+    });
+
+    let big = builders::ffn(64, 256, 1024);
+    b.bench("placer/anneal100/heuristic/ffn", || {
+        let mut rng = Rng::new(11);
+        let mut obj = HeuristicCost::new();
+        black_box(anneal(&big, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+    });
+
+    b.write_csv("results/bench_placer.csv").unwrap();
+}

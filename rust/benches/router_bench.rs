@@ -1,0 +1,48 @@
+//! Router micro-benchmarks: `route_all` is called once per annealer
+//! candidate, so its latency multiplies into every SA iteration of every
+//! compile in the paper's tables.
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::dfg::builders;
+use rdacost::placer::random_placement;
+use rdacost::router::{route_all, route_all_with, RouterParams};
+use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(42);
+
+    for (name, graph) in [
+        ("gemm_5ops", builders::gemm_graph(64, 64, 64)),
+        ("mha_25ops", builders::mha(32, 128, 4)),
+        ("ffn_11ops", builders::ffn(64, 256, 1024)),
+    ] {
+        let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+        b.bench(&format!("router/route_all/{name}"), || {
+            black_box(route_all(&fabric, &graph, &placement).unwrap())
+        });
+        b.bench(&format!("router/no_refine/{name}"), || {
+            black_box(
+                route_all_with(
+                    &fabric,
+                    &graph,
+                    &placement,
+                    RouterParams { congestion_weight: 0.5, refine_passes: 0 },
+                )
+                .unwrap(),
+            )
+        });
+    }
+
+    // Scaling with fabric size (16x16 mesh).
+    let big_fabric = Fabric::new(FabricConfig { rows: 16, cols: 16, ..FabricConfig::default() });
+    let graph = builders::mha(32, 128, 4);
+    let placement = random_placement(&graph, &big_fabric, &mut rng).unwrap();
+    b.bench("router/route_all/mha_on_16x16", || {
+        black_box(route_all(&big_fabric, &graph, &placement).unwrap())
+    });
+
+    b.write_csv("results/bench_router.csv").unwrap();
+}

@@ -1,0 +1,82 @@
+//! Learned-cost-model scoring benchmarks against the real AOT artifacts:
+//! single-graph PJRT dispatch (the annealer path), batched inference (the
+//! evaluation path), and one fused train step. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::dfg::builders;
+use rdacost::gnn::{self, GraphTensors};
+use rdacost::placer::{random_placement, Objective};
+use rdacost::router::route_all;
+use rdacost::runtime::Engine;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+    let mut learned =
+        LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(42);
+
+    // Single-graph scoring (annealer hot path), per bucket.
+    for (name, graph) in [
+        ("n32_bucket/gemm", builders::gemm_graph(64, 64, 64)),
+        ("n32_bucket/mha", builders::mha(32, 128, 4)),
+        ("n64_bucket/bigmha", builders::mha(64, 256, 8)),
+    ] {
+        let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+        let routing = route_all(&fabric, &graph, &placement).unwrap();
+        // Warm the executable cache outside the timed region.
+        learned.score(&graph, &fabric, &placement, &routing);
+        b.bench(&format!("scoring/single/{name}"), || {
+            black_box(learned.score(&graph, &fabric, &placement, &routing))
+        });
+    }
+
+    // Batched inference (B=32).
+    let graph = builders::mha(32, 128, 4);
+    let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = route_all(&fabric, &graph, &placement).unwrap();
+    let enc = gnn::encode(&graph, &fabric, &placement, &routing).unwrap();
+    let graphs: Vec<&GraphTensors> = (0..32).map(|_| &enc).collect();
+    learned.predict_batch(&graphs, 32).unwrap(); // warm
+    b.bench("scoring/batch32/mha", || {
+        black_box(learned.predict_batch(&graphs, 32).unwrap())
+    });
+
+    // One fused train step (B=32, smallest bucket).
+    {
+        use rdacost::data::{generate_family, GenConfig};
+        let cfg = GenConfig { total: 0, ..GenConfig::default() };
+        let mut rng2 = Rng::new(5);
+        let samples = generate_family(
+            rdacost::dfg::WorkloadFamily::Gemm,
+            32,
+            &fabric,
+            &cfg,
+            &mut rng2,
+        )
+        .unwrap();
+        let ds = rdacost::data::Dataset { samples };
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let mut t = Trainer::new(
+            engine,
+            TrainConfig { epochs: 1, ..TrainConfig::default() },
+        )
+        .unwrap();
+        t.fit(&ds, &idx).unwrap(); // warm compile
+        b.bench("train/epoch_32samples_b32", || {
+            black_box(t.fit(&ds, &idx).unwrap().final_train_loss)
+        });
+    }
+
+    b.write_csv("results/bench_scoring.csv").unwrap();
+}

@@ -1,0 +1,46 @@
+//! Simulator + theoretical-bound micro-benchmarks.
+//!
+//! The simulator is the label factory (5878 measurements per dataset) and
+//! the final arbiter of every end-to-end table — its eval rate bounds
+//! dataset-generation throughput (DESIGN.md §Perf target: >= 10^4 evals/sec
+//! on micro graphs).
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::dfg::builders;
+use rdacost::placer::random_placement;
+use rdacost::router::route_all;
+use rdacost::sim;
+use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(42);
+
+    for (name, graph) in [
+        ("gemm_64", builders::gemm_graph(64, 64, 64)),
+        ("mha_s32_d128", builders::mha(32, 128, 4)),
+        ("ffn_s64_d256", builders::ffn(64, 256, 1024)),
+        ("mlp_4layer", builders::mlp(32, &[256, 256, 256, 256])),
+    ] {
+        let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+        let routing = route_all(&fabric, &graph, &placement).unwrap();
+        b.bench(&format!("sim/measure/{name}"), || {
+            black_box(sim::measure(&fabric, &graph, &placement, &routing, Era::Past).unwrap())
+        });
+        b.bench(&format!("sim/theoretical_ii/{name}"), || {
+            black_box(sim::theoretical_ii(&fabric, &graph, &placement))
+        });
+    }
+
+    // Era sensitivity costs nothing extra (same code path, different table).
+    let graph = builders::mha(32, 128, 4);
+    let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = route_all(&fabric, &graph, &placement).unwrap();
+    b.bench("sim/measure/mha_present_era", || {
+        black_box(sim::measure(&fabric, &graph, &placement, &routing, Era::Present).unwrap())
+    });
+
+    b.write_csv("results/bench_sim.csv").unwrap();
+}

@@ -1,0 +1,25 @@
+//! The reconfigurable dataflow fabric (hardware substrate).
+//!
+//! The paper targets a SambaNova RDU; per the substitution rule (DESIGN.md)
+//! we implement the architecture template its own reference [11] describes —
+//! a **Plasticine-style grid**:
+//!
+//! * a 2-D mesh of **switches** carrying all on-chip traffic;
+//! * one functional unit hanging off each switch, alternating
+//!   checkerboard-fashion between **PCUs** (pattern compute units: SIMD
+//!   pipelines feeding a systolic core) and **PMUs** (pattern memory units:
+//!   banked scratchpads);
+//! * **DRAM ports** on the west and east edge switches.
+//!
+//! The fabric is pure topology + capability data: the router walks its link
+//! graph, the simulator reads its latency/bandwidth tables (which are
+//! [`era`]-dependent — the paper's "compiler upgrade" axis), and the placer
+//! treats units as slots.
+
+mod era;
+mod topology;
+mod units;
+
+pub use era::{Era, Microcode};
+pub use topology::{Fabric, FabricConfig, Link, LinkId};
+pub use units::{Unit, UnitId, UnitKind};

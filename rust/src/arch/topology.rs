@@ -1,0 +1,389 @@
+//! Fabric topology: the switch mesh, the units hanging off it, and the link
+//! graph the router operates on.
+
+use std::collections::HashMap;
+
+use super::units::{Unit, UnitId, UnitKind};
+
+/// Geometry + capability parameters for building a [`Fabric`].
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Tile rows of the switch mesh.
+    pub rows: u32,
+    /// Tile columns of the switch mesh.
+    pub cols: u32,
+    /// PCU SIMD lanes.
+    pub lanes: u32,
+    /// PCU datapath pipeline stages.
+    pub stages: u32,
+    /// PMU scratchpad capacity (bytes).
+    pub pmu_capacity: u64,
+    /// DRAM ports per edge column (attached to west/east edge switches,
+    /// spread evenly over rows).
+    pub dram_ports_per_side: u32,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        // A mid-size RDU-like part: 8x8 tiles -> 32 PCUs + 32 PMUs,
+        // 16-lane x 6-stage PCUs (96 MACs/cycle), 512 KiB PMUs, 4+4 DRAM.
+        FabricConfig {
+            rows: 8,
+            cols: 8,
+            lanes: 16,
+            stages: 6,
+            pmu_capacity: 512 * 1024,
+            dram_ports_per_side: 4,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// A small fabric for unit tests (2x2 tiles, 1+1 DRAM ports).
+    pub fn tiny() -> Self {
+        FabricConfig {
+            rows: 2,
+            cols: 2,
+            lanes: 4,
+            stages: 2,
+            pmu_capacity: 64 * 1024,
+            dram_ports_per_side: 1,
+        }
+    }
+}
+
+/// Index of a (bidirectional) link in the fabric link graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub u32);
+
+/// A bidirectional fabric link between two units (switch↔switch or
+/// switch↔local unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub id: LinkId,
+    pub a: UnitId,
+    pub b: UnitId,
+    /// Empirical effective-bandwidth factor in (0.6, 1.0]: SerDes lane
+    /// binning and firmware equalization make nominally identical links
+    /// measurably unequal. Deterministic per fabric. The learned model reads
+    /// it through the route-quality edge features; the expert rules use the
+    /// nominal datasheet bandwidth (§II-B).
+    pub quality: f64,
+}
+
+impl Link {
+    /// The endpoint opposite `from`, or None if `from` is not an endpoint.
+    pub fn other(&self, from: UnitId) -> Option<UnitId> {
+        if self.a == from {
+            Some(self.b)
+        } else if self.b == from {
+            Some(self.a)
+        } else {
+            None
+        }
+    }
+}
+
+/// The built fabric: units, switches, links, adjacency.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub config: FabricConfig,
+    units: Vec<Unit>,
+    links: Vec<Link>,
+    /// unit -> [(link, neighbor)]
+    adjacency: Vec<Vec<(LinkId, UnitId)>>,
+    /// tile (row, col) -> switch id
+    switch_at: HashMap<(i32, i32), UnitId>,
+}
+
+impl Fabric {
+    /// Build the checkerboard fabric described in the module docs.
+    pub fn new(config: FabricConfig) -> Fabric {
+        assert!(config.rows >= 1 && config.cols >= 1, "fabric must be non-empty");
+        let mut units: Vec<Unit> = Vec::new();
+        let mut switch_at: HashMap<(i32, i32), UnitId> = HashMap::new();
+
+        let push = |units: &mut Vec<Unit>, kind, row, col, cfg: &FabricConfig| {
+            let id = UnitId(units.len() as u32);
+            let (lanes, stages, capacity) = match kind {
+                UnitKind::Pcu => (cfg.lanes, cfg.stages, 0),
+                UnitKind::Pmu => (0, 0, cfg.pmu_capacity),
+                UnitKind::Switch => (0, 0, 0),
+                UnitKind::DramPort => (0, 0, u64::MAX),
+            };
+            // Empirical per-unit speed factor (silicon binning / thermal
+            // position): deterministic in the tile coordinate, in
+            // (0.60, 1.0]. Switches route at nominal speed.
+            let quality = if kind == UnitKind::Switch {
+                1.0
+            } else {
+                let mut h = (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (col as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+                    ^ (kind.index() as u64) << 7;
+                h ^= h >> 31;
+                h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+                h ^= h >> 29;
+                0.60 + 0.40 * ((h % 1024) as f64 / 1023.0)
+            };
+            units.push(Unit { id, kind, row, col, lanes, stages, capacity, quality });
+            id
+        };
+
+        // Switches + the functional unit on each tile (checkerboard).
+        for r in 0..config.rows as i32 {
+            for c in 0..config.cols as i32 {
+                let sw = push(&mut units, UnitKind::Switch, r, c, &config);
+                switch_at.insert((r, c), sw);
+                let kind = if (r + c) % 2 == 0 { UnitKind::Pcu } else { UnitKind::Pmu };
+                push(&mut units, kind, r, c, &config);
+            }
+        }
+        // DRAM ports on west (col = -1) and east (col = cols) edges.
+        for side in 0..2 {
+            let col = if side == 0 { -1 } else { config.cols as i32 };
+            for i in 0..config.dram_ports_per_side {
+                // Spread over rows.
+                let row = if config.dram_ports_per_side <= 1 {
+                    (config.rows / 2) as i32
+                } else {
+                    (i * (config.rows - 1) / (config.dram_ports_per_side - 1)) as i32
+                };
+                push(&mut units, UnitKind::DramPort, row, col, &config);
+            }
+        }
+
+        // Links. Switch mesh first.
+        let mut links: Vec<Link> = Vec::new();
+        let add_link = |links: &mut Vec<Link>, a: UnitId, b: UnitId| {
+            let id = LinkId(links.len() as u32);
+            // Per-link empirical bandwidth factor (see Link::quality),
+            // deterministic in the endpoint ids. Mesh links run firmware
+            // lane configurations (power/SI management): roughly half at
+            // full width, the rest at x1/2 or x1/4 — a 4x empirical spread
+            // nominal-datasheet rules know nothing about.
+            let mut h = (a.0 as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+                ^ (b.0 as u64).wrapping_mul(0xA02B_DBF7_BB3C_0A7A);
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            h ^= h >> 29;
+            let quality = match h % 8 {
+                0 | 1 | 2 | 3 => 1.0,
+                4 | 5 => 0.5,
+                _ => 0.25,
+            };
+            links.push(Link { id, a, b, quality });
+        };
+        for r in 0..config.rows as i32 {
+            for c in 0..config.cols as i32 {
+                let sw = switch_at[&(r, c)];
+                if c + 1 < config.cols as i32 {
+                    add_link(&mut links, sw, switch_at[&(r, c + 1)]);
+                }
+                if r + 1 < config.rows as i32 {
+                    add_link(&mut links, sw, switch_at[&(r + 1, c)]);
+                }
+            }
+        }
+        // Switch <-> local unit, and switch <-> DRAM port.
+        for u in units.iter().filter(|u| u.kind != UnitKind::Switch) {
+            let col = u.col.clamp(0, config.cols as i32 - 1);
+            let sw = switch_at[&(u.row, col)];
+            add_link(&mut links, sw, u.id);
+        }
+
+        // Unit↔switch umbilicals are per-operand port bundles at full speed
+        // (only shared mesh links carry the lane-config spread).
+        for link in links.iter_mut() {
+            let local = units[link.a.0 as usize].kind != UnitKind::Switch
+                || units[link.b.0 as usize].kind != UnitKind::Switch;
+            if local {
+                link.quality = 1.0;
+            }
+        }
+
+        // Adjacency.
+        let mut adjacency: Vec<Vec<(LinkId, UnitId)>> = vec![Vec::new(); units.len()];
+        for link in &links {
+            adjacency[link.a.0 as usize].push((link.id, link.b));
+            adjacency[link.b.0 as usize].push((link.id, link.a));
+        }
+
+        Fabric { config, units, links, adjacency, switch_at }
+    }
+
+    pub fn units(&self) -> &[Unit] {
+        &self.units
+    }
+
+    pub fn unit(&self, id: UnitId) -> &Unit {
+        &self.units[id.0 as usize]
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0 as usize]
+    }
+
+    /// Neighbors of `id` in the link graph as `(link, neighbor)` pairs.
+    pub fn neighbors(&self, id: UnitId) -> &[(LinkId, UnitId)] {
+        &self.adjacency[id.0 as usize]
+    }
+
+    /// The switch on tile `(row, col)`.
+    pub fn switch_at(&self, row: i32, col: i32) -> Option<UnitId> {
+        self.switch_at.get(&(row, col)).copied()
+    }
+
+    /// All units of a given kind (ids ascending).
+    pub fn units_of_kind(&self, kind: UnitKind) -> Vec<UnitId> {
+        self.units
+            .iter()
+            .filter(|u| u.kind == kind)
+            .map(|u| u.id)
+            .collect()
+    }
+
+    pub fn num_pcus(&self) -> usize {
+        self.units.iter().filter(|u| u.kind == UnitKind::Pcu).count()
+    }
+
+    pub fn num_pmus(&self) -> usize {
+        self.units.iter().filter(|u| u.kind == UnitKind::Pmu).count()
+    }
+
+    /// Manhattan distance between two units' tiles (router lower bound).
+    pub fn manhattan(&self, a: UnitId, b: UnitId) -> u32 {
+        self.unit(a).manhattan(self.unit(b))
+    }
+
+    /// Is this a unit↔switch umbilical (as opposed to a switch↔switch mesh
+    /// link)? Local links model the unit's port bundle: each operand gets a
+    /// dedicated physical port on the real machine, so they do not contend
+    /// the way shared mesh links do. (The conservative heuristic does not
+    /// know this — see `cost::heuristic`.)
+    pub fn is_local_link(&self, id: LinkId) -> bool {
+        let l = self.link(id);
+        self.unit(l.a).kind != UnitKind::Switch || self.unit(l.b).kind != UnitKind::Switch
+    }
+
+    /// Peak fabric MACs/cycle (roofline numerator used by DESIGN.md §Perf).
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        self.units.iter().map(Unit::peak_macs_per_cycle).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn default_fabric_counts() {
+        let f = Fabric::new(FabricConfig::default());
+        // 8x8 tiles: 64 switches, 32 PCUs, 32 PMUs, 8 DRAM ports.
+        assert_eq!(f.units_of_kind(UnitKind::Switch).len(), 64);
+        assert_eq!(f.num_pcus(), 32);
+        assert_eq!(f.num_pmus(), 32);
+        assert_eq!(f.units_of_kind(UnitKind::DramPort).len(), 8);
+    }
+
+    #[test]
+    fn tiny_fabric_counts() {
+        let f = Fabric::new(FabricConfig::tiny());
+        assert_eq!(f.units_of_kind(UnitKind::Switch).len(), 4);
+        assert_eq!(f.num_pcus(), 2);
+        assert_eq!(f.num_pmus(), 2);
+        assert_eq!(f.units_of_kind(UnitKind::DramPort).len(), 2);
+    }
+
+    #[test]
+    fn mesh_links_count() {
+        let f = Fabric::new(FabricConfig::tiny());
+        // 2x2 mesh: 4 horizontal+vertical switch links (2 rows*1 + 2 cols*1)
+        // = 4; plus 4 local-unit links; plus 2 DRAM links.
+        assert_eq!(f.links().len(), 4 + 4 + 2);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let f = Fabric::new(FabricConfig::default());
+        for u in f.units() {
+            for &(l, n) in f.neighbors(u.id) {
+                assert!(
+                    f.neighbors(n).iter().any(|&(l2, n2)| l2 == l && n2 == u.id),
+                    "link {l:?} not symmetric"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_non_switch_unit_reaches_a_switch() {
+        let f = Fabric::new(FabricConfig::default());
+        for u in f.units() {
+            if u.kind != UnitKind::Switch {
+                assert!(
+                    f.neighbors(u.id)
+                        .iter()
+                        .any(|&(_, n)| f.unit(n).kind == UnitKind::Switch),
+                    "{} has no switch neighbor",
+                    u.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn link_other_endpoint() {
+        let f = Fabric::new(FabricConfig::tiny());
+        let l = f.links()[0];
+        assert_eq!(l.other(l.a), Some(l.b));
+        assert_eq!(l.other(l.b), Some(l.a));
+        assert_eq!(l.other(UnitId(9999)), None);
+    }
+
+    #[test]
+    fn fabric_is_connected() {
+        // BFS from unit 0 must reach every unit (property over random sizes).
+        prop::check("fabric-connected", 16, |rng| {
+            let cfg = FabricConfig {
+                rows: rng.range_inclusive(1, 6) as u32,
+                cols: rng.range_inclusive(1, 6) as u32,
+                dram_ports_per_side: rng.range_inclusive(1, 3) as u32,
+                ..FabricConfig::default()
+            };
+            let f = Fabric::new(cfg);
+            let n = f.units().len();
+            let mut seen = vec![false; n];
+            let mut queue = vec![UnitId(0)];
+            seen[0] = true;
+            while let Some(u) = queue.pop() {
+                for &(_, v) in f.neighbors(u) {
+                    if !seen[v.0 as usize] {
+                        seen[v.0 as usize] = true;
+                        queue.push(v);
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "disconnected fabric");
+        });
+    }
+
+    #[test]
+    fn switch_lookup() {
+        let f = Fabric::new(FabricConfig::tiny());
+        let sw = f.switch_at(0, 0).unwrap();
+        assert_eq!(f.unit(sw).kind, UnitKind::Switch);
+        assert!(f.switch_at(5, 5).is_none());
+    }
+
+    #[test]
+    fn peak_macs_positive() {
+        let f = Fabric::new(FabricConfig::default());
+        // 32 PCUs * 16 lanes * 6 stages = 3072 MACs/cycle.
+        assert_eq!(f.peak_macs_per_cycle(), 3072.0);
+    }
+}

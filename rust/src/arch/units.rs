@@ -1,0 +1,151 @@
+//! Functional unit kinds and per-unit capability data.
+
+use std::fmt;
+
+/// Index of a unit (functional unit or switch) within a [`super::Fabric`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UnitId(pub u32);
+
+impl fmt::Display for UnitId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "u{}", self.0)
+    }
+}
+
+/// The four unit kinds of the Plasticine-style fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitKind {
+    /// Pattern Compute Unit: `lanes × stages` SIMD/systolic datapath.
+    Pcu,
+    /// Pattern Memory Unit: banked scratchpad with `capacity` bytes.
+    Pmu,
+    /// Mesh switch (routing only; cannot host operations).
+    Switch,
+    /// DRAM access point on the fabric edge (streams to/from off-chip).
+    DramPort,
+}
+
+impl UnitKind {
+    /// Stable index used by the GNN's one-hot unit-type feature. Must match
+    /// `UNIT_KIND_COUNT` in python/compile/model.py (checked via manifest).
+    pub fn index(&self) -> usize {
+        match self {
+            UnitKind::Pcu => 0,
+            UnitKind::Pmu => 1,
+            UnitKind::Switch => 2,
+            UnitKind::DramPort => 3,
+        }
+    }
+
+    pub const COUNT: usize = 4;
+
+    /// Can an operation be placed on this unit kind at all?
+    pub fn placeable(&self) -> bool {
+        matches!(self, UnitKind::Pcu | UnitKind::Pmu | UnitKind::DramPort)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnitKind::Pcu => "PCU",
+            UnitKind::Pmu => "PMU",
+            UnitKind::Switch => "SW",
+            UnitKind::DramPort => "DRAM",
+        }
+    }
+}
+
+/// One unit instance: its kind, grid position and capabilities.
+#[derive(Debug, Clone)]
+pub struct Unit {
+    pub id: UnitId,
+    pub kind: UnitKind,
+    /// Grid coordinates of the tile the unit belongs to (switches share the
+    /// coordinate of their tile; edge DRAM ports sit at col -1 / col = cols).
+    pub row: i32,
+    pub col: i32,
+    /// PCU: SIMD lanes. Unused otherwise.
+    pub lanes: u32,
+    /// PCU: pipeline stages in the datapath. Unused otherwise.
+    pub stages: u32,
+    /// PMU: scratchpad capacity in bytes. DramPort: unbounded (u64::MAX).
+    pub capacity: u64,
+    /// Empirical per-unit speed factor in (0.60, 1.0]: silicon binning and
+    /// thermal position make physically identical units measurably unequal.
+    /// Fixed per fabric (deterministic in the tile coordinates) — the
+    /// learned model can absorb it through the position features, while the
+    /// expert rules use nominal datasheet rates (§II-B: "subtleties in
+    /// hardware behaviors which are hard to encode by rigid rules").
+    pub quality: f64,
+}
+
+impl Unit {
+    /// Peak multiply-accumulates per cycle this unit can sustain (PCU only).
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        match self.kind {
+            UnitKind::Pcu => (self.lanes * self.stages) as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Manhattan distance between two units' tiles.
+    pub fn manhattan(&self, other: &Unit) -> u32 {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_indices_are_dense_and_distinct() {
+        let kinds = [UnitKind::Pcu, UnitKind::Pmu, UnitKind::Switch, UnitKind::DramPort];
+        let mut seen = vec![false; UnitKind::COUNT];
+        for k in kinds {
+            assert!(!seen[k.index()], "duplicate index");
+            seen[k.index()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn placeability() {
+        assert!(UnitKind::Pcu.placeable());
+        assert!(UnitKind::Pmu.placeable());
+        assert!(UnitKind::DramPort.placeable());
+        assert!(!UnitKind::Switch.placeable());
+    }
+
+    #[test]
+    fn peak_macs() {
+        let pcu = Unit {
+            id: UnitId(0),
+            kind: UnitKind::Pcu,
+            row: 0,
+            col: 0,
+            lanes: 16,
+            stages: 6,
+            capacity: 0,
+            quality: 1.0,
+        };
+        assert_eq!(pcu.peak_macs_per_cycle(), 96.0);
+        let pmu = Unit { kind: UnitKind::Pmu, ..pcu.clone() };
+        assert_eq!(pmu.peak_macs_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let mk = |row, col| Unit {
+            id: UnitId(0),
+            kind: UnitKind::Switch,
+            row,
+            col,
+            lanes: 0,
+            stages: 0,
+            capacity: 0,
+            quality: 1.0,
+        };
+        assert_eq!(mk(0, 0).manhattan(&mk(2, 3)), 5);
+        assert_eq!(mk(1, -1).manhattan(&mk(1, 2)), 3);
+    }
+}

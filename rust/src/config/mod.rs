@@ -1,0 +1,263 @@
+//! Run configuration: a small TOML-subset config system.
+//!
+//! Every CLI entry point accepts `--config <file>`; flags override file
+//! values, which override defaults. Supported syntax — the subset we need,
+//! parsed strictly (unknown keys are errors, so typos fail fast):
+//!
+//! ```toml
+//! [fabric]
+//! rows = 8
+//! cols = 8
+//! lanes = 16
+//! stages = 6
+//! pmu_capacity = 524288
+//! dram_ports_per_side = 4
+//!
+//! [run]
+//! era = "past"
+//! seed = 42
+//! artifacts = "artifacts"
+//! workers = 8
+//!
+//! [dataset]
+//! total = 5878
+//! frac_random = 0.5
+//! frac_walk = 0.3
+//!
+//! [train]
+//! epochs = 60
+//! batch = 32
+//! learning_rate = 0.003
+//!
+//! [anneal]
+//! iterations = 2000
+//! t_initial = 0.1
+//! t_final = 0.001
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::{Era, FabricConfig};
+use crate::data::GenConfig;
+use crate::placer::AnnealParams;
+use crate::train::TrainConfig;
+
+/// Parsed `section.key -> raw string value` map.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse the TOML subset: `[section]` headers, `key = value` lines,
+    /// `#` comments. Values: integers, floats, booleans, quoted strings.
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("config line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = key.trim();
+            let mut value = value.trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, value);
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &str) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        RawConfig::parse(&text)
+    }
+
+    fn take_parse<T: std::str::FromStr>(&mut self, key: &str, into: &mut T) -> Result<()>
+    where
+        T::Err: std::fmt::Display,
+    {
+        if let Some(v) = self.values.remove(key) {
+            *into = v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("config {key} = {v:?}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// The resolved run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub fabric: FabricConfig,
+    pub era: Era,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub workers: usize,
+    pub dataset: GenConfig,
+    pub train: TrainConfig,
+    pub anneal: AnnealParams,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            fabric: FabricConfig::default(),
+            era: Era::Past,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            dataset: GenConfig::default(),
+            train: TrainConfig::default(),
+            anneal: AnnealParams::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Defaults overridden by an optional config file.
+    pub fn from_file(path: Option<&str>) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let Some(path) = path else { return Ok(cfg) };
+        let mut raw = RawConfig::load(path)?;
+
+        raw.take_parse("fabric.rows", &mut cfg.fabric.rows)?;
+        raw.take_parse("fabric.cols", &mut cfg.fabric.cols)?;
+        raw.take_parse("fabric.lanes", &mut cfg.fabric.lanes)?;
+        raw.take_parse("fabric.stages", &mut cfg.fabric.stages)?;
+        raw.take_parse("fabric.pmu_capacity", &mut cfg.fabric.pmu_capacity)?;
+        raw.take_parse("fabric.dram_ports_per_side", &mut cfg.fabric.dram_ports_per_side)?;
+
+        if let Some(e) = raw.values.remove("run.era") {
+            cfg.era = Era::parse(&e)?;
+            cfg.dataset.era = cfg.era;
+        }
+        raw.take_parse("run.seed", &mut cfg.seed)?;
+        if let Some(a) = raw.values.remove("run.artifacts") {
+            cfg.artifacts_dir = a;
+        }
+        raw.take_parse("run.workers", &mut cfg.workers)?;
+
+        raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
+        raw.take_parse("dataset.frac_random", &mut cfg.dataset.frac_random)?;
+        raw.take_parse("dataset.frac_walk", &mut cfg.dataset.frac_walk)?;
+
+        raw.take_parse("train.epochs", &mut cfg.train.epochs)?;
+        raw.take_parse("train.batch", &mut cfg.train.batch)?;
+        raw.take_parse("train.learning_rate", &mut cfg.train.learning_rate)?;
+
+        raw.take_parse("anneal.iterations", &mut cfg.anneal.iterations)?;
+        raw.take_parse("anneal.t_initial", &mut cfg.anneal.t_initial)?;
+        raw.take_parse("anneal.t_final", &mut cfg.anneal.t_final)?;
+
+        if let Some(unknown) = raw.values.keys().next() {
+            bail!("unknown config key {unknown:?}");
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_subset() {
+        let raw = RawConfig::parse(
+            r#"
+# comment
+[fabric]
+rows = 4   # trailing comment
+cols = 6
+
+[run]
+era = "present"
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(raw.values["fabric.rows"], "4");
+        assert_eq!(raw.values["run.era"], "present");
+    }
+
+    #[test]
+    fn full_roundtrip_to_runconfig() {
+        let dir = std::env::temp_dir().join("rdacost_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            r#"
+[fabric]
+rows = 4
+cols = 4
+
+[run]
+era = "present"
+seed = 123
+
+[dataset]
+total = 100
+
+[train]
+epochs = 5
+
+[anneal]
+iterations = 77
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(Some(path.to_str().unwrap())).unwrap();
+        assert_eq!(cfg.fabric.rows, 4);
+        assert_eq!(cfg.era, Era::Present);
+        assert_eq!(cfg.dataset.era, Era::Present);
+        assert_eq!(cfg.seed, 123);
+        assert_eq!(cfg.dataset.total, 100);
+        assert_eq!(cfg.train.epochs, 5);
+        assert_eq!(cfg.anneal.iterations, 77);
+        // Unset keys keep defaults.
+        assert_eq!(cfg.fabric.lanes, FabricConfig::default().lanes);
+    }
+
+    #[test]
+    fn unknown_key_fails() {
+        let dir = std::env::temp_dir().join("rdacost_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.toml");
+        std::fs::write(&path, "[fabric]\nrwos = 4\n").unwrap();
+        assert!(RunConfig::from_file(Some(path.to_str().unwrap())).is_err());
+    }
+
+    #[test]
+    fn bad_value_fails() {
+        let dir = std::env::temp_dir().join("rdacost_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badval.toml");
+        std::fs::write(&path, "[fabric]\nrows = banana\n").unwrap();
+        assert!(RunConfig::from_file(Some(path.to_str().unwrap())).is_err());
+    }
+
+    #[test]
+    fn no_file_gives_defaults() {
+        let cfg = RunConfig::from_file(None).unwrap();
+        assert_eq!(cfg.era, Era::Past);
+        assert_eq!(cfg.dataset.total, 5878);
+    }
+
+    #[test]
+    fn malformed_line_fails() {
+        assert!(RawConfig::parse("just some words\n").is_err());
+    }
+}

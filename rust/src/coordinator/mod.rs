@@ -1,0 +1,21 @@
+//! L3 coordination: the multi-client serving layer around the cost model.
+//!
+//! Two components (std::thread-based; tokio is not vendored in this offline
+//! environment, and the workloads here are CPU-bound, not I/O-bound):
+//!
+//! * [`scoring`] — a **batched scoring service** in the style of an
+//!   inference router: annealer clients submit encoded PnR graphs; a
+//!   dispatcher groups them by bucket, pads to the AOT batch size, executes
+//!   one PJRT call per batch, and fans results back out. This amortizes
+//!   dispatch overhead when many placer workers search in parallel (the
+//!   production setting the paper's compiler runs in).
+//! * [`pool`] — the **dataset-generation worker pool**: the paper's
+//!   "industrial level CPU compute farm" in miniature. Shards the 5878-sample
+//!   corpus over threads with independent RNG streams and deterministic
+//!   merge order.
+
+pub mod pool;
+pub mod scoring;
+
+pub use pool::generate_parallel;
+pub use scoring::{ScoringClient, ScoringService, ServiceStats};

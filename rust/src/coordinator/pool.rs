@@ -1,0 +1,115 @@
+//! Parallel dataset generation: shard the corpus over worker threads.
+//!
+//! Each worker gets an independent RNG stream forked from the master seed;
+//! shards are merged in worker order, so the corpus is **deterministic for a
+//! given (seed, worker count)** — recorded in EXPERIMENTS.md for replay.
+
+use anyhow::Result;
+
+use crate::arch::Fabric;
+use crate::data::{Dataset, GenConfig, Sample};
+use crate::dfg::WorkloadFamily;
+use crate::util::rng::Rng;
+
+/// Generate `cfg.total` samples using `workers` threads.
+pub fn generate_parallel(
+    fabric: &Fabric,
+    cfg: &GenConfig,
+    seed: u64,
+    workers: usize,
+) -> Result<Dataset> {
+    let workers = workers.max(1);
+    let fams = WorkloadFamily::DATASET_FAMILIES;
+
+    // Build the shard plan: (family, count, rng) per task, families split
+    // evenly, each family's quota split over workers.
+    let mut master = Rng::new(seed);
+    let per_family = cfg.total / fams.len();
+    let extra = cfg.total % fams.len();
+    let mut tasks: Vec<(WorkloadFamily, usize, Rng)> = Vec::new();
+    for (i, fam) in fams.iter().enumerate() {
+        let fam_total = per_family + usize::from(i < extra);
+        let per_worker = fam_total / workers;
+        let w_extra = fam_total % workers;
+        for w in 0..workers {
+            let count = per_worker + usize::from(w < w_extra);
+            if count > 0 {
+                tasks.push((*fam, count, master.fork()));
+            }
+        }
+    }
+
+    // Run tasks on `workers` threads (simple work-stealing via index).
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<Result<Vec<Sample>>>>> =
+        (0..tasks.len()).map(|_| std::sync::Mutex::new(None)).collect();
+    let tasks_ref = &tasks;
+    let results_ref = &results;
+    let next_ref = &next;
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= tasks_ref.len() {
+                    break;
+                }
+                let (fam, count, rng) = &tasks_ref[i];
+                let mut rng = rng.clone();
+                let out = crate::data::generate_family(*fam, *count, fabric, cfg, &mut rng);
+                *results_ref[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    let mut samples = Vec::with_capacity(cfg.total);
+    for cell in results {
+        let r = cell.into_inner().unwrap().expect("worker task not run");
+        samples.extend(r?);
+    }
+    Ok(Dataset { samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+
+    #[test]
+    fn parallel_matches_count_and_mix() {
+        let fabric = Fabric::new(FabricConfig::default());
+        let cfg = GenConfig { total: 26, ..GenConfig::default() };
+        let ds = generate_parallel(&fabric, &cfg, 99, 4).unwrap();
+        assert_eq!(ds.len(), 26);
+        assert_eq!(ds.families().len(), 4);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed_and_workers() {
+        let fabric = Fabric::new(FabricConfig::default());
+        let cfg = GenConfig { total: 12, ..GenConfig::default() };
+        let a = generate_parallel(&fabric, &cfg, 7, 3).unwrap();
+        let b = generate_parallel(&fabric, &cfg, 7, 3).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let fabric = Fabric::new(FabricConfig::default());
+        let cfg = GenConfig { total: 8, ..GenConfig::default() };
+        let a = generate_parallel(&fabric, &cfg, 1, 2).unwrap();
+        let b = generate_parallel(&fabric, &cfg, 2, 2).unwrap();
+        assert!(a.samples.iter().zip(&b.samples).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let fabric = Fabric::new(FabricConfig::default());
+        let cfg = GenConfig { total: 5, ..GenConfig::default() };
+        let ds = generate_parallel(&fabric, &cfg, 3, 1).unwrap();
+        assert_eq!(ds.len(), 5);
+    }
+}

@@ -1,0 +1,215 @@
+//! The batched scoring service.
+//!
+//! Architecture (single dispatcher thread, many clients):
+//!
+//! ```text
+//!  annealer client ──┐
+//!  annealer client ──┼── mpsc ──► dispatcher ── PJRT batch exec ──► replies
+//!  annealer client ──┘            (groups by bucket, pads to B,
+//!                                  flushes on full batch or deadline)
+//! ```
+//!
+//! Requests carry encoded [`GraphTensors`]; replies are the predicted
+//! normalized throughput. The dispatcher flushes a bucket's queue when it
+//! reaches the AOT batch size or when the oldest request exceeds
+//! `max_wait` — the same size-or-deadline policy production inference
+//! routers use.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cost::learned::infer_artifact;
+use crate::cost::Ablation;
+use crate::gnn::{self, Bucket, GraphTensors};
+use crate::runtime::{Engine, Tensor};
+use crate::train::ParamStore;
+
+/// One in-flight request.
+struct Request {
+    graph: GraphTensors,
+    reply: Sender<f64>,
+    enqueued: Instant,
+}
+
+/// Counters exposed for benches and EXPERIMENTS.md §Perf.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub full_batches: AtomicU64,
+    pub deadline_flushes: AtomicU64,
+}
+
+impl ServiceStats {
+    /// Mean occupancy of executed batches (1.0 = always full).
+    pub fn occupancy(&self, batch_size: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / (b as f64 * batch_size as f64)
+    }
+}
+
+/// Handle used by clients; cheap to clone.
+#[derive(Clone)]
+pub struct ScoringClient {
+    tx: Sender<Request>,
+}
+
+impl ScoringClient {
+    /// Submit one encoded graph and wait for its score.
+    pub fn score(&self, graph: GraphTensors) -> Result<f64> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { graph, reply: reply_tx, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("scoring service shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scoring service dropped the request"))
+    }
+}
+
+/// The service: owns the dispatcher thread.
+pub struct ScoringService {
+    tx: Option<Sender<Request>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServiceStats>,
+}
+
+impl ScoringService {
+    /// Start the dispatcher. `batch` must match an AOT infer batch size (32).
+    pub fn start(
+        engine: Arc<Engine>,
+        params: &ParamStore,
+        ablation: Ablation,
+        batch: usize,
+        max_wait: Duration,
+    ) -> Result<ScoringService> {
+        gnn::schema::check_manifest(engine.manifest())?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(ServiceStats::default());
+        let stats2 = stats.clone();
+        let param_values: Vec<Tensor> = params.values();
+        let dispatcher = std::thread::Builder::new()
+            .name("rdacost-scoring".into())
+            .spawn(move || {
+                dispatcher_loop(engine, param_values, ablation, batch, max_wait, rx, stats2)
+            })?;
+        Ok(ScoringService { tx: Some(tx), dispatcher: Some(dispatcher), stats })
+    }
+
+    pub fn client(&self) -> ScoringClient {
+        ScoringClient { tx: self.tx.as_ref().expect("service live").clone() }
+    }
+}
+
+impl Drop for ScoringService {
+    fn drop(&mut self) {
+        // Closing the channel stops the dispatcher after it drains.
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    engine: Arc<Engine>,
+    params: Vec<Tensor>,
+    ablation: Ablation,
+    batch: usize,
+    max_wait: Duration,
+    rx: Receiver<Request>,
+    stats: Arc<ServiceStats>,
+) {
+    let mut queues: HashMap<String, (Bucket, Vec<Request>)> = HashMap::new();
+    loop {
+        // Wait for work, bounded by the oldest queued deadline.
+        let timeout = queues
+            .values()
+            .flat_map(|(_, q)| q.iter().map(|r| r.enqueued))
+            .min()
+            .map(|oldest| max_wait.saturating_sub(oldest.elapsed()))
+            .unwrap_or(max_wait);
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let b = req.graph.bucket;
+                let entry = queues.entry(b.tag()).or_insert((b, Vec::new()));
+                entry.1.push(req);
+                if entry.1.len() >= batch {
+                    stats.full_batches.fetch_add(1, Ordering::Relaxed);
+                    let (bucket, q) = queues.remove(&b.tag()).unwrap();
+                    execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // Flush everything past deadline (and anything else queued —
+                // latency beats occupancy once we are already flushing).
+                let keys: Vec<String> = queues.keys().cloned().collect();
+                for k in keys {
+                    let (bucket, q) = queues.remove(&k).unwrap();
+                    if !q.is_empty() {
+                        stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+                        execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Drain remaining queues, then exit.
+                for (_, (bucket, q)) in queues.drain() {
+                    if !q.is_empty() {
+                        execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn execute_batch(
+    engine: &Engine,
+    params: &[Tensor],
+    ablation: Ablation,
+    batch: usize,
+    bucket: Bucket,
+    requests: Vec<Request>,
+    stats: &ServiceStats,
+) {
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    // Chunk in case a deadline flush accumulated more than one batch.
+    for chunk in requests.chunks(batch) {
+        let graphs: Vec<&GraphTensors> = chunk.iter().map(|r| &r.graph).collect();
+        let result = (|| -> Result<Vec<f64>> {
+            let exe = engine.load(&infer_artifact(bucket, batch))?;
+            let mut inputs = params.to_vec();
+            inputs.extend(gnn::stack_batch(&graphs, bucket, batch)?);
+            inputs.push(gnn::flags_tensor(ablation.flags()));
+            let out = exe.run(&inputs)?;
+            Ok(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64).collect())
+        })();
+        match result {
+            Ok(preds) => {
+                for (req, pred) in chunk.iter().zip(preds) {
+                    let _ = req.reply.send(pred);
+                }
+            }
+            Err(e) => {
+                eprintln!("scoring batch failed: {e:#}");
+                // Drop the reply senders; clients see a recv error.
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Service tests need real artifacts -> rust/tests/coordinator_integration.rs
+}

@@ -1,0 +1,335 @@
+//! The heuristic baseline cost model.
+//!
+//! A faithful rendering of the baseline the paper describes (§II-B, §IV-A-b):
+//! *"each individual operator type has its own rule-based system to capture
+//! how fast this operator generates outputs in isolation. A graph-level
+//! heuristic predicts normalized throughput and estimates routing congestion
+//! from these speed metrics."*
+//!
+//! Its systematic errors — the reason the GNN wins — are intentional and
+//! mirror §II-B:
+//!
+//! 1. **Per-op rules model units in isolation.** Stage time is the *sum* of
+//!    op estimates in the stage (no dependency analysis), overestimating
+//!    stages with parallel branches.
+//! 2. **Conservative congestion.** Any link carrying k flows is charged as
+//!    if each flow needed the full bandwidth (`k × serialization`), the
+//!    exact "discourage time-sharing" behaviour of the paper's example —
+//!    while the real machine (simulator) time-shares with only a small
+//!    arbitration loss.
+//! 3. **Frozen calibration.** The efficiency constants were hand-tuned when
+//!    the compiler was at `Era::Past`; after the upgrade (`Era::Present`)
+//!    they are stale. The struct deliberately takes no `Era`.
+//! 4. **No memory-system model.** PMU buffer credits are ignored.
+
+use crate::arch::Fabric;
+use crate::dfg::{Dfg, OpKind};
+use crate::placer::{Objective, Placement};
+use crate::router::Routing;
+use crate::sim;
+
+/// Expert-tuned constants (NOT the simulator's microcode table — these are
+/// the *approximations* an engineering team hand-calibrated against Past-era
+/// measurements, with typical errors in the hard-to-model op classes).
+#[derive(Debug, Clone, Copy)]
+pub struct HeuristicRules {
+    pub gemm_rate: f64,
+    pub elementwise_rate: f64,
+    pub softmax_rate: f64,
+    pub layernorm_rate: f64,
+    pub transpose_rate: f64,
+    pub reduce_rate: f64,
+    pub pmu_bytes_per_cycle: f64,
+    pub dram_bytes_per_cycle: f64,
+    pub hop_cycles: f64,
+    pub link_bytes_per_cycle: f64,
+    pub stage_overhead: f64,
+    /// Global derating factor: after assembling the rule-based estimate the
+    /// team scales it so predictions match measurements *on average* over
+    /// the Past-era calibration suite (one scalar is cheap to tune; the
+    /// per-decision dispersion around it is what rules can't fix).
+    pub calibration: f64,
+}
+
+impl Default for HeuristicRules {
+    fn default() -> Self {
+        // Calibrated circa Era::Past: GEMM is well understood (close to the
+        // true 0.82), the "weird" ops were measured on unrepresentative
+        // microbenchmarks (softmax/layernorm estimates are optimistic by
+        // ~1.5x; transpose pessimistic), and the memory rates are rounded.
+        HeuristicRules {
+            gemm_rate: 0.80,
+            elementwise_rate: 0.50,
+            softmax_rate: 0.45,   // true past value: 0.30 (too optimistic)
+            layernorm_rate: 0.50, // true past value: 0.34 (too optimistic)
+            transpose_rate: 0.30, // true past value: 0.45 (too pessimistic)
+            reduce_rate: 0.50,
+            pmu_bytes_per_cycle: 50.0,
+            dram_bytes_per_cycle: 16.0, // per-port rule; side sharing unknown
+            hop_cycles: 6.0,
+            link_bytes_per_cycle: 2.0,
+            stage_overhead: 12.0,
+            calibration: 2.8,
+        }
+    }
+}
+
+/// The baseline cost model. See module docs for its designed-in biases.
+pub struct HeuristicCost {
+    pub rules: HeuristicRules,
+}
+
+impl HeuristicCost {
+    pub fn new() -> Self {
+        HeuristicCost { rules: HeuristicRules::default() }
+    }
+
+    /// Estimated cycles for one op in isolation (rule #1: per-op rules).
+    fn op_estimate(&self, fabric: &Fabric, placement: &Placement, node: &crate::dfg::Node) -> f64 {
+        let r = &self.rules;
+        let unit = fabric.unit(placement.unit(node.id));
+        match node.kind {
+            OpKind::Gemm { .. }
+            | OpKind::Elementwise { .. }
+            | OpKind::Softmax { .. }
+            | OpKind::LayerNorm { .. }
+            | OpKind::Transpose { .. }
+            | OpKind::Reduce { .. } => {
+                let rate = match node.kind {
+                    OpKind::Gemm { .. } => r.gemm_rate,
+                    OpKind::Elementwise { .. } => r.elementwise_rate,
+                    OpKind::Softmax { .. } => r.softmax_rate,
+                    OpKind::LayerNorm { .. } => r.layernorm_rate,
+                    OpKind::Transpose { .. } => r.transpose_rate,
+                    OpKind::Reduce { .. } => r.reduce_rate,
+                    _ => unreachable!(),
+                };
+                let peak = unit.peak_macs_per_cycle().max(1.0);
+                let macs = node.kind.flops() / 2.0;
+                if macs > 0.0 {
+                    macs / (peak * rate)
+                } else {
+                    let elems = node.kind.output_bytes() as f64 / 4.0;
+                    elems / ((unit.lanes.max(1) as f64) * rate)
+                }
+            }
+            OpKind::Buffer { bytes } => bytes as f64 / r.pmu_bytes_per_cycle,
+            OpKind::Load { bytes } | OpKind::Store { bytes } => {
+                bytes as f64 / r.dram_bytes_per_cycle
+            }
+        }
+    }
+
+    /// The raw estimated initiation interval (exposed for diagnostics).
+    ///
+    /// Graph-level combination of the isolated per-op rules: additive
+    /// per-stage sums (no dependency-path analysis), flat per-class rates
+    /// (no shape-dependent microcode behaviour), conservative congestion,
+    /// per-port DRAM rules (no side-controller interaction), no PMU credit
+    /// model.
+    pub fn estimate_ii(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+    ) -> f64 {
+        let r = &self.rules;
+
+        // Rule #1: additive per-stage estimates from the isolated per-op
+        // rules. The rates are *flat per op class* — the empirical machine's
+        // shape-dependent behaviours (reduction ramps, tile padding, per-row
+        // drains; see `sim::op_cycles`) would each need their own hand-tuned
+        // table, which is exactly the engineering cost the paper says teams
+        // don't pay (§II-B).
+        let mut stage_sum: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for node in graph.nodes() {
+            *stage_sum.entry(placement.stage(node.id)).or_insert(0.0) +=
+                self.op_estimate(fabric, placement, node);
+        }
+        // Rule #2: transit charged additively into the source stage for ALL
+        // edges (no dependency analysis: intra-stage streaming and
+        // cross-stage buffered hand-off look the same to per-op rules).
+        for e in graph.edges() {
+            let transit = routing.routes[e.id.0 as usize].hops() as f64 * r.hop_cycles
+                + e.bytes as f64 / r.link_bytes_per_cycle;
+            *stage_sum.entry(placement.stage(e.src)).or_insert(0.0) += transit;
+        }
+        let stage_est = stage_sum
+            .values()
+            .map(|s| s + r.stage_overhead)
+            .fold(0.0_f64, f64::max);
+
+        // Rule #3: conservative congestion on shared mesh links — every flow
+        // is charged its full bytes (no knowledge of in-fabric multicast: a
+        // fanned-out tensor is paid once per consumer) with a harsher
+        // arbitration surcharge than the machine's real loss. This is
+        // §II-B's "discourage route sharing even when the fabric could
+        // time-share" behaviour: directionally right (so the annealer is
+        // still usable), conservatively wrong in magnitude.
+        let mut per_flow_bytes = vec![0u64; routing.link_flows.len()];
+        for e in graph.edges() {
+            for l in &routing.routes[e.id.0 as usize].links {
+                per_flow_bytes[l.0 as usize] += e.bytes;
+            }
+        }
+        let mut congestion_est: f64 = 0.0;
+        for (li, &flows) in routing.link_flows.iter().enumerate() {
+            if flows == 0 || fabric.is_local_link(crate::arch::LinkId(li as u32)) {
+                continue;
+            }
+            let serial = per_flow_bytes[li] as f64 / r.link_bytes_per_cycle;
+            let arb = 1.0 + 0.5 * (flows.saturating_sub(1)) as f64;
+            congestion_est = congestion_est.max(serial * arb);
+        }
+
+        // DRAM rule: per-port streaming (the side-controller interference of
+        // the real machine is a cross-unit effect the rules don't have).
+        let mut port_bytes: std::collections::HashMap<crate::arch::UnitId, u64> =
+            std::collections::HashMap::new();
+        for node in graph.nodes() {
+            if let OpKind::Load { bytes } | OpKind::Store { bytes } = node.kind {
+                *port_bytes.entry(placement.unit(node.id)).or_insert(0) += bytes;
+            }
+        }
+        let dram_est = port_bytes
+            .values()
+            .map(|&b| b as f64 / r.dram_bytes_per_cycle)
+            .fold(0.0_f64, f64::max);
+
+        stage_est.max(congestion_est).max(dram_est) * r.calibration
+        // Rule #5: no PMU credit model.
+    }
+}
+
+impl Default for HeuristicCost {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Objective for HeuristicCost {
+    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+        let ii_est = self.estimate_ii(graph, fabric, placement, routing);
+        let bound = sim::theoretical_ii(fabric, graph, placement);
+        (bound / ii_est.max(1e-9)).clamp(0.0, 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Era, FabricConfig};
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Fabric, Dfg, Placement, Routing) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        (f, g, p, r)
+    }
+
+    #[test]
+    fn scores_in_unit_interval() {
+        let (f, g, p, r) = setup(1);
+        let mut h = HeuristicCost::new();
+        let s = h.score(&g, &f, &p, &r);
+        assert!(s > 0.0 && s <= 1.0, "score {s}");
+    }
+
+    #[test]
+    fn correlates_directionally_with_truth() {
+        // Pooled across *different workloads*, the heuristic must be
+        // informative (its per-op rules capture compute magnitude), even
+        // though within a single graph's placements it can be nearly blind
+        // (paper Fig 2: per-family baseline ranks as low as ~0.1).
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(2);
+        let mut h = HeuristicCost::new();
+        let mut est = Vec::new();
+        let mut truth = Vec::new();
+        let graphs = [
+            builders::mlp(32, &[256, 256, 256]),
+            builders::mlp(8, &[64, 64]),
+            builders::ffn(16, 64, 256),
+            builders::ffn(64, 256, 1024),
+            builders::mha(16, 64, 2),
+            builders::mha(64, 256, 8),
+            builders::gemm_graph(32, 32, 32),
+            builders::gemm_graph(256, 256, 256),
+        ];
+        for g in &graphs {
+            for _ in 0..8 {
+                let p = random_placement(g, &f, &mut rng).unwrap();
+                let r = route_all(&f, g, &p).unwrap();
+                est.push(h.score(g, &f, &p, &r));
+                truth.push(
+                    sim::measure(&f, g, &p, &r, Era::Past)
+                        .unwrap()
+                        .normalized_throughput,
+                );
+            }
+        }
+        let rho = crate::metrics::spearman(&est, &truth);
+        assert!(rho > 0.15, "heuristic should be informative pooled, rho={rho}");
+    }
+
+    #[test]
+    fn heuristic_is_imperfect() {
+        // ...but it must not be an oracle either; its error should be
+        // nontrivial on congested graphs (this is the gap the GNN learns).
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(3);
+        let mut h = HeuristicCost::new();
+        let mut re_sum = 0.0;
+        let n = 30;
+        for _ in 0..n {
+            let p = random_placement(&g, &f, &mut rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            let est = h.score(&g, &f, &p, &r);
+            let t = sim::measure(&f, &g, &p, &r, Era::Past)
+                .unwrap()
+                .normalized_throughput;
+            re_sum += (est - t).abs() / t.max(1e-9);
+        }
+        let mean_re = re_sum / n as f64;
+        assert!(mean_re > 0.05, "heuristic suspiciously perfect: RE={mean_re}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (f, g, p, r) = setup(4);
+        let mut h = HeuristicCost::new();
+        assert_eq!(h.score(&g, &f, &p, &r), h.score(&g, &f, &p, &r));
+    }
+
+    #[test]
+    fn congestion_rule_is_conservative() {
+        // Synthetic: doubling flows on the busiest link must not *increase*
+        // the heuristic's score (it charges k x serialization).
+        let (f, g, p, r) = setup(5);
+        let mut h = HeuristicCost::new();
+        let base = h.score(&g, &f, &p, &r);
+        let mut congested = r.clone();
+        let busiest = congested
+            .link_bytes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &b)| b)
+            .unwrap()
+            .0;
+        congested.link_flows[busiest] *= 4;
+        let worse = h.score(&g, &f, &p, &congested);
+        assert!(worse <= base);
+    }
+}

@@ -1,0 +1,24 @@
+//! Cost models: the objective functions that guide placement.
+//!
+//! * [`HeuristicCost`] — the expert-rule baseline (paper §II-B / §IV-A-b):
+//!   per-op rate rules, additive stage estimates, a conservative congestion
+//!   penalty, constants frozen at `Era::Past` calibration.
+//! * [`LearnedCost`] — the paper's contribution: the AOT-compiled GNN
+//!   throughput regressor driven from the Rust hot path.
+//! * [`OracleCost`] — the simulator itself as an objective (upper bound for
+//!   sanity checks and ablation benches; not available on real hardware,
+//!   where a full measurement takes minutes — the very reason cost models
+//!   exist).
+//!
+//! All cost models implement [`crate::placer::Objective`] and *predict the
+//! normalized throughput* of a PnR decision (higher is better), so they are
+//! interchangeable inside the annealer and directly comparable against
+//! simulator ground truth with RE / Spearman metrics.
+
+mod heuristic;
+pub mod learned;
+mod oracle;
+
+pub use heuristic::{HeuristicCost, HeuristicRules};
+pub use learned::{Ablation, LearnedCost};
+pub use oracle::OracleCost;

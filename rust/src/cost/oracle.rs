@@ -1,0 +1,57 @@
+//! The simulator as an objective — ground truth, used for sanity checks and
+//! the "perfect cost model" ablation.
+
+use crate::arch::{Era, Fabric};
+use crate::dfg::Dfg;
+use crate::placer::{Objective, Placement};
+use crate::router::Routing;
+use crate::sim;
+
+/// Scores a placement with the full simulator. On real hardware this would
+/// be a complete compile + measure cycle (the expensive thing cost models
+/// avoid); on our substrate it is merely the honest upper bound for cost
+/// model quality.
+pub struct OracleCost {
+    pub era: Era,
+}
+
+impl OracleCost {
+    pub fn new(era: Era) -> Self {
+        OracleCost { era }
+    }
+}
+
+impl Objective for OracleCost {
+    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+        sim::measure(fabric, graph, placement, routing, self.era)
+            .map(|r| r.normalized_throughput)
+            .unwrap_or(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn oracle_matches_simulator() {
+        let g = builders::ffn(16, 64, 256);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(1);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        let mut oracle = OracleCost::new(Era::Past);
+        let s = oracle.score(&g, &f, &p, &r);
+        let truth = sim::measure(&f, &g, &p, &r, Era::Past).unwrap();
+        assert_eq!(s, truth.normalized_throughput);
+    }
+}

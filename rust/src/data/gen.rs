@@ -1,0 +1,282 @@
+//! Random PnR decision sampling and measurement (the label factory).
+
+use anyhow::Result;
+
+use crate::arch::{Era, Fabric};
+use crate::cost::HeuristicCost;
+use crate::dfg::{builders, Dfg, WorkloadFamily};
+use crate::gnn;
+use crate::placer::{anneal, random_placement, AnnealParams, Placement};
+use crate::router::route_all;
+use crate::sim;
+use crate::util::rng::Rng;
+
+use super::store::{Dataset, Sample};
+
+/// Dataset-generation configuration.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Total samples across all four families (paper: 5878).
+    pub total: usize,
+    /// Hardware/compiler era the labels are measured under.
+    pub era: Era,
+    /// Fraction of samples that are pure random placements.
+    pub frac_random: f64,
+    /// Fraction that are random-walk intermediates (hot annealer).
+    pub frac_walk: f64,
+    // Remainder: endpoints of short randomized-SA runs guided by the
+    // heuristic (realistic "compiler output" decisions).
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { total: 5878, era: Era::Past, frac_random: 0.5, frac_walk: 0.3 }
+    }
+}
+
+/// Draw a workload from a family's size distribution (paper: "various width
+/// and depth"). Sizes are chosen to fit the default fabric unpartitioned.
+pub fn draw_workload(family: WorkloadFamily, rng: &mut Rng) -> Dfg {
+    match family {
+        WorkloadFamily::Gemm => {
+            let m = 32u64 << rng.below(4); // 32..256
+            let n = 32u64 << rng.below(4);
+            let k = 32u64 << rng.below(4);
+            builders::gemm_graph(m, n, k)
+        }
+        WorkloadFamily::Mlp => {
+            let depth = rng.range_inclusive(1, 4);
+            let batch = 8u64 << rng.below(4); // 8..64
+            let dims: Vec<u64> = (0..=depth).map(|_| 64u64 << rng.below(3)).collect();
+            builders::mlp(batch, &dims)
+        }
+        WorkloadFamily::Ffn => {
+            let seq = 16u64 << rng.below(4); // 16..128
+            let d = 64u64 << rng.below(2); // 64..256
+            builders::ffn(seq, d, 4 * d)
+        }
+        WorkloadFamily::Mha => {
+            let seq = 16u64 << rng.below(3); // 16..64
+            let d = 64u64 << rng.below(2); // 64..256
+            let heads = 2u64 << rng.below(3); // 2..8
+            builders::mha(seq, d, heads)
+        }
+        WorkloadFamily::BertLarge | WorkloadFamily::Gpt2Xl => {
+            panic!("large models are compiled via partition, not sampled directly")
+        }
+    }
+}
+
+/// Produce one PnR decision for `graph` according to the configured mix.
+fn draw_decision(
+    graph: &Dfg,
+    fabric: &Fabric,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> Result<Placement> {
+    let roll = rng.f64();
+    if roll < cfg.frac_random {
+        // Pure random placement.
+        random_placement(graph, fabric, rng)
+    } else if roll < cfg.frac_random + cfg.frac_walk {
+        // Random walk: apply a burst of random valid moves to a random
+        // start (an infinite-temperature annealer), giving
+        // correlated-but-unoptimized decisions.
+        let mut p = random_placement(graph, fabric, rng)?;
+        let steps = rng.range_inclusive(10, 120);
+        for _ in 0..steps {
+            p = one_random_move(graph, fabric, &p, rng);
+        }
+        Ok(p)
+    } else {
+        // Short randomized-SA run guided by the heuristic cost model.
+        let params = AnnealParams::randomized(rng);
+        let mut heuristic = HeuristicCost::new();
+        let (best, _, _) = anneal(graph, fabric, &mut heuristic, &params, rng)?;
+        Ok(best)
+    }
+}
+
+/// Apply one random valid move (relocate / swap / stage-shift) to a copy.
+fn one_random_move(graph: &Dfg, fabric: &Fabric, p: &Placement, rng: &mut Rng) -> Placement {
+    let mut out = p.clone();
+    match rng.below(3) {
+        0 => {
+            // Relocate.
+            let node = rng.below(graph.num_nodes());
+            let kind = graph.nodes()[node].kind.unit_kind();
+            let free = p.free_units(fabric, kind);
+            if !free.is_empty() {
+                out.unit_of[node] = *rng.pick(&free);
+            }
+        }
+        1 => {
+            // Swap same-kind pair.
+            let a = rng.below(graph.num_nodes());
+            let kind = graph.nodes()[a].kind.unit_kind();
+            let peers: Vec<usize> = (0..graph.num_nodes())
+                .filter(|&i| i != a && graph.nodes()[i].kind.unit_kind() == kind)
+                .collect();
+            if !peers.is_empty() {
+                let b = *rng.pick(&peers);
+                out.unit_of.swap(a, b);
+            }
+        }
+        _ => {
+            // Stage shift respecting monotonicity.
+            let node = rng.below(graph.num_nodes());
+            let nid = crate::dfg::NodeId(node as u32);
+            let s = p.stage_of[node];
+            let min_pred = graph.incoming(nid).map(|e| p.stage(e.src)).max().unwrap_or(0);
+            let max_succ = graph
+                .outgoing(nid)
+                .map(|e| p.stage(e.dst))
+                .min()
+                .unwrap_or(u32::MAX);
+            let mut opts = Vec::new();
+            if s > 0 && s - 1 >= min_pred {
+                opts.push(s - 1);
+            }
+            if s + 1 <= max_succ {
+                opts.push(s + 1);
+            }
+            if !opts.is_empty() {
+                out.stage_of[node] = *rng.pick(&opts);
+            }
+        }
+    }
+    out
+}
+
+/// Decisions sampled per drawn workload. The paper's corpus comes from
+/// randomized-SA runs, i.e. *many decisions of the same graph*: the metric
+/// that matters to a placer is ranking decisions within a graph, so the
+/// dataset must contain that comparison.
+pub const DECISIONS_PER_WORKLOAD: usize = 8;
+
+/// Generate `count` labelled samples for one family.
+pub fn generate_family(
+    family: WorkloadFamily,
+    count: usize,
+    fabric: &Fabric,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> Result<Vec<Sample>> {
+    let mut out = Vec::with_capacity(count);
+    let mut heuristic = HeuristicCost::new();
+    'outer: loop {
+        let graph = draw_workload(family, rng);
+        for _ in 0..DECISIONS_PER_WORKLOAD {
+            if out.len() >= count {
+                break 'outer;
+            }
+            let placement = draw_decision(&graph, fabric, cfg, rng)?;
+            let routing = route_all(fabric, &graph, &placement)?;
+            let report = sim::measure(fabric, &graph, &placement, &routing, cfg.era)?;
+            let mut tensors = gnn::encode(&graph, fabric, &placement, &routing)?;
+            tensors.label = report.normalized_throughput as f32;
+            // Capture the baseline's prediction now — the raw decision is
+            // not stored, so this is the only chance (data::store::Sample).
+            let heuristic_pred = {
+                use crate::placer::Objective;
+                heuristic.score(&graph, fabric, &placement, &routing) as f32
+            };
+            out.push(Sample { family: family.name().to_string(), heuristic_pred, tensors });
+        }
+        if out.len() >= count {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+/// Generate the full corpus: `cfg.total` split evenly over the four §IV-A
+/// families (single-threaded; the coordinator parallelizes over families ×
+/// shards).
+pub fn generate(fabric: &Fabric, cfg: &GenConfig, rng: &mut Rng) -> Result<Dataset> {
+    let fams = WorkloadFamily::DATASET_FAMILIES;
+    let per = cfg.total / fams.len();
+    let extra = cfg.total % fams.len();
+    let mut samples = Vec::with_capacity(cfg.total);
+    for (i, fam) in fams.iter().enumerate() {
+        let count = per + usize::from(i < extra);
+        samples.extend(generate_family(*fam, count, fabric, cfg, rng)?);
+    }
+    Ok(Dataset { samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::metrics;
+
+    #[test]
+    fn workloads_fit_default_fabric() {
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(1);
+        for fam in WorkloadFamily::DATASET_FAMILIES {
+            for _ in 0..20 {
+                let g = draw_workload(fam, &mut rng);
+                g.validate().unwrap();
+                let (pcu, pmu, dram) = g.unit_demand();
+                assert!(pcu <= f.num_pcus(), "{fam:?} pcu {pcu}");
+                assert!(pmu <= f.num_pmus(), "{fam:?} pmu {pmu}");
+                assert!(dram <= 8, "{fam:?} dram {dram}");
+                // And the GNN bucket table covers them.
+                assert!(gnn::select_bucket(g.num_nodes(), g.num_edges()).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn generate_family_produces_labelled_samples() {
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(2);
+        let cfg = GenConfig { total: 0, ..GenConfig::default() };
+        let samples = generate_family(WorkloadFamily::Gemm, 8, &f, &cfg, &mut rng).unwrap();
+        assert_eq!(samples.len(), 8);
+        for s in &samples {
+            assert_eq!(s.family, "gemm");
+            let l = s.label();
+            assert!(l > 0.0 && l <= 1.0, "label {l}");
+        }
+    }
+
+    #[test]
+    fn labels_have_spread() {
+        // A learnable dataset needs label variance.
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(3);
+        let cfg = GenConfig { total: 0, ..GenConfig::default() };
+        let samples = generate_family(WorkloadFamily::Mha, 24, &f, &cfg, &mut rng).unwrap();
+        let labels: Vec<f64> = samples.iter().map(|s| s.label() as f64).collect();
+        assert!(metrics::stddev(&labels) > 0.01, "labels too uniform: {labels:?}");
+    }
+
+    #[test]
+    fn generate_splits_evenly() {
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(4);
+        let cfg = GenConfig { total: 10, ..GenConfig::default() };
+        let ds = generate(&f, &cfg, &mut rng).unwrap();
+        assert_eq!(ds.len(), 10);
+        let fams = ds.families();
+        assert_eq!(fams.len(), 4);
+        // 10 = 3+3+2+2
+        assert_eq!(ds.family_indices("gemm").len(), 3);
+        assert_eq!(ds.family_indices("mlp").len(), 3);
+    }
+
+    #[test]
+    fn one_random_move_preserves_validity() {
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(5);
+        let g = draw_workload(WorkloadFamily::Ffn, &mut rng);
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        for _ in 0..200 {
+            p = one_random_move(&g, &f, &p, &mut rng);
+            p.validate(&g, &f).unwrap();
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Dataset generation: the paper's §IV-A pipeline.
+//!
+//! *"we collect PnR decisions on compiling DNN building blocks, including
+//! GEMM, MLP, MHA and FFN with various width and depth ... To generate a
+//! diverse dataset, we randomized the search parameters of a simulated
+//! annealing placer."*
+//!
+//! For each sample we: draw a workload from the family's size distribution,
+//! draw a PnR decision (a mix of pure-random placements, random-walk
+//! intermediates and annealer outputs under randomized schedules — matching
+//! the quality spread a randomized-SA trajectory produces), route it,
+//! measure it with the simulator at the configured [`Era`], normalize by the
+//! theoretical bound, and store the *encoded* graph tensors + label.
+//!
+//! The default corpus size is **5878** samples, the paper's exact count.
+
+pub mod gen;
+mod store;
+
+pub use gen::{draw_workload, generate, generate_family, GenConfig};
+pub use store::{load_dataset, save_dataset, Dataset, Sample};

@@ -1,0 +1,293 @@
+//! Dataset container + binary (de)serialization.
+//!
+//! Samples store the *encoded* GNN tensors (not the raw decision): training
+//! never needs to re-route, and the encode schema version is validated on
+//! load so stale datasets fail loudly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gnn::{schema, Bucket, GraphTensors};
+
+const MAGIC: &[u8; 4] = b"RDDS";
+const VERSION: u32 = 3;
+
+/// One (PnR decision, normalized throughput) pair, encoded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Workload family tag ("gemm" | "mlp" | "ffn" | "mha" | ...).
+    pub family: String,
+    /// The heuristic baseline's prediction for the same decision, captured
+    /// at generation time (the decision itself is not stored, so the
+    /// baseline must be evaluated here or never).
+    pub heuristic_pred: f32,
+    pub tensors: GraphTensors,
+}
+
+impl Sample {
+    pub fn label(&self) -> f32 {
+        self.tensors.label
+    }
+}
+
+/// A labelled dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Indices of samples belonging to `family`.
+    pub fn family_indices(&self, family: &str) -> Vec<usize> {
+        self.samples
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.family == family)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Distinct families present, sorted.
+    pub fn families(&self) -> Vec<String> {
+        let mut f: Vec<String> = self
+            .samples
+            .iter()
+            .map(|s| s.family.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        f.sort();
+        f
+    }
+
+    /// Group sample indices by bucket (training batches are per-bucket).
+    pub fn by_bucket(&self) -> Vec<(Bucket, Vec<usize>)> {
+        let mut map: std::collections::BTreeMap<String, (Bucket, Vec<usize>)> =
+            std::collections::BTreeMap::new();
+        for (i, s) in self.samples.iter().enumerate() {
+            map.entry(s.tensors.bucket.tag())
+                .or_insert((s.tensors.bucket, Vec::new()))
+                .1
+                .push(i);
+        }
+        map.into_values().collect()
+    }
+}
+
+pub fn save_dataset(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        // Schema fingerprint so stale datasets are rejected.
+        f.write_all(&(schema::NODE_FEAT_DIM as u32).to_le_bytes())?;
+        f.write_all(&(schema::EDGE_FEAT_DIM as u32).to_le_bytes())?;
+        f.write_all(&(ds.samples.len() as u32).to_le_bytes())?;
+        for s in &ds.samples {
+            let fam = s.family.as_bytes();
+            f.write_all(&(fam.len() as u16).to_le_bytes())?;
+            f.write_all(fam)?;
+            f.write_all(&s.heuristic_pred.to_le_bytes())?;
+            let t = &s.tensors;
+            f.write_all(&(t.bucket.nodes as u32).to_le_bytes())?;
+            f.write_all(&(t.bucket.edges as u32).to_le_bytes())?;
+            f.write_all(&t.label.to_le_bytes())?;
+            write_i32s(&mut f, &t.node_type)?;
+            write_i32s(&mut f, &t.node_stage)?;
+            write_f32s(&mut f, &t.node_feat)?;
+            write_f32s(&mut f, &t.node_mask)?;
+            write_i32s(&mut f, &t.edge_src)?;
+            write_i32s(&mut f, &t.edge_dst)?;
+            write_f32s(&mut f, &t.edge_feat)?;
+            write_f32s(&mut f, &t.edge_mask)?;
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening dataset {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not an rdacost dataset");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("dataset version {version} unsupported (want {VERSION})");
+    }
+    let nf = read_u32(&mut f)? as usize;
+    let ef = read_u32(&mut f)? as usize;
+    if nf != schema::NODE_FEAT_DIM || ef != schema::EDGE_FEAT_DIM {
+        bail!(
+            "dataset was encoded with schema ({nf},{ef}) but this build expects ({},{}); regenerate",
+            schema::NODE_FEAT_DIM,
+            schema::EDGE_FEAT_DIM
+        );
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut samples = Vec::with_capacity(count);
+    for _ in 0..count {
+        let fam_len = read_u16(&mut f)? as usize;
+        let mut fam = vec![0u8; fam_len];
+        f.read_exact(&mut fam)?;
+        let family = String::from_utf8(fam).context("bad family tag")?;
+        let mut hp = [0u8; 4];
+        f.read_exact(&mut hp)?;
+        let heuristic_pred = f32::from_le_bytes(hp);
+        let nodes = read_u32(&mut f)? as usize;
+        let edges = read_u32(&mut f)? as usize;
+        let bucket = Bucket { nodes, edges };
+        let mut lb = [0u8; 4];
+        f.read_exact(&mut lb)?;
+        let label = f32::from_le_bytes(lb);
+        let mut t = GraphTensors::zeroed(bucket);
+        t.label = label;
+        read_i32s(&mut f, &mut t.node_type)?;
+        read_i32s(&mut f, &mut t.node_stage)?;
+        read_f32s(&mut f, &mut t.node_feat)?;
+        read_f32s(&mut f, &mut t.node_mask)?;
+        read_i32s(&mut f, &mut t.edge_src)?;
+        read_i32s(&mut f, &mut t.edge_dst)?;
+        read_f32s(&mut f, &mut t.edge_feat)?;
+        read_f32s(&mut f, &mut t.edge_mask)?;
+        samples.push(Sample { family, heuristic_pred, tensors: t });
+    }
+    Ok(Dataset { samples })
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_i32s(f: &mut impl Write, xs: &[i32]) -> Result<()> {
+    for &x in xs {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(f: &mut impl Read, xs: &mut [f32]) -> Result<()> {
+    let mut b = [0u8; 4];
+    for x in xs {
+        f.read_exact(&mut b)?;
+        *x = f32::from_le_bytes(b);
+    }
+    Ok(())
+}
+
+fn read_i32s(f: &mut impl Read, xs: &mut [i32]) -> Result<()> {
+    let mut b = [0u8; 4];
+    for x in xs {
+        f.read_exact(&mut b)?;
+        *x = i32::from_le_bytes(b);
+    }
+    Ok(())
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::BUCKETS;
+
+    fn sample(family: &str, label: f32) -> Sample {
+        let mut t = GraphTensors::zeroed(BUCKETS[0]);
+        t.node_mask[0] = 1.0;
+        t.node_type[0] = 2;
+        t.node_feat[3] = 0.5;
+        t.edge_mask[0] = 1.0;
+        t.edge_feat[1] = 0.25;
+        t.label = label;
+        Sample { family: family.into(), heuristic_pred: label * 0.9, tensors: t }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rdacost_ds_{name}.bin"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset {
+            samples: vec![sample("gemm", 0.5), sample("mha", 0.75), sample("gemm", 0.1)],
+        };
+        let p = tmp("roundtrip");
+        save_dataset(&ds, &p).unwrap();
+        let back = load_dataset(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.samples[0], ds.samples[0]);
+        assert_eq!(back.samples[1].family, "mha");
+        assert_eq!(back.samples[2].label(), 0.1);
+    }
+
+    #[test]
+    fn families_and_indices() {
+        let ds = Dataset {
+            samples: vec![sample("gemm", 0.5), sample("mha", 0.7), sample("gemm", 0.2)],
+        };
+        assert_eq!(ds.families(), vec!["gemm".to_string(), "mha".to_string()]);
+        assert_eq!(ds.family_indices("gemm"), vec![0, 2]);
+        assert!(ds.family_indices("ffn").is_empty());
+    }
+
+    #[test]
+    fn by_bucket_groups() {
+        let mut big = sample("mlp", 0.9);
+        big.tensors = GraphTensors::zeroed(BUCKETS[1]);
+        big.tensors.label = 0.9;
+        let ds = Dataset { samples: vec![sample("gemm", 0.5), big, sample("mha", 0.3)] };
+        let groups = ds.by_bucket();
+        assert_eq!(groups.len(), 2);
+        let total: usize = groups.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"XXXXjunkjunkjunk").unwrap();
+        assert!(load_dataset(&p).is_err());
+    }
+
+    #[test]
+    fn empty_dataset_roundtrip() {
+        let ds = Dataset::default();
+        let p = tmp("empty");
+        save_dataset(&ds, &p).unwrap();
+        assert_eq!(load_dataset(&p).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,406 @@
+//! Workload builders: the paper's dataset families (§IV-A: GEMM, MLP, FFN,
+//! MHA "with various width and depth") and the large evaluation models
+//! (§IV-B: BERT-large, GPT2-XL).
+//!
+//! All builders produce *per-sample* graphs: tensor sizes are for one
+//! pipeline sample (one sequence / one batch row), matching the paper's
+//! pipeline-execution model where samples stream through the placed graph.
+
+use super::graph::{Dfg, NodeId};
+use super::op::{EwFunc, OpKind, BYTES_PER_ELEM};
+
+/// The four dataset families of §IV-A (used to key Fig 2 / Table III rows)
+/// plus the two large models of §IV-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadFamily {
+    Gemm,
+    Mlp,
+    Ffn,
+    Mha,
+    BertLarge,
+    Gpt2Xl,
+}
+
+impl WorkloadFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadFamily::Gemm => "gemm",
+            WorkloadFamily::Mlp => "mlp",
+            WorkloadFamily::Ffn => "ffn",
+            WorkloadFamily::Mha => "mha",
+            WorkloadFamily::BertLarge => "bert-large",
+            WorkloadFamily::Gpt2Xl => "gpt2-xl",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<WorkloadFamily> {
+        match s {
+            "gemm" => Ok(WorkloadFamily::Gemm),
+            "mlp" => Ok(WorkloadFamily::Mlp),
+            "ffn" => Ok(WorkloadFamily::Ffn),
+            "mha" => Ok(WorkloadFamily::Mha),
+            "bert-large" | "bert" => Ok(WorkloadFamily::BertLarge),
+            "gpt2-xl" | "gpt" => Ok(WorkloadFamily::Gpt2Xl),
+            other => anyhow::bail!("unknown workload family {other:?}"),
+        }
+    }
+
+    /// The small families used for dataset generation (paper §IV-A).
+    pub const DATASET_FAMILIES: [WorkloadFamily; 4] = [
+        WorkloadFamily::Gemm,
+        WorkloadFamily::Mlp,
+        WorkloadFamily::Ffn,
+        WorkloadFamily::Mha,
+    ];
+}
+
+
+/// Stage a tensor through a PMU buffer: `src -> buffer -> (returned buffer)`.
+/// Pipeline stage boundaries on the RDA land in PMUs (double buffering).
+fn buffered(g: &mut Dfg, src: NodeId, name: &str) -> NodeId {
+    let bytes = g.node(src).kind.output_bytes();
+    let b = g.add(OpKind::Buffer { bytes }, name.to_string());
+    g.connect_auto(src, b);
+    b
+}
+
+/// Single GEMM: `load A -> buffer -> gemm(m,n,k) -> buffer -> store`.
+/// Weights are resident on the PCU, so only the activation streams.
+pub fn gemm_graph(m: u64, n: u64, k: u64) -> Dfg {
+    let mut g = Dfg::new(format!("gemm_{m}x{n}x{k}"));
+    let a_bytes = m * k * BYTES_PER_ELEM;
+    let load = g.add(OpKind::Load { bytes: a_bytes }, "a.load");
+    let a_buf = buffered(&mut g, load, "a.buf");
+    let mm = g.add(OpKind::Gemm { m, n, k }, "gemm");
+    g.connect_auto(a_buf, mm);
+    let out_buf = buffered(&mut g, mm, "out.buf");
+    let store = g.add(OpKind::Store { bytes: m * n * BYTES_PER_ELEM }, "out.store");
+    g.connect_auto(out_buf, store);
+    g
+}
+
+/// MLP with `dims = [d0, d1, ..., dL]`: L layers of gemm+bias+relu over a
+/// row-batch of `batch` samples fused into the m dimension.
+pub fn mlp(batch: u64, dims: &[u64]) -> Dfg {
+    assert!(dims.len() >= 2, "mlp needs at least one layer");
+    let mut g = Dfg::new(format!("mlp_b{batch}_{}l", dims.len() - 1));
+    let in_bytes = batch * dims[0] * BYTES_PER_ELEM;
+    let load = g.add(OpKind::Load { bytes: in_bytes }, "in.load");
+    let mut cur = buffered(&mut g, load, "in.buf");
+    for l in 0..dims.len() - 1 {
+        let (k, n) = (dims[l], dims[l + 1]);
+        let mm = g.add(OpKind::Gemm { m: batch, n, k }, format!("l{l}.gemm"));
+        g.connect_auto(cur, mm);
+        let bias = g.add(
+            OpKind::Elementwise { func: EwFunc::Bias, n: batch * n },
+            format!("l{l}.bias"),
+        );
+        g.connect_auto(mm, bias);
+        // No activation after the final layer.
+        let act_out = if l + 1 < dims.len() - 1 {
+            let relu = g.add(
+                OpKind::Elementwise { func: EwFunc::Relu, n: batch * n },
+                format!("l{l}.relu"),
+            );
+            g.connect_auto(bias, relu);
+            relu
+        } else {
+            bias
+        };
+        cur = buffered(&mut g, act_out, &format!("l{l}.buf"));
+    }
+    let out_bytes = g.node(cur).kind.output_bytes();
+    let store = g.add(OpKind::Store { bytes: out_bytes }, "out.store");
+    g.connect_auto(cur, store);
+    g
+}
+
+/// Transformer FFN block: `x -> LN -> W1(d->ff) -> gelu -> W2(ff->d) ->
+/// +residual -> store`, over `seq` tokens.
+pub fn ffn(seq: u64, d_model: u64, d_ff: u64) -> Dfg {
+    let mut g = Dfg::new(format!("ffn_s{seq}_d{d_model}_f{d_ff}"));
+    let in_bytes = seq * d_model * BYTES_PER_ELEM;
+    let load = g.add(OpKind::Load { bytes: in_bytes }, "x.load");
+    let x = buffered(&mut g, load, "x.buf");
+    let ln = g.add(OpKind::LayerNorm { rows: seq, cols: d_model }, "ln");
+    g.connect_auto(x, ln);
+    let w1 = g.add(OpKind::Gemm { m: seq, n: d_ff, k: d_model }, "w1");
+    g.connect_auto(ln, w1);
+    let gelu = g.add(OpKind::Elementwise { func: EwFunc::Gelu, n: seq * d_ff }, "gelu");
+    g.connect_auto(w1, gelu);
+    let mid = buffered(&mut g, gelu, "mid.buf");
+    let w2 = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_ff }, "w2");
+    g.connect_auto(mid, w2);
+    let res = g.add(
+        OpKind::Elementwise { func: EwFunc::Add, n: seq * d_model },
+        "residual",
+    );
+    g.connect_auto(w2, res);
+    // Residual path: the input buffer also feeds the add.
+    g.connect(x, res, in_bytes);
+    let out = buffered(&mut g, res, "out.buf");
+    let store = g.add(OpKind::Store { bytes: in_bytes }, "out.store");
+    g.connect_auto(out, store);
+    g
+}
+
+/// Multi-head attention block over `seq` tokens, `d_model` width, `heads`
+/// heads: QKV projections, scores, softmax, context, output projection,
+/// residual + layernorm. Head parallelism is folded into the GEMM shapes
+/// (the placer decides spatial mapping; per-head split ops would only
+/// multiply node count without changing the cost-model learning problem).
+pub fn mha(seq: u64, d_model: u64, heads: u64) -> Dfg {
+    assert!(d_model % heads == 0, "d_model must divide by heads");
+    let mut g = Dfg::new(format!("mha_s{seq}_d{d_model}_h{heads}"));
+    let in_bytes = seq * d_model * BYTES_PER_ELEM;
+    let load = g.add(OpKind::Load { bytes: in_bytes }, "x.load");
+    let x = buffered(&mut g, load, "x.buf");
+    let ln = g.add(OpKind::LayerNorm { rows: seq, cols: d_model }, "ln");
+    g.connect_auto(x, ln);
+
+    // QKV projections read the same normalized activations.
+    let q = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, "q.proj");
+    let k = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, "k.proj");
+    let v = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, "v.proj");
+    for (dst, nm) in [(q, "q"), (k, "k"), (v, "v")] {
+        g.connect(ln, dst, in_bytes);
+        let _ = nm;
+    }
+    let qb = buffered(&mut g, q, "q.buf");
+    let kb = buffered(&mut g, k, "k.buf");
+    let vb = buffered(&mut g, v, "v.buf");
+
+    // K^T then scores = Q @ K^T : [seq, seq] per head -> fold heads into k.
+    let kt = g.add(OpKind::Transpose { rows: seq, cols: d_model }, "k.T");
+    g.connect_auto(kb, kt);
+    // scores: for each head, [seq, d_head] @ [d_head, seq] = [seq, seq];
+    // folded: m=seq, n=seq*heads? Keep per-sample semantics: total flops
+    // = heads * 2*seq*seq*d_head = 2*seq*seq*d_model.
+    let scores = g.add(OpKind::Gemm { m: seq, n: seq * heads, k: d_model / heads }, "qk");
+    g.connect_auto(qb, scores);
+    g.connect_auto(kt, scores);
+    let sm = g.add(OpKind::Softmax { rows: seq * heads, cols: seq }, "softmax");
+    g.connect_auto(scores, sm);
+    let smb = buffered(&mut g, sm, "p.buf");
+    // context: P @ V, folded similarly.
+    let ctx = g.add(OpKind::Gemm { m: seq, n: d_model, k: seq }, "pv");
+    g.connect_auto(smb, ctx);
+    g.connect(vb, ctx, seq * d_model * BYTES_PER_ELEM);
+    let out_proj = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, "o.proj");
+    g.connect_auto(ctx, out_proj);
+    let res = g.add(
+        OpKind::Elementwise { func: EwFunc::Add, n: seq * d_model },
+        "residual",
+    );
+    g.connect_auto(out_proj, res);
+    g.connect(x, res, in_bytes);
+    let out = buffered(&mut g, res, "out.buf");
+    let store = g.add(OpKind::Store { bytes: in_bytes }, "out.store");
+    g.connect_auto(out, store);
+    g
+}
+
+/// One full transformer encoder block = MHA + FFN stitched (used by the
+/// large-model builders).
+fn transformer_block(g: &mut Dfg, input: NodeId, seq: u64, d_model: u64, d_ff: u64, heads: u64, prefix: &str) -> NodeId {
+    let in_bytes = seq * d_model * BYTES_PER_ELEM;
+
+    // --- attention half ---
+    let ln1 = g.add(OpKind::LayerNorm { rows: seq, cols: d_model }, format!("{prefix}.ln1"));
+    g.connect(input, ln1, in_bytes);
+    let q = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, format!("{prefix}.q"));
+    let k = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, format!("{prefix}.k"));
+    let v = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, format!("{prefix}.v"));
+    for dst in [q, k, v] {
+        g.connect(ln1, dst, in_bytes);
+    }
+    let kt = g.add(OpKind::Transpose { rows: seq, cols: d_model }, format!("{prefix}.kT"));
+    g.connect_auto(k, kt);
+    let scores = g.add(
+        OpKind::Gemm { m: seq, n: seq * heads, k: d_model / heads },
+        format!("{prefix}.qk"),
+    );
+    g.connect_auto(q, scores);
+    g.connect_auto(kt, scores);
+    let sm = g.add(OpKind::Softmax { rows: seq * heads, cols: seq }, format!("{prefix}.sm"));
+    g.connect_auto(scores, sm);
+    let smb = buffered(g, sm, &format!("{prefix}.p.buf"));
+    let ctx = g.add(OpKind::Gemm { m: seq, n: d_model, k: seq }, format!("{prefix}.pv"));
+    g.connect_auto(smb, ctx);
+    g.connect(v, ctx, seq * d_model * BYTES_PER_ELEM);
+    let oproj = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_model }, format!("{prefix}.o"));
+    g.connect_auto(ctx, oproj);
+    let res1 = g.add(
+        OpKind::Elementwise { func: EwFunc::Add, n: seq * d_model },
+        format!("{prefix}.res1"),
+    );
+    g.connect_auto(oproj, res1);
+    g.connect(input, res1, in_bytes);
+    let mid = buffered(g, res1, &format!("{prefix}.mid.buf"));
+
+    // --- ffn half ---
+    let ln2 = g.add(OpKind::LayerNorm { rows: seq, cols: d_model }, format!("{prefix}.ln2"));
+    g.connect(mid, ln2, in_bytes);
+    let w1 = g.add(OpKind::Gemm { m: seq, n: d_ff, k: d_model }, format!("{prefix}.w1"));
+    g.connect_auto(ln2, w1);
+    let gelu = g.add(
+        OpKind::Elementwise { func: EwFunc::Gelu, n: seq * d_ff },
+        format!("{prefix}.gelu"),
+    );
+    g.connect_auto(w1, gelu);
+    let w2 = g.add(OpKind::Gemm { m: seq, n: d_model, k: d_ff }, format!("{prefix}.w2"));
+    g.connect_auto(gelu, w2);
+    let res2 = g.add(
+        OpKind::Elementwise { func: EwFunc::Add, n: seq * d_model },
+        format!("{prefix}.res2"),
+    );
+    g.connect_auto(w2, res2);
+    g.connect(mid, res2, in_bytes);
+    buffered(g, res2, &format!("{prefix}.out.buf"))
+}
+
+/// Build an N-block transformer encoder/decoder trunk.
+fn transformer(name: &str, blocks: u64, seq: u64, d_model: u64, d_ff: u64, heads: u64) -> Dfg {
+    let mut g = Dfg::new(name.to_string());
+    let in_bytes = seq * d_model * BYTES_PER_ELEM;
+    let load = g.add(OpKind::Load { bytes: in_bytes }, "emb.load");
+    let mut cur = buffered(&mut g, load, "emb.buf");
+    for b in 0..blocks {
+        cur = transformer_block(&mut g, cur, seq, d_model, d_ff, heads, &format!("blk{b}"));
+    }
+    let store = g.add(OpKind::Store { bytes: in_bytes }, "out.store");
+    g.connect(cur, store, in_bytes);
+    g
+}
+
+/// Public handle on the generic transformer trunk (experiment harnesses use
+/// it to build truncated-block variants for CI-speed runs).
+pub fn transformer_public(name: &str, blocks: u64, seq: u64, d_model: u64, d_ff: u64, heads: u64) -> Dfg {
+    transformer(name, blocks, seq, d_model, d_ff, heads)
+}
+
+/// BERT-large (paper §IV-B): 24 blocks, d_model=1024, d_ff=4096, 16 heads.
+/// `seq` is configurable (paper trains at 512; tests use smaller).
+pub fn bert_large(seq: u64) -> Dfg {
+    transformer("bert-large", 24, seq, 1024, 4096, 16)
+}
+
+/// GPT2-XL (paper §IV-B): 48 blocks, d_model=1600, d_ff=6400, 25 heads.
+pub fn gpt2_xl(seq: u64) -> Dfg {
+    transformer("gpt2-xl", 48, seq, 1600, 6400, 25)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_graph_valid() {
+        let g = gemm_graph(64, 64, 64);
+        g.validate().unwrap();
+        assert_eq!(g.unit_demand().0, 1); // one PCU op
+    }
+
+    #[test]
+    fn mlp_scales_with_depth() {
+        let g2 = mlp(8, &[64, 64, 64]);
+        let g4 = mlp(8, &[64, 64, 64, 64, 64]);
+        g2.validate().unwrap();
+        g4.validate().unwrap();
+        assert!(g4.num_nodes() > g2.num_nodes());
+        assert!(g4.total_flops() > g2.total_flops());
+    }
+
+    #[test]
+    fn ffn_structure() {
+        let g = ffn(32, 128, 512);
+        g.validate().unwrap();
+        // Two GEMMs.
+        let gemms = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 2);
+        // Residual means the input buffer has two consumers.
+        let x_buf = g.nodes().iter().find(|n| n.name == "x.buf").unwrap();
+        assert_eq!(g.outgoing(x_buf.id).count(), 2);
+    }
+
+    #[test]
+    fn mha_structure() {
+        let g = mha(32, 128, 4);
+        g.validate().unwrap();
+        let gemms = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 6); // q,k,v,qk,pv,o
+        let softmaxes = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Softmax { .. }))
+            .count();
+        assert_eq!(softmaxes, 1);
+    }
+
+    #[test]
+    fn mha_flops_match_analytic() {
+        let (seq, d, h) = (16, 64, 4);
+        let g = mha(seq, d, h);
+        // qkv + o projections: 4 * 2*seq*d*d; scores+context: 2 * 2*seq*seq*d.
+        let proj = 4.0 * 2.0 * (seq * d * d) as f64;
+        let attn = 2.0 * 2.0 * (seq * seq * d) as f64;
+        let gemm_flops: f64 = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
+            .map(|n| n.kind.flops())
+            .sum();
+        assert_eq!(gemm_flops, proj + attn);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mha_heads_must_divide() {
+        mha(16, 65, 4);
+    }
+
+    #[test]
+    fn bert_large_shape() {
+        let g = bert_large(64);
+        g.validate().unwrap();
+        // 24 blocks, each with 8 gemms (q,k,v,qk,pv,o + ffn w1,w2).
+        let gemms = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 24 * 8);
+    }
+
+    #[test]
+    fn gpt2_xl_bigger_than_bert() {
+        let b = bert_large(16);
+        let g = gpt2_xl(16);
+        g.validate().unwrap();
+        assert!(g.num_nodes() > b.num_nodes());
+        assert!(g.total_flops() > b.total_flops());
+    }
+
+    #[test]
+    fn family_parse_roundtrip() {
+        for f in [
+            WorkloadFamily::Gemm,
+            WorkloadFamily::Mlp,
+            WorkloadFamily::Ffn,
+            WorkloadFamily::Mha,
+            WorkloadFamily::BertLarge,
+            WorkloadFamily::Gpt2Xl,
+        ] {
+            assert_eq!(WorkloadFamily::parse(f.name()).unwrap(), f);
+        }
+        assert!(WorkloadFamily::parse("resnet").is_err());
+    }
+}

@@ -1,0 +1,345 @@
+//! The dataflow DAG: nodes are operations, edges are tensors.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::op::OpKind;
+
+/// Index of a node within a [`Dfg`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Index of an edge within a [`Dfg`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub u32);
+
+/// One operation node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    /// Human-readable name for logs/dumps (`"blk3.mha.qk"`).
+    pub name: String,
+}
+
+/// A tensor flowing from `src` to `dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorEdge {
+    pub id: EdgeId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Payload size per pipeline sample, in bytes.
+    pub bytes: u64,
+}
+
+/// The dataflow graph. Construction API enforces asymptotically cheap
+/// invariants; `validate` checks acyclicity and dangling references.
+#[derive(Debug, Clone, Default)]
+pub struct Dfg {
+    pub name: String,
+    nodes: Vec<Node>,
+    edges: Vec<TensorEdge>,
+    /// node -> outgoing edge ids
+    out_edges: Vec<Vec<EdgeId>>,
+    /// node -> incoming edge ids
+    in_edges: Vec<Vec<EdgeId>>,
+}
+
+impl Dfg {
+    pub fn new(name: impl Into<String>) -> Dfg {
+        Dfg { name: name.into(), ..Default::default() }
+    }
+
+    /// Append a node; returns its id.
+    pub fn add(&mut self, kind: OpKind, name: impl Into<String>) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node { id, kind, name: name.into() });
+        self.out_edges.push(Vec::new());
+        self.in_edges.push(Vec::new());
+        id
+    }
+
+    /// Connect `src -> dst` carrying `bytes` per sample.
+    pub fn connect(&mut self, src: NodeId, dst: NodeId, bytes: u64) -> EdgeId {
+        assert!((src.0 as usize) < self.nodes.len(), "bad src");
+        assert!((dst.0 as usize) < self.nodes.len(), "bad dst");
+        assert_ne!(src, dst, "self-loop");
+        let id = EdgeId(self.edges.len() as u32);
+        self.edges.push(TensorEdge { id, src, dst, bytes });
+        self.out_edges[src.0 as usize].push(id);
+        self.in_edges[dst.0 as usize].push(id);
+        id
+    }
+
+    /// Connect with the payload inferred from the producer's output size.
+    pub fn connect_auto(&mut self, src: NodeId, dst: NodeId) -> EdgeId {
+        let bytes = self.node(src).kind.output_bytes();
+        self.connect(src, dst, bytes)
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn edges(&self) -> &[TensorEdge] {
+        &self.edges
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &TensorEdge {
+        &self.edges[id.0 as usize]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn outgoing(&self, id: NodeId) -> impl Iterator<Item = &TensorEdge> {
+        self.out_edges[id.0 as usize].iter().map(|&e| self.edge(e))
+    }
+
+    pub fn incoming(&self, id: NodeId) -> impl Iterator<Item = &TensorEdge> {
+        self.in_edges[id.0 as usize].iter().map(|&e| self.edge(e))
+    }
+
+    /// Kahn topological order; error if the graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg: Vec<usize> = vec![0; n];
+        for e in &self.edges {
+            indeg[e.dst.0 as usize] += 1;
+        }
+        let mut queue: Vec<NodeId> = (0..n)
+            .filter(|&i| indeg[i] == 0)
+            .map(|i| NodeId(i as u32))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for e in self.outgoing(u) {
+                let d = &mut indeg[e.dst.0 as usize];
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(e.dst);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("dfg {:?} has a cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// ASAP levels: level(v) = 1 + max(level(pred)). Sources are level 0.
+    /// These seed the default pipeline-stage assignment of a PnR decision.
+    pub fn asap_levels(&self) -> Result<Vec<u32>> {
+        let order = self.topo_order()?;
+        let mut level = vec![0u32; self.nodes.len()];
+        for u in order {
+            for e in self.outgoing(u) {
+                let candidate = level[u.0 as usize] + 1;
+                if candidate > level[e.dst.0 as usize] {
+                    level[e.dst.0 as usize] = candidate;
+                }
+            }
+        }
+        Ok(level)
+    }
+
+    /// Total arithmetic FLOPs per pipeline sample.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.kind.flops()).sum()
+    }
+
+    /// Count of nodes hosted on each unit kind, as (pcu, pmu, dram).
+    pub fn unit_demand(&self) -> (usize, usize, usize) {
+        let mut pcu = 0;
+        let mut pmu = 0;
+        let mut dram = 0;
+        for n in &self.nodes {
+            match n.kind.unit_kind() {
+                crate::arch::UnitKind::Pcu => pcu += 1,
+                crate::arch::UnitKind::Pmu => pmu += 1,
+                crate::arch::UnitKind::DramPort => dram += 1,
+                crate::arch::UnitKind::Switch => unreachable!("ops never map to switches"),
+            }
+        }
+        (pcu, pmu, dram)
+    }
+
+    /// Structural validation: dangling ids are impossible by construction;
+    /// checks acyclicity and that every non-Load node has an input and every
+    /// non-Store node an output consumer (connectedness of the pipeline).
+    pub fn validate(&self) -> Result<()> {
+        self.topo_order()?;
+        for node in &self.nodes {
+            let has_in = self.in_edges[node.id.0 as usize].len() > 0;
+            let has_out = self.out_edges[node.id.0 as usize].len() > 0;
+            match node.kind {
+                OpKind::Load { .. } => {
+                    if !has_out {
+                        bail!("{} ({}) loads data nobody consumes", node.id, node.name);
+                    }
+                }
+                OpKind::Store { .. } => {
+                    if !has_in {
+                        bail!("{} ({}) stores nothing", node.id, node.name);
+                    }
+                }
+                _ => {
+                    if !has_in {
+                        bail!("{} ({}) has no inputs", node.id, node.name);
+                    }
+                    if !has_out {
+                        bail!("{} ({}) has no consumers", node.id, node.name);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::op::EwFunc;
+
+    fn chain() -> Dfg {
+        let mut g = Dfg::new("chain");
+        let l = g.add(OpKind::Load { bytes: 64 }, "in");
+        let a = g.add(OpKind::Gemm { m: 4, n: 4, k: 4 }, "gemm");
+        let r = g.add(OpKind::Elementwise { func: EwFunc::Relu, n: 16 }, "relu");
+        let s = g.add(OpKind::Store { bytes: 64 }, "out");
+        g.connect_auto(l, a);
+        g.connect_auto(a, r);
+        g.connect_auto(r, s);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = chain();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = chain();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.num_nodes()];
+            for (i, n) in order.iter().enumerate() {
+                p[n.0 as usize] = i;
+            }
+            p
+        };
+        for e in g.edges() {
+            assert!(pos[e.src.0 as usize] < pos[e.dst.0 as usize]);
+        }
+    }
+
+    #[test]
+    fn asap_levels_increase_along_chain() {
+        let g = chain();
+        let lv = g.asap_levels().unwrap();
+        assert_eq!(lv, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn diamond_levels() {
+        let mut g = Dfg::new("diamond");
+        let l = g.add(OpKind::Load { bytes: 4 }, "in");
+        let a = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 1 }, "a");
+        let b = g.add(OpKind::Elementwise { func: EwFunc::Mul, n: 1 }, "b");
+        let c = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 1 }, "c");
+        let s = g.add(OpKind::Store { bytes: 4 }, "out");
+        g.connect_auto(l, a);
+        g.connect_auto(l, b);
+        g.connect_auto(a, c);
+        g.connect_auto(b, c);
+        g.connect_auto(c, s);
+        let lv = g.asap_levels().unwrap();
+        assert_eq!(lv[l.0 as usize], 0);
+        assert_eq!(lv[a.0 as usize], 1);
+        assert_eq!(lv[b.0 as usize], 1);
+        assert_eq!(lv[c.0 as usize], 2);
+        assert_eq!(lv[s.0 as usize], 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dfg::new("cycle");
+        let a = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 1 }, "a");
+        let b = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 1 }, "b");
+        g.connect(a, b, 4);
+        g.connect(b, a, 4);
+        assert!(g.topo_order().is_err());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn dangling_ops_fail_validation() {
+        let mut g = Dfg::new("dangling");
+        g.add(OpKind::Gemm { m: 1, n: 1, k: 1 }, "island");
+        assert!(g.validate().is_err());
+
+        let mut g = Dfg::new("orphan-load");
+        g.add(OpKind::Load { bytes: 4 }, "in");
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_panics() {
+        let mut g = Dfg::new("selfloop");
+        let a = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 1 }, "a");
+        g.connect(a, a, 4);
+    }
+
+    #[test]
+    fn unit_demand_counts() {
+        let g = chain();
+        let (pcu, pmu, dram) = g.unit_demand();
+        assert_eq!((pcu, pmu, dram), (2, 0, 2));
+    }
+
+    #[test]
+    fn connect_auto_uses_producer_bytes() {
+        let mut g = Dfg::new("bytes");
+        let a = g.add(OpKind::Gemm { m: 2, n: 3, k: 4 }, "g");
+        let s = g.add(OpKind::Store { bytes: 24 }, "s");
+        let e = g.connect_auto(a, s);
+        assert_eq!(g.edge(e).bytes, 2 * 3 * 4);
+    }
+
+    #[test]
+    fn total_flops_sums() {
+        let g = chain();
+        assert!(g.total_flops() > 0.0);
+        assert_eq!(
+            g.total_flops(),
+            OpKind::Gemm { m: 4, n: 4, k: 4 }.flops()
+                + OpKind::Elementwise { func: EwFunc::Relu, n: 16 }.flops()
+        );
+    }
+}

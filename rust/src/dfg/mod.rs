@@ -1,0 +1,26 @@
+//! Dataflow-graph IR and workload builders.
+//!
+//! Compilers for dataflow architectures extract a DAG of arithmetic
+//! operations from the DNN (paper §II-A). This module is that IR plus:
+//!
+//! * [`op`] — the operation vocabulary (GEMM, elementwise, softmax,
+//!   layernorm, transpose, reduce, DRAM load/store, PMU buffers) with
+//!   FLOP/byte accounting;
+//! * [`graph`] — the DAG itself (validation, topological orders, ASAP
+//!   levels);
+//! * [`builders`] — the paper's workloads: GEMM / MLP / FFN / MHA building
+//!   blocks (§IV-A "dataset generation") and the large models BERT-large and
+//!   GPT2-XL (§IV-B);
+//! * [`partition`] — fabric-sized partitioning for graphs too large to map
+//!   at once (paper footnote 1: "compilers first partition the full graph
+//!   into subgraphs").
+
+pub mod builders;
+mod graph;
+mod op;
+pub mod partition;
+
+pub use builders::{bert_large, ffn, gemm_graph, gpt2_xl, mha, mlp, WorkloadFamily};
+pub use graph::{Dfg, EdgeId, Node, NodeId, TensorEdge};
+pub use op::{EwFunc, OpKind};
+pub use partition::{partition, Partition};

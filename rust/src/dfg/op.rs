@@ -1,0 +1,222 @@
+//! Operation vocabulary with FLOP and byte accounting.
+//!
+//! Every op knows its arithmetic work (`flops`), its output size
+//! (`output_bytes`), and which unit kind can host it. The simulator combines
+//! these with the era microcode table; the theoretical-bound normalizer
+//! (paper §IV-A) uses `flops` alone.
+
+use crate::arch::UnitKind;
+
+/// Elementwise function variants (affect microcode efficiency only mildly;
+/// kept distinct because the GNN's op-type embedding sees them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwFunc {
+    Add,
+    Mul,
+    Relu,
+    Gelu,
+    Tanh,
+    Bias,
+}
+
+impl EwFunc {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EwFunc::Add => "add",
+            EwFunc::Mul => "mul",
+            EwFunc::Relu => "relu",
+            EwFunc::Gelu => "gelu",
+            EwFunc::Tanh => "tanh",
+            EwFunc::Bias => "bias",
+        }
+    }
+
+    /// FLOPs per element (gelu/tanh cost more on the SIMD datapath).
+    pub fn flops_per_element(&self) -> f64 {
+        match self {
+            EwFunc::Add | EwFunc::Mul | EwFunc::Bias => 1.0,
+            EwFunc::Relu => 1.0,
+            EwFunc::Tanh => 8.0,
+            EwFunc::Gelu => 12.0,
+        }
+    }
+}
+
+/// The operation kinds the workload builders emit. Dimensions are element
+/// counts; all tensors are f32 (4 bytes/element).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// `C[m,n] = A[m,k] @ B[k,n]` (weights resident on-unit).
+    Gemm { m: u64, n: u64, k: u64 },
+    /// Elementwise map over `n` elements.
+    Elementwise { func: EwFunc, n: u64 },
+    /// Row-wise softmax over `[rows, cols]`.
+    Softmax { rows: u64, cols: u64 },
+    /// LayerNorm over `[rows, cols]` (normalize along cols).
+    LayerNorm { rows: u64, cols: u64 },
+    /// Transpose of `[rows, cols]`.
+    Transpose { rows: u64, cols: u64 },
+    /// Row reduce `[rows, cols] -> [rows]`.
+    Reduce { rows: u64, cols: u64 },
+    /// Stream `bytes` from DRAM onto the fabric (graph inputs).
+    Load { bytes: u64 },
+    /// Stream `bytes` from the fabric to DRAM (graph outputs).
+    Store { bytes: u64 },
+    /// Staging buffer of `bytes` in a PMU (double-buffered pipeline stage
+    /// boundary).
+    Buffer { bytes: u64 },
+}
+
+pub const BYTES_PER_ELEM: u64 = 4;
+
+impl OpKind {
+    /// Arithmetic work in FLOPs (multiply-accumulate counted as 2).
+    pub fn flops(&self) -> f64 {
+        match *self {
+            OpKind::Gemm { m, n, k } => 2.0 * m as f64 * n as f64 * k as f64,
+            OpKind::Elementwise { func, n } => func.flops_per_element() * n as f64,
+            OpKind::Softmax { rows, cols } => 5.0 * rows as f64 * cols as f64,
+            OpKind::LayerNorm { rows, cols } => 6.0 * rows as f64 * cols as f64,
+            OpKind::Transpose { .. } => 0.0,
+            OpKind::Reduce { rows, cols } => rows as f64 * cols as f64,
+            OpKind::Load { .. } | OpKind::Store { .. } | OpKind::Buffer { .. } => 0.0,
+        }
+    }
+
+    /// Bytes of the op's output tensor.
+    pub fn output_bytes(&self) -> u64 {
+        match *self {
+            OpKind::Gemm { m, n, .. } => m * n * BYTES_PER_ELEM,
+            OpKind::Elementwise { n, .. } => n * BYTES_PER_ELEM,
+            OpKind::Softmax { rows, cols } => rows * cols * BYTES_PER_ELEM,
+            OpKind::LayerNorm { rows, cols } => rows * cols * BYTES_PER_ELEM,
+            OpKind::Transpose { rows, cols } => rows * cols * BYTES_PER_ELEM,
+            OpKind::Reduce { rows, .. } => rows * BYTES_PER_ELEM,
+            OpKind::Load { bytes } => bytes,
+            OpKind::Store { .. } => 0,
+            OpKind::Buffer { bytes } => bytes,
+        }
+    }
+
+    /// Which unit kind hosts this op.
+    pub fn unit_kind(&self) -> UnitKind {
+        match self {
+            OpKind::Gemm { .. }
+            | OpKind::Elementwise { .. }
+            | OpKind::Softmax { .. }
+            | OpKind::LayerNorm { .. }
+            | OpKind::Transpose { .. }
+            | OpKind::Reduce { .. } => UnitKind::Pcu,
+            OpKind::Buffer { .. } => UnitKind::Pmu,
+            OpKind::Load { .. } | OpKind::Store { .. } => UnitKind::DramPort,
+        }
+    }
+
+    /// Stable small integer for the GNN's learnable op-type embedding.
+    /// Must stay within `OP_TYPE_COUNT` in python/compile/model.py.
+    pub fn type_index(&self) -> usize {
+        match self {
+            OpKind::Gemm { .. } => 0,
+            OpKind::Elementwise { func: EwFunc::Add, .. } => 1,
+            OpKind::Elementwise { func: EwFunc::Mul, .. } => 2,
+            OpKind::Elementwise { func: EwFunc::Relu, .. } => 3,
+            OpKind::Elementwise { func: EwFunc::Gelu, .. } => 4,
+            OpKind::Elementwise { func: EwFunc::Tanh, .. } => 5,
+            OpKind::Elementwise { func: EwFunc::Bias, .. } => 6,
+            OpKind::Softmax { .. } => 7,
+            OpKind::LayerNorm { .. } => 8,
+            OpKind::Transpose { .. } => 9,
+            OpKind::Reduce { .. } => 10,
+            OpKind::Load { .. } => 11,
+            OpKind::Store { .. } => 12,
+            OpKind::Buffer { .. } => 13,
+        }
+    }
+
+    pub const TYPE_COUNT: usize = 14;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Gemm { .. } => "gemm",
+            OpKind::Elementwise { func, .. } => func.name(),
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::LayerNorm { .. } => "layernorm",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Reduce { .. } => "reduce",
+            OpKind::Load { .. } => "load",
+            OpKind::Store { .. } => "store",
+            OpKind::Buffer { .. } => "buffer",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops() {
+        let g = OpKind::Gemm { m: 8, n: 4, k: 2 };
+        assert_eq!(g.flops(), 2.0 * 8.0 * 4.0 * 2.0);
+        assert_eq!(g.output_bytes(), 8 * 4 * 4);
+        assert_eq!(g.unit_kind(), UnitKind::Pcu);
+    }
+
+    #[test]
+    fn memory_ops_have_no_flops() {
+        assert_eq!(OpKind::Load { bytes: 100 }.flops(), 0.0);
+        assert_eq!(OpKind::Store { bytes: 100 }.flops(), 0.0);
+        assert_eq!(OpKind::Buffer { bytes: 100 }.flops(), 0.0);
+    }
+
+    #[test]
+    fn unit_kinds() {
+        assert_eq!(OpKind::Buffer { bytes: 1 }.unit_kind(), UnitKind::Pmu);
+        assert_eq!(OpKind::Load { bytes: 1 }.unit_kind(), UnitKind::DramPort);
+        assert_eq!(
+            OpKind::Softmax { rows: 1, cols: 1 }.unit_kind(),
+            UnitKind::Pcu
+        );
+    }
+
+    #[test]
+    fn type_indices_within_bounds_and_distinct() {
+        let samples = [
+            OpKind::Gemm { m: 1, n: 1, k: 1 },
+            OpKind::Elementwise { func: EwFunc::Add, n: 1 },
+            OpKind::Elementwise { func: EwFunc::Mul, n: 1 },
+            OpKind::Elementwise { func: EwFunc::Relu, n: 1 },
+            OpKind::Elementwise { func: EwFunc::Gelu, n: 1 },
+            OpKind::Elementwise { func: EwFunc::Tanh, n: 1 },
+            OpKind::Elementwise { func: EwFunc::Bias, n: 1 },
+            OpKind::Softmax { rows: 1, cols: 1 },
+            OpKind::LayerNorm { rows: 1, cols: 1 },
+            OpKind::Transpose { rows: 1, cols: 1 },
+            OpKind::Reduce { rows: 1, cols: 1 },
+            OpKind::Load { bytes: 1 },
+            OpKind::Store { bytes: 1 },
+            OpKind::Buffer { bytes: 1 },
+        ];
+        let mut seen = vec![false; OpKind::TYPE_COUNT];
+        for op in samples {
+            let idx = op.type_index();
+            assert!(idx < OpKind::TYPE_COUNT);
+            assert!(!seen[idx], "dup index {idx}");
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "TYPE_COUNT too large");
+    }
+
+    #[test]
+    fn gelu_costs_more_than_relu() {
+        let gelu = OpKind::Elementwise { func: EwFunc::Gelu, n: 1000 };
+        let relu = OpKind::Elementwise { func: EwFunc::Relu, n: 1000 };
+        assert!(gelu.flops() > relu.flops());
+    }
+
+    #[test]
+    fn store_produces_no_output() {
+        assert_eq!(OpKind::Store { bytes: 42 }.output_bytes(), 0);
+        assert_eq!(OpKind::Reduce { rows: 10, cols: 5 }.output_bytes(), 40);
+    }
+}

@@ -1,0 +1,260 @@
+//! Fabric-sized partitioning.
+//!
+//! Paper footnote 1: *"When the dataflow graph is too large to hold on the
+//! functional unit array, compilers first partition the full graph into
+//! subgraphs and then perform placement and routing for each individual
+//! subgraph."* BERT-large / GPT2-XL graphs are far larger than the fabric,
+//! so the end-to-end compile driver partitions them here.
+//!
+//! Strategy: greedy topological chunking. Walk nodes in topological order,
+//! accumulating into the current subgraph until adding the next node would
+//! exceed the PCU/PMU/DRAM budget; then cut. Every edge crossing a cut is
+//! materialized as a `Store` in the producer subgraph and a `Load` in the
+//! consumer subgraph (inter-subgraph traffic goes through DRAM, as on the
+//! real machine where subgraphs execute as successive configurations).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::graph::{Dfg, NodeId};
+use super::op::OpKind;
+use crate::arch::{Fabric, UnitKind};
+
+/// The result of partitioning: per-sample subgraphs in execution order, plus
+/// bookkeeping about cut traffic.
+#[derive(Debug)]
+pub struct Partition {
+    pub subgraphs: Vec<Dfg>,
+    /// Bytes crossing each cut (between subgraph i and i+1..).
+    pub cut_bytes: u64,
+    /// Map from original node to (subgraph index, node id within it).
+    pub node_map: HashMap<NodeId, (usize, NodeId)>,
+}
+
+/// Budget for one subgraph, derived from the fabric (leave one DRAM port per
+/// side free for the cut loads/stores themselves).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub pcus: usize,
+    pub pmus: usize,
+    pub dram: usize,
+}
+
+impl Budget {
+    pub fn of_fabric(fabric: &Fabric) -> Budget {
+        Budget {
+            pcus: fabric.num_pcus(),
+            pmus: fabric.num_pmus(),
+            dram: fabric.units_of_kind(UnitKind::DramPort).len(),
+        }
+    }
+}
+
+/// Partition `graph` into fabric-sized subgraphs.
+pub fn partition(graph: &Dfg, fabric: &Fabric) -> Result<Partition> {
+    let budget = Budget::of_fabric(fabric);
+    partition_with_budget(graph, budget)
+}
+
+pub fn partition_with_budget(graph: &Dfg, budget: Budget) -> Result<Partition> {
+    assert!(budget.pcus >= 1 && budget.pmus >= 1 && budget.dram >= 2);
+    let order = graph.topo_order()?;
+
+    // First pass: assign each original node a subgraph index.
+    let mut assign: HashMap<NodeId, usize> = HashMap::new();
+    let mut current = 0usize;
+    // Running counts include projected cut loads/stores so a chunk never
+    // exceeds its DRAM ports when cuts materialize.
+    let (mut pcu, mut pmu, mut dram) = (0usize, 0usize, 0usize);
+    for &nid in &order {
+        let node = graph.node(nid);
+        let (dp, dm, dd) = match node.kind.unit_kind() {
+            UnitKind::Pcu => (1, 0, 0),
+            UnitKind::Pmu => (0, 1, 0),
+            UnitKind::DramPort => (0, 0, 1),
+            UnitKind::Switch => unreachable!(),
+        };
+        // Cut loads this node would need if its producers are in earlier
+        // chunks (consumes DRAM ports + PMU staging).
+        let cut_ins = graph
+            .incoming(nid)
+            .filter(|e| assign.get(&e.src).map_or(false, |&s| s < current))
+            .count();
+        let would_pcu = pcu + dp;
+        let would_pmu = pmu + dm + cut_ins;
+        let would_dram = dram + dd + cut_ins;
+        if (would_pcu > budget.pcus || would_pmu > budget.pmus || would_dram > budget.dram)
+            && (pcu + pmu + dram) > 0
+        {
+            current += 1;
+            pcu = 0;
+            pmu = 0;
+            dram = 0;
+        }
+        let cut_ins = graph
+            .incoming(nid)
+            .filter(|e| assign.get(&e.src).map_or(false, |&s| s < current))
+            .count();
+        pcu += dp;
+        pmu += dm + cut_ins;
+        dram += dd + cut_ins;
+        assign.insert(nid, current);
+    }
+    let num_subgraphs = current + 1;
+
+    // Second pass: materialize subgraphs with stores/loads at cuts.
+    let mut subgraphs: Vec<Dfg> = (0..num_subgraphs)
+        .map(|i| Dfg::new(format!("{}.part{}", graph.name, i)))
+        .collect();
+    let mut node_map: HashMap<NodeId, (usize, NodeId)> = HashMap::new();
+    for &nid in &order {
+        let sg = assign[&nid];
+        let node = graph.node(nid);
+        let new_id = subgraphs[sg].add(node.kind, node.name.clone());
+        node_map.insert(nid, (sg, new_id));
+    }
+
+    let mut cut_bytes = 0u64;
+    // For each consumer subgraph, loads created per (src node) so multiple
+    // consumers of the same cut tensor share one load.
+    let mut cut_loads: HashMap<(usize, NodeId), NodeId> = HashMap::new();
+    // Stores created per src node (one per producer that is consumed later).
+    let mut cut_stores: HashMap<NodeId, ()> = HashMap::new();
+
+    for e in graph.edges() {
+        let (ssg, ssrc) = node_map[&e.src];
+        let (dsg, ddst) = node_map[&e.dst];
+        if ssg == dsg {
+            subgraphs[ssg].connect(ssrc, ddst, e.bytes);
+        } else {
+            assert!(ssg < dsg, "topological chunking must respect edge order");
+            cut_bytes += e.bytes;
+            // Producer side: one store per cut tensor.
+            if !cut_stores.contains_key(&e.src) {
+                let st = subgraphs[ssg].add(
+                    OpKind::Store { bytes: e.bytes },
+                    format!("{}.cut.store", graph.node(e.src).name),
+                );
+                subgraphs[ssg].connect(ssrc, st, e.bytes);
+                cut_stores.insert(e.src, ());
+            }
+            // Consumer side: one load (+ staging buffer) per (subgraph, tensor).
+            let load = *cut_loads.entry((dsg, e.src)).or_insert_with(|| {
+                let ld = subgraphs[dsg].add(
+                    OpKind::Load { bytes: e.bytes },
+                    format!("{}.cut.load", graph.node(e.src).name),
+                );
+                let buf = subgraphs[dsg].add(
+                    OpKind::Buffer { bytes: e.bytes },
+                    format!("{}.cut.buf", graph.node(e.src).name),
+                );
+                subgraphs[dsg].connect(ld, buf, e.bytes);
+                buf
+            });
+            subgraphs[dsg].connect(load, ddst, e.bytes);
+        }
+    }
+
+    for sg in &subgraphs {
+        sg.validate()?;
+    }
+    Ok(Partition { subgraphs, cut_bytes, node_map })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::util::prop;
+
+    #[test]
+    fn small_graph_single_partition() {
+        let g = builders::gemm_graph(32, 32, 32);
+        let fabric = Fabric::new(FabricConfig::default());
+        let p = partition(&g, &fabric).unwrap();
+        assert_eq!(p.subgraphs.len(), 1);
+        assert_eq!(p.cut_bytes, 0);
+        assert_eq!(p.subgraphs[0].num_nodes(), g.num_nodes());
+    }
+
+    #[test]
+    fn bert_partitions_into_many() {
+        let g = builders::bert_large(32);
+        let fabric = Fabric::new(FabricConfig::default());
+        let p = partition(&g, &fabric).unwrap();
+        assert!(p.subgraphs.len() > 4, "bert should not fit one fabric");
+        assert!(p.cut_bytes > 0);
+        for sg in &p.subgraphs {
+            let (pcu, pmu, dram) = sg.unit_demand();
+            assert!(pcu <= fabric.num_pcus(), "pcu budget violated: {pcu}");
+            assert!(pmu <= fabric.num_pmus(), "pmu budget violated: {pmu}");
+            assert!(dram <= 8, "dram budget violated: {dram}");
+        }
+    }
+
+    #[test]
+    fn every_node_is_mapped_exactly_once() {
+        let g = builders::mha(64, 256, 4);
+        let budget = Budget { pcus: 4, pmus: 4, dram: 4 };
+        let p = partition_with_budget(&g, budget).unwrap();
+        assert_eq!(p.node_map.len(), g.num_nodes());
+        let total_original: usize = p
+            .subgraphs
+            .iter()
+            .map(|sg| {
+                sg.nodes()
+                    .iter()
+                    .filter(|n| !n.name.contains(".cut."))
+                    .count()
+            })
+            .sum();
+        assert_eq!(total_original, g.num_nodes());
+    }
+
+    #[test]
+    fn cut_edges_become_store_load_pairs() {
+        let g = builders::mlp(16, &[64, 64, 64, 64]);
+        let budget = Budget { pcus: 2, pmus: 3, dram: 3 };
+        let p = partition_with_budget(&g, budget).unwrap();
+        assert!(p.subgraphs.len() > 1);
+        let stores: usize = p.subgraphs[0]
+            .nodes()
+            .iter()
+            .filter(|n| n.name.ends_with(".cut.store"))
+            .count();
+        assert!(stores > 0, "first chunk must store its cut tensors");
+    }
+
+    #[test]
+    fn partition_preserves_flops() {
+        let g = builders::ffn(32, 128, 512);
+        let budget = Budget { pcus: 2, pmus: 2, dram: 2 };
+        let p = partition_with_budget(&g, budget).unwrap();
+        let total: f64 = p.subgraphs.iter().map(|sg| sg.total_flops()).sum();
+        assert_eq!(total, g.total_flops());
+    }
+
+    #[test]
+    fn random_graphs_partition_within_budget() {
+        prop::check("partition-budget", 24, |rng| {
+            let depth = rng.range_inclusive(2, 6);
+            let dims: Vec<u64> = (0..=depth).map(|_| 32 << rng.below(3)).collect();
+            let g = builders::mlp(8, &dims);
+            let budget = Budget {
+                pcus: rng.range_inclusive(2, 6),
+                pmus: rng.range_inclusive(3, 6),
+                dram: rng.range_inclusive(3, 6),
+            };
+            let p = partition_with_budget(&g, budget).unwrap();
+            for sg in &p.subgraphs {
+                let (pcu, pmu, dram) = sg.unit_demand();
+                assert!(pcu <= budget.pcus);
+                assert!(pmu <= budget.pmus);
+                assert!(dram <= budget.dram);
+                sg.validate().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! The abstract's annotation claim: *"our approach shows no accuracy
+//! degradation after removing performance annotations."*
+//!
+//! Performance annotations are the per-op FLOP/byte scalars in the node
+//! features — exactly the quantities a heuristic's per-op rules depend on.
+//! We train once with them and once without (`use_annotations = false`
+//! gates them out of training AND inference) and compare held-out metrics.
+
+use anyhow::Result;
+
+use crate::cost::Ablation;
+
+use super::common::{cross_validate, cv_metrics_for, Ctx};
+
+pub fn run(ctx: &Ctx, folds: usize) -> Result<()> {
+    let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
+
+    eprintln!("annotations: training WITH performance annotations");
+    let with = cross_validate(ctx, &ds, folds, Ablation::default())?;
+    eprintln!("annotations: training WITHOUT performance annotations");
+    let without = cross_validate(
+        ctx,
+        &ds,
+        folds,
+        Ablation { use_annotations: false, ..Ablation::default() },
+    )?;
+
+    let (re_w, rank_w, n) = cv_metrics_for(&with, &ds, |_| true);
+    let (re_wo, rank_wo, _) = cv_metrics_for(&without, &ds, |_| true);
+
+    println!("\nANNOTATION ABLATION — abstract's claim ({n} test points)");
+    println!("                      Test RE    Test Rank");
+    println!("  with annotations    {re_w:>7.3}    {rank_w:>9.3}");
+    println!("  without             {re_wo:>7.3}    {rank_wo:>9.3}");
+    let deg = (re_wo - re_w) / re_w * 100.0;
+    println!("  RE degradation: {deg:+.1}% (paper claims ~none)");
+    ctx.write_csv(
+        "annotations.csv",
+        "config,test_re,test_rank",
+        &[
+            format!("with,{re_w:.4},{rank_w:.4}"),
+            format!("without,{re_wo:.4},{rank_wo:.4}"),
+        ],
+    )?;
+    Ok(())
+}

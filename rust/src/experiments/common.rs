@@ -1,0 +1,162 @@
+//! Shared plumbing for the experiment harnesses.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::generate_parallel;
+use crate::cost::Ablation;
+use crate::data::{load_dataset, save_dataset, Dataset};
+use crate::metrics;
+use crate::runtime::Engine;
+use crate::train::{TrainConfig, Trainer};
+
+/// Everything a harness needs.
+pub struct Ctx {
+    pub cfg: RunConfig,
+    pub engine: Arc<Engine>,
+    pub results_dir: std::path::PathBuf,
+}
+
+impl Ctx {
+    pub fn new(cfg: RunConfig) -> Result<Ctx> {
+        let engine = Arc::new(
+            Engine::new(&cfg.artifacts_dir)
+                .context("loading artifacts (run `make artifacts`)")?,
+        );
+        let results_dir = std::path::PathBuf::from("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(Ctx { cfg, engine, results_dir })
+    }
+
+    /// Load the dataset from `path` if it exists, else generate (parallel)
+    /// and cache it there. Era comes from the run config.
+    pub fn dataset_cached(&self, path: &str) -> Result<Dataset> {
+        if std::path::Path::new(path).exists() {
+            let ds = load_dataset(path)?;
+            eprintln!("loaded {} samples from {path}", ds.len());
+            return Ok(ds);
+        }
+        let fabric = crate::arch::Fabric::new(self.cfg.fabric.clone());
+        let t0 = std::time::Instant::now();
+        eprintln!(
+            "generating {} samples (era={}, workers={}, seed={}) ...",
+            self.cfg.dataset.total,
+            self.cfg.era.name(),
+            self.cfg.workers,
+            self.cfg.seed
+        );
+        let ds = generate_parallel(&fabric, &self.cfg.dataset, self.cfg.seed, self.cfg.workers)?;
+        eprintln!("generated {} samples in {:.1}s", ds.len(), t0.elapsed().as_secs_f64());
+        save_dataset(&ds, path)?;
+        Ok(ds)
+    }
+
+    /// Write a CSV file into results/.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<()> {
+        use std::io::Write;
+        let path = self.results_dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        eprintln!("wrote {path:?}");
+        Ok(())
+    }
+}
+
+/// RE + Spearman of the stored heuristic predictions on `indices`.
+pub fn heuristic_metrics(ds: &Dataset, indices: &[usize]) -> (f64, f64) {
+    let pred: Vec<f64> = indices.iter().map(|&i| ds.samples[i].heuristic_pred as f64).collect();
+    let truth: Vec<f64> = indices.iter().map(|&i| ds.samples[i].label() as f64).collect();
+    (metrics::relative_error(&pred, &truth), metrics::spearman(&pred, &truth))
+}
+
+/// K-fold cross-validated GNN metrics: trains one model per fold.
+/// Returns per-fold `(test_indices, predictions)` so callers can slice by
+/// family, plus the trained folds' wall time.
+pub struct CvResult {
+    pub fold_preds: Vec<(Vec<usize>, Vec<f64>)>,
+    pub train_seconds: f64,
+}
+
+pub fn cross_validate(
+    ctx: &Ctx,
+    ds: &Dataset,
+    folds: usize,
+    ablation: Ablation,
+) -> Result<CvResult> {
+    let splits = metrics::kfold(ds.len(), folds, ctx.cfg.seed ^ 0xF01D);
+    let mut fold_preds = Vec::with_capacity(folds);
+    let mut train_seconds = 0.0;
+    for (fi, (train_idx, test_idx)) in splits.into_iter().enumerate() {
+        let tc = TrainConfig { ablation, ..ctx.cfg.train.clone() };
+        let mut trainer = Trainer::new(ctx.engine.clone(), tc)?;
+        let rep = trainer.fit(ds, &train_idx)?;
+        train_seconds += rep.wall_seconds;
+        let preds = trainer.predict(ds, &test_idx)?;
+        eprintln!(
+            "  fold {}/{folds}: train mse {:.5} ({:.1}s)",
+            fi + 1,
+            rep.final_train_loss,
+            rep.wall_seconds
+        );
+        fold_preds.push((test_idx, preds));
+    }
+    Ok(CvResult { fold_preds, train_seconds })
+}
+
+/// Aggregate CV predictions over an index filter (e.g. one family).
+/// Returns (RE, Spearman, n).
+pub fn cv_metrics_for(
+    cv: &CvResult,
+    ds: &Dataset,
+    filter: impl Fn(usize) -> bool,
+) -> (f64, f64, usize) {
+    let mut preds = Vec::new();
+    let mut truth = Vec::new();
+    for (test_idx, fold_p) in &cv.fold_preds {
+        for (&i, &p) in test_idx.iter().zip(fold_p) {
+            if filter(i) {
+                preds.push(p);
+                truth.push(ds.samples[i].label() as f64);
+            }
+        }
+    }
+    if preds.is_empty() {
+        return (f64::NAN, f64::NAN, 0);
+    }
+    (
+        metrics::relative_error(&preds, &truth),
+        metrics::spearman(&preds, &truth),
+        preds.len(),
+    )
+}
+
+/// Heuristic metrics over the same CV test folds and filter.
+pub fn heuristic_metrics_for(
+    cv: &CvResult,
+    ds: &Dataset,
+    filter: impl Fn(usize) -> bool,
+) -> (f64, f64, usize) {
+    let mut preds = Vec::new();
+    let mut truth = Vec::new();
+    for (test_idx, _) in &cv.fold_preds {
+        for &i in test_idx {
+            if filter(i) {
+                preds.push(ds.samples[i].heuristic_pred as f64);
+                truth.push(ds.samples[i].label() as f64);
+            }
+        }
+    }
+    if preds.is_empty() {
+        return (f64::NAN, f64::NAN, 0);
+    }
+    (
+        metrics::relative_error(&preds, &truth),
+        metrics::spearman(&preds, &truth),
+        preds.len(),
+    )
+}

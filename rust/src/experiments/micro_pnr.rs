@@ -1,0 +1,66 @@
+//! §IV-B-b micro-PnR result: *"compilations generated with the learned cost
+//! model resulted in a 9.1% and 8.6% decrease in latency [on MLP and MHA
+//! graphs] when compared to compilations generated with a heuristic cost
+//! model."*
+//!
+//! Harness: train the GNN on the corpus, then compile `trials` held-out MLP
+//! and MHA graphs (sizes drawn from the same distribution but unseen
+//! decisions) with the annealer under each cost model; measure final
+//! latency with the simulator.
+
+use anyhow::Result;
+
+use crate::arch::Fabric;
+use crate::compiler::{compile, CompileConfig};
+use crate::cost::{Ablation, HeuristicCost, LearnedCost};
+use crate::data::gen::draw_workload;
+use crate::dfg::WorkloadFamily;
+use crate::metrics;
+use crate::train::Trainer;
+use crate::util::rng::Rng;
+
+use super::common::Ctx;
+
+pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
+    let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
+    eprintln!("micro-pnr: training the cost model on {} samples", ds.len());
+    let mut trainer = Trainer::new(ctx.engine.clone(), ctx.cfg.train.clone())?;
+    let all: Vec<usize> = (0..ds.len()).collect();
+    trainer.fit(&ds, &all)?;
+    let store = trainer.param_store();
+
+    let fabric = Fabric::new(ctx.cfg.fabric.clone());
+    let compile_cfg = CompileConfig {
+        era: ctx.cfg.era,
+        anneal: ctx.cfg.anneal.clone(),
+        seed: ctx.cfg.seed ^ 0xA11C,
+    };
+
+    println!("\nMICRO-PNR — compile latency, learned vs heuristic ({trials} trials/family)");
+    println!("  family   mean latency reduction   mean II reduction");
+    let mut rows = Vec::new();
+    for family in [WorkloadFamily::Mlp, WorkloadFamily::Mha] {
+        let mut rng = Rng::new(ctx.cfg.seed ^ 0xB0B + family.name().len() as u64);
+        let mut lat_red = Vec::new();
+        let mut ii_red = Vec::new();
+        for t in 0..trials {
+            let graph = draw_workload(family, &mut rng);
+            let mut heuristic = HeuristicCost::new();
+            let mut learned =
+                LearnedCost::from_store(ctx.engine.clone(), &store, Ablation::default())?;
+            let mut cfg = compile_cfg.clone();
+            cfg.seed ^= t as u64;
+            let rep_h = compile(&graph, &fabric, &mut heuristic, &cfg)?;
+            let rep_l = compile(&graph, &fabric, &mut learned, &cfg)?;
+            lat_red.push(rep_l.latency_reduction_pct(&rep_h));
+            ii_red.push((1.0 - rep_l.total_ii / rep_h.total_ii) * 100.0);
+        }
+        let ml = metrics::mean(&lat_red);
+        let mi = metrics::mean(&ii_red);
+        println!("  {:<7}  {ml:>+10.1}%               {mi:>+10.1}%", family.name());
+        rows.push(format!("{},{ml:.3},{mi:.3},{trials}", family.name()));
+    }
+    println!("  (paper: 9.1% (MLP) and 8.6% (MHA) latency decrease)");
+    ctx.write_csv("micro_pnr.csv", "family,latency_reduction_pct,ii_reduction_pct,trials", &rows)?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Experiment harnesses: one function per paper table/figure.
+//!
+//! | function | paper result |
+//! |---|---|
+//! | [`quality::run`] | Table I + Fig 2 — RE / Spearman, GNN vs heuristic (one CV) |
+//! | [`table3::run`] | Table III — node/edge-embedding ablations |
+//! | [`micro_pnr::run`] | §IV-B-b — MLP/MHA compile latency reduction |
+//! | [`large_models::run`] | §IV-B-b — BERT-large / GPT2-XL ΔTP |
+//! | [`table2::run`] | Table II — adaptivity across compiler eras |
+//! | [`annotations::run`] | abstract — "no degradation after removing perf annotations" |
+//!
+//! Each harness prints a stdout table mirroring the paper's rows and writes
+//! machine-readable CSV under `results/`. Determinism: every run is fully
+//! determined by `(seed, workers)` which are printed and recorded.
+
+pub mod annotations;
+pub mod common;
+pub mod large_models;
+pub mod micro_pnr;
+pub mod quality;
+pub mod table2;
+pub mod table3;

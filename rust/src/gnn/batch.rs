@@ -1,0 +1,151 @@
+//! Stack encoded graphs into the batched host tensors the artifacts take.
+
+use anyhow::Result;
+
+use crate::runtime::Tensor;
+
+use super::bucket::Bucket;
+use super::encode::GraphTensors;
+use super::schema::{ABLATION_FLAGS, EDGE_FEAT_DIM, NODE_FEAT_DIM};
+
+/// Stack `graphs` (all from `bucket`) into the 8 batch tensors, padding the
+/// batch dimension to `batch_size` by repeating zeros (mask handles it).
+/// Returns tensors in the artifact input order:
+/// `[node_type, node_stage, node_feat, node_mask, edge_src, edge_dst,
+///   edge_feat, edge_mask]`.
+pub fn stack_batch(graphs: &[&GraphTensors], bucket: Bucket, batch_size: usize) -> Result<Vec<Tensor>> {
+    if graphs.len() > batch_size {
+        anyhow::bail!("{} graphs exceed batch size {batch_size}", graphs.len());
+    }
+    for g in graphs {
+        if g.bucket != bucket {
+            anyhow::bail!("bucket mismatch in batch: {:?} vs {:?}", g.bucket, bucket);
+        }
+    }
+    let (n, e, b) = (bucket.nodes, bucket.edges, batch_size);
+
+    let mut node_type = vec![0i32; b * n];
+    let mut node_stage = vec![0i32; b * n];
+    let mut node_feat = vec![0f32; b * n * NODE_FEAT_DIM];
+    let mut node_mask = vec![0f32; b * n];
+    let mut edge_src = vec![0i32; b * e];
+    let mut edge_dst = vec![0i32; b * e];
+    let mut edge_feat = vec![0f32; b * e * EDGE_FEAT_DIM];
+    let mut edge_mask = vec![0f32; b * e];
+
+    for (bi, g) in graphs.iter().enumerate() {
+        node_type[bi * n..(bi + 1) * n].copy_from_slice(&g.node_type);
+        node_stage[bi * n..(bi + 1) * n].copy_from_slice(&g.node_stage);
+        node_feat[bi * n * NODE_FEAT_DIM..(bi + 1) * n * NODE_FEAT_DIM]
+            .copy_from_slice(&g.node_feat);
+        node_mask[bi * n..(bi + 1) * n].copy_from_slice(&g.node_mask);
+        edge_src[bi * e..(bi + 1) * e].copy_from_slice(&g.edge_src);
+        edge_dst[bi * e..(bi + 1) * e].copy_from_slice(&g.edge_dst);
+        edge_feat[bi * e * EDGE_FEAT_DIM..(bi + 1) * e * EDGE_FEAT_DIM]
+            .copy_from_slice(&g.edge_feat);
+        edge_mask[bi * e..(bi + 1) * e].copy_from_slice(&g.edge_mask);
+    }
+
+    Ok(vec![
+        Tensor::i32(&[b, n], node_type),
+        Tensor::i32(&[b, n], node_stage),
+        Tensor::f32(&[b, n, NODE_FEAT_DIM], node_feat),
+        Tensor::f32(&[b, n], node_mask),
+        Tensor::i32(&[b, e], edge_src),
+        Tensor::i32(&[b, e], edge_dst),
+        Tensor::f32(&[b, e, EDGE_FEAT_DIM], edge_feat),
+        Tensor::f32(&[b, e], edge_mask),
+    ])
+}
+
+/// The labels tensor for a training batch (`NaN`-free: callers must ensure
+/// every graph has a label; padding rows get 0 with a 0 sample-weight).
+pub fn stack_labels(graphs: &[&GraphTensors], batch_size: usize) -> Result<(Tensor, Tensor)> {
+    let mut labels = vec![0f32; batch_size];
+    let mut weights = vec![0f32; batch_size];
+    for (i, g) in graphs.iter().enumerate() {
+        if g.label.is_nan() {
+            anyhow::bail!("graph {i} in training batch has no label");
+        }
+        labels[i] = g.label;
+        weights[i] = 1.0;
+    }
+    Ok((
+        Tensor::f32(&[batch_size], labels),
+        Tensor::f32(&[batch_size], weights),
+    ))
+}
+
+/// The ablation-flag tensor `[use_node_emb, use_edge_emb, use_annot]`.
+pub fn flags_tensor(flags: [f32; ABLATION_FLAGS]) -> Tensor {
+    Tensor::f32(&[ABLATION_FLAGS], flags.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::bucket::BUCKETS;
+
+    fn toy_graph(label: f32) -> GraphTensors {
+        let mut g = GraphTensors::zeroed(BUCKETS[0]);
+        g.node_mask[0] = 1.0;
+        g.node_mask[1] = 1.0;
+        g.node_type[1] = 3;
+        g.edge_src[0] = 0;
+        g.edge_dst[0] = 1;
+        g.edge_mask[0] = 1.0;
+        g.label = label;
+        g
+    }
+
+    #[test]
+    fn stack_shapes() {
+        let a = toy_graph(0.5);
+        let b = toy_graph(0.7);
+        let ts = stack_batch(&[&a, &b], BUCKETS[0], 4).unwrap();
+        assert_eq!(ts.len(), 8);
+        assert_eq!(ts[0].shape(), &[4, 32]); // node_type
+        assert_eq!(ts[2].shape(), &[4, 32, NODE_FEAT_DIM]);
+        assert_eq!(ts[6].shape(), &[4, 96, EDGE_FEAT_DIM]);
+        // Second graph's node_type landed in the right slot.
+        assert_eq!(ts[0].as_i32().unwrap()[32 + 1], 3);
+        // Padding rows all zero.
+        assert!(ts[3].as_f32().unwrap()[2 * 32..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn labels_and_weights() {
+        let a = toy_graph(0.25);
+        let (labels, weights) = stack_labels(&[&a], 4).unwrap();
+        assert_eq!(labels.as_f32().unwrap(), &[0.25, 0.0, 0.0, 0.0]);
+        assert_eq!(weights.as_f32().unwrap(), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn unlabeled_graph_rejected_for_training() {
+        let mut a = toy_graph(0.5);
+        a.label = f32::NAN;
+        assert!(stack_labels(&[&a], 2).is_err());
+    }
+
+    #[test]
+    fn batch_overflow_rejected() {
+        let a = toy_graph(0.1);
+        let g2 = toy_graph(0.2);
+        assert!(stack_batch(&[&a, &g2], BUCKETS[0], 1).is_err());
+    }
+
+    #[test]
+    fn bucket_mismatch_rejected() {
+        let a = toy_graph(0.1);
+        let mut b = GraphTensors::zeroed(BUCKETS[1]);
+        b.label = 0.3;
+        assert!(stack_batch(&[&a, &b], BUCKETS[0], 4).is_err());
+    }
+
+    #[test]
+    fn flags_tensor_shape() {
+        let t = flags_tensor([1.0, 0.0, 1.0]);
+        assert_eq!(t.shape(), &[3]);
+    }
+}

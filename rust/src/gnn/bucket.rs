@@ -1,0 +1,84 @@
+//! Size buckets for padding variable-size PnR graphs into fixed AOT shapes.
+
+use anyhow::{bail, Result};
+
+/// One (max nodes, max edges) bucket; an AOT executable exists per bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    pub nodes: usize,
+    pub edges: usize,
+}
+
+impl Bucket {
+    pub fn tag(&self) -> String {
+        format!("n{}_e{}", self.nodes, self.edges)
+    }
+
+    pub fn fits(&self, nodes: usize, edges: usize) -> bool {
+        nodes <= self.nodes && edges <= self.edges
+    }
+}
+
+/// The bucket table, ascending. The largest bucket must fit any single
+/// fabric-sized subgraph: the default fabric has 72 placeable units and the
+/// partitioner's densest outputs stay below 384 edges.
+pub const BUCKETS: [Bucket; 3] = [
+    Bucket { nodes: 32, edges: 96 },
+    Bucket { nodes: 64, edges: 192 },
+    Bucket { nodes: 128, edges: 384 },
+];
+
+/// Smallest bucket that fits a (nodes, edges) graph.
+pub fn select(nodes: usize, edges: usize) -> Result<Bucket> {
+    for b in BUCKETS {
+        if b.fits(nodes, edges) {
+            return Ok(b);
+        }
+    }
+    bail!(
+        "graph with {nodes} nodes / {edges} edges exceeds the largest GNN bucket \
+         ({:?}); partition it first",
+        BUCKETS[BUCKETS.len() - 1]
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_smallest_fitting() {
+        assert_eq!(select(10, 20).unwrap(), BUCKETS[0]);
+        assert_eq!(select(33, 20).unwrap(), BUCKETS[1]);
+        assert_eq!(select(10, 200).unwrap(), BUCKETS[2]);
+        assert_eq!(select(128, 384).unwrap(), BUCKETS[2]);
+    }
+
+    #[test]
+    fn oversize_errors() {
+        assert!(select(129, 10).is_err());
+        assert!(select(10, 385).is_err());
+    }
+
+    #[test]
+    fn buckets_ascend() {
+        for w in BUCKETS.windows(2) {
+            assert!(w[0].nodes < w[1].nodes);
+            assert!(w[0].edges < w[1].edges);
+        }
+    }
+
+    #[test]
+    fn tags_stable() {
+        assert_eq!(BUCKETS[0].tag(), "n32_e96");
+    }
+
+    #[test]
+    fn largest_bucket_fits_default_fabric() {
+        use crate::arch::{Fabric, FabricConfig};
+        let f = Fabric::new(FabricConfig::default());
+        let placeable = f.num_pcus() + f.num_pmus()
+            + f.units_of_kind(crate::arch::UnitKind::DramPort).len();
+        assert!(BUCKETS[BUCKETS.len() - 1].nodes >= placeable);
+    }
+}

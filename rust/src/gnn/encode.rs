@@ -1,0 +1,305 @@
+//! Encode one (graph, placement, routing) triple into padded GNN tensors.
+//!
+//! Hot path: the annealer calls this once per candidate. `encode_into`
+//! reuses a pre-allocated [`GraphTensors`] so the SA loop is allocation-free
+//! after warmup (DESIGN.md §Perf, L3 target).
+
+use crate::arch::{Fabric, UnitKind};
+use crate::dfg::Dfg;
+use crate::placer::Placement;
+use crate::router::Routing;
+
+use super::bucket::{self, Bucket};
+use super::schema::*;
+
+/// Padded tensor views of one encoded PnR graph, ready to marshal into the
+/// AOT artifacts. Layouts (row-major):
+///
+/// * `node_type  : i32[N]`   — op-type embedding index (0 on padding)
+/// * `node_stage : i32[N]`   — clipped stage index (0 on padding)
+/// * `node_feat  : f32[N, NODE_FEAT_DIM]`
+/// * `node_mask  : f32[N]`   — 1.0 on live nodes
+/// * `edge_src   : i32[E]`, `edge_dst : i32[E]` — endpoints (0 on padding)
+/// * `edge_feat  : f32[E, EDGE_FEAT_DIM]`
+/// * `edge_mask  : f32[E]`
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphTensors {
+    pub bucket: Bucket,
+    pub node_type: Vec<i32>,
+    pub node_stage: Vec<i32>,
+    pub node_feat: Vec<f32>,
+    pub node_mask: Vec<f32>,
+    pub edge_src: Vec<i32>,
+    pub edge_dst: Vec<i32>,
+    pub edge_feat: Vec<f32>,
+    pub edge_mask: Vec<f32>,
+    /// The label slot (normalized throughput); NaN when unknown.
+    pub label: f32,
+}
+
+impl GraphTensors {
+    /// Allocate zeroed tensors for a bucket.
+    pub fn zeroed(bucket: Bucket) -> GraphTensors {
+        GraphTensors {
+            bucket,
+            node_type: vec![0; bucket.nodes],
+            node_stage: vec![0; bucket.nodes],
+            node_feat: vec![0.0; bucket.nodes * NODE_FEAT_DIM],
+            node_mask: vec![0.0; bucket.nodes],
+            edge_src: vec![0; bucket.edges],
+            edge_dst: vec![0; bucket.edges],
+            edge_feat: vec![0.0; bucket.edges * EDGE_FEAT_DIM],
+            edge_mask: vec![0.0; bucket.edges],
+            label: f32::NAN,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.node_type.iter_mut().for_each(|x| *x = 0);
+        self.node_stage.iter_mut().for_each(|x| *x = 0);
+        self.node_feat.iter_mut().for_each(|x| *x = 0.0);
+        self.node_mask.iter_mut().for_each(|x| *x = 0.0);
+        self.edge_src.iter_mut().for_each(|x| *x = 0);
+        self.edge_dst.iter_mut().for_each(|x| *x = 0);
+        self.edge_feat.iter_mut().for_each(|x| *x = 0.0);
+        self.edge_mask.iter_mut().for_each(|x| *x = 0.0);
+        self.label = f32::NAN;
+    }
+
+    pub fn live_nodes(&self) -> usize {
+        self.node_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    pub fn live_edges(&self) -> usize {
+        self.edge_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Encode into freshly allocated tensors (picks the smallest fitting bucket).
+pub fn encode(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    routing: &Routing,
+) -> anyhow::Result<GraphTensors> {
+    let b = bucket::select(graph.num_nodes(), graph.num_edges())?;
+    let mut out = GraphTensors::zeroed(b);
+    encode_into(graph, fabric, placement, routing, &mut out)?;
+    Ok(out)
+}
+
+/// Encode into `out` (must be a bucket that fits; reused across calls).
+pub fn encode_into(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    routing: &Routing,
+    out: &mut GraphTensors,
+) -> anyhow::Result<()> {
+    if !out.bucket.fits(graph.num_nodes(), graph.num_edges()) {
+        anyhow::bail!(
+            "graph ({} nodes, {} edges) does not fit bucket {:?}",
+            graph.num_nodes(),
+            graph.num_edges(),
+            out.bucket
+        );
+    }
+    out.clear();
+
+    let rows = fabric.config.rows.max(1) as f32;
+    let cols = fabric.config.cols.max(1) as f32;
+    let num_stages = placement.num_stages().max(1) as f32;
+
+    for node in graph.nodes() {
+        let i = node.id.0 as usize;
+        let unit = fabric.unit(placement.unit(node.id));
+        out.node_type[i] = node.kind.type_index() as i32;
+        out.node_stage[i] = (placement.stage(node.id) as usize).min(MAX_STAGES - 1) as i32;
+        out.node_mask[i] = 1.0;
+        let f = &mut out.node_feat[i * NODE_FEAT_DIM..(i + 1) * NODE_FEAT_DIM];
+        f[unit.kind.index()] = 1.0;
+        // Scalars: [log_flops, log_bytes, row_norm, col_norm, stage_frac,
+        //           unit_quality].
+        f[UNIT_KIND_COUNT] = (node.kind.flops() as f32).ln_1p() / LOG_SCALE;
+        f[UNIT_KIND_COUNT + 1] = (node.kind.output_bytes() as f32).ln_1p() / LOG_SCALE;
+        f[UNIT_KIND_COUNT + 2] = unit.row as f32 / rows;
+        f[UNIT_KIND_COUNT + 3] = unit.col as f32 / cols;
+        f[UNIT_KIND_COUNT + 4] = placement.stage(node.id) as f32 / num_stages;
+        f[UNIT_KIND_COUNT + 5] = unit.quality as f32;
+    }
+
+    for edge in graph.edges() {
+        let i = edge.id.0 as usize;
+        let route = &routing.routes[i];
+        out.edge_src[i] = edge.src.0 as i32;
+        out.edge_dst[i] = edge.dst.0 as i32;
+        out.edge_mask[i] = 1.0;
+
+        let mut shared = 0u32;
+        let mut max_flows = 0u32;
+        let mut min_q = 1.0f32;
+        let mut sum_q = 0.0f32;
+        for l in &route.links {
+            let k = routing.link_flows[l.0 as usize];
+            if k > 1 {
+                shared += 1;
+            }
+            max_flows = max_flows.max(k);
+            let q = fabric.link(*l).quality as f32;
+            min_q = min_q.min(q);
+            sum_q += q;
+        }
+        let mean_q = if route.links.is_empty() { 1.0 } else { sum_q / route.links.len() as f32 };
+        let src_kind = fabric.unit(placement.unit(edge.src)).kind;
+        let dst_kind = fabric.unit(placement.unit(edge.dst)).kind;
+        let touches_dram =
+            src_kind == UnitKind::DramPort || dst_kind == UnitKind::DramPort;
+
+        let f = &mut out.edge_feat[i * EDGE_FEAT_DIM..(i + 1) * EDGE_FEAT_DIM];
+        f[0] = route.hops() as f32 / HOPS_SCALE;
+        f[1] = (edge.bytes as f32).ln_1p() / LOG_SCALE;
+        f[2] = if placement.stage(edge.src) == placement.stage(edge.dst) { 1.0 } else { 0.0 };
+        f[3] = shared as f32 / FLOWS_SCALE;
+        f[4] = max_flows as f32 / FLOWS_SCALE;
+        f[5] = if touches_dram { 1.0 } else { 0.0 };
+        f[6] = min_q;
+        f[7] = mean_q;
+        f[8] = (edge.bytes as f32 / min_q.max(0.01)).ln_1p() / LOG_SCALE;
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn encoded(seed: u64) -> (Dfg, GraphTensors) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        let t = encode(&g, &f, &p, &r).unwrap();
+        (g, t)
+    }
+
+    #[test]
+    fn masks_match_graph_size() {
+        let (g, t) = encoded(1);
+        assert_eq!(t.live_nodes(), g.num_nodes());
+        assert_eq!(t.live_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let (g, t) = encoded(2);
+        for i in g.num_nodes()..t.bucket.nodes {
+            assert_eq!(t.node_type[i], 0);
+            assert_eq!(t.node_mask[i], 0.0);
+            for d in 0..NODE_FEAT_DIM {
+                assert_eq!(t.node_feat[i * NODE_FEAT_DIM + d], 0.0);
+            }
+        }
+        for i in g.num_edges()..t.bucket.edges {
+            assert_eq!(t.edge_mask[i], 0.0);
+            assert_eq!(t.edge_src[i], 0);
+        }
+    }
+
+    #[test]
+    fn unit_onehot_is_exactly_one() {
+        let (g, t) = encoded(3);
+        for i in 0..g.num_nodes() {
+            let sum: f32 = t.node_feat
+                [i * NODE_FEAT_DIM..i * NODE_FEAT_DIM + UNIT_KIND_COUNT]
+                .iter()
+                .sum();
+            assert_eq!(sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn edge_indices_point_at_live_nodes() {
+        let (g, t) = encoded(4);
+        for i in 0..g.num_edges() {
+            let s = t.edge_src[i] as usize;
+            let d = t.edge_dst[i] as usize;
+            assert!(t.node_mask[s] == 1.0);
+            assert!(t.node_mask[d] == 1.0);
+            assert_ne!(s, d);
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_allocation() {
+        let g = builders::gemm_graph(32, 32, 32);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(5);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        let mut t = GraphTensors::zeroed(bucket::select(g.num_nodes(), g.num_edges()).unwrap());
+        let ptr_before = t.node_feat.as_ptr();
+        encode_into(&g, &f, &p, &r, &mut t).unwrap();
+        assert_eq!(t.node_feat.as_ptr(), ptr_before);
+        assert_eq!(t.live_nodes(), g.num_nodes());
+        // Re-encode a different placement into the same buffer.
+        let p2 = random_placement(&g, &f, &mut rng).unwrap();
+        let r2 = route_all(&f, &g, &p2).unwrap();
+        encode_into(&g, &f, &p2, &r2, &mut t).unwrap();
+        assert_eq!(t.live_nodes(), g.num_nodes());
+    }
+
+    #[test]
+    fn oversize_graph_rejected() {
+        let g = builders::gemm_graph(8, 8, 8);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(6);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        let mut t = GraphTensors::zeroed(Bucket { nodes: 2, edges: 2 });
+        assert!(encode_into(&g, &f, &p, &r, &mut t).is_err());
+    }
+
+    #[test]
+    fn features_are_finite_and_bounded() {
+        prop::check("encode-bounded", 24, |rng| {
+            let g = match rng.below(3) {
+                0 => builders::gemm_graph(64, 64, 64),
+                1 => builders::mlp(8, &[64, 128, 64]),
+                _ => builders::ffn(16, 64, 256),
+            };
+            let f = Fabric::new(FabricConfig::default());
+            let p = random_placement(&g, &f, rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            let t = encode(&g, &f, &p, &r).unwrap();
+            for &x in t.node_feat.iter().chain(t.edge_feat.iter()) {
+                assert!(x.is_finite());
+                assert!((-2.0..=4.0).contains(&x), "feature out of range: {x}");
+            }
+            for &s in &t.node_stage {
+                assert!((s as usize) < MAX_STAGES);
+            }
+        });
+    }
+
+    #[test]
+    fn different_placements_encode_differently() {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(7);
+        let p1 = random_placement(&g, &f, &mut rng).unwrap();
+        let p2 = random_placement(&g, &f, &mut rng).unwrap();
+        let r1 = route_all(&f, &g, &p1).unwrap();
+        let r2 = route_all(&f, &g, &p2).unwrap();
+        let t1 = encode(&g, &f, &p1, &r1).unwrap();
+        let t2 = encode(&g, &f, &p2, &r2).unwrap();
+        assert_ne!(t1.node_feat, t2.node_feat);
+    }
+}

@@ -1,0 +1,20 @@
+//! PnR decision → GNN tensor encoding.
+//!
+//! The paper (§III-A) encodes a PnR decision as a graph whose nodes are the
+//! *actively used functional units* and whose edges are the *used fabric
+//! routes*. This module produces exactly the padded tensors the AOT-compiled
+//! GNN artifacts consume; the feature schema here and in
+//! `python/compile/model.py` must agree, and is cross-checked at engine
+//! startup via `artifacts/manifest.json` (see [`schema`]).
+//!
+//! Graphs are padded into size **buckets** so a fixed set of AOT executables
+//! covers all inputs ([`bucket`]).
+
+pub mod batch;
+mod bucket;
+mod encode;
+pub mod schema;
+
+pub use batch::{flags_tensor, stack_batch, stack_labels};
+pub use bucket::{select as select_bucket, Bucket, BUCKETS};
+pub use encode::{encode, encode_into, GraphTensors};

@@ -1,0 +1,84 @@
+//! The feature schema shared with `python/compile/model.py`.
+//!
+//! Any change here must be mirrored there; the manifest records python's
+//! values and [`check_manifest`] fails fast on drift.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+/// One-hot unit-kind width (PCU/PMU/Switch/DramPort).
+pub const UNIT_KIND_COUNT: usize = crate::arch::UnitKind::COUNT;
+
+/// Scalar node features appended after the unit-kind one-hot:
+/// `[log_flops, log_bytes, row_norm, col_norm, stage_frac, unit_quality]`.
+/// The first two are the "performance annotations" whose removal the paper's
+/// abstract highlights; the ablation flag zeroes them at inference time.
+/// `unit_quality` is the empirically measured per-unit speed factor — an
+/// "easily accessible hardware feature" (paper's conclusion) that the
+/// rule-based baseline never got engineered to exploit.
+pub const NODE_SCALAR_COUNT: usize = 6;
+
+/// Full node feature width.
+pub const NODE_FEAT_DIM: usize = UNIT_KIND_COUNT + NODE_SCALAR_COUNT;
+
+/// Edge features:
+/// `[hops_norm, log_bytes, same_stage, shared_links_norm, max_flows_norm,
+///   touches_dram, route_min_quality, route_mean_quality, log_serial]`.
+/// `route_*_quality` summarize the empirical per-link bandwidth factors
+/// along the route (cf. `arch::Link::quality`); `log_serial` is the
+/// engineered composite `ln(1 + bytes/min_quality)` — the route's empirical
+/// serialization cost, cheap to measure per route on the real machine.
+pub const EDGE_FEAT_DIM: usize = 9;
+
+/// Max distinct op types (learnable embedding rows). Mirrors
+/// `OpKind::TYPE_COUNT`.
+pub const OP_TYPE_COUNT: usize = crate::dfg::OpKind::TYPE_COUNT;
+
+/// Stage indices are clipped to this many embedding rows.
+pub const MAX_STAGES: usize = 32;
+
+/// Ablation-flag vector length: `[use_node_emb, use_edge_emb, use_annot]`
+/// (Table III rows + the abstract's annotation-removal claim).
+pub const ABLATION_FLAGS: usize = 3;
+
+/// Log-scale normalizer for flops/bytes features.
+pub const LOG_SCALE: f32 = 20.0;
+
+/// Normalizers for route-shape features.
+pub const HOPS_SCALE: f32 = 16.0;
+pub const FLOWS_SCALE: f32 = 8.0;
+
+/// Verify the manifest was built against the same schema.
+pub fn check_manifest(m: &Manifest) -> Result<()> {
+    let pairs: [(&str, usize); 6] = [
+        ("node_feat_dim", NODE_FEAT_DIM),
+        ("edge_feat_dim", EDGE_FEAT_DIM),
+        ("op_type_count", OP_TYPE_COUNT),
+        ("max_stages", MAX_STAGES),
+        ("unit_kind_count", UNIT_KIND_COUNT),
+        ("ablation_flags", ABLATION_FLAGS),
+    ];
+    for (key, want) in pairs {
+        let got = m.hyper_usize(key)?;
+        if got != want {
+            bail!(
+                "schema drift: manifest gnn.{key}={got} but rust expects {want}; \
+                 re-run `make artifacts`"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_are_consistent() {
+        assert_eq!(NODE_FEAT_DIM, UNIT_KIND_COUNT + NODE_SCALAR_COUNT);
+        assert!(OP_TYPE_COUNT >= 14);
+        assert!(MAX_STAGES >= 8);
+    }
+}

@@ -1,0 +1,319 @@
+//! # rdacost — learned cost model for PnR on reconfigurable dataflow hardware
+//!
+//! Reproduction of *"Learned Cost Model for Placement on Reconfigurable
+//! Dataflow Hardware"* (SambaNova, CS.DC 2025). The crate contains the full
+//! compiler substrate the paper's cost model lives in; see DESIGN.md for the
+//! system inventory and the per-experiment index, and README.md for usage.
+//!
+//! Three-layer architecture (python never on the PnR path):
+//!
+//! * **L1** — Pallas kernel: the fused GNN message-passing layer
+//!   (`python/compile/kernels/gnn_aggr.py`), AOT-lowered.
+//! * **L2** — JAX model: embeddings + K message-passing layers + regressor
+//!   head, plus the fused train step (`python/compile/model.py`).
+//! * **L3** — this crate: fabric model, DFG builders, SA placer, router,
+//!   throughput simulator, heuristic baseline, dataset generation, training
+//!   orchestration, batched scoring service, end-to-end compile driver, and
+//!   the experiment harnesses regenerating every paper table/figure.
+
+pub mod arch;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod dfg;
+pub mod experiments;
+pub mod gnn;
+pub mod metrics;
+pub mod placer;
+pub mod router;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+use anyhow::{bail, Result};
+use util::cli::Args;
+
+const USAGE: &str = "\
+rdacost — learned cost model for PnR on reconfigurable dataflow hardware
+
+USAGE: rdacost <subcommand> [options]
+
+  smoke                         load artifacts, print platform info
+  gen-data   [--total N] [--era past|present] [--out FILE] [--workers N]
+  train      [--dataset FILE] [--epochs N] [--ckpt FILE] [--era E]
+  eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
+  compile    --model gemm|mlp|ffn|mha|bert|gpt [--cost heuristic|learned|oracle]
+             [--seq N] [--blocks N] [--ckpt FILE]
+  bench      table1|fig2|table3|table2|micro-pnr|large-models|annotations
+             [--folds N] [--trials N] [--seq N] [--blocks N] [--quick]
+  serve-demo [--clients N] [--requests N]          scoring-service demo
+
+Common options:
+  --config FILE     TOML config (see rust/src/config)
+  --seed N          master seed (default 42)
+  --artifacts DIR   artifacts directory (default: artifacts)
+";
+
+/// CLI entry point (kept in the library so integration tests can call it).
+pub fn cli_main(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("smoke") => cmd_smoke(args),
+        Some("gen-data") => cmd_gen_data(args),
+        Some("train") => cmd_train(args),
+        Some("eval") => cmd_eval(args),
+        Some("compile") => cmd_compile(args),
+        Some("bench") => cmd_bench(args),
+        Some("serve-demo") => cmd_serve_demo(args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Resolve the run configuration from `--config` + flag overrides.
+fn run_config(args: &Args) -> Result<config::RunConfig> {
+    let mut cfg = config::RunConfig::from_file(args.get("config"))?;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    if let Some(era) = args.get("era") {
+        cfg.era = arch::Era::parse(era)?;
+        cfg.dataset.era = cfg.era;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers);
+    cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
+    cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
+    cfg.anneal.iterations = args.get_usize("iters", cfg.anneal.iterations);
+    if args.flag("quick") {
+        // CI-speed profile: small corpus, few epochs, short anneals.
+        cfg.dataset.total = cfg.dataset.total.min(400);
+        cfg.train.epochs = cfg.train.epochs.min(15);
+        cfg.anneal.iterations = cfg.anneal.iterations.min(150);
+    }
+    Ok(cfg)
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let engine = runtime::Engine::new(&cfg.artifacts_dir)?;
+    gnn::schema::check_manifest(engine.manifest())?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest().artifacts.len());
+    println!("schema: OK");
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let out = args.get_or("out", "results/dataset.bin").to_string();
+    let fabric = arch::Fabric::new(cfg.fabric.clone());
+    let t0 = std::time::Instant::now();
+    let ds = coordinator::generate_parallel(&fabric, &cfg.dataset, cfg.seed, cfg.workers)?;
+    data::save_dataset(&ds, &out)?;
+    println!(
+        "generated {} samples (era={}) in {:.1}s -> {out}",
+        ds.len(),
+        cfg.era.name(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let ds_path = args.get_or("dataset", "results/dataset.bin");
+    let ckpt = args.get_or("ckpt", "results/gnn.ckpt").to_string();
+    let ds = data::load_dataset(ds_path)?;
+    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let mut tc = cfg.train.clone();
+    tc.log_every = 5;
+    let mut trainer = train::Trainer::new(engine, tc)?;
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let rep = trainer.fit(&ds, &all)?;
+    trainer.param_store().save(&ckpt)?;
+    println!(
+        "trained {} epochs on {} samples in {:.1}s (final mse {:.5}) -> {ckpt}",
+        rep.epochs_run,
+        ds.len(),
+        rep.wall_seconds,
+        rep.final_train_loss
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let ds_path = args.get_or("dataset", "results/dataset.bin");
+    let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
+    let ds = data::load_dataset(ds_path)?;
+    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let store = train::ParamStore::load(ckpt)?;
+    let trainer = train::Trainer::new(engine, cfg.train.clone())?.with_params(&store)?;
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let eval = trainer.evaluate(&ds, &all)?;
+    let (h_re, h_rank) = experiments::common::heuristic_metrics(&ds, &all);
+    println!("on {} samples:", eval.count);
+    println!("  GNN       RE {:.3}  rank {:.3}", eval.relative_error, eval.spearman);
+    println!("  heuristic RE {h_re:.3}  rank {h_rank:.3}");
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let seq = args.get_u64("seq", 32);
+    let fabric = arch::Fabric::new(cfg.fabric.clone());
+    let graph = match dfg::WorkloadFamily::parse(model)? {
+        dfg::WorkloadFamily::Gemm => dfg::builders::gemm_graph(128, 128, 128),
+        dfg::WorkloadFamily::Mlp => dfg::builders::mlp(32, &[256, 256, 256]),
+        dfg::WorkloadFamily::Ffn => dfg::builders::ffn(seq, 128, 512),
+        dfg::WorkloadFamily::Mha => dfg::builders::mha(seq, 128, 4),
+        dfg::WorkloadFamily::BertLarge => match args.get("blocks") {
+            Some(_) => dfg::builders::transformer_public(
+                "bert-large",
+                args.get_u64("blocks", 24),
+                seq,
+                1024,
+                4096,
+                16,
+            ),
+            None => dfg::builders::bert_large(seq),
+        },
+        dfg::WorkloadFamily::Gpt2Xl => match args.get("blocks") {
+            Some(_) => dfg::builders::transformer_public(
+                "gpt2-xl",
+                args.get_u64("blocks", 48),
+                seq,
+                1600,
+                6400,
+                25,
+            ),
+            None => dfg::builders::gpt2_xl(seq),
+        },
+    };
+    let compile_cfg = compiler::CompileConfig {
+        era: cfg.era,
+        anneal: cfg.anneal.clone(),
+        seed: cfg.seed,
+    };
+
+    let report = match args.get_or("cost", "heuristic") {
+        "heuristic" => {
+            let mut obj = cost::HeuristicCost::new();
+            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+        }
+        "oracle" => {
+            let mut obj = cost::OracleCost::new(cfg.era);
+            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+        }
+        "learned" => {
+            let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+            let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
+            let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
+            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+        }
+        other => bail!("unknown --cost {other:?}"),
+    };
+
+    println!(
+        "compiled {} with {}: {} subgraphs, total II {:.0} cycles/sample, \
+         throughput {:.3} samples/kcycle, latency {:.0} cycles ({:.1}s wall)",
+        report.model,
+        report.cost_model,
+        report.subgraphs.len(),
+        report.total_ii,
+        report.throughput,
+        report.total_latency,
+        report.wall_seconds
+    );
+    for sg in &report.subgraphs {
+        println!(
+            "  {:<28} {:>3} nodes  II {:>8.0}  norm-tp {:.3}",
+            sg.name, sg.nodes, sg.ii_cycles, sg.normalized_throughput
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("bench needs a target: table1|fig2|table3|table2|micro-pnr|large-models|annotations"))?;
+    let folds = args.get_usize("folds", 5);
+    let ctx = experiments::common::Ctx::new(cfg)?;
+    let seq = args.get_u64("seq", 32);
+    // Default to truncated large models (4 blocks) unless --full-models.
+    let blocks = if args.flag("full-models") {
+        None
+    } else {
+        Some(args.get_u64("blocks", 4))
+    };
+    match which {
+        // Table I and Fig 2 share one CV pass; either name runs both.
+        "table1" | "fig2" | "quality" => experiments::quality::run(&ctx, folds),
+        "table3" => experiments::table3::run(&ctx, folds),
+        "annotations" => experiments::annotations::run(&ctx, folds),
+        "micro-pnr" => experiments::micro_pnr::run(&ctx, args.get_usize("trials", 6)),
+        "large-models" => experiments::large_models::run(&ctx, seq, blocks),
+        "table2" => experiments::table2::run(&ctx, folds, seq, blocks),
+        other => bail!("unknown bench target {other:?}"),
+    }
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let clients = args.get_usize("clients", 4);
+    let requests = args.get_usize("requests", 64);
+    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let trainer = train::Trainer::new(engine.clone(), cfg.train.clone())?;
+    let store = trainer.param_store();
+    let service = coordinator::ScoringService::start(
+        engine,
+        &store,
+        cost::Ablation::default(),
+        32,
+        std::time::Duration::from_millis(5),
+    )?;
+
+    let fabric = arch::Fabric::new(cfg.fabric.clone());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let client = service.client();
+            let fabric = &fabric;
+            let seed = cfg.seed + c as u64;
+            scope.spawn(move || {
+                let mut rng = util::rng::Rng::new(seed);
+                for _ in 0..requests {
+                    let graph = data::gen::draw_workload(dfg::WorkloadFamily::Mha, &mut rng);
+                    let placement =
+                        placer::random_placement(&graph, fabric, &mut rng).unwrap();
+                    let routing = router::route_all(fabric, &graph, &placement).unwrap();
+                    let enc = gnn::encode(&graph, fabric, &placement, &routing).unwrap();
+                    let score = client.score(enc).unwrap();
+                    assert!(score > 0.0 && score < 1.0);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (clients * requests) as f64;
+    println!(
+        "scored {total} requests from {clients} clients in {dt:.2}s \
+         ({:.0} req/s, batch occupancy {:.2})",
+        total / dt,
+        service.stats.occupancy(32)
+    );
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! `rdacost` CLI — see README for usage. Subcommands are implemented in
+//! `rdacost::cli_main` so the binary stays a thin shim (and the library can
+//! be integration-tested without spawning processes).
+
+fn main() {
+    let args = rdacost::util::cli::Args::from_env();
+    if let Err(e) = rdacost::cli_main(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

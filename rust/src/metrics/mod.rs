@@ -1,0 +1,191 @@
+//! Evaluation metrics: the paper reports **relative error** (RE) and
+//! **Spearman rank correlation** under 5-fold cross-validation (§IV-A-b).
+
+/// Mean relative error `mean(|pred - truth| / max(|truth|, eps))`.
+pub fn relative_error(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let eps = 1e-9;
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t).abs() / t.abs().max(eps))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Fractional ranks with ties averaged (midranks), as Spearman requires.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // Average rank for the tie group [i, j].
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx * dy).sqrt()
+}
+
+/// Spearman rank correlation (Pearson over midranks; handles ties).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Deterministic k-fold split: returns `k` (train, test) index partitions of
+/// `n` shuffled by `seed`.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n, "kfold needs 2 <= k <= n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let test: Vec<usize> = idx[lo..hi].to_vec();
+        let train: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+        folds.push((train, test));
+    }
+    folds
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn re_zero_on_perfect() {
+        let t = [0.5, 0.9, 0.1];
+        assert_eq!(relative_error(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn re_scales() {
+        let pred = [1.1];
+        let truth = [1.0];
+        assert!((relative_error(&pred, &truth) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_perfect_monotone() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [10.0, 20.0, 25.0, 100.0]; // monotone, nonlinear
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        let yrev = [100.0, 25.0, 20.0, 10.0];
+        assert!((spearman(&x, &yrev) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_with_ties() {
+        let x = [1.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_uncorrelated_is_small() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
+        assert!(spearman(&x, &y).abs() < 0.08);
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn ranks_basic() {
+        assert_eq!(ranks(&[10.0, 30.0, 20.0]), vec![1.0, 3.0, 2.0]);
+        assert_eq!(ranks(&[5.0, 5.0]), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        prop::check("kfold-partition", 24, |rng| {
+            let n = rng.range_inclusive(10, 200);
+            let k = rng.range_inclusive(2, 5.min(n));
+            let folds = kfold(n, k, rng.next_u64());
+            assert_eq!(folds.len(), k);
+            let mut seen = vec![0usize; n];
+            for (train, test) in &folds {
+                assert_eq!(train.len() + test.len(), n);
+                for &t in test {
+                    seen[t] += 1;
+                }
+                // Train and test are disjoint.
+                let ts: std::collections::HashSet<_> = test.iter().collect();
+                assert!(train.iter().all(|i| !ts.contains(i)));
+            }
+            // Every index is in exactly one test fold.
+            assert!(seen.iter().all(|&c| c == 1));
+        });
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!(mean(&[]).is_nan());
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,359 @@
+//! Simulated-annealing search over placements.
+
+use anyhow::Result;
+
+use crate::arch::Fabric;
+use crate::dfg::Dfg;
+use crate::router::{route_all, Routing};
+use crate::util::rng::Rng;
+
+use super::placement::{random_placement, Placement};
+
+/// The annealer's objective: **higher is better** (cost models predict
+/// normalized throughput). Implementations live in [`crate::cost`]; the
+/// trait takes `&mut self` so learned models can batch and cache.
+pub trait Objective {
+    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64;
+
+    /// Name for logs/benches.
+    fn name(&self) -> &'static str {
+        "objective"
+    }
+}
+
+/// Annealing schedule + move-mix parameters. The dataset generator draws
+/// these at random (paper §IV-A: "we randomized the search parameters of a
+/// simulated annealing placer") so collected PnR decisions span the quality
+/// spectrum.
+#[derive(Debug, Clone)]
+pub struct AnnealParams {
+    pub iterations: usize,
+    /// Initial temperature, in units of score (normalized throughput).
+    pub t_initial: f64,
+    /// Final temperature (geometric schedule).
+    pub t_final: f64,
+    /// Move mix weights (need not sum to 1).
+    pub w_relocate: f64,
+    pub w_swap: f64,
+    pub w_stage: f64,
+    /// Re-route all edges every N accepted moves (incremental routing drifts).
+    pub reroute_every: usize,
+}
+
+impl Default for AnnealParams {
+    fn default() -> Self {
+        AnnealParams {
+            iterations: 2000,
+            t_initial: 0.10,
+            t_final: 0.001,
+            w_relocate: 0.5,
+            w_swap: 0.3,
+            w_stage: 0.2,
+            reroute_every: 25,
+        }
+    }
+}
+
+impl AnnealParams {
+    /// Draw a randomized schedule (dataset diversity).
+    pub fn randomized(rng: &mut Rng) -> AnnealParams {
+        AnnealParams {
+            iterations: rng.range_inclusive(50, 1200),
+            t_initial: rng.f64_range(0.01, 0.5),
+            t_final: rng.f64_range(0.0005, 0.01),
+            w_relocate: rng.f64_range(0.1, 1.0),
+            w_swap: rng.f64_range(0.1, 1.0),
+            w_stage: rng.f64_range(0.05, 0.8),
+            reroute_every: rng.range_inclusive(10, 100),
+        }
+    }
+}
+
+/// Progress log of one annealing run.
+#[derive(Debug, Clone)]
+pub struct AnnealLog {
+    pub evaluations: usize,
+    pub accepted: usize,
+    pub best_score: f64,
+    pub initial_score: f64,
+    /// (iteration, best-so-far) samples for convergence plots.
+    pub trace: Vec<(usize, f64)>,
+}
+
+enum Move {
+    Relocate { node: usize, new_unit: crate::arch::UnitId },
+    Swap { a: usize, b: usize },
+    StageShift { node: usize, new_stage: u32 },
+}
+
+/// Run simulated annealing from a random initial placement; returns the best
+/// placement found, its routing, and the run log.
+pub fn anneal(
+    graph: &Dfg,
+    fabric: &Fabric,
+    objective: &mut dyn Objective,
+    params: &AnnealParams,
+    rng: &mut Rng,
+) -> Result<(Placement, Routing, AnnealLog)> {
+    let mut current = random_placement(graph, fabric, rng)?;
+    let mut routing = route_all(fabric, graph, &current)?;
+    let mut current_score = objective.score(graph, fabric, &current, &routing);
+
+    let mut best = current.clone();
+    let mut best_routing = routing.clone();
+    let mut best_score = current_score;
+    let initial_score = current_score;
+
+    let mut log = AnnealLog {
+        evaluations: 1,
+        accepted: 0,
+        best_score,
+        initial_score,
+        trace: vec![(0, best_score)],
+    };
+
+    let iters = params.iterations.max(1);
+    let cool = (params.t_final / params.t_initial).powf(1.0 / iters as f64);
+    let mut temp = params.t_initial;
+    let mut accepted_since_reroute = 0usize;
+
+    for it in 0..iters {
+        let Some(mv) = propose(graph, fabric, &current, params, rng) else {
+            temp *= cool;
+            continue;
+        };
+        let mut candidate = current.clone();
+        apply(&mut candidate, &mv);
+        debug_assert!(candidate.validate(graph, fabric).is_ok());
+
+        let cand_routing = route_all(fabric, graph, &candidate)?;
+        let cand_score = objective.score(graph, fabric, &candidate, &cand_routing);
+        log.evaluations += 1;
+
+        let delta = cand_score - current_score;
+        let accept = delta >= 0.0 || rng.f64() < (delta / temp.max(1e-9)).exp();
+        if accept {
+            current = candidate;
+            routing = cand_routing;
+            current_score = cand_score;
+            log.accepted += 1;
+            accepted_since_reroute += 1;
+            if current_score > best_score {
+                best_score = current_score;
+                best = current.clone();
+                best_routing = routing.clone();
+                log.trace.push((it + 1, best_score));
+            }
+            if accepted_since_reroute >= params.reroute_every {
+                // Periodic clean re-route (sequential routing is
+                // order-dependent; this keeps congestion estimates honest).
+                routing = route_all(fabric, graph, &current)?;
+                current_score = objective.score(graph, fabric, &current, &routing);
+                log.evaluations += 1;
+                accepted_since_reroute = 0;
+            }
+        }
+        temp *= cool;
+    }
+
+    log.best_score = best_score;
+    Ok((best, best_routing, log))
+}
+
+fn propose(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    params: &AnnealParams,
+    rng: &mut Rng,
+) -> Option<Move> {
+    let total = params.w_relocate + params.w_swap + params.w_stage;
+    let roll = rng.f64() * total;
+    if roll < params.w_relocate {
+        propose_relocate(graph, fabric, placement, rng)
+    } else if roll < params.w_relocate + params.w_swap {
+        propose_swap(graph, placement, rng)
+    } else {
+        propose_stage_shift(graph, placement, rng)
+    }
+    // Fall back to any move kind if the drawn one has no candidates.
+    .or_else(|| propose_relocate(graph, fabric, placement, rng))
+    .or_else(|| propose_swap(graph, placement, rng))
+    .or_else(|| propose_stage_shift(graph, placement, rng))
+}
+
+fn propose_relocate(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    rng: &mut Rng,
+) -> Option<Move> {
+    let node = rng.below(graph.num_nodes());
+    let kind = graph.nodes()[node].kind.unit_kind();
+    let free = placement.free_units(fabric, kind);
+    if free.is_empty() {
+        return None;
+    }
+    Some(Move::Relocate { node, new_unit: *rng.pick(&free) })
+}
+
+fn propose_swap(graph: &Dfg, _placement: &Placement, rng: &mut Rng) -> Option<Move> {
+    // Pick a random node, then another of the same unit kind.
+    let a = rng.below(graph.num_nodes());
+    let kind = graph.nodes()[a].kind.unit_kind();
+    let peers: Vec<usize> = (0..graph.num_nodes())
+        .filter(|&i| i != a && graph.nodes()[i].kind.unit_kind() == kind)
+        .collect();
+    if peers.is_empty() {
+        return None;
+    }
+    Some(Move::Swap { a, b: *rng.pick(&peers) })
+}
+
+fn propose_stage_shift(graph: &Dfg, placement: &Placement, rng: &mut Rng) -> Option<Move> {
+    // Try a handful of random nodes; shift one ±1 stage if monotonicity
+    // permits.
+    for _ in 0..8 {
+        let node = rng.below(graph.num_nodes());
+        let nid = crate::dfg::NodeId(node as u32);
+        let s = placement.stage_of[node];
+        let min_pred = graph
+            .incoming(nid)
+            .map(|e| placement.stage(e.src))
+            .max()
+            .unwrap_or(0);
+        let max_succ = graph
+            .outgoing(nid)
+            .map(|e| placement.stage(e.dst))
+            .min()
+            .unwrap_or(u32::MAX);
+        let mut options: Vec<u32> = Vec::new();
+        if s > 0 && s - 1 >= min_pred {
+            options.push(s - 1);
+        }
+        if s + 1 <= max_succ {
+            options.push(s + 1);
+        }
+        if !options.is_empty() {
+            let new_stage = *rng.pick(&options);
+            return Some(Move::StageShift { node, new_stage });
+        }
+    }
+    None
+}
+
+fn apply(placement: &mut Placement, mv: &Move) {
+    match *mv {
+        Move::Relocate { node, new_unit } => placement.unit_of[node] = new_unit,
+        Move::Swap { a, b } => placement.unit_of.swap(a, b),
+        Move::StageShift { node, new_stage } => placement.stage_of[node] = new_stage,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Era, FabricConfig};
+    use crate::dfg::builders;
+    use crate::sim;
+
+    /// Oracle objective: the simulator itself (what a perfect cost model
+    /// would return). Used to test the annealer mechanics in isolation.
+    struct Oracle {
+        era: Era,
+    }
+
+    impl Objective for Oracle {
+        fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+            sim::measure(fabric, graph, placement, routing, self.era)
+                .map(|r| r.normalized_throughput)
+                .unwrap_or(0.0)
+        }
+
+        fn name(&self) -> &'static str {
+            "oracle"
+        }
+    }
+
+    #[test]
+    fn annealing_improves_over_initial() {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(11);
+        let mut oracle = Oracle { era: Era::Past };
+        let params = AnnealParams { iterations: 400, ..AnnealParams::default() };
+        let (best, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        best.validate(&g, &f).unwrap();
+        assert!(
+            log.best_score >= log.initial_score,
+            "annealer made things worse: {log:?}"
+        );
+        assert!(log.accepted > 0);
+        assert!(log.evaluations > 100);
+    }
+
+    #[test]
+    fn annealing_beats_random_by_margin() {
+        // Annealing with the oracle objective should beat the mean of random
+        // placements clearly.
+        let g = builders::ffn(32, 128, 512);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(12);
+        let mut oracle = Oracle { era: Era::Past };
+
+        let mut random_scores = Vec::new();
+        for _ in 0..12 {
+            let p = random_placement(&g, &f, &mut rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            random_scores.push(oracle.score(&g, &f, &p, &r));
+        }
+        let mean_random: f64 = random_scores.iter().sum::<f64>() / random_scores.len() as f64;
+
+        let params = AnnealParams { iterations: 500, ..AnnealParams::default() };
+        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        assert!(
+            log.best_score > mean_random,
+            "anneal {} vs random mean {mean_random}",
+            log.best_score
+        );
+    }
+
+    #[test]
+    fn randomized_params_are_in_range() {
+        let mut rng = Rng::new(13);
+        for _ in 0..50 {
+            let p = AnnealParams::randomized(&mut rng);
+            assert!(p.iterations >= 50 && p.iterations <= 1200);
+            assert!(p.t_initial > p.t_final);
+            assert!(p.w_relocate > 0.0 && p.w_swap > 0.0 && p.w_stage > 0.0);
+        }
+    }
+
+    #[test]
+    fn moves_preserve_validity() {
+        let g = builders::mlp(16, &[64, 128, 64]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(14);
+        let params = AnnealParams::default();
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        for _ in 0..500 {
+            if let Some(mv) = propose(&g, &f, &p, &params, &mut rng) {
+                apply(&mut p, &mv);
+                p.validate(&g, &f).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn trace_is_monotone() {
+        let g = builders::gemm_graph(64, 64, 64);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(15);
+        let mut oracle = Oracle { era: Era::Past };
+        let params = AnnealParams { iterations: 300, ..AnnealParams::default() };
+        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        for w in log.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");
+        }
+    }
+}

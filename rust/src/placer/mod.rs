@@ -1,0 +1,23 @@
+//! Placement: the PnR decision representation and the simulated-annealing
+//! placer (paper §II-A-b: compilers search the NP-hard mapping space with a
+//! cost-model-guided annealer, as in VLSI cell placement).
+//!
+//! A [`Placement`] maps every DFG node to a fabric unit of the right kind
+//! (injectively — this is a spatial architecture, one op per unit) and
+//! assigns every node a pipeline **stage**. Stages are the paper's
+//! `S(v)` function: ops in the same stage process the *same* sample
+//! back-to-back (their cycles chain along dependency paths); ops in
+//! different stages process different samples concurrently, decoupled by
+//! PMU double-buffers. Stage assignment must be monotone along edges.
+//!
+//! The annealer ([`anneal`]) mutates placements with three move kinds
+//! (relocate, swap, stage-shift) under a pluggable objective — the cost
+//! models of [`crate::cost`]. Its schedule parameters are randomized by the
+//! dataset generator (paper §IV-A: "we randomized the search parameters of a
+//! simulated annealing placer") to produce diverse PnR decisions.
+
+mod annealer;
+mod placement;
+
+pub use annealer::{anneal, AnnealLog, AnnealParams, Objective};
+pub use placement::{random_placement, Placement};

@@ -1,0 +1,272 @@
+//! The placement data structure and feasibility rules.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::arch::{Fabric, UnitId, UnitKind};
+use crate::dfg::{Dfg, NodeId};
+use crate::util::rng::Rng;
+
+/// A complete placement + stage assignment for one DFG on one fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// node index -> unit id (injective among ops of each kind).
+    pub unit_of: Vec<UnitId>,
+    /// node index -> pipeline stage (monotone along edges).
+    pub stage_of: Vec<u32>,
+}
+
+impl Placement {
+    pub fn unit(&self, n: NodeId) -> UnitId {
+        self.unit_of[n.0 as usize]
+    }
+
+    pub fn stage(&self, n: NodeId) -> u32 {
+        self.stage_of[n.0 as usize]
+    }
+
+    pub fn num_stages(&self) -> u32 {
+        self.stage_of.iter().copied().max().map_or(1, |m| m + 1)
+    }
+
+    /// Check all feasibility invariants:
+    /// 1. every op sits on a unit of its required kind,
+    /// 2. no two ops share a unit,
+    /// 3. stages are monotone non-decreasing along every edge.
+    pub fn validate(&self, graph: &Dfg, fabric: &Fabric) -> Result<()> {
+        if self.unit_of.len() != graph.num_nodes() || self.stage_of.len() != graph.num_nodes() {
+            bail!("placement arity mismatch");
+        }
+        let mut used: HashMap<UnitId, NodeId> = HashMap::new();
+        for node in graph.nodes() {
+            let u = self.unit(node.id);
+            let unit = fabric.unit(u);
+            let want = node.kind.unit_kind();
+            if unit.kind != want {
+                bail!(
+                    "{} ({}) requires {:?} but sits on {:?} {}",
+                    node.id,
+                    node.name,
+                    want,
+                    unit.kind,
+                    u
+                );
+            }
+            if let Some(prev) = used.insert(u, node.id) {
+                bail!("unit {} hosts both {} and {}", u, prev, node.id);
+            }
+        }
+        for e in graph.edges() {
+            if self.stage(e.src) > self.stage(e.dst) {
+                bail!(
+                    "stage monotonicity violated on {} -> {} ({} > {})",
+                    e.src,
+                    e.dst,
+                    self.stage(e.src),
+                    self.stage(e.dst)
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Units of `kind` not currently hosting any op.
+    pub fn free_units(&self, fabric: &Fabric, kind: UnitKind) -> Vec<UnitId> {
+        let used: std::collections::HashSet<UnitId> = self.unit_of.iter().copied().collect();
+        fabric
+            .units_of_kind(kind)
+            .into_iter()
+            .filter(|u| !used.contains(u))
+            .collect()
+    }
+}
+
+/// Build a random feasible placement:
+/// * each op drawn uniformly (without replacement) from the units of its
+///   kind;
+/// * stages fixed to the ASAP levels — stage partitioning is a pre-PnR
+///   compiler pass on the real machine (maximal pipelining), so PnR
+///   decisions vary *spatially*; the annealer's stage-shift move can still
+///   nudge boundaries locally.
+///
+/// Errors if the graph needs more units of some kind than the fabric has
+/// (callers should partition first).
+pub fn random_placement(graph: &Dfg, fabric: &Fabric, rng: &mut Rng) -> Result<Placement> {
+    let mut pools: HashMap<UnitKind, Vec<UnitId>> = HashMap::new();
+    for kind in [UnitKind::Pcu, UnitKind::Pmu, UnitKind::DramPort] {
+        let mut units = fabric.units_of_kind(kind);
+        rng.shuffle(&mut units);
+        pools.insert(kind, units);
+    }
+    let mut unit_of = Vec::with_capacity(graph.num_nodes());
+    for node in graph.nodes() {
+        let kind = node.kind.unit_kind();
+        let pool = pools.get_mut(&kind).unwrap();
+        let Some(u) = pool.pop() else {
+            bail!(
+                "graph {:?} needs more {:?} units than the fabric has",
+                graph.name,
+                kind
+            );
+        };
+        unit_of.push(u);
+    }
+
+    // Stage assignment: ASAP levels (maximal pipelining, the pre-PnR pass).
+    let stage_of = graph.asap_levels()?;
+
+    let p = Placement { unit_of, stage_of };
+    p.validate(graph, fabric)?;
+    Ok(p)
+}
+
+/// Map `num_levels` ASAP levels onto `num_stages` stages by choosing random
+/// monotone cut points (levels in the same bin share a stage). Kept for
+/// stage-merge ablations (the default decision space fixes stages to ASAP
+/// levels; see `random_placement`).
+#[allow(dead_code)]
+pub(crate) fn compress_levels(
+    levels: &[u32],
+    num_levels: u32,
+    num_stages: u32,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    assert!(num_stages >= 1 && num_stages <= num_levels);
+    // Choose (num_stages - 1) distinct cut positions among (num_levels - 1)
+    // boundaries; level l belongs to stage = #cuts below it.
+    let mut cuts = rng.sample_indices((num_levels - 1) as usize, (num_stages - 1) as usize);
+    cuts.sort_unstable();
+    levels
+        .iter()
+        .map(|&l| cuts.iter().take_while(|&&c| (c as u32) < l).count() as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::util::prop;
+
+    #[test]
+    fn random_placement_is_valid() {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let p = random_placement(&g, &f, &mut rng).unwrap();
+            p.validate(&g, &f).unwrap();
+        }
+    }
+
+    #[test]
+    fn too_big_graph_errors() {
+        let g = builders::bert_large(32); // far exceeds one fabric
+        let f = Fabric::new(FabricConfig::tiny());
+        let mut rng = Rng::new(1);
+        assert!(random_placement(&g, &f, &mut rng).is_err());
+    }
+
+    #[test]
+    fn stages_follow_asap_levels() {
+        let g = builders::mlp(8, &[64, 64, 64, 64]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(2);
+        let levels = g.asap_levels().unwrap();
+        for _ in 0..5 {
+            let p = random_placement(&g, &f, &mut rng).unwrap();
+            assert_eq!(p.stage_of, levels);
+        }
+    }
+
+    #[test]
+    fn placements_vary_spatially_across_draws() {
+        let g = builders::mlp(8, &[64, 64, 64, 64]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(2);
+        let a = random_placement(&g, &f, &mut rng).unwrap();
+        let b = random_placement(&g, &f, &mut rng).unwrap();
+        assert_ne!(a.unit_of, b.unit_of);
+    }
+
+    #[test]
+    fn compress_levels_preserves_monotonicity() {
+        prop::check("compress-monotone", 48, |rng| {
+            let num_levels = rng.range_inclusive(1, 12) as u32;
+            let num_stages = rng.range_inclusive(1, num_levels as usize) as u32;
+            let levels: Vec<u32> = (0..30).map(|_| rng.below(num_levels as usize) as u32).collect();
+            let stages = compress_levels(&levels, num_levels, num_stages, rng);
+            assert_eq!(stages.len(), levels.len());
+            for (i, &li) in levels.iter().enumerate() {
+                for (j, &lj) in levels.iter().enumerate() {
+                    if li <= lj {
+                        assert!(stages[i] <= stages[j], "monotonicity broken");
+                    }
+                }
+            }
+            let max_stage = stages.iter().copied().max().unwrap_or(0);
+            assert!(max_stage < num_stages);
+        });
+    }
+
+    #[test]
+    fn validate_catches_kind_mismatch() {
+        let g = builders::gemm_graph(8, 8, 8);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(3);
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        // Force the gemm onto a PMU.
+        let gemm_idx = g
+            .nodes()
+            .iter()
+            .position(|n| n.name == "gemm")
+            .unwrap();
+        p.unit_of[gemm_idx] = f.units_of_kind(UnitKind::Pmu)[0];
+        assert!(p.validate(&g, &f).is_err());
+    }
+
+    #[test]
+    fn validate_catches_double_occupancy() {
+        let g = builders::mlp(8, &[32, 32, 32]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(4);
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        // Two PCU ops on the same unit.
+        let pcu_nodes: Vec<usize> = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.unit_kind() == UnitKind::Pcu)
+            .map(|n| n.id.0 as usize)
+            .collect();
+        p.unit_of[pcu_nodes[1]] = p.unit_of[pcu_nodes[0]];
+        assert!(p.validate(&g, &f).is_err());
+    }
+
+    #[test]
+    fn validate_catches_stage_violation() {
+        let g = builders::gemm_graph(8, 8, 8);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(5);
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        // Force a decreasing stage along the first edge.
+        let e = g.edges()[0];
+        p.stage_of[e.src.0 as usize] = 5;
+        p.stage_of[e.dst.0 as usize] = 0;
+        assert!(p.validate(&g, &f).is_err());
+    }
+
+    #[test]
+    fn free_units_excludes_used() {
+        let g = builders::gemm_graph(8, 8, 8);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(6);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let free = p.free_units(&f, UnitKind::Pcu);
+        assert_eq!(free.len(), f.num_pcus() - 1); // one gemm placed
+        for u in &free {
+            assert!(!p.unit_of.contains(u));
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Routing: map every DFG edge onto a path of fabric links.
+//!
+//! Deterministic congestion-aware router: edges are routed in descending
+//! byte order (big flows get short paths) by A* over the link graph with a
+//! cost that penalizes links already carrying flows, followed by a
+//! rip-up-and-reroute refinement pass. Determinism matters: the same
+//! placement must always produce the same routes so measured throughputs are
+//! reproducible labels for the learned cost model.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use anyhow::{bail, Result};
+
+use crate::arch::{Fabric, LinkId, UnitId};
+use crate::dfg::Dfg;
+use crate::placer::Placement;
+
+/// The routed path of one DFG edge (links in order from source unit to
+/// destination unit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub links: Vec<LinkId>,
+}
+
+impl Route {
+    pub fn hops(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// Routes for every edge of a graph plus per-link aggregates the simulator
+/// and cost models read.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    /// Indexed by `EdgeId`.
+    pub routes: Vec<Route>,
+    /// Per-link: number of flows traversing it.
+    pub link_flows: Vec<u32>,
+    /// Per-link: total bytes per sample traversing it, **multicast-aware**:
+    /// switches replicate a tensor in-fabric, so several edges carrying the
+    /// same producer's tensor over one link count its bytes once. (The
+    /// conservative heuristic ignores this and charges per flow — the
+    /// paper's §II-B route-sharing example.)
+    pub link_bytes: Vec<u64>,
+}
+
+impl Routing {
+    /// Links shared by more than one flow.
+    pub fn shared_links(&self) -> usize {
+        self.link_flows.iter().filter(|&&k| k > 1).count()
+    }
+
+    /// Max flows on any single link.
+    pub fn max_link_flows(&self) -> u32 {
+        self.link_flows.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total hop count over all routes.
+    pub fn total_hops(&self) -> usize {
+        self.routes.iter().map(Route::hops).sum()
+    }
+}
+
+/// Tunables for the router.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterParams {
+    /// Additive cost per existing flow on a link (congestion avoidance).
+    pub congestion_weight: f64,
+    /// Rip-up-and-reroute refinement passes after the initial greedy pass.
+    pub refine_passes: usize,
+}
+
+impl Default for RouterParams {
+    fn default() -> Self {
+        RouterParams { congestion_weight: 0.5, refine_passes: 1 }
+    }
+}
+
+/// Route all edges of `graph` under `placement`.
+pub fn route_all(fabric: &Fabric, graph: &Dfg, placement: &Placement) -> Result<Routing> {
+    route_all_with(fabric, graph, placement, RouterParams::default())
+}
+
+pub fn route_all_with(
+    fabric: &Fabric,
+    graph: &Dfg,
+    placement: &Placement,
+    params: RouterParams,
+) -> Result<Routing> {
+    let num_links = fabric.links().len();
+    let mut link_flows = vec![0u32; num_links];
+    let mut link_bytes = vec![0u64; num_links];
+    let mut routes: Vec<Option<Route>> = vec![None; graph.num_edges()];
+
+    // Deterministic order: descending bytes, then edge id.
+    let mut order: Vec<usize> = (0..graph.num_edges()).collect();
+    order.sort_by(|&a, &b| {
+        let (ea, eb) = (graph.edges()[a], graph.edges()[b]);
+        eb.bytes.cmp(&ea.bytes).then(a.cmp(&b))
+    });
+
+    let mut scratch = AStarScratch::new(fabric.units().len());
+
+    // Initial pass + refinement passes. (During search, congestion uses the
+    // raw per-flow counts; the final byte aggregate below is
+    // multicast-deduped.)
+    for pass in 0..=params.refine_passes {
+        for &ei in &order {
+            let edge = graph.edges()[ei];
+            // Rip up the old route (no-op on the first pass).
+            if let Some(old) = routes[ei].take() {
+                for l in &old.links {
+                    link_flows[l.0 as usize] -= 1;
+                    link_bytes[l.0 as usize] -= edge.bytes;
+                }
+            }
+            let src = placement.unit(edge.src);
+            let dst = placement.unit(edge.dst);
+            let route = astar(fabric, src, dst, &link_flows, params, &mut scratch)?;
+            for l in &route.links {
+                link_flows[l.0 as usize] += 1;
+                link_bytes[l.0 as usize] += edge.bytes;
+            }
+            routes[ei] = Some(route);
+        }
+        let _ = pass;
+    }
+    let routes: Vec<Route> = routes.into_iter().map(Option::unwrap).collect();
+
+    // Multicast-aware final byte accounting: per (link, producer) a tensor's
+    // bytes count once (the switch fans it out), taking the largest edge
+    // payload from that producer crossing the link.
+    let mut dedup: HashMap<(u32, crate::dfg::NodeId), u64> = HashMap::new();
+    for (ei, edge) in graph.edges().iter().enumerate() {
+        for l in &routes[ei].links {
+            let slot = dedup.entry((l.0, edge.src)).or_insert(0);
+            *slot = (*slot).max(edge.bytes);
+        }
+    }
+    let mut link_bytes = vec![0u64; num_links];
+    for ((l, _src), bytes) in dedup {
+        link_bytes[l as usize] += bytes;
+    }
+
+    Ok(Routing { routes, link_flows, link_bytes })
+}
+
+/// Reusable A* buffers (the router is on the annealer's hot path).
+struct AStarScratch {
+    /// best-known cost per unit, with a generation stamp to avoid clearing.
+    cost: Vec<f64>,
+    from: Vec<Option<(LinkId, UnitId)>>,
+    stamp: Vec<u32>,
+    generation: u32,
+}
+
+impl AStarScratch {
+    fn new(n: usize) -> Self {
+        AStarScratch {
+            cost: vec![0.0; n],
+            from: vec![None; n],
+            stamp: vec![0; n],
+            generation: 0,
+        }
+    }
+
+    fn begin(&mut self) {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            // Stamp wrapped: hard-reset.
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.generation = 1;
+        }
+    }
+
+    #[inline]
+    fn get_cost(&self, u: UnitId) -> f64 {
+        if self.stamp[u.0 as usize] == self.generation {
+            self.cost[u.0 as usize]
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, u: UnitId, c: f64, from: Option<(LinkId, UnitId)>) {
+        let i = u.0 as usize;
+        self.cost[i] = c;
+        self.from[i] = from;
+        self.stamp[i] = self.generation;
+    }
+}
+
+#[derive(PartialEq)]
+struct Frontier {
+    f: f64,
+    unit: UnitId,
+}
+
+impl Eq for Frontier {}
+
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on f, deterministic tie-break on unit id.
+        other
+            .f
+            .partial_cmp(&self.f)
+            .unwrap_or(Ordering::Equal)
+            .then(other.unit.0.cmp(&self.unit.0))
+    }
+}
+
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn astar(
+    fabric: &Fabric,
+    src: UnitId,
+    dst: UnitId,
+    link_flows: &[u32],
+    params: RouterParams,
+    scratch: &mut AStarScratch,
+) -> Result<Route> {
+    if src == dst {
+        bail!("zero-length route requested (placement put both endpoints on {src})");
+    }
+    scratch.begin();
+    let mut heap = BinaryHeap::new();
+    scratch.set(src, 0.0, None);
+    heap.push(Frontier { f: fabric.manhattan(src, dst) as f64, unit: src });
+
+    while let Some(Frontier { unit, .. }) = heap.pop() {
+        if unit == dst {
+            // Reconstruct.
+            let mut links = Vec::new();
+            let mut cur = dst;
+            while let Some((l, prev)) = scratch.from[cur.0 as usize] {
+                links.push(l);
+                cur = prev;
+                if cur == src {
+                    break;
+                }
+            }
+            links.reverse();
+            return Ok(Route { links });
+        }
+        let g_u = scratch.get_cost(unit);
+        for &(link, next) in fabric.neighbors(unit) {
+            // Functional units are endpoints only — routes may not pass
+            // *through* a PCU/PMU/DRAM port.
+            if next != dst && !matches!(fabric.unit(next).kind, crate::arch::UnitKind::Switch) {
+                continue;
+            }
+            let step = 1.0 + params.congestion_weight * link_flows[link.0 as usize] as f64;
+            let g_next = g_u + step;
+            if g_next < scratch.get_cost(next) {
+                scratch.set(next, g_next, Some((link, unit)));
+                let h = fabric.manhattan(next, dst) as f64;
+                heap.push(Frontier { f: g_next + h, unit: next });
+            }
+        }
+    }
+    bail!("no route from {src} to {dst} (disconnected fabric?)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn routed(seed: u64) -> (Fabric, Dfg, Placement, Routing) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        (f, g, p, r)
+    }
+
+    #[test]
+    fn routes_connect_endpoints() {
+        let (f, g, p, r) = routed(1);
+        for (ei, e) in g.edges().iter().enumerate() {
+            let route = &r.routes[ei];
+            assert!(!route.links.is_empty());
+            // Walk the route from the source unit and confirm it ends at dst.
+            let mut cur = p.unit(e.src);
+            for l in &route.links {
+                cur = f.link(*l).other(cur).expect("route link not incident to path");
+            }
+            assert_eq!(cur, p.unit(e.dst), "route does not reach destination");
+        }
+    }
+
+    #[test]
+    fn routes_are_deterministic() {
+        let (_, _, _, r1) = routed(7);
+        let (_, _, _, r2) = routed(7);
+        assert_eq!(r1.routes, r2.routes);
+    }
+
+    #[test]
+    fn link_aggregates_are_consistent() {
+        let (_, g, _, r) = routed(2);
+        // Flows are raw per-edge counts.
+        let mut flows = vec![0u32; r.link_flows.len()];
+        for (ei, _) in g.edges().iter().enumerate() {
+            for l in &r.routes[ei].links {
+                flows[l.0 as usize] += 1;
+            }
+        }
+        assert_eq!(flows, r.link_flows);
+        // Bytes are multicast-deduped by (link, producer).
+        let mut dedup: std::collections::HashMap<(u32, crate::dfg::NodeId), u64> =
+            std::collections::HashMap::new();
+        for (ei, e) in g.edges().iter().enumerate() {
+            for l in &r.routes[ei].links {
+                let slot = dedup.entry((l.0, e.src)).or_insert(0);
+                *slot = (*slot).max(e.bytes);
+            }
+        }
+        let mut bytes = vec![0u64; r.link_bytes.len()];
+        for ((l, _), b) in dedup {
+            bytes[l as usize] += b;
+        }
+        assert_eq!(bytes, r.link_bytes);
+        // Dedup can only reduce relative to per-flow sums.
+        let mut raw = vec![0u64; r.link_bytes.len()];
+        for (ei, e) in g.edges().iter().enumerate() {
+            for l in &r.routes[ei].links {
+                raw[l.0 as usize] += e.bytes;
+            }
+        }
+        for (d, rw) in r.link_bytes.iter().zip(&raw) {
+            assert!(d <= rw);
+        }
+    }
+
+    #[test]
+    fn congestion_weight_spreads_traffic() {
+        // With strong congestion avoidance, max flows per link should not
+        // exceed the no-avoidance case.
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(3);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let greedy = route_all_with(
+            &f,
+            &g,
+            &p,
+            RouterParams { congestion_weight: 0.0, refine_passes: 0 },
+        )
+        .unwrap();
+        let avoid = route_all_with(
+            &f,
+            &g,
+            &p,
+            RouterParams { congestion_weight: 2.0, refine_passes: 2 },
+        )
+        .unwrap();
+        assert!(avoid.max_link_flows() <= greedy.max_link_flows());
+    }
+
+    #[test]
+    fn routes_never_cross_functional_units() {
+        let (f, g, p, r) = routed(4);
+        for (ei, e) in g.edges().iter().enumerate() {
+            let mut cur = p.unit(e.src);
+            for (i, l) in r.routes[ei].links.iter().enumerate() {
+                cur = f.link(*l).other(cur).unwrap();
+                let is_last = i + 1 == r.routes[ei].links.len();
+                if !is_last {
+                    assert!(
+                        matches!(f.unit(cur).kind, crate::arch::UnitKind::Switch),
+                        "route passes through functional unit {cur}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_placements_always_route() {
+        prop::check("router-total", 24, |rng| {
+            let g = builders::mlp(8, &[64, 64, 64]);
+            let f = Fabric::new(FabricConfig::default());
+            let p = random_placement(&g, &f, rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            assert_eq!(r.routes.len(), g.num_edges());
+            assert!(r.total_hops() >= g.num_edges()); // every route ≥1 hop
+        });
+    }
+
+    #[test]
+    fn shared_links_counted() {
+        let (_, _, _, r) = routed(5);
+        let shared = r.shared_links();
+        let manual = r.link_flows.iter().filter(|&&k| k > 1).count();
+        assert_eq!(shared, manual);
+    }
+}

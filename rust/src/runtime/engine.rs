@@ -1,0 +1,155 @@
+//! The PJRT engine: compiles HLO-text artifacts once and executes them from
+//! the hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// A compiled entry point bound to its spec.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host tensors; validates shapes/dtypes against the spec
+    /// and decomposes the (always-tuple) result into host tensors.
+    ///
+    /// NOTE: inputs go through `buffer_from_host_literal` + `execute_b`, NOT
+    /// `PjRtLoadedExecutable::execute` — the xla 0.1.6 C shim's `execute`
+    /// leaks every input device buffer (`buffer.release()` with no owner),
+    /// which at training rates is ~2 MB/step. With `execute_b` the buffers
+    /// are owned on the Rust side and freed on drop.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let buffers = self.upload(inputs)?;
+        self.run_buffers(&buffers.iter().collect::<Vec<_>>())
+    }
+
+    /// Upload host tensors to device buffers (validated against the spec's
+    /// input prefix — callers may pre-upload only the parameter prefix).
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall — the copy
+    /// completes before the call returns). `buffer_from_host_literal` is NOT
+    /// safe here: its transfer is async and the shim does not await it, so
+    /// the source literal can be freed mid-copy.
+    pub fn upload(&self, inputs: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        self.spec.validate_inputs(inputs)?;
+        inputs.iter().map(|t| self.upload_one(t)).collect()
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path: parameter
+    /// buffers can be uploaded once and reused across calls).
+    pub fn run_buffers(&self, buffers: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(buffers)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        let outs: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        if outs.len() != self.spec.outputs.len() {
+            anyhow::bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Upload a single tensor (no spec validation — used for per-call
+    /// suffixes after a pre-uploaded parameter prefix).
+    pub fn upload_one(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// Compilation happens once per artifact name; subsequent `load` calls are
+/// hash-map hits. `Engine` is `Sync` — the cache is behind a mutex and the
+/// compiled executables are shared via `Arc`.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir.as_ref().join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.artifact_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe, client: self.client.clone() });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client; executables are likewise
+// safe to share. The raw pointers in the bindings lack auto-derived markers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+#[cfg(test)]
+mod tests {
+    // Engine integration tests live in rust/tests/runtime_smoke.rs (they
+    // need real artifacts produced by `make artifacts`).
+}

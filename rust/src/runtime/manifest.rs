@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` — the schema contract between the python AOT
+//! step and the rust runtime.
+//!
+//! The manifest lists every lowered entry point with its input/output tensor
+//! specs, the GNN hyperparameters the artifacts were built with, and the
+//! bucket table. The rust side validates every call against these specs so a
+//! stale artifacts/ directory fails loudly instead of feeding garbage to the
+//! model.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::{Dtype, Tensor};
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn matches(&self, t: &Tensor) -> bool {
+        t.dtype() == self.dtype && t.shape() == self.shape.as_slice()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let dtype = Dtype::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec {name}: missing dtype"))?,
+        )?;
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec {name}: missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One lowered entry point (e.g. `gnn_infer_b64_n64_e192`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Validate a call's inputs against the spec; error names the first
+    /// mismatching position.
+    pub fn validate_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, t)) in self.inputs.iter().zip(inputs).enumerate() {
+            if !spec.matches(t) {
+                bail!(
+                    "{}: input #{i} ({}) expects {} {:?}, got {} {:?}",
+                    self.name,
+                    spec.name,
+                    spec.dtype.name(),
+                    spec.shape,
+                    t.dtype().name(),
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing the manifest (artifact files are relative to it).
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Raw JSON for extra sections (gnn hyperparams, buckets, param layout).
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let raw = Json::parse(&text).with_context(|| format!("parsing manifest {path:?}"))?;
+        let dir = path
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."));
+        let mut artifacts = Vec::new();
+        for a in raw
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let inputs = parse_specs("inputs")?;
+            let outputs = parse_specs("outputs")?;
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs });
+        }
+        Ok(Manifest { dir, artifacts, raw })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Hyperparameter lookup, e.g. `hyper("hidden_dim")`.
+    pub fn hyper_usize(&self, key: &str) -> Result<usize> {
+        self.raw
+            .path(&format!("gnn.{key}"))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing gnn.{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        Json::obj()
+            .set(
+                "artifacts",
+                vec![Json::obj()
+                    .set("name", "toy")
+                    .set("file", "toy.hlo.txt")
+                    .set(
+                        "inputs",
+                        vec![Json::obj()
+                            .set("name", "x")
+                            .set("dtype", "f32")
+                            .set("shape", vec![2usize, 2])],
+                    )
+                    .set(
+                        "outputs",
+                        vec![Json::obj()
+                            .set("name", "y")
+                            .set("dtype", "f32")
+                            .set("shape", vec![2usize, 2])],
+                    )],
+            )
+            .set("gnn", Json::obj().set("hidden_dim", 64usize))
+            .to_pretty()
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("rdacost_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, sample_manifest()).unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("toy").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 2]);
+        assert_eq!(m.artifact_path(a), dir.join("toy.hlo.txt"));
+        assert_eq!(m.hyper_usize("hidden_dim").unwrap(), 64);
+        assert!(m.find("nope").is_err());
+        assert!(m.hyper_usize("nope").is_err());
+    }
+
+    #[test]
+    fn validate_inputs() {
+        let spec = ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![TensorSpec { name: "x".into(), dtype: Dtype::F32, shape: vec![2] }],
+            outputs: vec![],
+        };
+        assert!(spec.validate_inputs(&[Tensor::f32(&[2], vec![1.0, 2.0])]).is_ok());
+        assert!(spec.validate_inputs(&[Tensor::f32(&[3], vec![1.0, 2.0, 3.0])]).is_err());
+        assert!(spec.validate_inputs(&[Tensor::i32(&[2], vec![1, 2])]).is_err());
+        assert!(spec.validate_inputs(&[]).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent/manifest.json").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

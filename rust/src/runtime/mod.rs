@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The python build step (`make artifacts`) lowers the GNN inference and
+//! train-step functions to **HLO text** (see DESIGN.md — text, not serialized
+//! proto, because xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction
+//! ids). This module wraps the `xla` crate:
+//!
+//! ```text
+//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
+//!     -> client.compile (cached) -> executable.execute
+//! ```
+//!
+//! Python never runs at this point: after `make artifacts` the rust binary is
+//! self-contained.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{Dtype, Tensor};

@@ -1,0 +1,534 @@
+//! Steady-state pipeline throughput simulator.
+//!
+//! This is the stand-in for the paper's *real hardware measurement* ("the
+//! absolute throughput is measured by counting machine cycles"). Given a
+//! DFG, a placement + stage assignment, and the routes, it computes the
+//! steady-state **initiation interval** `II` — cycles between successive
+//! samples leaving the pipeline — as the max of the binding constraints:
+//!
+//! 1. **Stage compute** — ops in one stage process the *same* sample, so the
+//!    stage's period is its dependency-critical path (op cycles + intra-stage
+//!    route transit), plus a per-stage control overhead;
+//! 2. **Link bandwidth** — every link must move all of its flows' bytes each
+//!    interval; concurrent flows time-share a link (sum of demands) with an
+//!    arbitration loss `α(k-1)` — note the contrast with the *conservative*
+//!    heuristic (paper §II-B's example) that treats sharing as full conflict;
+//! 3. **Wire serialization** — no single flow can beat wire speed;
+//! 4. **DRAM port bandwidth** — each port streams its loads/stores;
+//! 5. **Unit occupancy** — each unit finishes its own op within the interval;
+//! 6. **PMU buffer credits** — cross-stage tensors must double-buffer in
+//!    their PMU; capacity overflow causes producer stalls (a multiplicative
+//!    penalty), an effect the heuristic ignores entirely.
+//!
+//! Throughput = 1 / II, normalized by the FLOPs-only theoretical bound
+//! ([`theoretical_ii`], paper §IV-A) into (0, 1].
+//!
+//! Everything era-dependent reads the [`Microcode`] table, so switching
+//! [`Era`] changes measured labels — the adaptivity axis of Table II.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::arch::{Era, Fabric, Microcode, UnitKind};
+use crate::dfg::{Dfg, NodeId, OpKind};
+use crate::placer::Placement;
+use crate::router::Routing;
+
+/// Full measurement report for one PnR decision.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Initiation interval: cycles per sample at steady state.
+    pub ii_cycles: f64,
+    /// FLOPs-only lower bound on the II (paper's normalizer).
+    pub ii_theoretical: f64,
+    /// `ii_theoretical / ii_cycles` ∈ (0, 1]: the paper's normalized
+    /// throughput label.
+    pub normalized_throughput: f64,
+    /// Which constraint bound the II (diagnostics / EXPERIMENTS.md).
+    pub bottleneck: Bottleneck,
+    /// Per-sample latency through the whole pipeline (fill time), cycles.
+    pub latency_cycles: f64,
+}
+
+/// Which constraint class determined the II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    StageCompute,
+    LinkBandwidth,
+    WireSerialization,
+    DramPort,
+    UnitOccupancy,
+}
+
+impl Bottleneck {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bottleneck::StageCompute => "stage-compute",
+            Bottleneck::LinkBandwidth => "link-bandwidth",
+            Bottleneck::WireSerialization => "wire-serialization",
+            Bottleneck::DramPort => "dram-port",
+            Bottleneck::UnitOccupancy => "unit-occupancy",
+        }
+    }
+}
+
+/// Cycles for one op on its assigned unit under `m`.
+///
+/// Beyond the per-class efficiency table, the *empirical* machine has
+/// shape-dependent behaviours (paper §II-B: "subtleties in hardware
+/// behaviors which are hard to encode by rigid rules") that flat per-op
+/// rate rules cannot express without a per-shape table:
+///
+/// * **GEMM reduction ramp** — the systolic pipeline refills per output
+///   tile, so small reduction dims `k` waste cycles: `×(1 + 96/k)`;
+/// * **GEMM tile padding** — the datapath computes `(stages × lanes)`
+///   output tiles; partial tiles still take a full tile's cycles;
+/// * **row-wise ops** (softmax/layernorm/reduce) pay a per-row drain:
+///   `×(1 + 192/cols)`;
+/// * **elementwise issue overhead** for short vectors: `×(1 + 2048/n)`.
+pub fn op_cycles(fabric: &Fabric, placement: &Placement, node: NodeId, kind: &OpKind, m: &Microcode) -> f64 {
+    let unit = fabric.unit(placement.unit(node));
+    // Empirical per-unit speed factor (silicon binning / thermal position;
+    // see `arch::Unit::quality`) — applied to every op class uniformly.
+    let q = unit.quality;
+    (1.0 / q) * match *kind {
+        OpKind::Gemm { m: gm, n, k } => {
+            let peak = unit.peak_macs_per_cycle().max(1.0);
+            let macs = kind.flops() / 2.0;
+            let base = macs / (peak * m.gemm_efficiency);
+            let ramp = 1.0 + 96.0 / k as f64;
+            let stages = unit.stages.max(1) as u64;
+            let lanes = unit.lanes.max(1) as u64;
+            let pad_m = (gm.div_ceil(stages) * stages) as f64 / gm as f64;
+            let pad_n = (n.div_ceil(lanes) * lanes) as f64 / n as f64;
+            base * ramp * pad_m * pad_n
+        }
+        OpKind::Softmax { rows: _, cols } | OpKind::LayerNorm { rows: _, cols }
+        | OpKind::Reduce { rows: _, cols } => {
+            let eff = match kind {
+                OpKind::Softmax { .. } => m.softmax_efficiency,
+                OpKind::LayerNorm { .. } => m.layernorm_efficiency,
+                _ => m.reduce_efficiency,
+            };
+            let peak = unit.peak_macs_per_cycle().max(1.0);
+            let macs = kind.flops() / 2.0;
+            (macs / (peak * eff)) * (1.0 + 192.0 / cols as f64)
+        }
+        OpKind::Elementwise { n, .. } => {
+            let peak = unit.peak_macs_per_cycle().max(1.0);
+            let macs = kind.flops() / 2.0;
+            (macs / (peak * m.elementwise_efficiency)) * (1.0 + 2048.0 / n as f64)
+        }
+        OpKind::Transpose { .. } => {
+            // No flops: streams its tensor through the datapath at
+            // `eff × lanes` elements/cycle.
+            let elems = kind.output_bytes() as f64 / 4.0;
+            elems / ((unit.lanes.max(1) as f64) * m.transpose_efficiency)
+        }
+        OpKind::Buffer { bytes } => bytes as f64 / m.pmu_bytes_per_cycle,
+        OpKind::Load { bytes } | OpKind::Store { bytes } => {
+            bytes as f64 / m.dram_bytes_per_cycle
+        }
+    }
+}
+
+/// The paper's heuristict-free normalizer (§IV-A): per stage, take each op's
+/// MACs at *perfect* efficiency on its unit; the stage bound is the max op
+/// (spatial parallelism is free in the bound); the II bound is the slowest
+/// stage's bound.
+pub fn theoretical_ii(fabric: &Fabric, graph: &Dfg, placement: &Placement) -> f64 {
+    let mut per_stage: HashMap<u32, f64> = HashMap::new();
+    for node in graph.nodes() {
+        let unit = fabric.unit(placement.unit(node.id));
+        let peak = match unit.kind {
+            UnitKind::Pcu => unit.peak_macs_per_cycle(),
+            // Memory ops bounded by wire speed toward the bound; use a
+            // generous constant so the bound stays heuristic-free and below
+            // any real measurement.
+            _ => 64.0,
+        };
+        let macs = (node.kind.flops() / 2.0).max(node.kind.output_bytes() as f64 / 16.0);
+        let cycles = macs / peak.max(1.0);
+        let s = per_stage.entry(placement.stage(node.id)).or_insert(0.0);
+        *s = s.max(cycles);
+    }
+    per_stage
+        .values()
+        .copied()
+        .fold(1.0_f64, f64::max)
+}
+
+/// Measure one PnR decision. This is the label generator for the learned
+/// cost model and the final arbiter in all end-to-end benchmarks.
+pub fn measure(
+    fabric: &Fabric,
+    graph: &Dfg,
+    placement: &Placement,
+    routing: &Routing,
+    era: Era,
+) -> Result<SimReport> {
+    let m = era.microcode();
+
+    // --- per-op cycles ---------------------------------------------------
+    let cycles: Vec<f64> = graph
+        .nodes()
+        .iter()
+        .map(|n| op_cycles(fabric, placement, n.id, &n.kind, &m))
+        .collect();
+
+    // --- constraint 1: stage critical paths -------------------------------
+    // Longest dependency path within each stage: an op contributes its
+    // cycles; an intra-stage edge contributes its route transit — hop
+    // latency plus *streaming serialization* at the route's effective
+    // bandwidth (links time-share, so the serialization inflates by the
+    // arbitration loss of the busiest link on the route). Spatial placement
+    // quality therefore feeds straight into the stage period.
+    let order = graph.topo_order()?;
+    let transit_of = |e: &crate::dfg::TensorEdge| -> f64 {
+        let route = &routing.routes[e.id.0 as usize];
+        // Contention only on shared mesh links; unit↔switch umbilicals are
+        // dedicated port bundles. A route streams at its *slowest* link's
+        // empirical bandwidth.
+        let max_flows = route
+            .links
+            .iter()
+            .filter(|l| !fabric.is_local_link(**l))
+            .map(|l| routing.link_flows[l.0 as usize])
+            .max()
+            .unwrap_or(1);
+        let min_q = route
+            .links
+            .iter()
+            .map(|l| fabric.link(*l).quality)
+            .fold(1.0_f64, f64::min);
+        let arb = 1.0 + m.share_penalty_alpha * (max_flows.saturating_sub(1)) as f64;
+        route.hops() as f64 * m.switch_hop_cycles
+            + e.bytes as f64 / (m.link_bytes_per_cycle * min_q) * arb
+    };
+    let mut path: Vec<f64> = vec![0.0; graph.num_nodes()];
+    let mut stage_cp: HashMap<u32, f64> = HashMap::new();
+    for &u in &order {
+        let su = placement.stage(u);
+        let mut best_in: f64 = 0.0;
+        for e in graph.incoming(u) {
+            if placement.stage(e.src) == su {
+                best_in = best_in.max(path[e.src.0 as usize] + transit_of(e));
+            }
+        }
+        path[u.0 as usize] = best_in + cycles[u.0 as usize];
+        let entry = stage_cp.entry(su).or_insert(0.0);
+        *entry = entry.max(path[u.0 as usize]);
+    }
+    let stage_bound = stage_cp
+        .values()
+        .map(|cp| cp + m.stage_overhead_cycles)
+        .fold(0.0_f64, f64::max);
+
+    // --- constraint 2: link bandwidth with time-sharing --------------------
+    // Shared *mesh* links only: unit↔switch umbilicals are per-operand port
+    // bundles and never the binding resource (wire serialization,
+    // constraint 3, still caps any single tensor).
+    let mut link_bound: f64 = 0.0;
+    for (li, &flows) in routing.link_flows.iter().enumerate() {
+        if flows == 0 || fabric.is_local_link(crate::arch::LinkId(li as u32)) {
+            continue;
+        }
+        let q = fabric.link(crate::arch::LinkId(li as u32)).quality;
+        let serial = routing.link_bytes[li] as f64 / (m.link_bytes_per_cycle * q);
+        let arb = 1.0 + m.share_penalty_alpha * (flows.saturating_sub(1)) as f64;
+        link_bound = link_bound.max(serial * arb);
+    }
+
+    // --- constraint 3: wire serialization + exposed fill latency -----------
+    // A flow must serialize over the wire each interval; with finite
+    // (double) buffering, half the route's fill latency is exposed per
+    // interval refill — so longer routes cost real steady-state cycles, not
+    // just latency.
+    let mut wire_bound: f64 = 0.0;
+    for e in graph.edges() {
+        let route = &routing.routes[e.id.0 as usize];
+        let fill = route.hops() as f64 * m.switch_hop_cycles;
+        let min_q = route
+            .links
+            .iter()
+            .map(|l| fabric.link(*l).quality)
+            .fold(1.0_f64, f64::min);
+        wire_bound = wire_bound
+            .max(e.bytes as f64 / (m.link_bytes_per_cycle * min_q) + 0.5 * fill);
+    }
+
+    // --- constraint 4: DRAM ports ------------------------------------------
+    // Per-port streaming, plus the *side controller* cap: the ports on one
+    // fabric side share a memory controller, so their aggregate bandwidth
+    // saturates at `dram_side_cap_ports` port-rates. This cross-unit
+    // interaction is invisible to per-op heuristic rules (§II-B).
+    let mut port_bytes: HashMap<crate::arch::UnitId, u64> = HashMap::new();
+    let mut side_bytes: [u64; 2] = [0, 0];
+    for node in graph.nodes() {
+        if let OpKind::Load { bytes } | OpKind::Store { bytes } = node.kind {
+            let unit = placement.unit(node.id);
+            *port_bytes.entry(unit).or_insert(0) += bytes;
+            let side = usize::from(fabric.unit(unit).col >= 0);
+            side_bytes[side] += bytes;
+        }
+    }
+    let per_port = port_bytes
+        .values()
+        .map(|&b| b as f64 / m.dram_bytes_per_cycle)
+        .fold(0.0_f64, f64::max);
+    let per_side = side_bytes
+        .iter()
+        .map(|&b| b as f64 / (m.dram_bytes_per_cycle * m.dram_side_cap_ports))
+        .fold(0.0_f64, f64::max);
+    let dram_bound = per_port.max(per_side);
+
+    // --- constraint 5: unit occupancy ---------------------------------------
+    let unit_bound = cycles.iter().copied().fold(0.0_f64, f64::max);
+
+    // --- pick the binding constraint ----------------------------------------
+    let mut ii = 0.0_f64;
+    let mut bottleneck = Bottleneck::UnitOccupancy;
+    for (bound, which) in [
+        (stage_bound, Bottleneck::StageCompute),
+        (link_bound, Bottleneck::LinkBandwidth),
+        (wire_bound, Bottleneck::WireSerialization),
+        (dram_bound, Bottleneck::DramPort),
+        (unit_bound, Bottleneck::UnitOccupancy),
+    ] {
+        if bound > ii {
+            ii = bound;
+            bottleneck = which;
+        }
+    }
+
+    // --- constraint 6: PMU buffer-credit stalls -----------------------------
+    // Cross-stage tensors double-buffer in the destination-side PMU (our
+    // builders stage them through Buffer ops). Each PMU's resident demand is
+    // 2x the buffer bytes it hosts; overflow stalls the producer
+    // proportionally.
+    let mut pmu_demand: HashMap<crate::arch::UnitId, u64> = HashMap::new();
+    for node in graph.nodes() {
+        if let OpKind::Buffer { bytes } = node.kind {
+            let cross_stage = graph
+                .incoming(node.id)
+                .any(|e| placement.stage(e.src) != placement.stage(node.id))
+                || graph
+                    .outgoing(node.id)
+                    .any(|e| placement.stage(e.dst) != placement.stage(node.id));
+            let mult = if cross_stage { 2 } else { 1 };
+            *pmu_demand.entry(placement.unit(node.id)).or_insert(0) += bytes * mult;
+        }
+    }
+    let mut stall_factor: f64 = 1.0;
+    for (unit, demand) in &pmu_demand {
+        let cap = fabric.unit(*unit).capacity.max(1) as f64;
+        let overflow = (*demand as f64 - cap) / cap;
+        if overflow > 0.0 {
+            stall_factor *= 1.0 + overflow;
+        }
+    }
+    let ii = ii * stall_factor;
+
+    // --- latency (fill time): critical path over the whole graph ------------
+    let mut lat: Vec<f64> = vec![0.0; graph.num_nodes()];
+    let mut latency: f64 = 0.0;
+    for &u in &order {
+        let mut best_in: f64 = 0.0;
+        for e in graph.incoming(u) {
+            let transit = routing.routes[e.id.0 as usize].hops() as f64 * m.switch_hop_cycles
+                + e.bytes as f64 / m.link_bytes_per_cycle;
+            best_in = best_in.max(lat[e.src.0 as usize] + transit);
+        }
+        lat[u.0 as usize] = best_in + cycles[u.0 as usize];
+        latency = latency.max(lat[u.0 as usize]);
+    }
+    // Each stage boundary adds a double-buffer handoff.
+    latency += placement.num_stages() as f64 * m.stage_overhead_cycles;
+
+    let ii_theoretical = theoretical_ii(fabric, graph, placement);
+    debug_assert!(ii_theoretical > 0.0);
+    let normalized = (ii_theoretical / ii).clamp(0.0, 1.0);
+
+    Ok(SimReport {
+        ii_cycles: ii,
+        ii_theoretical,
+        normalized_throughput: normalized,
+        bottleneck,
+        latency_cycles: latency,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Fabric, Dfg, Placement, Routing) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+        (f, g, p, r)
+    }
+
+    #[test]
+    fn report_is_sane() {
+        let (f, g, p, r) = setup(1);
+        let rep = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        assert!(rep.ii_cycles > 0.0);
+        assert!(rep.ii_theoretical > 0.0);
+        assert!(rep.ii_theoretical <= rep.ii_cycles * 1.0001, "bound exceeded measurement");
+        assert!(rep.normalized_throughput > 0.0 && rep.normalized_throughput <= 1.0);
+        assert!(rep.latency_cycles >= rep.ii_cycles * 0.5);
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let (f, g, p, r) = setup(2);
+        let a = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        let b = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        assert_eq!(a.ii_cycles, b.ii_cycles);
+    }
+
+    #[test]
+    fn eras_change_measurements() {
+        let (f, g, p, r) = setup(3);
+        let past = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        let present = measure(&f, &g, &p, &r, Era::Present).unwrap();
+        assert_ne!(past.ii_cycles, present.ii_cycles);
+        // The present era is a net upgrade for transformer blocks (softmax +
+        // arbitration improvements dominate).
+        assert!(present.ii_cycles < past.ii_cycles);
+    }
+
+    #[test]
+    fn placements_differ_in_throughput() {
+        // The whole premise of the paper: different PnR decisions for the
+        // same graph have different throughput.
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(4);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10 {
+            let p = random_placement(&g, &f, &mut rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            let rep = measure(&f, &g, &p, &r, Era::Past).unwrap();
+            seen.insert((rep.ii_cycles * 1000.0) as u64);
+        }
+        // MHA's tensors are uniform, so the congestion landscape quantizes;
+        // still, spatial placement must move the II materially.
+        assert!(seen.len() >= 2, "simulator insensitive to placement: {seen:?}");
+        let min = *seen.iter().next().unwrap() as f64;
+        let max = *seen.iter().last().unwrap() as f64;
+        assert!(max / min > 1.2, "placement spread too small: {seen:?}");
+    }
+
+    #[test]
+    fn normalized_throughput_in_unit_interval_property() {
+        prop::check("sim-normalized-range", 32, |rng| {
+            let fam = rng.below(3);
+            let g = match fam {
+                0 => builders::gemm_graph(32 << rng.below(3), 32, 32),
+                1 => builders::mlp(8, &[64, 64, 64]),
+                _ => builders::ffn(16, 64, 256),
+            };
+            let f = Fabric::new(FabricConfig::default());
+            let p = random_placement(&g, &f, rng).unwrap();
+            let r = route_all(&f, &g, &p).unwrap();
+            for era in [Era::Past, Era::Present] {
+                let rep = measure(&f, &g, &p, &r, era).unwrap();
+                assert!(rep.normalized_throughput > 0.0);
+                assert!(rep.normalized_throughput <= 1.0);
+                assert!(rep.ii_cycles.is_finite());
+            }
+        });
+    }
+
+    #[test]
+    fn more_stages_can_beat_one_stage() {
+        // A deep chain in a single stage serializes the whole sample; the
+        // same chain split into stages pipelines. Find a placement pair
+        // demonstrating II(multi) < II(single).
+        let g = builders::mlp(64, &[256, 256, 256, 256]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(5);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = route_all(&f, &g, &p).unwrap();
+
+        let mut single = p.clone();
+        single.stage_of.iter_mut().for_each(|s| *s = 0);
+        let levels = g.asap_levels().unwrap();
+        let mut multi = p.clone();
+        multi.stage_of = levels.clone();
+
+        let ii_single = measure(&f, &g, &single, &r, Era::Past).unwrap().ii_cycles;
+        let ii_multi = measure(&f, &g, &multi, &r, Era::Past).unwrap().ii_cycles;
+        assert!(
+            ii_multi < ii_single,
+            "pipelining should help: multi={ii_multi} single={ii_single}"
+        );
+    }
+
+    #[test]
+    fn congested_routes_hurt() {
+        // Compare a spread placement against one we synthetically congest by
+        // inflating link flows.
+        let (f, g, p, r) = setup(6);
+        let base = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        let mut congested = r.clone();
+        // Funnel: pretend all flows cross one link.
+        let total_bytes: u64 = g.edges().iter().map(|e| e.bytes).sum();
+        let busiest = congested
+            .link_bytes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &b)| b)
+            .unwrap()
+            .0;
+        congested.link_bytes[busiest] = total_bytes;
+        congested.link_flows[busiest] = g.num_edges() as u32;
+        let cong = measure(&f, &g, &p, &congested, Era::Past).unwrap();
+        assert!(cong.ii_cycles >= base.ii_cycles);
+    }
+
+    #[test]
+    fn theoretical_bound_scales_with_work() {
+        let f = Fabric::new(FabricConfig::default());
+        let small = builders::gemm_graph(32, 32, 32);
+        let big = builders::gemm_graph(256, 256, 256);
+        let mut rng = Rng::new(7);
+        let ps = random_placement(&small, &f, &mut rng).unwrap();
+        let pb = random_placement(&big, &f, &mut rng).unwrap();
+        assert!(
+            theoretical_ii(&f, &big, &pb) > theoretical_ii(&f, &small, &ps)
+        );
+    }
+
+    #[test]
+    fn bottleneck_labels_exist() {
+        let (f, g, p, r) = setup(8);
+        let rep = measure(&f, &g, &p, &r, Era::Past).unwrap();
+        assert!(!rep.bottleneck.name().is_empty());
+    }
+
+    #[test]
+    fn pmu_overflow_stalls() {
+        // Shrink PMUs until buffers overflow; II must grow.
+        let g = builders::ffn(64, 256, 1024);
+        let big = Fabric::new(FabricConfig { pmu_capacity: 16 * 1024 * 1024, ..FabricConfig::default() });
+        let tiny = Fabric::new(FabricConfig { pmu_capacity: 1024, ..FabricConfig::default() });
+        let mut rng = Rng::new(9);
+        let p = random_placement(&g, &big, &mut rng).unwrap();
+        let r = route_all(&big, &g, &p).unwrap();
+        let fat = measure(&big, &g, &p, &r, Era::Past).unwrap();
+        let thin = measure(&tiny, &g, &p, &r, Era::Past).unwrap();
+        assert!(thin.ii_cycles > fat.ii_cycles, "PMU pressure must stall");
+    }
+}

@@ -1,0 +1,277 @@
+//! Binary checkpoint format for model parameters and optimizer state.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   : b"RDAC"
+//! version : u32 (= 1)
+//! count   : u32
+//! per tensor:
+//!   name_len : u16, name bytes (utf-8)
+//!   dtype    : u8 (0 = f32, 1 = i32)
+//!   ndim     : u8
+//!   dims     : u64 × ndim
+//!   data     : elem bytes (LE)
+//! ```
+//! Written atomically (tmp + rename) so a crash mid-save never corrupts the
+//! checkpoint a long dataset-generation run depends on.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 4] = b"RDAC";
+const VERSION: u32 = 1;
+
+/// Named tensors in a fixed order (the artifact parameter order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        ParamStore { tensors: Vec::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Tensors only, in stored order (what `Executable::run` wants).
+    pub fn values(&self) -> Vec<Tensor> {
+        self.tensors.iter().map(|(_, t)| t.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count (f32 elements).
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+            for (name, t) in &self.tensors {
+                let nb = name.as_bytes();
+                if nb.len() > u16::MAX as usize {
+                    bail!("tensor name too long");
+                }
+                f.write_all(&(nb.len() as u16).to_le_bytes())?;
+                f.write_all(nb)?;
+                match t {
+                    Tensor::F32 { shape, data } => {
+                        f.write_all(&[0u8, shape.len() as u8])?;
+                        for &d in shape {
+                            f.write_all(&(d as u64).to_le_bytes())?;
+                        }
+                        for &x in data {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                    Tensor::I32 { shape, data } => {
+                        f.write_all(&[1u8, shape.len() as u8])?;
+                        for &d in shape {
+                            f.write_all(&(d as u64).to_le_bytes())?;
+                        }
+                        for &x in data {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not an rdacost checkpoint");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("checkpoint version {version} unsupported (want {VERSION})");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("bad tensor name")?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let tensor = match dtype {
+                0 => {
+                    let mut data = vec![0f32; n];
+                    let mut buf = [0u8; 4];
+                    for x in &mut data {
+                        f.read_exact(&mut buf)?;
+                        *x = f32::from_le_bytes(buf);
+                    }
+                    Tensor::F32 { shape, data }
+                }
+                1 => {
+                    let mut data = vec![0i32; n];
+                    let mut buf = [0u8; 4];
+                    for x in &mut data {
+                        f.read_exact(&mut buf)?;
+                        *x = i32::from_le_bytes(buf);
+                    }
+                    Tensor::I32 { shape, data }
+                }
+                other => bail!("unknown dtype tag {other}"),
+            };
+            tensors.push((name, tensor));
+        }
+        Ok(ParamStore { tensors })
+    }
+
+    /// Verify this store matches the artifact's parameter specs (names and
+    /// shapes, in order).
+    pub fn matches_specs(&self, specs: &[crate::runtime::TensorSpec]) -> Result<()> {
+        if specs.len() != self.tensors.len() {
+            bail!(
+                "param count mismatch: checkpoint {} vs artifact {}",
+                self.tensors.len(),
+                specs.len()
+            );
+        }
+        for ((name, t), spec) in self.tensors.iter().zip(specs) {
+            if name != &spec.name || !spec.matches(t) {
+                bail!(
+                    "param mismatch: checkpoint has {name} {:?}, artifact wants {} {:?}",
+                    t.shape(),
+                    spec.name,
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for ParamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rdacost_ckpt_{name}.bin"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let store = ParamStore {
+            tensors: vec![
+                ("w1".into(), Tensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, 9.0])),
+                ("idx".into(), Tensor::i32(&[2], vec![7, -9])),
+                ("scalar".into(), Tensor::f32(&[], vec![0.25])),
+            ],
+        };
+        let p = tmp("roundtrip");
+        store.save(&p).unwrap();
+        let back = ParamStore::load(&p).unwrap();
+        assert_eq!(store, back);
+        assert_eq!(back.num_elements(), 9);
+    }
+
+    #[test]
+    fn get_by_name() {
+        let store = ParamStore {
+            tensors: vec![("a".into(), Tensor::f32(&[1], vec![5.0]))],
+        };
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(ParamStore::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_contextual_error() {
+        let err = ParamStore::load("/nonexistent/x.bin").unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint"));
+    }
+
+    #[test]
+    fn matches_specs_checks_names_and_shapes() {
+        use crate::runtime::{Dtype, TensorSpec};
+        let store = ParamStore {
+            tensors: vec![("w".into(), Tensor::f32(&[2], vec![1.0, 2.0]))],
+        };
+        let good = vec![TensorSpec { name: "w".into(), dtype: Dtype::F32, shape: vec![2] }];
+        assert!(store.matches_specs(&good).is_ok());
+        let bad_shape = vec![TensorSpec { name: "w".into(), dtype: Dtype::F32, shape: vec![3] }];
+        assert!(store.matches_specs(&bad_shape).is_err());
+        let bad_name = vec![TensorSpec { name: "v".into(), dtype: Dtype::F32, shape: vec![2] }];
+        assert!(store.matches_specs(&bad_name).is_err());
+        assert!(store.matches_specs(&[]).is_err());
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp() {
+        let store = ParamStore { tensors: vec![("x".into(), Tensor::f32(&[1], vec![1.0]))] };
+        let p = tmp("atomic");
+        store.save(&p).unwrap();
+        assert!(!p.with_extension("tmp").exists());
+    }
+}

@@ -1,0 +1,15 @@
+//! Training orchestration: the Rust-driven loop over the AOT train-step
+//! executable.
+//!
+//! Python lowers a *single fused training step* — forward, MSE loss,
+//! backward, Adam update — to HLO at build time. This module owns
+//! everything around it: parameter initialization (from the init artifact),
+//! epoch/batch scheduling per bucket, k-fold splits, early stopping, and
+//! checkpointing. The paper's "retraining within hours" claim corresponds
+//! to `Trainer::fit`, which on this corpus takes seconds.
+
+mod checkpoint;
+mod trainer;
+
+pub use checkpoint::ParamStore;
+pub use trainer::{EvalReport, TrainConfig, TrainReport, Trainer};

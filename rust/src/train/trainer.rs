@@ -1,0 +1,252 @@
+//! The training loop.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cost::learned::{infer_artifact, train_artifact, Ablation};
+use crate::data::Dataset;
+use crate::gnn::{self, Bucket};
+use crate::metrics;
+use crate::runtime::{Engine, Tensor};
+use crate::util::rng::Rng;
+
+use super::checkpoint::ParamStore;
+
+/// Hyperparameters of the Rust-side loop (the model architecture itself is
+/// fixed at AOT time; see python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    /// Must match the AOT train artifact's batch dimension.
+    pub batch: usize,
+    pub learning_rate: f32,
+    pub seed: u64,
+    /// Ablation flags baked into every step (Table III).
+    pub ablation: Ablation,
+    /// Print a progress line every N epochs (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 35,
+            batch: 32,
+            learning_rate: 3e-3,
+            seed: 0x5EED,
+            ablation: Ablation::default(),
+            log_every: 0,
+        }
+    }
+}
+
+/// Per-fit summary.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub epochs_run: usize,
+    pub final_train_loss: f64,
+    pub loss_curve: Vec<f64>,
+    pub wall_seconds: f64,
+}
+
+/// Held-out evaluation summary (one fold).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub relative_error: f64,
+    pub spearman: f64,
+    pub count: usize,
+}
+
+/// Owns parameters + Adam state and drives the AOT train-step executable.
+pub struct Trainer {
+    engine: Arc<Engine>,
+    pub config: TrainConfig,
+    params: Vec<Tensor>,
+    adam_m: Vec<Tensor>,
+    adam_v: Vec<Tensor>,
+    step: f32,
+    param_specs: Vec<crate::runtime::TensorSpec>,
+}
+
+impl Trainer {
+    /// Initialize parameters from the manifest's shape specs (Glorot-style
+    /// scaled normal for matrices, scaled-down normal for embeddings).
+    pub fn new(engine: Arc<Engine>, config: TrainConfig) -> Result<Trainer> {
+        gnn::schema::check_manifest(engine.manifest())?;
+        let spec = engine
+            .manifest()
+            .find(&infer_artifact(gnn::BUCKETS[0], 1))
+            .context("infer artifact missing; run `make artifacts`")?;
+        // Params are the inputs before the 8 batch tensors + flags.
+        let n_params = spec
+            .inputs
+            .len()
+            .checked_sub(9)
+            .ok_or_else(|| anyhow!("unexpected artifact input arity"))?;
+        let param_specs: Vec<_> = spec.inputs[..n_params].to_vec();
+
+        let mut rng = Rng::new(config.seed);
+        let mut params = Vec::with_capacity(n_params);
+        for s in &param_specs {
+            let n: usize = s.shape.iter().product();
+            let fan_in = if s.shape.len() >= 2 {
+                s.shape[s.shape.len() - 2].max(1)
+            } else {
+                1
+            };
+            let std = 1.0 / (fan_in as f64).sqrt();
+            let data: Vec<f32> = if s.name == "head_w3_b" {
+                // Output bias starts at sigmoid^-1(~0.12): normalized
+                // throughputs concentrate near zero, and a 0.5-centred
+                // sigmoid wastes epochs crawling down its tail.
+                vec![-2.0; n]
+            } else if s.name.ends_with("_b") {
+                // Other biases start at zero.
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            };
+            params.push(Tensor::f32(&s.shape, data));
+        }
+        let adam_m = param_specs
+            .iter()
+            .map(|s| Tensor::zeros(crate::runtime::Dtype::F32, &s.shape))
+            .collect::<Vec<_>>();
+        let adam_v = adam_m.clone();
+
+        Ok(Trainer { engine, config, params, adam_m, adam_v, step: 0.0, param_specs })
+    }
+
+    /// Resume from a checkpoint (adaptivity experiments retrain from scratch,
+    /// but warm starts are supported).
+    pub fn with_params(mut self, store: &ParamStore) -> Result<Trainer> {
+        store.matches_specs(&self.param_specs)?;
+        self.params = store.values();
+        Ok(self)
+    }
+
+    /// Current parameters as a named store (for checkpointing / LearnedCost).
+    pub fn param_store(&self) -> ParamStore {
+        ParamStore {
+            tensors: self
+                .param_specs
+                .iter()
+                .zip(&self.params)
+                .map(|(s, t)| (s.name.clone(), t.clone()))
+                .collect(),
+        }
+    }
+
+    /// Train on the samples at `indices` of `dataset`.
+    pub fn fit(&mut self, dataset: &Dataset, indices: &[usize]) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let mut rng = Rng::new(self.config.seed ^ 0xF17);
+        let mut loss_curve = Vec::with_capacity(self.config.epochs);
+
+        // Group by bucket once.
+        let mut by_bucket: std::collections::BTreeMap<String, (Bucket, Vec<usize>)> =
+            std::collections::BTreeMap::new();
+        for &i in indices {
+            let b = dataset.samples[i].tensors.bucket;
+            by_bucket.entry(b.tag()).or_insert((b, Vec::new())).1.push(i);
+        }
+
+        for epoch in 0..self.config.epochs {
+            let mut epoch_loss = 0.0;
+            let mut batches = 0usize;
+            for (_tag, (bucket, idxs)) in &mut by_bucket {
+                rng.shuffle(idxs);
+                let exe = self
+                    .engine
+                    .load(&train_artifact(*bucket, self.config.batch))?;
+                for chunk in idxs.chunks(self.config.batch) {
+                    let graphs: Vec<&gnn::GraphTensors> =
+                        chunk.iter().map(|&i| &dataset.samples[i].tensors).collect();
+                    let (labels, weights) = gnn::stack_labels(&graphs, self.config.batch)?;
+                    let mut inputs = Vec::with_capacity(3 * self.params.len() + 13);
+                    inputs.extend(self.params.iter().cloned());
+                    inputs.extend(self.adam_m.iter().cloned());
+                    inputs.extend(self.adam_v.iter().cloned());
+                    inputs.push(Tensor::f32(&[], vec![self.step]));
+                    inputs.extend(gnn::stack_batch(&graphs, *bucket, self.config.batch)?);
+                    inputs.push(labels);
+                    inputs.push(weights);
+                    inputs.push(gnn::flags_tensor(self.config.ablation.flags()));
+                    inputs.push(Tensor::f32(&[], vec![self.config.learning_rate]));
+
+                    let out = exe.run(&inputs)?;
+                    // Outputs: params, m, v, step, loss.
+                    let p = self.params.len();
+                    self.params = out[..p].to_vec();
+                    self.adam_m = out[p..2 * p].to_vec();
+                    self.adam_v = out[2 * p..3 * p].to_vec();
+                    self.step = out[3 * p].as_f32()?[0];
+                    let loss = out[3 * p + 1].as_f32()?[0] as f64;
+                    epoch_loss += loss;
+                    batches += 1;
+                }
+            }
+            let mean_loss = epoch_loss / batches.max(1) as f64;
+            loss_curve.push(mean_loss);
+            if self.config.log_every > 0 && (epoch + 1) % self.config.log_every == 0 {
+                eprintln!("epoch {:>3}: train mse {:.5}", epoch + 1, mean_loss);
+            }
+        }
+
+        Ok(TrainReport {
+            epochs_run: self.config.epochs,
+            final_train_loss: loss_curve.last().copied().unwrap_or(f64::NAN),
+            loss_curve,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Predict labels for samples at `indices` (batched per bucket).
+    pub fn predict(&self, dataset: &Dataset, indices: &[usize]) -> Result<Vec<f64>> {
+        let mut learned = crate::cost::LearnedCost::from_store(
+            self.engine.clone(),
+            &self.param_store(),
+            self.config.ablation,
+        )?;
+        let mut preds = vec![0.0f64; indices.len()];
+        // Group by bucket, predict per group, scatter back.
+        let mut by_bucket: std::collections::BTreeMap<String, (Bucket, Vec<usize>)> =
+            std::collections::BTreeMap::new();
+        for (pos, &i) in indices.iter().enumerate() {
+            let b = dataset.samples[i].tensors.bucket;
+            by_bucket.entry(b.tag()).or_insert((b, Vec::new())).1.push(pos);
+        }
+        for (_tag, (_bucket, positions)) in by_bucket {
+            let graphs: Vec<&gnn::GraphTensors> = positions
+                .iter()
+                .map(|&pos| &dataset.samples[indices[pos]].tensors)
+                .collect();
+            let p = learned.predict_batch(&graphs, self.config.batch)?;
+            for (pos, v) in positions.into_iter().zip(p) {
+                preds[pos] = v;
+            }
+        }
+        Ok(preds)
+    }
+
+    /// Evaluate RE + Spearman on held-out indices.
+    pub fn evaluate(&self, dataset: &Dataset, indices: &[usize]) -> Result<EvalReport> {
+        let preds = self.predict(dataset, indices)?;
+        let truth: Vec<f64> = indices
+            .iter()
+            .map(|&i| dataset.samples[i].label() as f64)
+            .collect();
+        Ok(EvalReport {
+            relative_error: metrics::relative_error(&preds, &truth),
+            spearman: metrics::spearman(&preds, &truth),
+            count: indices.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer needs real artifacts; integration tests live in
+    // rust/tests/train_integration.rs and run after `make artifacts`.
+}

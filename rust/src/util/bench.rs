@@ -1,0 +1,203 @@
+//! Micro-benchmark harness for the `[[bench]]` targets.
+//!
+//! Criterion is not vendored in this offline environment, so this is a small
+//! equivalent: per-benchmark warmup, timed batches sized to a target run
+//! time, and robust statistics (median, mean, p10/p90) printed in a stable
+//! machine-parsable format. Used with `harness = false` bench targets.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark runner. Targets `measure_time` of sampling per benchmark after
+/// `warmup_time` of warmup; adapts batch size so timer overhead is amortized.
+pub struct Bencher {
+    pub warmup_time: Duration,
+    pub measure_time: Duration,
+    pub samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_time: Duration::from_millis(300),
+            measure_time: Duration::from_millis(1500),
+            samples: 30,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let mut b = Bencher::default();
+        // Honor quick mode for CI-style smoke runs: RDACOST_BENCH_QUICK=1.
+        if std::env::var("RDACOST_BENCH_QUICK").is_ok() {
+            b.warmup_time = Duration::from_millis(30);
+            b.measure_time = Duration::from_millis(150);
+            b.samples = 10;
+        }
+        b
+    }
+
+    /// Run one benchmark. `f` is invoked repeatedly; its return value is
+    /// black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Warmup & batch sizing: find iterations per sample such that one
+        // sample takes measure_time/samples.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup_time.as_secs_f64() / warm_iters.max(1) as f64;
+        let sample_target = self.measure_time.as_secs_f64() / self.samples as f64;
+        let batch = ((sample_target / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(dt / batch as f64);
+            total_iters += batch;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let pct = |p: f64| -> f64 {
+            let idx = ((samples_ns.len() - 1) as f64 * p).round() as usize;
+            samples_ns[idx]
+        };
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+        };
+        println!(
+            "bench {:<42} mean {:>12} median {:>12} p10 {:>12} p90 {:>12} ({} iters)",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.p90_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Write results as CSV to `path` (columns: name, mean_ns, median_ns,
+    /// p10_ns, p90_ns, iters).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,mean_ns,median_ns,p10_ns,p90_ns,iters")?;
+        for s in &self.results {
+            writeln!(
+                f,
+                "{},{:.1},{:.1},{:.1},{:.1},{}",
+                s.name, s.mean_ns, s.median_ns, s.p10_ns, s.p90_ns, s.iters
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Human format for nanosecond quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.1} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut b = Bencher {
+            warmup_time: Duration::from_millis(5),
+            measure_time: Duration::from_millis(20),
+            samples: 5,
+            results: Vec::new(),
+        };
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn csv_write() {
+        let mut b = Bencher {
+            warmup_time: Duration::from_millis(2),
+            measure_time: Duration::from_millis(6),
+            samples: 3,
+            results: Vec::new(),
+        };
+        b.bench("x", || 1 + 1);
+        let path = std::env::temp_dir().join("rdacost_bench_test.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,mean_ns"));
+        assert!(text.contains("x,"));
+    }
+}

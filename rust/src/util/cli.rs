@@ -1,0 +1,148 @@
+//! Tiny declarative CLI argument parser for the `rdacost` binary.
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! No external deps (clap is not vendored in this environment).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positionals, and `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.options.insert(k.to_string(), v[1..].to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |next| !next.starts_with("--"))
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("bench fig2 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig2", "extra"]);
+    }
+
+    #[test]
+    fn options_space_and_eq() {
+        let a = parse("train --epochs 30 --lr=0.001");
+        assert_eq!(a.get_usize("epochs", 0), 30);
+        assert!((a.get_f64("lr", 0.0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --a --b value");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("value"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_integer_panics() {
+        let a = parse("x --n abc --q");
+        // "abc" is consumed as the value of --n
+        a.get_usize("n", 0);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

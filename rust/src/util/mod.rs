@@ -1,0 +1,20 @@
+//! In-tree utility layer.
+//!
+//! The build environment is offline with only the xla-bridge crates vendored,
+//! so the usual ecosystem crates (rand, serde, clap, criterion, proptest) are
+//! unavailable. This module provides the small, well-tested subset we need:
+//!
+//! * [`rng`] — splitmix64/PCG-style deterministic PRNG;
+//! * [`json`] — minimal JSON value model, parser and writer (manifest +
+//!   dataset interchange with the python build step);
+//! * [`cli`] — tiny declarative argument parser for the `rdacost` binary;
+//! * [`bench`] — micro-benchmark harness (warmup, iterations, robust stats)
+//!   used by the `[[bench]]` targets;
+//! * [`prop`] — property-test driver (randomized cases with shrinking-lite:
+//!   failing seeds are reported for replay).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,87 @@
+//! Lightweight property-testing driver (proptest is not vendored).
+//!
+//! `check(name, cases, |rng| { ... })` runs the closure `cases` times with
+//! independent deterministic RNG streams. On failure it re-raises the panic
+//! annotated with the *case seed*, so the exact failing input can be replayed
+//! with `replay(seed, f)` in a unit test while debugging.
+//!
+//! The base seed is fixed (or overridden via `RDACOST_PROP_SEED`) so CI runs
+//! are reproducible.
+
+use super::rng::Rng;
+
+/// Number of cases used by default across the crate's property tests.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `f` against `cases` random inputs. Panics with the failing seed on the
+/// first failure.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, f: F) {
+    let base = std::env::var("RDACOST_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xDA7A_F10E);
+    for case in 0..cases as u64 {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        // (f is Fn — shared reference — so catch_unwind's UnwindSafe bound is
+        // satisfied by the RefUnwindSafe constraint on F.)
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single property case by seed (for debugging a reported failure).
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check("trivial", 10, |rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("must-fail", 50, |rng| {
+                // Will eventually draw a number >= 8 and fail.
+                assert!(rng.below(10) < 8, "drew a large number");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut vals = Vec::new();
+        replay(12345, |rng| vals.push(rng.next_u64()));
+        let first = vals[0];
+        let mut vals2 = Vec::new();
+        replay(12345, |rng| vals2.push(rng.next_u64()));
+        assert_eq!(first, vals2[0]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Coordinator integration: the batched scoring service against real
+//! artifacts, under concurrency, failure and shutdown.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::coordinator::ScoringService;
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::data::draw_workload;
+use rdacost::dfg::WorkloadFamily;
+use rdacost::gnn;
+use rdacost::placer::random_placement;
+use rdacost::router::route_all;
+use rdacost::runtime::Engine;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::rng::Rng;
+
+fn engine() -> Arc<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Engine::new(dir).expect("run `make artifacts` first"))
+}
+
+fn encoded_graph(rng: &mut Rng, fabric: &Fabric) -> gnn::GraphTensors {
+    let graph = draw_workload(WorkloadFamily::Mha, rng);
+    let placement = random_placement(&graph, fabric, rng).unwrap();
+    let routing = route_all(fabric, &graph, &placement).unwrap();
+    gnn::encode(&graph, fabric, &placement, &routing).unwrap()
+}
+
+#[test]
+fn service_scores_match_direct_inference() {
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+    let service = ScoringService::start(
+        eng.clone(),
+        &store,
+        Ablation::default(),
+        32,
+        Duration::from_millis(2),
+    )
+    .unwrap();
+    let client = service.client();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(1);
+    let mut direct = LearnedCost::from_store(eng, &store, Ablation::default()).unwrap();
+
+    for _ in 0..5 {
+        let enc = encoded_graph(&mut rng, &fabric);
+        let via_service = client.score(enc.clone()).unwrap();
+        let via_direct = direct.predict_encoded(&enc).unwrap();
+        assert!(
+            (via_service - via_direct).abs() < 1e-5,
+            "service {via_service} vs direct {via_direct}"
+        );
+    }
+}
+
+#[test]
+fn service_handles_concurrent_clients() {
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let service = ScoringService::start(
+        eng,
+        &trainer.param_store(),
+        Ablation::default(),
+        32,
+        Duration::from_millis(3),
+    )
+    .unwrap();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let n_clients = 6;
+    let per_client = 20;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let client = service.client();
+            let fabric = &fabric;
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + c);
+                for _ in 0..per_client {
+                    let enc = encoded_graph(&mut rng, fabric);
+                    let score = client.score(enc).unwrap();
+                    assert!(score > 0.0 && score < 1.0, "score {score}");
+                }
+            });
+        }
+    });
+    let served = service.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served, n_clients as u64 * per_client as u64);
+    let batches = service.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches > 0);
+    assert!(
+        batches < served,
+        "batching never amortized anything ({batches} batches for {served} requests)"
+    );
+}
+
+#[test]
+fn service_drains_on_shutdown() {
+    let eng = engine();
+    let trainer = Trainer::new(eng, TrainConfig::default()).unwrap();
+    let service = ScoringService::start(
+        engine(),
+        &trainer.param_store(),
+        Ablation::default(),
+        32,
+        Duration::from_millis(500), // long deadline: shutdown must flush
+    )
+    .unwrap();
+    let client = service.client();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(7);
+    let enc = encoded_graph(&mut rng, &fabric);
+
+    // Submit from a thread, then drop the service while the request is
+    // queued: the drain path must still answer it.
+    let handle = std::thread::spawn(move || client.score(enc));
+    std::thread::sleep(Duration::from_millis(50));
+    drop(service);
+    let result = handle.join().unwrap();
+    assert!(result.is_ok(), "request dropped on shutdown: {result:?}");
+}
+
+#[test]
+fn parallel_generation_feeds_training() {
+    // Mini end-to-end of the "CPU farm" path: parallel gen -> train 2 epochs.
+    let eng = engine();
+    let fabric = Fabric::new(FabricConfig::default());
+    let cfg = rdacost::data::GenConfig { total: 64, ..Default::default() };
+    let ds = rdacost::coordinator::generate_parallel(&fabric, &cfg, 9, 3).unwrap();
+    assert_eq!(ds.len(), 64);
+    let mut trainer = Trainer::new(
+        eng,
+        TrainConfig { epochs: 2, ..TrainConfig::default() },
+    )
+    .unwrap();
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let rep = trainer.fit(&ds, &idx).unwrap();
+    assert_eq!(rep.loss_curve.len(), 2);
+    assert!(rep.final_train_loss.is_finite());
+}

@@ -1,0 +1,159 @@
+//! Integration: the rust runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (CI runs it via `make test`). These tests are
+//! the proof that all three layers compose: Pallas kernel -> JAX model ->
+//! HLO text -> PJRT execution from rust.
+
+use std::sync::Arc;
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::data::{generate_family, GenConfig};
+use rdacost::dfg::WorkloadFamily;
+use rdacost::gnn;
+use rdacost::placer::Objective;
+use rdacost::runtime::Engine;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+#[test]
+fn manifest_matches_schema() {
+    let e = engine();
+    gnn::schema::check_manifest(e.manifest()).unwrap();
+    assert_eq!(e.manifest().artifacts.len(), 9);
+    assert_eq!(e.manifest().hyper_usize("hidden_dim").unwrap(), 64);
+}
+
+#[test]
+fn infer_artifact_runs_and_outputs_probability() {
+    let eng = engine();
+    let cfg = TrainConfig::default();
+    let trainer = Trainer::new(eng.clone(), cfg).unwrap();
+    let mut learned =
+        LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
+
+    // Encode a real PnR decision.
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = rdacost::dfg::builders::mha(32, 128, 4);
+    let mut rng = Rng::new(42);
+    let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
+
+    let score = learned.score(&graph, &fabric, &placement, &routing);
+    assert!(score > 0.0 && score < 1.0, "prediction {score} not in (0,1)");
+    assert_eq!(learned.evaluations, 1);
+
+    // Deterministic.
+    let score2 = learned.score(&graph, &fabric, &placement, &routing);
+    assert_eq!(score, score2);
+}
+
+#[test]
+fn ablation_flags_change_output() {
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = rdacost::dfg::builders::ffn(16, 64, 256);
+    let mut rng = Rng::new(7);
+    let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
+
+    let mut full = LearnedCost::from_store(eng.clone(), &store, Ablation::default()).unwrap();
+    let mut no_node = LearnedCost::from_store(
+        eng,
+        &store,
+        Ablation { use_node_emb: false, ..Ablation::default() },
+    )
+    .unwrap();
+    let a = full.score(&graph, &fabric, &placement, &routing);
+    let b = no_node.score(&graph, &fabric, &placement, &routing);
+    assert_ne!(a, b, "node-embedding ablation must change the prediction");
+}
+
+#[test]
+fn batch_and_single_inference_agree() {
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let mut learned = LearnedCost::from_store(
+        eng,
+        &trainer.param_store(),
+        Ablation::default(),
+    )
+    .unwrap();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(3);
+    let cfg = GenConfig { total: 0, ..GenConfig::default() };
+    let samples = generate_family(WorkloadFamily::Gemm, 5, &fabric, &cfg, &mut rng).unwrap();
+    // All gemm graphs land in the same bucket here.
+    let graphs: Vec<&gnn::GraphTensors> = samples.iter().map(|s| &s.tensors).collect();
+    let bucket = graphs[0].bucket;
+    if graphs.iter().all(|g| g.bucket == bucket) {
+        let batched = learned.predict_batch(&graphs, 32).unwrap();
+        for (g, expected) in graphs.iter().zip(&batched) {
+            let single = learned.predict_encoded(g).unwrap();
+            assert!(
+                (single - expected).abs() < 1e-5,
+                "batch/single mismatch: {single} vs {expected}"
+            );
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_and_learns_signal() {
+    let eng = engine();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(11);
+    let cfg = GenConfig { total: 0, ..GenConfig::default() };
+
+    // Small dataset: 96 samples of two families.
+    let mut samples = generate_family(WorkloadFamily::Gemm, 48, &fabric, &cfg, &mut rng).unwrap();
+    samples.extend(generate_family(WorkloadFamily::Ffn, 48, &fabric, &cfg, &mut rng).unwrap());
+    let dataset = rdacost::data::Dataset { samples };
+
+    let train_cfg = TrainConfig { epochs: 30, ..TrainConfig::default() };
+    let mut trainer = Trainer::new(eng, train_cfg).unwrap();
+    let idx: Vec<usize> = (0..dataset.len()).collect();
+    let report = trainer.fit(&dataset, &idx).unwrap();
+
+    assert_eq!(report.loss_curve.len(), 30);
+    assert!(
+        report.final_train_loss < report.loss_curve[0] * 0.8,
+        "loss did not decrease: {:?}",
+        report.loss_curve
+    );
+
+    // In-sample evaluation should show real signal (this is train-set —
+    // held-out quality is measured by the table1 bench).
+    let eval = trainer.evaluate(&dataset, &idx).unwrap();
+    assert!(eval.spearman > 0.3, "train-set spearman {}", eval.spearman);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_learned_cost() {
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+    let path = std::env::temp_dir().join("rdacost_integration_ckpt.bin");
+    store.save(&path).unwrap();
+    let mut learned = LearnedCost::load(eng, &path).unwrap();
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = rdacost::dfg::builders::gemm_graph(64, 64, 64);
+    let mut rng = Rng::new(5);
+    let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
+    let s = learned.score(&graph, &fabric, &placement, &routing);
+    assert!(s > 0.0 && s < 1.0);
+}
