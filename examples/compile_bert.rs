@@ -10,14 +10,11 @@
 //! `--blocks N` truncates BERT to N transformer blocks for a fast demo;
 //! omit it for all 24 (the full paper configuration).
 
-use std::sync::Arc;
-
 use rdacost::arch::{Era, Fabric, FabricConfig};
 use rdacost::compiler::{compile, CompileConfig};
 use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
 use rdacost::dfg::builders;
 use rdacost::placer::AnnealParams;
-use rdacost::runtime::Engine;
 use rdacost::train::ParamStore;
 use rdacost::util::cli::Args;
 
@@ -47,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let store = ParamStore::load(ckpt).map_err(|e| {
         anyhow::anyhow!("{e:#}\nrun `cargo run --release --example dataset_and_train` first")
     })?;
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = rdacost::runtime::engine("artifacts")?;
 
     let cfg = CompileConfig {
         era: Era::Past,

@@ -2,20 +2,17 @@
 //!
 //! 1. generate a randomized-PnR dataset over the four building-block
 //!    families (paper: 5878 samples; here 600 for a ~1-minute run);
-//! 2. train the GNN throughput regressor (Rust drives the AOT train-step);
+//! 2. train the GNN throughput regressor (the backend's fused train step);
 //! 3. evaluate held-out RE + Spearman against the heuristic baseline;
 //! 4. save the checkpoint for `examples/compile_bert.rs`.
 //!
 //! Run: `cargo run --release --example dataset_and_train`
-
-use std::sync::Arc;
 
 use rdacost::arch::{Era, Fabric, FabricConfig};
 use rdacost::coordinator::generate_parallel;
 use rdacost::data::GenConfig;
 use rdacost::experiments::common::heuristic_metrics;
 use rdacost::metrics;
-use rdacost::runtime::Engine;
 use rdacost::train::{TrainConfig, Trainer};
 
 fn main() -> anyhow::Result<()> {
@@ -35,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. Train/test split + training.
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = rdacost::runtime::engine("artifacts")?;
     let folds = metrics::kfold(ds.len(), 5, 7);
     let (train_idx, test_idx) = &folds[0];
     let cfg = TrainConfig { epochs: 30, log_every: 10, ..TrainConfig::default() };

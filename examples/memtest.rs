@@ -1,11 +1,9 @@
-//! Memory-stability probe: RSS must stay flat across thousands of PJRT
-//! train-step executions (regression test for the xla-0.1.6 `execute`
-//! input-buffer leak that `Executable::run_buffers` works around; see
-//! rust/src/runtime/engine.rs).
+//! Memory-stability probe: RSS must stay flat across thousands of
+//! train-step executions (originally a regression test for a PJRT
+//! input-buffer leak; on the native backend it guards the tape/scratch
+//! allocation pattern in rust/src/runtime/native.rs).
 //!
 //! Run: `cargo run --release --example memtest`
-
-use std::sync::Arc;
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/status").unwrap();
     for l in s.lines() {
@@ -17,7 +15,7 @@ fn rss_mb() -> f64 {
     0.0
 }
 fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(rdacost::runtime::Engine::new("artifacts")?);
+    let engine = rdacost::runtime::engine("artifacts")?;
     let fabric = rdacost::arch::Fabric::new(rdacost::arch::FabricConfig::default());
     let cfg = rdacost::data::GenConfig { total: 0, ..Default::default() };
     let mut rng = rdacost::util::rng::Rng::new(1);

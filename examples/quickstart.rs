@@ -3,21 +3,18 @@
 //! 1. Build a fabric and a workload DFG.
 //! 2. Place + route it with the heuristic-guided annealer.
 //! 3. Measure the result with the throughput simulator.
-//! 4. Load the AOT GNN artifacts and score the same decision with the
-//!    learned cost model (fresh random parameters here — see
+//! 4. Score the same decision with the learned cost model on the session's
+//!    inference backend (fresh random parameters here — see
 //!    `examples/dataset_and_train.rs` for actual training).
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` once).
-
-use std::sync::Arc;
+//! (no artifacts needed: the native backend is the default).
 
 use rdacost::arch::{Era, Fabric, FabricConfig};
 use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
 use rdacost::dfg::builders;
 use rdacost::placer::{anneal, AnnealParams, Objective};
 use rdacost::router::route_all;
-use rdacost::runtime::Engine;
 use rdacost::sim;
 use rdacost::train::{TrainConfig, Trainer};
 use rdacost::util::rng::Rng;
@@ -66,7 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. Score the same decision with the learned cost model (untrained
     //    parameters — demo of the serving path only).
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = rdacost::runtime::engine("artifacts")?;
     let trainer = Trainer::new(engine.clone(), TrainConfig::default())?;
     let mut learned = LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default())?;
     let pred = learned.score(&graph, &fabric, &placement, &routing);

@@ -3,12 +3,11 @@
 //!
 //! Spawns N annealer-like clients that each encode random PnR decisions and
 //! submit them for scoring; the dispatcher groups by bucket, pads to the
-//! AOT batch size, and executes one PJRT call per batch. Prints throughput
+//! batch size, and executes one backend call per batch. Prints throughput
 //! and batch occupancy.
 //!
 //! Run: `cargo run --release --example scoring_service -- --clients 4 --requests 128`
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use rdacost::arch::{Fabric, FabricConfig};
@@ -19,7 +18,6 @@ use rdacost::dfg::WorkloadFamily;
 use rdacost::gnn;
 use rdacost::placer::random_placement;
 use rdacost::router::route_all;
-use rdacost::runtime::Engine;
 use rdacost::train::{TrainConfig, Trainer};
 use rdacost::util::cli::Args;
 use rdacost::util::rng::Rng;
@@ -29,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 128);
 
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = rdacost::runtime::engine("artifacts")?;
     let trainer = Trainer::new(engine.clone(), TrainConfig::default())?;
     let service = ScoringService::start(
         engine,

@@ -1,8 +1,7 @@
-//! Learned-cost-model scoring benchmarks against the real AOT artifacts:
-//! single-graph PJRT dispatch (the annealer path), batched inference (the
-//! evaluation path), and one fused train step. Requires `make artifacts`.
-
-use std::sync::Arc;
+//! Learned-cost-model scoring benchmarks: single-graph dispatch (the
+//! annealer path), batched inference (the evaluation path), and one fused
+//! train step, on the session's backend (native by default; PJRT when built
+//! with `--features pjrt` over real artifacts).
 
 use rdacost::arch::{Fabric, FabricConfig};
 use rdacost::cost::{Ablation, LearnedCost};
@@ -10,14 +9,13 @@ use rdacost::dfg::builders;
 use rdacost::gnn::{self, GraphTensors};
 use rdacost::placer::{random_placement, Objective};
 use rdacost::router::route_all;
-use rdacost::runtime::Engine;
 use rdacost::train::{TrainConfig, Trainer};
 use rdacost::util::bench::{black_box, Bencher};
 use rdacost::util::rng::Rng;
 
 fn main() {
     let mut b = Bencher::new();
-    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
+    let engine = rdacost::runtime::engine("artifacts").expect("initializing backend");
     let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
     let store = trainer.param_store();
     let mut learned =

@@ -11,9 +11,10 @@
 //!
 //! Requests carry encoded [`GraphTensors`]; replies are the predicted
 //! normalized throughput. The dispatcher flushes a bucket's queue when it
-//! reaches the AOT batch size or when the oldest request exceeds
+//! reaches the configured batch size or when the oldest request exceeds
 //! `max_wait` — the same size-or-deadline policy production inference
-//! routers use.
+//! routers use. The dispatcher drives whichever [`Engine`] backend the
+//! session holds (native pure-Rust by default, PJRT behind the feature).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,7 +24,6 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::cost::learned::infer_artifact;
 use crate::cost::Ablation;
 use crate::gnn::{self, Bucket, GraphTensors};
 use crate::runtime::{Engine, Tensor};
@@ -83,7 +83,8 @@ pub struct ScoringService {
 }
 
 impl ScoringService {
-    /// Start the dispatcher. `batch` must match an AOT infer batch size (32).
+    /// Start the dispatcher. On the PJRT backend `batch` must match an AOT
+    /// infer batch size (32); the native backend takes any batch size.
     pub fn start(
         engine: Arc<Engine>,
         params: &ParamStore,
@@ -91,7 +92,7 @@ impl ScoringService {
         batch: usize,
         max_wait: Duration,
     ) -> Result<ScoringService> {
-        gnn::schema::check_manifest(engine.manifest())?;
+        params.matches_specs(engine.param_specs())?;
         let (tx, rx) = mpsc::channel::<Request>();
         let stats = Arc::new(ServiceStats::default());
         let stats2 = stats.clone();
@@ -188,11 +189,10 @@ fn execute_batch(
     for chunk in requests.chunks(batch) {
         let graphs: Vec<&GraphTensors> = chunk.iter().map(|r| &r.graph).collect();
         let result = (|| -> Result<Vec<f64>> {
-            let exe = engine.load(&infer_artifact(bucket, batch))?;
             let mut inputs = params.to_vec();
             inputs.extend(gnn::stack_batch(&graphs, bucket, batch)?);
             inputs.push(gnn::flags_tensor(ablation.flags()));
-            let out = exe.run(&inputs)?;
+            let out = engine.infer(bucket, batch, &inputs)?;
             Ok(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64).collect())
         })();
         match result {

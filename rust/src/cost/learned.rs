@@ -1,11 +1,12 @@
 //! The learned (GNN) cost model — the paper's contribution, on the Rust hot
 //! path.
 //!
-//! Wraps the AOT-compiled GNN regressor: encode the PnR decision into padded
-//! tensors ([`crate::gnn`]), pick the bucket executable, prepend the trained
-//! parameters, execute on PJRT, return the predicted normalized throughput.
-//! Scratch buffers and compiled executables are cached per bucket, so the
-//! annealer's scoring loop is allocation-light and python-free.
+//! Encodes the PnR decision into padded tensors ([`crate::gnn`]), then runs
+//! the GNN regressor through the session's [`crate::runtime::Engine`]
+//! backend (native pure-Rust by default; AOT/PJRT behind the `pjrt`
+//! feature) and returns the predicted normalized throughput. Per-bucket
+//! scratch encodings are cached so the annealer's scoring loop is
+//! allocation-light, and entirely python-free on every backend.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -17,7 +18,7 @@ use crate::dfg::Dfg;
 use crate::gnn::{self, Bucket, GraphTensors};
 use crate::placer::{Objective, Placement};
 use crate::router::Routing;
-use crate::runtime::{Engine, Executable, Tensor};
+use crate::runtime::{Engine, Tensor};
 use crate::train::ParamStore;
 
 /// Ablation switches (Table III + the annotation-removal claim). All-on is
@@ -48,52 +49,44 @@ impl Ablation {
 /// The learned cost model.
 pub struct LearnedCost {
     engine: Arc<Engine>,
-    params: Vec<Tensor>,
-    /// Parameters pre-uploaded to device (uploaded once; reused by every
-    /// scoring call — §Perf: removes ~0.5 MB of host→device traffic per
-    /// call from the annealer's hot loop).
-    param_buffers: Vec<xla::PjRtBuffer>,
+    /// Reusable flat call buffer whose prefix is the parameter set (built
+    /// once at construction); per-call batch tensors are truncated away and
+    /// re-appended behind it, so the annealer's scoring loop never re-clones
+    /// the ~220 KB of parameters.
+    inputs: Vec<Tensor>,
+    n_params: usize,
     ablation: Ablation,
-    /// Per-bucket B=1 executable + reusable encode buffer.
-    per_bucket: HashMap<String, (Arc<Executable>, GraphTensors)>,
+    /// Per-bucket reusable encode buffer (annealer hot path).
+    scratch: HashMap<String, GraphTensors>,
     /// Scoring calls served (perf accounting).
     pub evaluations: u64,
 }
 
 impl LearnedCost {
     /// Load from a trained checkpoint; validates the parameter list against
-    /// the manifest and the feature schema against python's.
+    /// the backend's schema.
     pub fn load(engine: Arc<Engine>, checkpoint: &std::path::Path) -> Result<LearnedCost> {
-        gnn::schema::check_manifest(engine.manifest())?;
         let store = ParamStore::load(checkpoint)?;
         Self::from_store(engine, &store, Ablation::default())
     }
 
     /// Build from an in-memory parameter store (used right after training).
-    pub fn from_store(engine: Arc<Engine>, store: &ParamStore, ablation: Ablation) -> Result<LearnedCost> {
-        gnn::schema::check_manifest(engine.manifest())?;
-        // Validate against the first bucket's infer artifact: params precede
-        // the 8 batch tensors + flags in the input list.
-        let name = infer_artifact(gnn::BUCKETS[0], 1);
-        let spec = engine.manifest().find(&name)?;
-        let n_params = spec.inputs.len() - 9;
+    pub fn from_store(
+        engine: Arc<Engine>,
+        store: &ParamStore,
+        ablation: Ablation,
+    ) -> Result<LearnedCost> {
         store
-            .matches_specs(&spec.inputs[..n_params])
-            .context("checkpoint does not match artifacts (re-run `make artifacts`?)")?;
-        // Pre-upload the parameters once (input buffers are not donated by
-        // PJRT execute, so they stay valid across calls).
-        let exe0 = engine.load(&name)?;
-        let params = store.values();
-        let param_buffers = params
-            .iter()
-            .map(|t| exe0.upload_one(t))
-            .collect::<Result<Vec<_>>>()?;
+            .matches_specs(engine.param_specs())
+            .context("checkpoint does not match the inference backend's parameter schema")?;
+        let inputs = store.values();
+        let n_params = inputs.len();
         Ok(LearnedCost {
             engine,
-            params,
-            param_buffers,
+            inputs,
+            n_params,
             ablation,
-            per_bucket: HashMap::new(),
+            scratch: HashMap::new(),
             evaluations: 0,
         })
     }
@@ -102,57 +95,46 @@ impl LearnedCost {
         self.ablation = ablation;
     }
 
-    /// Predict for one already-encoded graph. Only the batch tensors +
-    /// flags are uploaded per call; parameters ride the pre-uploaded
-    /// buffers.
+    /// Predict for one already-encoded graph.
     pub fn predict_encoded(&mut self, g: &GraphTensors) -> Result<f64> {
-        let exe = self.executable(g.bucket)?;
-        let mut fresh = Vec::with_capacity(9);
-        for t in gnn::stack_batch(&[g], g.bucket, 1)? {
-            fresh.push(exe.upload_one(&t)?);
-        }
-        fresh.push(exe.upload_one(&gnn::flags_tensor(self.ablation.flags()))?);
-        let all: Vec<&xla::PjRtBuffer> =
-            self.param_buffers.iter().chain(fresh.iter()).collect();
-        let out = exe.run_buffers(&all)?;
+        self.inputs.truncate(self.n_params);
+        let batch_tensors = gnn::stack_batch(&[g], g.bucket, 1)?;
+        self.inputs.extend(batch_tensors);
+        self.inputs.push(gnn::flags_tensor(self.ablation.flags()));
+        let out = self.engine.infer(g.bucket, 1, &self.inputs)?;
         self.evaluations += 1;
         Ok(out[0].as_f32()?[0] as f64)
     }
 
-    /// Predict a batch of encoded graphs (same bucket) with a batch-B
-    /// artifact; used by evaluation harnesses.
+    /// Predict a batch of encoded graphs (same bucket), chunked to the
+    /// backend batch size; used by evaluation harnesses and the service.
     pub fn predict_batch(&mut self, graphs: &[&GraphTensors], batch: usize) -> Result<Vec<f64>> {
         if graphs.is_empty() {
             return Ok(Vec::new());
         }
         let bucket = graphs[0].bucket;
-        let name = infer_artifact(bucket, batch);
-        let exe = self.engine.load(&name)?;
         let mut preds = Vec::with_capacity(graphs.len());
         for chunk in graphs.chunks(batch) {
-            let mut inputs = self.params.clone();
-            inputs.extend(gnn::stack_batch(chunk, bucket, batch)?);
-            inputs.push(gnn::flags_tensor(self.ablation.flags()));
-            let out = exe.run(&inputs)?;
+            self.inputs.truncate(self.n_params);
+            let batch_tensors = gnn::stack_batch(chunk, bucket, batch)?;
+            self.inputs.extend(batch_tensors);
+            self.inputs.push(gnn::flags_tensor(self.ablation.flags()));
+            let out = self.engine.infer(bucket, batch, &self.inputs)?;
             self.evaluations += 1;
             preds.extend(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64));
         }
         Ok(preds)
     }
 
-    fn executable(&mut self, bucket: Bucket) -> Result<Arc<Executable>> {
-        let key = bucket.tag();
-        if let Some((exe, _)) = self.per_bucket.get(&key) {
-            return Ok(exe.clone());
-        }
-        let exe = self.engine.load(&infer_artifact(bucket, 1))?;
-        self.per_bucket
-            .insert(key.clone(), (exe.clone(), GraphTensors::zeroed(bucket)));
-        Ok(exe)
+    fn scratch_for(&mut self, bucket: Bucket) -> GraphTensors {
+        self.scratch
+            .remove(&bucket.tag())
+            .unwrap_or_else(|| GraphTensors::zeroed(bucket))
     }
 }
 
-/// Artifact naming convention shared with `python/compile/aot.py`.
+/// Artifact naming convention shared with `python/compile/aot.py` (used by
+/// the PJRT backend; kept here so the names live next to the model).
 pub fn infer_artifact(bucket: Bucket, batch: usize) -> String {
     format!("gnn_infer_b{batch}_{}", bucket.tag())
 }
@@ -168,22 +150,12 @@ impl Objective for LearnedCost {
             Ok(b) => b,
             Err(_) => return 0.0,
         };
-        // Ensure executable + scratch exist, then encode into the scratch.
-        if self.executable(bucket).is_err() {
-            return 0.0;
-        }
-        let key = bucket.tag();
-        let (_, mut scratch) = self
-            .per_bucket
-            .remove(&key)
-            .expect("bucket entry just inserted");
+        let mut scratch = self.scratch_for(bucket);
         let result = (|| -> Result<f64> {
             gnn::encode_into(graph, fabric, placement, routing, &mut scratch)?;
             self.predict_encoded(&scratch)
         })();
-        // Return the scratch buffer.
-        let exe = self.engine.load(&infer_artifact(bucket, 1)).expect("cached");
-        self.per_bucket.insert(key, (exe, scratch));
+        self.scratch.insert(bucket.tag(), scratch);
         result.unwrap_or(0.0)
     }
 
@@ -209,5 +181,14 @@ mod tests {
         assert_eq!(train_artifact(gnn::BUCKETS[1], 32), "gnn_train_b32_n64_e192");
     }
 
-    // Execution tests require artifacts; they live in rust/tests/.
+    #[test]
+    fn mismatched_checkpoint_is_rejected() {
+        let engine = crate::runtime::native_engine();
+        let store = ParamStore {
+            tensors: vec![("bogus".into(), Tensor::f32(&[2], vec![1.0, 2.0]))],
+        };
+        assert!(LearnedCost::from_store(engine, &store, Ablation::default()).is_err());
+    }
+
+    // End-to-end scoring tests live in rust/tests/runtime_integration.rs.
 }

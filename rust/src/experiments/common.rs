@@ -21,10 +21,8 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(cfg: RunConfig) -> Result<Ctx> {
-        let engine = Arc::new(
-            Engine::new(&cfg.artifacts_dir)
-                .context("loading artifacts (run `make artifacts`)")?,
-        );
+        let engine = crate::runtime::engine(&cfg.artifacts_dir)
+            .context("initializing the inference backend")?;
         let results_dir = std::path::PathBuf::from("results");
         std::fs::create_dir_all(&results_dir)?;
         Ok(Ctx { cfg, engine, results_dir })

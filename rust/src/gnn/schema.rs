@@ -42,6 +42,62 @@ pub const MAX_STAGES: usize = 32;
 /// (Table III rows + the abstract's annotation-removal claim).
 pub const ABLATION_FLAGS: usize = 3;
 
+/// Columns `[ANNOT_LO, ANNOT_HI)` of the node features are the
+/// "performance annotations" (log_flops, log_bytes) zeroed by the third
+/// ablation flag. Mirrors `ANNOT_SLICE` in python/compile/model.py.
+pub const ANNOT_LO: usize = UNIT_KIND_COUNT;
+pub const ANNOT_HI: usize = UNIT_KIND_COUNT + 2;
+
+// ---- model hyperparameters (mirror of python/compile/model.py) -------------
+// These fix the GNN architecture itself; the native backend builds its
+// parameter layout from them, and the PJRT manifests record python's values.
+
+/// Message-passing hidden width.
+pub const HIDDEN_DIM: usize = 64;
+/// Learnable op-type embedding width.
+pub const OP_EMB_DIM: usize = 8;
+/// Learnable stage embedding width.
+pub const STAGE_EMB_DIM: usize = 8;
+/// Number of message-passing layers (Algorithm 1's K).
+pub const NUM_LAYERS: usize = 3;
+/// Regressor-head hidden width.
+pub const HEAD_HIDDEN: usize = 32;
+
+/// Adam hyperparameters of the fused train step.
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// The ordered `(name, shape)` parameter layout — the contract between the
+/// rust `ParamStore`, both inference backends, and python's `param_specs()`
+/// in `python/compile/model.py`. Any change here must be mirrored there.
+pub fn param_specs() -> Vec<(String, Vec<usize>)> {
+    let mut specs: Vec<(String, Vec<usize>)> = vec![
+        ("op_emb".to_string(), vec![OP_TYPE_COUNT, OP_EMB_DIM]),
+        ("stage_emb".to_string(), vec![MAX_STAGES, STAGE_EMB_DIM]),
+        (
+            "node_proj_w".to_string(),
+            vec![NODE_FEAT_DIM + OP_EMB_DIM + STAGE_EMB_DIM, HIDDEN_DIM],
+        ),
+        ("node_proj_b".to_string(), vec![HIDDEN_DIM]),
+        ("edge_proj_w".to_string(), vec![EDGE_FEAT_DIM, HIDDEN_DIM]),
+        ("edge_proj_b".to_string(), vec![HIDDEN_DIM]),
+    ];
+    for k in 0..NUM_LAYERS {
+        specs.push((format!("l{k}_we"), vec![2 * HIDDEN_DIM, HIDDEN_DIM]));
+        specs.push((format!("l{k}_we_b"), vec![HIDDEN_DIM]));
+        specs.push((format!("l{k}_wv"), vec![2 * HIDDEN_DIM, HIDDEN_DIM]));
+        specs.push((format!("l{k}_wv_b"), vec![HIDDEN_DIM]));
+    }
+    specs.push(("head_w1".to_string(), vec![HIDDEN_DIM, HEAD_HIDDEN]));
+    specs.push(("head_w1_b".to_string(), vec![HEAD_HIDDEN]));
+    specs.push(("head_w2".to_string(), vec![HEAD_HIDDEN, HEAD_HIDDEN]));
+    specs.push(("head_w2_b".to_string(), vec![HEAD_HIDDEN]));
+    specs.push(("head_w3".to_string(), vec![HEAD_HIDDEN, 1]));
+    specs.push(("head_w3_b".to_string(), vec![1]));
+    specs
+}
+
 /// Log-scale normalizer for flops/bytes features.
 pub const LOG_SCALE: f32 = 20.0;
 
@@ -80,5 +136,23 @@ mod tests {
         assert_eq!(NODE_FEAT_DIM, UNIT_KIND_COUNT + NODE_SCALAR_COUNT);
         assert!(OP_TYPE_COUNT >= 14);
         assert!(MAX_STAGES >= 8);
+        assert!(ANNOT_LO < ANNOT_HI && ANNOT_HI <= NODE_FEAT_DIM);
+    }
+
+    #[test]
+    fn param_specs_mirror_python_layout() {
+        let specs = param_specs();
+        // 6 embed/proj + 4 per layer + 6 head tensors.
+        assert_eq!(specs.len(), 6 + 4 * NUM_LAYERS + 6);
+        assert_eq!(specs[0].0, "op_emb");
+        assert_eq!(specs[0].1, vec![OP_TYPE_COUNT, OP_EMB_DIM]);
+        assert_eq!(specs[2].1, vec![NODE_FEAT_DIM + OP_EMB_DIM + STAGE_EMB_DIM, HIDDEN_DIM]);
+        assert_eq!(specs[6].0, "l0_we");
+        assert_eq!(specs[6].1, vec![2 * HIDDEN_DIM, HIDDEN_DIM]);
+        assert_eq!(specs.last().unwrap().0, "head_w3_b");
+        assert_eq!(specs.last().unwrap().1, vec![1]);
+        // Total trainable elements stay in the "retrain within hours" regime.
+        let total: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert!(total > 10_000 && total < 200_000, "param count {total}");
     }
 }

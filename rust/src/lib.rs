@@ -16,6 +16,18 @@
 //!   orchestration, batched scoring service, end-to-end compile driver, and
 //!   the experiment harnesses regenerating every paper table/figure.
 
+// Stylistic lints the in-tree substrate intentionally trips (kernel-style
+// index loops in the native backend, small argument-heavy builders, and the
+// minimal vendored JSON model); correctness lints stay on.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_range_contains,
+    clippy::inherent_to_string,
+    clippy::len_zero,
+    clippy::new_without_default
+)]
+
 pub mod arch;
 pub mod compiler;
 pub mod config;
@@ -41,7 +53,7 @@ rdacost — learned cost model for PnR on reconfigurable dataflow hardware
 
 USAGE: rdacost <subcommand> [options]
 
-  smoke                         load artifacts, print platform info
+  smoke                         print backend, parameter and schema info
   gen-data   [--total N] [--era past|present] [--out FILE] [--workers N]
   train      [--dataset FILE] [--epochs N] [--ckpt FILE] [--era E]
   eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
@@ -101,10 +113,25 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
 
 fn cmd_smoke(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let engine = runtime::Engine::new(&cfg.artifacts_dir)?;
-    gnn::schema::check_manifest(engine.manifest())?;
+    let engine = runtime::engine(&cfg.artifacts_dir)?;
+    // The backend's parameter layout must match the shared schema contract.
+    let want = gnn::schema::param_specs();
+    let got = engine.param_specs();
+    if got.len() != want.len() {
+        bail!("schema drift: backend has {} parameter tensors, schema {}", got.len(), want.len());
+    }
+    for ((name, shape), spec) in want.iter().zip(got) {
+        if &spec.name != name || &spec.shape != shape {
+            bail!(
+                "schema drift: backend parameter {} {:?} vs schema {name} {shape:?}",
+                spec.name,
+                spec.shape
+            );
+        }
+    }
+    let elements: usize = got.iter().map(|s| s.shape.iter().product::<usize>()).sum();
     println!("platform: {}", engine.platform());
-    println!("artifacts: {}", engine.manifest().artifacts.len());
+    println!("parameters: {} tensors / {elements} elements", got.len());
     println!("schema: OK");
     Ok(())
 }
@@ -130,7 +157,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt").to_string();
     let ds = data::load_dataset(ds_path)?;
-    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let engine = runtime::engine(&cfg.artifacts_dir)?;
     let mut tc = cfg.train.clone();
     tc.log_every = 5;
     let mut trainer = train::Trainer::new(engine, tc)?;
@@ -152,7 +179,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
     let ds = data::load_dataset(ds_path)?;
-    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let engine = runtime::engine(&cfg.artifacts_dir)?;
     let store = train::ParamStore::load(ckpt)?;
     let trainer = train::Trainer::new(engine, cfg.train.clone())?.with_params(&store)?;
     let all: Vec<usize> = (0..ds.len()).collect();
@@ -215,7 +242,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
             compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
         }
         "learned" => {
-            let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+            let engine = runtime::engine(&cfg.artifacts_dir)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
             let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
             compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
@@ -275,7 +302,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 64);
-    let engine = std::sync::Arc::new(runtime::Engine::new(&cfg.artifacts_dir)?);
+    let engine = runtime::engine(&cfg.artifacts_dir)?;
     let trainer = train::Trainer::new(engine.clone(), cfg.train.clone())?;
     let store = trainer.param_store();
     let service = coordinator::ScoringService::start(

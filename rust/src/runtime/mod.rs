@@ -1,22 +1,108 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Pluggable inference runtime.
 //!
-//! The python build step (`make artifacts`) lowers the GNN inference and
-//! train-step functions to **HLO text** (see DESIGN.md — text, not serialized
-//! proto, because xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction
-//! ids). This module wraps the `xla` crate:
+//! The GNN cost model can execute on one of two **backends** behind the
+//! [`InferenceBackend`] trait; everything above this module (the learned
+//! cost model, the trainer, the batched scoring service) is backend-agnostic
+//! and talks to a `dyn` [`Engine`]:
 //!
-//! ```text
-//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
-//!     -> client.compile (cached) -> executable.execute
-//! ```
+//! * [`NativeEngine`] (default) — the forward pass and fused train step
+//!   implemented directly in Rust ([`native`]). No python, no libxla, no
+//!   artifacts directory: the parameter layout comes from
+//!   [`crate::gnn::schema::param_specs`], the shared contract with
+//!   `python/compile/model.py`.
+//! * `PjrtEngine` (cargo feature `pjrt`, off by default) — loads the
+//!   AOT-lowered HLO-text artifacts produced by `python/compile/aot.py` and
+//!   executes them through the `xla` PJRT bridge. The offline build vendors
+//!   a typecheck-only stub of that bridge (`rust/vendor/xla`); deployments
+//!   with real bindings swap the path dependency.
 //!
-//! Python never runs at this point: after `make artifacts` the rust binary is
-//! self-contained.
+//! [`engine`] picks the backend: PJRT when the feature is compiled in *and*
+//! an `artifacts/manifest.json` exists, native otherwise.
 
-mod engine;
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 mod tensor;
 
-pub use engine::{Engine, Executable};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::gnn::Bucket;
+
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
 pub use tensor::{Dtype, Tensor};
+
+/// A backend that can run the GNN's two entry points. Implementations must
+/// be shareable across threads (the scoring service's dispatcher and the
+/// dataset workers hold the same engine).
+pub trait InferenceBackend: Send + Sync {
+    /// Human-readable backend/platform tag (e.g. `"native-cpu"`).
+    fn platform(&self) -> String;
+
+    /// The ordered parameter layout this backend expects — the contract
+    /// validated against [`crate::train::ParamStore`] checkpoints.
+    fn param_specs(&self) -> &[TensorSpec];
+
+    /// Batched forward pass. `inputs` is the flat artifact calling
+    /// convention: parameters, then the 8 stacked batch tensors
+    /// ([`crate::gnn::stack_batch`] order), then the ablation-flags tensor.
+    /// Returns `[predictions f32[batch]]`.
+    fn infer(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// One fused train step (forward, weighted-MSE backward, Adam).
+    /// `inputs` = parameters, Adam m, Adam v, step scalar, the 8 batch
+    /// tensors, labels, sample weights, flags, learning rate. Returns new
+    /// parameters, new m, new v, new step, loss — the same layout as
+    /// python's `train_step_flat`.
+    fn train_step(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// The engine type consumers hold: a shared trait object.
+pub type Engine = dyn InferenceBackend;
+
+/// Construct the default backend for this build.
+///
+/// With the `pjrt` feature compiled in and `artifacts_dir/manifest.json`
+/// present, returns the PJRT engine over those artifacts; otherwise the
+/// pure-Rust native engine (which ignores `artifacts_dir`).
+pub fn engine(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Engine>> {
+    let dir = artifacts_dir.as_ref();
+    #[cfg(feature = "pjrt")]
+    if dir.join("manifest.json").exists() {
+        return Ok(Arc::new(pjrt::PjrtEngine::new(dir)?));
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = dir;
+    Ok(native_engine())
+}
+
+/// The pure-Rust backend, unconditionally.
+pub fn native_engine() -> Arc<Engine> {
+    Arc::new(NativeEngine::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_engine_is_native_without_pjrt() {
+        let e = engine("definitely/not/a/real/artifacts/dir").unwrap();
+        assert_eq!(e.platform(), "native-cpu");
+        assert_eq!(e.param_specs().len(), crate::gnn::schema::param_specs().len());
+    }
+
+    #[test]
+    fn engine_is_object_safe_and_shareable() {
+        fn takes_engine(e: Arc<Engine>) -> String {
+            e.platform()
+        }
+        assert_eq!(takes_engine(native_engine()), "native-cpu");
+    }
+}

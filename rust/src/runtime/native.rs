@@ -1,0 +1,1079 @@
+//! The **native** inference backend: the GNN forward pass (and fused
+//! train step) implemented directly in Rust.
+//!
+//! This mirrors `python/compile/model.py` + `python/compile/kernels/ref.py`
+//! against the shared [`crate::gnn::schema`]:
+//!
+//! * node embedding: `x_v = [node_feat (annotations gated), op_emb[type],
+//!   stage_emb[stage]]`, projected + ReLU;
+//! * edge embedding: route features projected + ReLU (static across layers);
+//! * `NUM_LAYERS` message-passing layers with **elementwise-max scatter**
+//!   aggregation over both edge directions (Algorithm 1 lines 7-11, the
+//!   GraphSAGE-pool reading — messages are ReLU'd so the zero baseline is
+//!   exact on padding);
+//! * masked mean pool, 3-layer MLP head, sigmoid output in (0, 1).
+//!
+//! The train step is the same fused contract as the AOT artifact: weighted
+//! MSE, full hand-written backward (the max-scatter backprop routes each
+//! gradient to its argmax message), and an Adam update — one call returns
+//! `(params', m', v', step', loss)` exactly like `train_step_flat` in
+//! python.
+//!
+//! Zero-masked rows (bucket padding) are skipped entirely, which is exact —
+//! their activations are zero by construction — so the *compute* per
+//! scoring call is proportional to live graph size. (The tape buffers are
+//! still allocated at bucket size; inference currently reuses the training
+//! forward and so pays for tape storage it does not read — an acceptable
+//! few-percent overhead at these sizes, and a known optimization site.)
+
+use anyhow::{bail, Result};
+
+use crate::gnn::schema::{
+    self, ABLATION_FLAGS, ADAM_B1, ADAM_B2, ADAM_EPS, ANNOT_HI, ANNOT_LO, EDGE_FEAT_DIM,
+    HEAD_HIDDEN, HIDDEN_DIM, MAX_STAGES, NODE_FEAT_DIM, NUM_LAYERS, OP_EMB_DIM, OP_TYPE_COUNT,
+    STAGE_EMB_DIM,
+};
+use crate::gnn::Bucket;
+
+use super::tensor::{Dtype, Tensor};
+use super::{InferenceBackend, TensorSpec};
+
+const H: usize = HIDDEN_DIM;
+const HH: usize = HEAD_HIDDEN;
+const XV: usize = NODE_FEAT_DIM + OP_EMB_DIM + STAGE_EMB_DIM;
+
+// Parameter positions in the flat list (see schema::param_specs()).
+const P_OP_EMB: usize = 0;
+const P_STAGE_EMB: usize = 1;
+const P_NODE_W: usize = 2;
+const P_NODE_B: usize = 3;
+const P_EDGE_W: usize = 4;
+const P_EDGE_B: usize = 5;
+const P_LAYER0: usize = 6;
+const P_HEAD_W1: usize = P_LAYER0 + 4 * NUM_LAYERS;
+const P_HEAD_B1: usize = P_HEAD_W1 + 1;
+const P_HEAD_W2: usize = P_HEAD_W1 + 2;
+const P_HEAD_B2: usize = P_HEAD_W1 + 3;
+const P_HEAD_W3: usize = P_HEAD_W1 + 4;
+const P_HEAD_B3: usize = P_HEAD_W1 + 5;
+const NUM_PARAMS: usize = P_HEAD_B3 + 1;
+
+/// The pure-Rust backend. Stateless besides the parameter layout; safe to
+/// share across threads.
+pub struct NativeEngine {
+    specs: Vec<TensorSpec>,
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        let specs = schema::param_specs()
+            .into_iter()
+            .map(|(name, shape)| TensorSpec { name, dtype: Dtype::F32, shape })
+            .collect();
+        NativeEngine { specs }
+    }
+
+    fn check_params<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
+        if params.len() != NUM_PARAMS {
+            bail!("native backend: expected {NUM_PARAMS} parameter tensors, got {}", params.len());
+        }
+        let mut out = Vec::with_capacity(NUM_PARAMS);
+        for (spec, t) in self.specs.iter().zip(params) {
+            if !spec.matches(t) {
+                bail!(
+                    "native backend: parameter {} expects shape {:?}, got {:?}",
+                    spec.name,
+                    spec.shape,
+                    t.shape()
+                );
+            }
+            out.push(t.as_f32()?);
+        }
+        Ok(out)
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InferenceBackend for NativeEngine {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn param_specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    fn infer(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != NUM_PARAMS + 9 {
+            bail!(
+                "native infer: expected {} inputs (params + 8 batch tensors + flags), got {}",
+                NUM_PARAMS + 9,
+                inputs.len()
+            );
+        }
+        let p = self.check_params(&inputs[..NUM_PARAMS])?;
+        let t8 = &inputs[NUM_PARAMS..NUM_PARAMS + 8];
+        check_batch_tensors(bucket, batch, t8)?;
+        let flags = read_flags(&inputs[NUM_PARAMS + 8])?;
+        let mut preds = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let g = GraphView::slice(t8, bucket, b)?;
+            let tape = forward(&p, &g, flags);
+            preds.push(tape.pred);
+        }
+        Ok(vec![Tensor::f32(&[batch], preds)])
+    }
+
+    fn train_step(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let want = 3 * NUM_PARAMS + 13;
+        if inputs.len() != want {
+            bail!("native train step: expected {want} inputs, got {}", inputs.len());
+        }
+        let p = self.check_params(&inputs[..NUM_PARAMS])?;
+        let adam_m = &inputs[NUM_PARAMS..2 * NUM_PARAMS];
+        let adam_v = &inputs[2 * NUM_PARAMS..3 * NUM_PARAMS];
+        // Optimizer state must be parameter-shaped too (same contract as the
+        // params themselves — a stale resume otherwise panics mid-update).
+        for (what, group) in [("adam m", adam_m), ("adam v", adam_v)] {
+            for (spec, t) in self.specs.iter().zip(group) {
+                if t.dtype() != Dtype::F32 || t.shape() != spec.shape.as_slice() {
+                    bail!(
+                        "native train step: {what} tensor {} expects shape {:?}, got {:?}",
+                        spec.name,
+                        spec.shape,
+                        t.shape()
+                    );
+                }
+            }
+        }
+        let step = scalar(&inputs[3 * NUM_PARAMS], "step")?;
+        let t8 = &inputs[3 * NUM_PARAMS + 1..3 * NUM_PARAMS + 9];
+        check_batch_tensors(bucket, batch, t8)?;
+        let labels = inputs[3 * NUM_PARAMS + 9].as_f32()?;
+        let weights = inputs[3 * NUM_PARAMS + 10].as_f32()?;
+        if labels.len() != batch || weights.len() != batch {
+            bail!("native train step: labels/weights must have length {batch}");
+        }
+        let flags = read_flags(&inputs[3 * NUM_PARAMS + 11])?;
+        let lr = scalar(&inputs[3 * NUM_PARAMS + 12], "lr")?;
+
+        let (loss, grads) = loss_and_grads(&p, bucket, batch, t8, labels, weights, flags)?;
+
+        // Adam, exactly as python's train_step: bias correction uses the
+        // incremented step count.
+        let new_step = step + 1.0;
+        let b1c = 1.0 - ADAM_B1.powf(new_step);
+        let b2c = 1.0 - ADAM_B2.powf(new_step);
+        let mut new_params = Vec::with_capacity(NUM_PARAMS);
+        let mut new_m = Vec::with_capacity(NUM_PARAMS);
+        let mut new_v = Vec::with_capacity(NUM_PARAMS);
+        for i in 0..NUM_PARAMS {
+            let pv = p[i];
+            let mv = adam_m[i].as_f32()?;
+            let vv = adam_v[i].as_f32()?;
+            let gv = &grads[i];
+            let mut pn = Vec::with_capacity(pv.len());
+            let mut mn = Vec::with_capacity(pv.len());
+            let mut vn = Vec::with_capacity(pv.len());
+            for j in 0..pv.len() {
+                let g = gv[j];
+                let m = ADAM_B1 * mv[j] + (1.0 - ADAM_B1) * g;
+                let v = ADAM_B2 * vv[j] + (1.0 - ADAM_B2) * g * g;
+                let m_hat = m / b1c;
+                let v_hat = v / b2c;
+                pn.push(pv[j] - lr * m_hat / (v_hat.sqrt() + ADAM_EPS));
+                mn.push(m);
+                vn.push(v);
+            }
+            let shape = &self.specs[i].shape;
+            new_params.push(Tensor::f32(shape, pn));
+            new_m.push(Tensor::f32(shape, mn));
+            new_v.push(Tensor::f32(shape, vn));
+        }
+        let mut out = new_params;
+        out.extend(new_m);
+        out.extend(new_v);
+        out.push(Tensor::f32(&[], vec![new_step]));
+        out.push(Tensor::f32(&[], vec![loss]));
+        Ok(out)
+    }
+}
+
+// ---- input plumbing ---------------------------------------------------------
+
+fn scalar(t: &Tensor, what: &str) -> Result<f32> {
+    let d = t.as_f32()?;
+    if d.len() != 1 {
+        bail!("native backend: {what} must be a scalar tensor");
+    }
+    Ok(d[0])
+}
+
+fn read_flags(t: &Tensor) -> Result<[f32; ABLATION_FLAGS]> {
+    let d = t.as_f32()?;
+    if d.len() != ABLATION_FLAGS {
+        bail!("native backend: flags tensor must have {ABLATION_FLAGS} entries");
+    }
+    Ok([d[0], d[1], d[2]])
+}
+
+fn check_batch_tensors(bucket: Bucket, batch: usize, t8: &[Tensor]) -> Result<()> {
+    let (n, e) = (bucket.nodes, bucket.edges);
+    let expect: [(&str, Dtype, Vec<usize>); 8] = [
+        ("node_type", Dtype::I32, vec![batch, n]),
+        ("node_stage", Dtype::I32, vec![batch, n]),
+        ("node_feat", Dtype::F32, vec![batch, n, NODE_FEAT_DIM]),
+        ("node_mask", Dtype::F32, vec![batch, n]),
+        ("edge_src", Dtype::I32, vec![batch, e]),
+        ("edge_dst", Dtype::I32, vec![batch, e]),
+        ("edge_feat", Dtype::F32, vec![batch, e, EDGE_FEAT_DIM]),
+        ("edge_mask", Dtype::F32, vec![batch, e]),
+    ];
+    for ((name, dtype, shape), t) in expect.iter().zip(t8) {
+        if t.dtype() != *dtype || t.shape() != shape.as_slice() {
+            bail!(
+                "native backend: batch tensor {name} expects {} {:?}, got {} {:?}",
+                dtype.name(),
+                shape,
+                t.dtype().name(),
+                t.shape()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Borrowed view of one graph inside the stacked batch tensors.
+struct GraphView<'a> {
+    n: usize,
+    e: usize,
+    node_type: &'a [i32],
+    node_stage: &'a [i32],
+    node_feat: &'a [f32],
+    node_mask: &'a [f32],
+    edge_src: &'a [i32],
+    edge_dst: &'a [i32],
+    edge_feat: &'a [f32],
+    edge_mask: &'a [f32],
+}
+
+impl<'a> GraphView<'a> {
+    fn slice(t8: &'a [Tensor], bucket: Bucket, b: usize) -> Result<GraphView<'a>> {
+        let (n, e) = (bucket.nodes, bucket.edges);
+        Ok(GraphView {
+            n,
+            e,
+            node_type: &t8[0].as_i32()?[b * n..(b + 1) * n],
+            node_stage: &t8[1].as_i32()?[b * n..(b + 1) * n],
+            node_feat: &t8[2].as_f32()?[b * n * NODE_FEAT_DIM..(b + 1) * n * NODE_FEAT_DIM],
+            node_mask: &t8[3].as_f32()?[b * n..(b + 1) * n],
+            edge_src: &t8[4].as_i32()?[b * e..(b + 1) * e],
+            edge_dst: &t8[5].as_i32()?[b * e..(b + 1) * e],
+            edge_feat: &t8[6].as_f32()?[b * e * EDGE_FEAT_DIM..(b + 1) * e * EDGE_FEAT_DIM],
+            edge_mask: &t8[7].as_f32()?[b * e..(b + 1) * e],
+        })
+    }
+
+    fn op_type(&self, v: usize) -> usize {
+        (self.node_type[v].max(0) as usize).min(OP_TYPE_COUNT - 1)
+    }
+
+    fn stage(&self, v: usize) -> usize {
+        (self.node_stage[v].max(0) as usize).min(MAX_STAGES - 1)
+    }
+}
+
+// ---- forward ----------------------------------------------------------------
+
+/// Everything the backward pass needs from one forward evaluation.
+struct Tape {
+    live_nodes: Vec<usize>,
+    live_edges: Vec<usize>,
+    /// `[N, XV]` node embedding inputs (annotation/embedding gating applied).
+    xv: Vec<f32>,
+    /// `[E, H]` static edge embeddings (post-ReLU, post-mask).
+    h_e: Vec<f32>,
+    /// `NUM_LAYERS + 1` node states `[N, H]`; `hs[0]` is the projected
+    /// input, `hs[k+1]` the output of layer `k`.
+    hs: Vec<Vec<f32>>,
+    /// Per layer: `[2E, H]` messages (fwd at `2e`, bwd at `2e+1`).
+    msgs: Vec<Vec<f32>>,
+    /// Per layer: `[N, H]` max-aggregated neighborhoods.
+    ss: Vec<Vec<f32>>,
+    /// Per layer: `[N, H]` winning message index (`-1` = zero baseline won).
+    winners: Vec<Vec<i32>>,
+    /// Masked-mean-pool denominator.
+    denom: f32,
+    hg: Vec<f32>,
+    z1: Vec<f32>,
+    z2: Vec<f32>,
+    pred: f32,
+}
+
+/// `out[c] += x @ w[row_off..]` for one input coordinate.
+#[inline]
+fn axpy_row(out: &mut [f32], x: f32, w: &[f32], row: usize) {
+    if x != 0.0 {
+        let r = &w[row * H..(row + 1) * H];
+        for c in 0..H {
+            out[c] += x * r[c];
+        }
+    }
+}
+
+fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tape {
+    let (use_node, use_edge, use_annot) = (flags[0], flags[1], flags[2]);
+    let (n, e) = (g.n, g.e);
+    let live_nodes: Vec<usize> = (0..n).filter(|&v| g.node_mask[v] != 0.0).collect();
+    let live_edges: Vec<usize> = (0..e).filter(|&ei| g.edge_mask[ei] != 0.0).collect();
+
+    // Node embedding + projection: h0 = relu(x_v @ W + b) * mask.
+    let mut xv = vec![0.0f32; n * XV];
+    let mut h0 = vec![0.0f32; n * H];
+    for &v in &live_nodes {
+        let x = &mut xv[v * XV..(v + 1) * XV];
+        for d in 0..NODE_FEAT_DIM {
+            let mut f = g.node_feat[v * NODE_FEAT_DIM + d];
+            if (ANNOT_LO..ANNOT_HI).contains(&d) {
+                f *= use_annot;
+            }
+            x[d] = f;
+        }
+        let (t, s) = (g.op_type(v), g.stage(v));
+        for d in 0..OP_EMB_DIM {
+            x[NODE_FEAT_DIM + d] = p[P_OP_EMB][t * OP_EMB_DIM + d] * use_node;
+        }
+        for d in 0..STAGE_EMB_DIM {
+            x[NODE_FEAT_DIM + OP_EMB_DIM + d] = p[P_STAGE_EMB][s * STAGE_EMB_DIM + d] * use_node;
+        }
+        let out = &mut h0[v * H..(v + 1) * H];
+        out.copy_from_slice(p[P_NODE_B]);
+        for i in 0..XV {
+            axpy_row(out, x[i], p[P_NODE_W], i);
+        }
+        let m = g.node_mask[v];
+        for c in 0..H {
+            out[c] = out[c].max(0.0) * m;
+        }
+    }
+
+    // Edge embedding: h_e = relu((edge_feat * use_edge) @ W + b) * mask.
+    let mut h_e = vec![0.0f32; e * H];
+    for &ei in &live_edges {
+        let out = &mut h_e[ei * H..(ei + 1) * H];
+        out.copy_from_slice(p[P_EDGE_B]);
+        for i in 0..EDGE_FEAT_DIM {
+            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
+        }
+        let m = g.edge_mask[ei];
+        for c in 0..H {
+            out[c] = out[c].max(0.0) * m;
+        }
+    }
+
+    // Message-passing layers.
+    let mut hs: Vec<Vec<f32>> = Vec::with_capacity(NUM_LAYERS + 1);
+    hs.push(h0);
+    let mut msgs = Vec::with_capacity(NUM_LAYERS);
+    let mut ss = Vec::with_capacity(NUM_LAYERS);
+    let mut winners = Vec::with_capacity(NUM_LAYERS);
+    for k in 0..NUM_LAYERS {
+        let we = p[P_LAYER0 + 4 * k];
+        let web = p[P_LAYER0 + 4 * k + 1];
+        let wv = p[P_LAYER0 + 4 * k + 2];
+        let wvb = p[P_LAYER0 + 4 * k + 3];
+        let h = &hs[k];
+
+        // Per-edge messages in both directions, masked.
+        let mut msg = vec![0.0f32; 2 * e * H];
+        for &ei in &live_edges {
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            let em = g.edge_mask[ei];
+            for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
+                let out = &mut msg[slot * H..(slot + 1) * H];
+                out.copy_from_slice(web);
+                for i in 0..H {
+                    axpy_row(out, h_e[ei * H + i], we, i);
+                }
+                for i in 0..H {
+                    axpy_row(out, h[nb * H + i], we, H + i);
+                }
+                for c in 0..H {
+                    out[c] = out[c].max(0.0) * em;
+                }
+            }
+        }
+
+        // Elementwise max-scatter into the endpoints (zero baseline).
+        let mut s = vec![0.0f32; n * H];
+        let mut win = vec![-1i32; n * H];
+        for &ei in &live_edges {
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            for c in 0..H {
+                let mf = msg[(2 * ei) * H + c];
+                if mf > s[dst * H + c] {
+                    s[dst * H + c] = mf;
+                    win[dst * H + c] = (2 * ei) as i32;
+                }
+                let mb = msg[(2 * ei + 1) * H + c];
+                if mb > s[src * H + c] {
+                    s[src * H + c] = mb;
+                    win[src * H + c] = (2 * ei + 1) as i32;
+                }
+            }
+        }
+
+        // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
+        let mut hn = vec![0.0f32; n * H];
+        for &v in &live_nodes {
+            let out = &mut hn[v * H..(v + 1) * H];
+            out.copy_from_slice(wvb);
+            for i in 0..H {
+                axpy_row(out, h[v * H + i], wv, i);
+            }
+            for i in 0..H {
+                axpy_row(out, s[v * H + i], wv, H + i);
+            }
+            let m = g.node_mask[v];
+            for c in 0..H {
+                out[c] = out[c].max(0.0) * m;
+            }
+        }
+
+        msgs.push(msg);
+        ss.push(s);
+        winners.push(win);
+        hs.push(hn);
+    }
+
+    // Masked mean pool.
+    let mask_sum: f32 = live_nodes.iter().map(|&v| g.node_mask[v]).sum();
+    let denom = mask_sum.max(1.0);
+    let mut hg = vec![0.0f32; H];
+    let h_last = &hs[NUM_LAYERS];
+    for &v in &live_nodes {
+        let m = g.node_mask[v];
+        for c in 0..H {
+            hg[c] += h_last[v * H + c] * m;
+        }
+    }
+    for c in 0..H {
+        hg[c] /= denom;
+    }
+
+    // Regressor head.
+    let mut z1 = p[P_HEAD_B1].to_vec();
+    for i in 0..H {
+        let x = hg[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                z1[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        z1[c] = z1[c].max(0.0);
+    }
+    let mut z2 = p[P_HEAD_B2].to_vec();
+    for i in 0..HH {
+        let x = z1[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                z2[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        z2[c] = z2[c].max(0.0);
+    }
+    let mut o = p[P_HEAD_B3][0];
+    for i in 0..HH {
+        o += z2[i] * p[P_HEAD_W3][i];
+    }
+    let pred = 1.0 / (1.0 + (-o).exp());
+
+    Tape { live_nodes, live_edges, xv, h_e, hs, msgs, ss, winners, denom, hg, z1, z2, pred }
+}
+
+// ---- backward ---------------------------------------------------------------
+
+/// Accumulate gradients for one sample; `dpred` is dLoss/dPrediction.
+fn backward(
+    p: &[&[f32]],
+    g: &GraphView<'_>,
+    flags: [f32; ABLATION_FLAGS],
+    tape: &Tape,
+    dpred: f32,
+    grads: &mut [Vec<f32>],
+) {
+    let (use_node, use_edge, _) = (flags[0], flags[1], flags[2]);
+    let n = g.n;
+    let e = g.e;
+
+    // Sigmoid.
+    let dout = dpred * tape.pred * (1.0 - tape.pred);
+
+    // Head layer 3: o = z2 @ w3 + b3.
+    grads[P_HEAD_B3][0] += dout;
+    let mut dz2 = vec![0.0f32; HH];
+    for i in 0..HH {
+        grads[P_HEAD_W3][i] += tape.z2[i] * dout;
+        dz2[i] = p[P_HEAD_W3][i] * dout;
+    }
+    // Head layer 2 (ReLU).
+    let mut dz1 = vec![0.0f32; HH];
+    for j in 0..HH {
+        let da = if tape.z2[j] > 0.0 { dz2[j] } else { 0.0 };
+        if da == 0.0 {
+            continue;
+        }
+        grads[P_HEAD_B2][j] += da;
+        for i in 0..HH {
+            grads[P_HEAD_W2][i * HH + j] += tape.z1[i] * da;
+            dz1[i] += p[P_HEAD_W2][i * HH + j] * da;
+        }
+    }
+    // Head layer 1 (ReLU).
+    let mut dhg = vec![0.0f32; H];
+    for j in 0..HH {
+        let da = if tape.z1[j] > 0.0 { dz1[j] } else { 0.0 };
+        if da == 0.0 {
+            continue;
+        }
+        grads[P_HEAD_B1][j] += da;
+        for i in 0..H {
+            grads[P_HEAD_W1][i * HH + j] += tape.hg[i] * da;
+            dhg[i] += p[P_HEAD_W1][i * HH + j] * da;
+        }
+    }
+
+    // Pool: h_g = sum(h * mask) / denom.
+    let mut dh = vec![0.0f32; n * H];
+    for &v in &tape.live_nodes {
+        let m = g.node_mask[v] / tape.denom;
+        for c in 0..H {
+            dh[v * H + c] = dhg[c] * m;
+        }
+    }
+
+    // Layers, last to first. Edge-embedding grads accumulate across layers.
+    let mut dhe = vec![0.0f32; e * H];
+    for k in (0..NUM_LAYERS).rev() {
+        let we = p[P_LAYER0 + 4 * k];
+        let wv = p[P_LAYER0 + 4 * k + 2];
+        let h_in = &tape.hs[k];
+        let h_out = &tape.hs[k + 1];
+        let s = &tape.ss[k];
+        let win = &tape.winners[k];
+        let msg = &tape.msgs[k];
+
+        let mut dh_in = vec![0.0f32; n * H];
+        let mut ds = vec![0.0f32; n * H];
+        let mut da = vec![0.0f32; H];
+        for &v in &tape.live_nodes {
+            let mut any = false;
+            for c in 0..H {
+                // h_out = relu(a) * mask, so h_out > 0 gates both.
+                da[c] = if h_out[v * H + c] > 0.0 { dh[v * H + c] } else { 0.0 };
+                any |= da[c] != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            {
+                let gb = &mut grads[P_LAYER0 + 4 * k + 3];
+                for c in 0..H {
+                    gb[c] += da[c];
+                }
+            }
+            for i in 0..H {
+                let x1 = h_in[v * H + i];
+                if x1 != 0.0 {
+                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                    let row = &mut gw[i * H..(i + 1) * H];
+                    for c in 0..H {
+                        row[c] += x1 * da[c];
+                    }
+                }
+                let x2 = s[v * H + i];
+                if x2 != 0.0 {
+                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                    let row = &mut gw[(H + i) * H..(H + i + 1) * H];
+                    for c in 0..H {
+                        row[c] += x2 * da[c];
+                    }
+                }
+            }
+            for i in 0..H {
+                let r1 = &wv[i * H..(i + 1) * H];
+                let r2 = &wv[(H + i) * H..(H + i + 1) * H];
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                for c in 0..H {
+                    acc1 += r1[c] * da[c];
+                    acc2 += r2[c] * da[c];
+                }
+                dh_in[v * H + i] += acc1;
+                ds[v * H + i] = acc2;
+            }
+        }
+
+        // Max-scatter backward: the gradient of each (node, channel) slot
+        // goes to its winning message (none if the zero baseline won).
+        let mut dmsg = vec![0.0f32; 2 * e * H];
+        for &v in &tape.live_nodes {
+            for c in 0..H {
+                let w = win[v * H + c];
+                if w >= 0 {
+                    dmsg[w as usize * H + c] += ds[v * H + c];
+                }
+            }
+        }
+
+        // Message backward: msg = relu(cat(h_e, h_nb) @ We + b) * em.
+        for &ei in &tape.live_edges {
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
+                let drow = &dmsg[slot * H..(slot + 1) * H];
+                let mrow = &msg[slot * H..(slot + 1) * H];
+                let mut any = false;
+                for c in 0..H {
+                    da[c] = if mrow[c] > 0.0 { drow[c] } else { 0.0 };
+                    any |= da[c] != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                {
+                    let gb = &mut grads[P_LAYER0 + 4 * k + 1];
+                    for c in 0..H {
+                        gb[c] += da[c];
+                    }
+                }
+                for i in 0..H {
+                    let x1 = tape.h_e[ei * H + i];
+                    if x1 != 0.0 {
+                        let gw = &mut grads[P_LAYER0 + 4 * k];
+                        let row = &mut gw[i * H..(i + 1) * H];
+                        for c in 0..H {
+                            row[c] += x1 * da[c];
+                        }
+                    }
+                    let x2 = h_in[nb * H + i];
+                    if x2 != 0.0 {
+                        let gw = &mut grads[P_LAYER0 + 4 * k];
+                        let row = &mut gw[(H + i) * H..(H + i + 1) * H];
+                        for c in 0..H {
+                            row[c] += x2 * da[c];
+                        }
+                    }
+                }
+                for i in 0..H {
+                    let r1 = &we[i * H..(i + 1) * H];
+                    let r2 = &we[(H + i) * H..(H + i + 1) * H];
+                    let mut acc1 = 0.0f32;
+                    let mut acc2 = 0.0f32;
+                    for c in 0..H {
+                        acc1 += r1[c] * da[c];
+                        acc2 += r2[c] * da[c];
+                    }
+                    dhe[ei * H + i] += acc1;
+                    dh_in[nb * H + i] += acc2;
+                }
+            }
+        }
+
+        dh = dh_in;
+    }
+
+    // Node embedding backward: h0 = relu(x_v @ W + b) * mask.
+    let mut da = vec![0.0f32; H];
+    for &v in &tape.live_nodes {
+        let h0 = &tape.hs[0][v * H..(v + 1) * H];
+        let mut any = false;
+        for c in 0..H {
+            da[c] = if h0[c] > 0.0 { dh[v * H + c] } else { 0.0 };
+            any |= da[c] != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        {
+            let gb = &mut grads[P_NODE_B];
+            for c in 0..H {
+                gb[c] += da[c];
+            }
+        }
+        for i in 0..XV {
+            let x = tape.xv[v * XV + i];
+            if x != 0.0 {
+                let gw = &mut grads[P_NODE_W];
+                let row = &mut gw[i * H..(i + 1) * H];
+                for c in 0..H {
+                    row[c] += x * da[c];
+                }
+            }
+        }
+        if use_node != 0.0 {
+            let (t, st) = (g.op_type(v), g.stage(v));
+            for d in 0..OP_EMB_DIM {
+                let i = NODE_FEAT_DIM + d;
+                let r = &p[P_NODE_W][i * H..(i + 1) * H];
+                let mut acc = 0.0f32;
+                for c in 0..H {
+                    acc += r[c] * da[c];
+                }
+                grads[P_OP_EMB][t * OP_EMB_DIM + d] += acc * use_node;
+            }
+            for d in 0..STAGE_EMB_DIM {
+                let i = NODE_FEAT_DIM + OP_EMB_DIM + d;
+                let r = &p[P_NODE_W][i * H..(i + 1) * H];
+                let mut acc = 0.0f32;
+                for c in 0..H {
+                    acc += r[c] * da[c];
+                }
+                grads[P_STAGE_EMB][st * STAGE_EMB_DIM + d] += acc * use_node;
+            }
+        }
+    }
+
+    // Edge embedding backward: h_e = relu(ef @ W + b) * em.
+    for &ei in &tape.live_edges {
+        let he = &tape.h_e[ei * H..(ei + 1) * H];
+        let mut any = false;
+        for c in 0..H {
+            da[c] = if he[c] > 0.0 { dhe[ei * H + c] } else { 0.0 };
+            any |= da[c] != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        {
+            let gb = &mut grads[P_EDGE_B];
+            for c in 0..H {
+                gb[c] += da[c];
+            }
+        }
+        for i in 0..EDGE_FEAT_DIM {
+            let x = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
+            if x != 0.0 {
+                let gw = &mut grads[P_EDGE_W];
+                let row = &mut gw[i * H..(i + 1) * H];
+                for c in 0..H {
+                    row[c] += x * da[c];
+                }
+            }
+        }
+    }
+}
+
+/// Weighted-MSE loss + parameter gradients over one stacked batch, mirroring
+/// python's `loss_fn`: `w = weights / max(sum(weights), 1)`,
+/// `loss = sum(w * (pred - label)^2)`.
+fn loss_and_grads(
+    p: &[&[f32]],
+    bucket: Bucket,
+    batch: usize,
+    t8: &[Tensor],
+    labels: &[f32],
+    weights: &[f32],
+    flags: [f32; ABLATION_FLAGS],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let norm = weights.iter().sum::<f32>().max(1.0);
+    let mut grads: Vec<Vec<f32>> = (0..NUM_PARAMS).map(|i| vec![0.0f32; p[i].len()]).collect();
+    let mut loss = 0.0f32;
+    for b in 0..batch {
+        if weights[b] == 0.0 {
+            continue;
+        }
+        let g = GraphView::slice(t8, bucket, b)?;
+        let tape = forward(p, &g, flags);
+        let w = weights[b] / norm;
+        let diff = tape.pred - labels[b];
+        loss += w * diff * diff;
+        backward(p, &g, flags, &tape, 2.0 * w * diff, &mut grads);
+    }
+    Ok((loss, grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::{flags_tensor, stack_batch, GraphTensors, BUCKETS};
+    use crate::util::rng::Rng;
+
+    /// Glorot-style init matching `Trainer::new`.
+    fn init_params(seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        schema::param_specs()
+            .into_iter()
+            .map(|(name, shape)| {
+                let count: usize = shape.iter().product();
+                let fan_in = if shape.len() >= 2 { shape[shape.len() - 2].max(1) } else { 1 };
+                let std = 1.0 / (fan_in as f64).sqrt();
+                let data: Vec<f32> = if name == "head_w3_b" {
+                    vec![-2.0; count]
+                } else if name.ends_with("_b") {
+                    vec![0.0; count]
+                } else {
+                    (0..count).map(|_| (rng.normal() * std) as f32).collect()
+                };
+                Tensor::f32(&shape, data)
+            })
+            .collect()
+    }
+
+    /// A small hand-built encoded graph with non-trivial features.
+    fn toy_graph(rng: &mut Rng, label: f32) -> GraphTensors {
+        let bucket = BUCKETS[0];
+        let mut g = GraphTensors::zeroed(bucket);
+        let live = 6;
+        for v in 0..live {
+            g.node_mask[v] = 1.0;
+            g.node_type[v] = (rng.below(OP_TYPE_COUNT)) as i32;
+            g.node_stage[v] = (rng.below(8)) as i32;
+            for d in 0..NODE_FEAT_DIM {
+                g.node_feat[v * NODE_FEAT_DIM + d] = rng.f32() * 0.8;
+            }
+        }
+        for (ei, (s, d)) in [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (1, 4)].iter().enumerate() {
+            g.edge_mask[ei] = 1.0;
+            g.edge_src[ei] = *s;
+            g.edge_dst[ei] = *d;
+            for k in 0..EDGE_FEAT_DIM {
+                g.edge_feat[ei * EDGE_FEAT_DIM + k] = rng.f32() * 0.8;
+            }
+        }
+        g.label = label;
+        g
+    }
+
+    fn infer_inputs(params: &[Tensor], graphs: &[&GraphTensors], batch: usize) -> Vec<Tensor> {
+        let mut inputs = params.to_vec();
+        inputs.extend(stack_batch(graphs, BUCKETS[0], batch).unwrap());
+        inputs.push(flags_tensor([1.0, 1.0, 1.0]));
+        inputs
+    }
+
+    #[test]
+    fn specs_match_schema() {
+        let eng = NativeEngine::new();
+        assert_eq!(eng.param_specs().len(), NUM_PARAMS);
+        for ((name, shape), spec) in schema::param_specs().iter().zip(eng.param_specs()) {
+            assert_eq!(&spec.name, name);
+            assert_eq!(&spec.shape, shape);
+        }
+        assert_eq!(eng.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_in_unit_interval() {
+        let eng = NativeEngine::new();
+        let params = init_params(7);
+        let mut rng = Rng::new(1);
+        let g = toy_graph(&mut rng, 0.5);
+        let inputs = infer_inputs(&params, &[&g], 1);
+        let out = eng.infer(BUCKETS[0], 1, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[1]);
+        let pred = out[0].as_f32().unwrap()[0];
+        assert!(pred > 0.0 && pred < 1.0, "pred {pred}");
+        let out2 = eng.infer(BUCKETS[0], 1, &inputs).unwrap();
+        assert_eq!(out[0], out2[0]);
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        // Each graph's prediction must not depend on its batch neighbors.
+        let eng = NativeEngine::new();
+        let params = init_params(7);
+        let mut rng = Rng::new(2);
+        let a = toy_graph(&mut rng, 0.1);
+        let b = toy_graph(&mut rng, 0.9);
+        let batched = eng.infer(BUCKETS[0], 4, &infer_inputs(&params, &[&a, &b], 4)).unwrap();
+        let single_a = eng.infer(BUCKETS[0], 1, &infer_inputs(&params, &[&a], 1)).unwrap();
+        let single_b = eng.infer(BUCKETS[0], 1, &infer_inputs(&params, &[&b], 1)).unwrap();
+        let bp = batched[0].as_f32().unwrap();
+        assert_eq!(bp[0], single_a[0].as_f32().unwrap()[0]);
+        assert_eq!(bp[1], single_b[0].as_f32().unwrap()[0]);
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let eng = NativeEngine::new();
+        let params = init_params(7);
+        assert!(eng.infer(BUCKETS[0], 1, &params).is_err());
+        assert!(eng.train_step(BUCKETS[0], 1, &params).is_err());
+    }
+
+    fn train_inputs(
+        params: &[Tensor],
+        m: &[Tensor],
+        v: &[Tensor],
+        step: f32,
+        graphs: &[&GraphTensors],
+        batch: usize,
+        lr: f32,
+    ) -> Vec<Tensor> {
+        let mut inputs = params.to_vec();
+        inputs.extend(m.to_vec());
+        inputs.extend(v.to_vec());
+        inputs.push(Tensor::f32(&[], vec![step]));
+        inputs.extend(stack_batch(graphs, BUCKETS[0], batch).unwrap());
+        let mut labels = vec![0.0f32; batch];
+        let mut weights = vec![0.0f32; batch];
+        for (i, g) in graphs.iter().enumerate() {
+            labels[i] = g.label;
+            weights[i] = 1.0;
+        }
+        inputs.push(Tensor::f32(&[batch], labels));
+        inputs.push(Tensor::f32(&[batch], weights));
+        inputs.push(flags_tensor([1.0, 1.0, 1.0]));
+        inputs.push(Tensor::f32(&[], vec![lr]));
+        inputs
+    }
+
+    fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
+        params.iter().map(|t| Tensor::zeros(Dtype::F32, t.shape())).collect()
+    }
+
+    #[test]
+    fn train_step_output_layout_and_step_increment() {
+        let eng = NativeEngine::new();
+        let params = init_params(11);
+        let (m, v) = (zeros_like(&params), zeros_like(&params));
+        let mut rng = Rng::new(3);
+        let g = toy_graph(&mut rng, 0.4);
+        let inputs = train_inputs(&params, &m, &v, 0.0, &[&g], 2, 1e-3);
+        let out = eng.train_step(BUCKETS[0], 2, &inputs).unwrap();
+        assert_eq!(out.len(), 3 * NUM_PARAMS + 2);
+        for i in 0..NUM_PARAMS {
+            assert_eq!(out[i].shape(), params[i].shape());
+        }
+        assert_eq!(out[3 * NUM_PARAMS].as_f32().unwrap()[0], 1.0);
+        let loss = out[3 * NUM_PARAMS + 1].as_f32().unwrap()[0];
+        assert!(loss.is_finite() && loss >= 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_directional_finite_difference() {
+        // Directional derivative check: for a random direction d,
+        // (loss(p + eps*d) - loss(p - eps*d)) / (2 eps) ~= grad . d.
+        let mut rng = Rng::new(5);
+        let params = init_params(13);
+        let ga = toy_graph(&mut rng, 0.3);
+        let gb = toy_graph(&mut rng, 0.8);
+        let graphs = [&ga, &gb];
+        let batch = 2;
+        let t8 = stack_batch(&graphs, BUCKETS[0], batch).unwrap();
+        let labels = [0.3f32, 0.8];
+        let weights = [1.0f32, 1.0];
+        let flags = [1.0f32, 1.0, 1.0];
+
+        let loss_of = |ps: &[Tensor]| -> f32 {
+            let views: Vec<&[f32]> = ps.iter().map(|t| t.as_f32().unwrap()).collect();
+            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags).unwrap().0
+        };
+
+        let views: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
+        let (_, grads) =
+            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags).unwrap();
+
+        // Random unit-ish direction over all parameters.
+        let mut dir: Vec<Vec<f32>> = Vec::new();
+        for t in &params {
+            dir.push((0..t.len()).map(|_| (rng.normal() * 0.5) as f32).collect());
+        }
+        let gdotd: f64 = grads
+            .iter()
+            .zip(&dir)
+            .flat_map(|(g, d)| g.iter().zip(d).map(|(&gi, &di)| gi as f64 * di as f64))
+            .sum();
+
+        let eps = 1e-3f32;
+        let shift = |sign: f32| -> Vec<Tensor> {
+            params
+                .iter()
+                .zip(&dir)
+                .map(|(t, d)| {
+                    let data: Vec<f32> = t
+                        .as_f32()
+                        .unwrap()
+                        .iter()
+                        .zip(d)
+                        .map(|(&x, &di)| x + sign * eps * di)
+                        .collect();
+                    Tensor::f32(t.shape(), data)
+                })
+                .collect()
+        };
+        let fd = (loss_of(&shift(1.0)) as f64 - loss_of(&shift(-1.0)) as f64) / (2.0 * eps as f64);
+        let denom = gdotd.abs().max(fd.abs()).max(1e-6);
+        assert!(
+            (fd - gdotd).abs() / denom < 0.1,
+            "finite difference {fd} vs analytic {gdotd}"
+        );
+    }
+
+    #[test]
+    fn training_descends_on_tiny_dataset() {
+        // End-to-end: repeated train steps must fit two distinguishable
+        // graphs with different labels.
+        let eng = NativeEngine::new();
+        let mut params = init_params(17);
+        let mut m = zeros_like(&params);
+        let mut v = zeros_like(&params);
+        let mut rng = Rng::new(6);
+        let ga = toy_graph(&mut rng, 0.15);
+        let gb = toy_graph(&mut rng, 0.85);
+        let graphs = [&ga, &gb];
+        let mut step = 0.0f32;
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..60 {
+            let inputs = train_inputs(&params, &m, &v, step, &graphs, 2, 3e-3);
+            let out = eng.train_step(BUCKETS[0], 2, &inputs).unwrap();
+            params = out[..NUM_PARAMS].to_vec();
+            m = out[NUM_PARAMS..2 * NUM_PARAMS].to_vec();
+            v = out[2 * NUM_PARAMS..3 * NUM_PARAMS].to_vec();
+            step = out[3 * NUM_PARAMS].as_f32().unwrap()[0];
+            last = out[3 * NUM_PARAMS + 1].as_f32().unwrap()[0];
+            if first.is_none() {
+                first = Some(last);
+            }
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.5, "loss did not descend: {first} -> {last}");
+        assert_eq!(step, 60.0);
+    }
+
+    #[test]
+    fn empty_rows_contribute_nothing() {
+        // A padded (all-zero-mask) batch row must not change the loss of the
+        // live rows.
+        let eng = NativeEngine::new();
+        let params = init_params(19);
+        let (m, v) = (zeros_like(&params), zeros_like(&params));
+        let mut rng = Rng::new(8);
+        let g = toy_graph(&mut rng, 0.4);
+        let out1 = eng
+            .train_step(BUCKETS[0], 1, &train_inputs(&params, &m, &v, 0.0, &[&g], 1, 1e-3))
+            .unwrap();
+        let out4 = eng
+            .train_step(BUCKETS[0], 4, &train_inputs(&params, &m, &v, 0.0, &[&g], 4, 1e-3))
+            .unwrap();
+        let l1 = out1[3 * NUM_PARAMS + 1].as_f32().unwrap()[0];
+        let l4 = out4[3 * NUM_PARAMS + 1].as_f32().unwrap()[0];
+        assert!((l1 - l4).abs() < 1e-6, "{l1} vs {l4}");
+    }
+}

@@ -1,0 +1,173 @@
+//! The PJRT backend (cargo feature `pjrt`): load AOT-compiled HLO-text
+//! artifacts and execute them through the `xla` bridge.
+//!
+//! The python build step (`make artifacts`) lowers the GNN inference and
+//! train-step functions to HLO text (see `python/compile/aot.py`); this
+//! module wraps the `xla` crate:
+//!
+//! ```text
+//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
+//!     -> client.compile (cached per artifact) -> executable.execute_b
+//! ```
+//!
+//! Python never runs at this point. Note the offline workspace vendors a
+//! typecheck-only stub of `xla` (`rust/vendor/xla`): this backend compiles
+//! under `--features pjrt` everywhere, but executes only when the path
+//! dependency is swapped for the real PJRT bindings.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cost::learned::{infer_artifact, train_artifact};
+use crate::gnn::{self, Bucket};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+use super::{InferenceBackend, TensorSpec};
+
+/// PJRT engine over an artifacts directory; compiles each artifact once and
+/// caches the executable.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    specs: Vec<TensorSpec>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(artifacts_dir.as_ref().join("manifest.json"))?;
+        gnn::schema::check_manifest(&manifest)?;
+        // Parameters are the artifact inputs preceding the 8 batch tensors
+        // and the flags tensor.
+        let spec = manifest
+            .find(&infer_artifact(gnn::BUCKETS[0], 1))
+            .context("infer artifact missing; run `make artifacts`")?;
+        let n_params = spec
+            .inputs
+            .len()
+            .checked_sub(9)
+            .ok_or_else(|| anyhow::anyhow!("unexpected artifact input arity"))?;
+        let specs = spec.inputs[..n_params].to_vec();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, manifest, specs, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile-once) an artifact by name.
+    fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.artifact_path(&spec);
+        let path_str = path.to_str().context("artifact path not utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let arc = Arc::new(Executable { spec, exe, client: self.client.clone() });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+impl InferenceBackend for PjrtEngine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn param_specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    fn infer(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run(&infer_artifact(bucket, batch), inputs)
+    }
+
+    fn train_step(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run(&train_artifact(bucket, batch), inputs)
+    }
+}
+
+/// A compiled entry point bound to its spec.
+struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates against the spec and decomposes
+    /// the (always-tuple) result into host tensors.
+    ///
+    /// Inputs go through `buffer_from_host_buffer` + `execute_b` — with
+    /// `execute_b` the input device buffers are owned on the Rust side and
+    /// freed on drop (the bridge's plain `execute` leaks them).
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.spec.validate_inputs(inputs)?;
+        let buffers = inputs
+            .iter()
+            .map(|t| self.upload_one(t))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        let result = self.exe.execute_b(&refs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        let outs: Vec<Tensor> = parts.iter().map(tensor_from_literal).collect::<Result<_>>()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Upload one host tensor (kImmutableOnlyDuringCall semantics — the copy
+    /// completes before the call returns).
+    fn upload_one(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+}
+
+fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+        xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+// The real xla::PjRtClient wraps a thread-safe C++ client; executables are
+// likewise safe to share. The raw pointers in the bindings lack auto-derived
+// markers.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}

@@ -1,4 +1,5 @@
-//! Host-side tensor type used to marshal data in and out of PJRT literals.
+//! Host-side tensor type shared by both inference backends (and, under the
+//! `pjrt` feature, marshalled in and out of PJRT literals).
 
 use anyhow::{bail, Result};
 
@@ -99,27 +100,6 @@ impl Tensor {
             _ => bail!("tensor is not f32"),
         }
     }
-
-    /// Convert into a PJRT literal (copies the buffer).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
-            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    /// Build from a PJRT literal.
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
-            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
-            other => bail!("unsupported literal element type {other:?}"),
-        }
-    }
 }
 
 #[cfg(test)]
@@ -159,16 +139,10 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip() {
-        // Requires the PJRT client library to be loadable; it is (rpath).
-        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
-
-        let ti = Tensor::i32(&[3], vec![7, -8, 9]);
-        let lit = ti.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(ti, back);
+    fn as_f32_mut_edits_in_place() {
+        let mut t = Tensor::f32(&[2], vec![1.0, 2.0]);
+        t.as_f32_mut().unwrap()[1] = 5.0;
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 5.0]);
+        assert!(Tensor::i32(&[1], vec![3]).as_i32().is_ok());
     }
 }

@@ -40,7 +40,7 @@ impl ParamStore {
         self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
     }
 
-    /// Tensors only, in stored order (what `Executable::run` wants).
+    /// Tensors only, in stored order (the backends' flat input prefix).
     pub fn values(&self) -> Vec<Tensor> {
         self.tensors.iter().map(|(_, t)| t.clone()).collect()
     }

@@ -1,24 +1,34 @@
 //! The training loop.
+//!
+//! The *fused train step* — forward, weighted-MSE loss, backward, Adam —
+//! is a single [`crate::runtime::InferenceBackend::train_step`] call, so
+//! the loop here is backend-agnostic: the native backend executes the step
+//! in pure Rust, the PJRT backend dispatches the AOT-lowered HLO. This
+//! module owns everything around it: parameter initialization from the
+//! backend's schema, epoch/batch scheduling per bucket, evaluation, and
+//! checkpointing. The paper's "retraining within hours" claim corresponds
+//! to `Trainer::fit`, which on this corpus takes seconds.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::cost::learned::{infer_artifact, train_artifact, Ablation};
+use crate::cost::learned::Ablation;
 use crate::data::Dataset;
 use crate::gnn::{self, Bucket};
 use crate::metrics;
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{Engine, Tensor, TensorSpec};
 use crate::util::rng::Rng;
 
 use super::checkpoint::ParamStore;
 
 /// Hyperparameters of the Rust-side loop (the model architecture itself is
-/// fixed at AOT time; see python/compile/model.py).
+/// fixed by the schema; see `gnn::schema` / python/compile/model.py).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub epochs: usize,
-    /// Must match the AOT train artifact's batch dimension.
+    /// Batch dimension of each train-step call (must match an AOT batch
+    /// size when running on the PJRT backend).
     pub batch: usize,
     pub learning_rate: f32,
     pub seed: u64,
@@ -58,7 +68,7 @@ pub struct EvalReport {
     pub count: usize,
 }
 
-/// Owns parameters + Adam state and drives the AOT train-step executable.
+/// Owns parameters + Adam state and drives the backend's fused train step.
 pub struct Trainer {
     engine: Arc<Engine>,
     pub config: TrainConfig,
@@ -66,28 +76,20 @@ pub struct Trainer {
     adam_m: Vec<Tensor>,
     adam_v: Vec<Tensor>,
     step: f32,
-    param_specs: Vec<crate::runtime::TensorSpec>,
+    param_specs: Vec<TensorSpec>,
 }
 
 impl Trainer {
-    /// Initialize parameters from the manifest's shape specs (Glorot-style
-    /// scaled normal for matrices, scaled-down normal for embeddings).
+    /// Initialize parameters from the backend's shape specs (Glorot-style
+    /// scaled normal for matrices, zero biases, output bias pre-shifted).
     pub fn new(engine: Arc<Engine>, config: TrainConfig) -> Result<Trainer> {
-        gnn::schema::check_manifest(engine.manifest())?;
-        let spec = engine
-            .manifest()
-            .find(&infer_artifact(gnn::BUCKETS[0], 1))
-            .context("infer artifact missing; run `make artifacts`")?;
-        // Params are the inputs before the 8 batch tensors + flags.
-        let n_params = spec
-            .inputs
-            .len()
-            .checked_sub(9)
-            .ok_or_else(|| anyhow!("unexpected artifact input arity"))?;
-        let param_specs: Vec<_> = spec.inputs[..n_params].to_vec();
+        let param_specs: Vec<TensorSpec> = engine.param_specs().to_vec();
+        if param_specs.is_empty() {
+            bail!("backend reports no parameter schema");
+        }
 
         let mut rng = Rng::new(config.seed);
-        let mut params = Vec::with_capacity(n_params);
+        let mut params = Vec::with_capacity(param_specs.len());
         for s in &param_specs {
             let n: usize = s.shape.iter().product();
             let fan_in = if s.shape.len() >= 2 {
@@ -157,9 +159,6 @@ impl Trainer {
             let mut batches = 0usize;
             for (_tag, (bucket, idxs)) in &mut by_bucket {
                 rng.shuffle(idxs);
-                let exe = self
-                    .engine
-                    .load(&train_artifact(*bucket, self.config.batch))?;
                 for chunk in idxs.chunks(self.config.batch) {
                     let graphs: Vec<&gnn::GraphTensors> =
                         chunk.iter().map(|&i| &dataset.samples[i].tensors).collect();
@@ -175,9 +174,12 @@ impl Trainer {
                     inputs.push(gnn::flags_tensor(self.config.ablation.flags()));
                     inputs.push(Tensor::f32(&[], vec![self.config.learning_rate]));
 
-                    let out = exe.run(&inputs)?;
+                    let out = self.engine.train_step(*bucket, self.config.batch, &inputs)?;
                     // Outputs: params, m, v, step, loss.
                     let p = self.params.len();
+                    if out.len() != 3 * p + 2 {
+                        bail!("train step returned {} outputs, expected {}", out.len(), 3 * p + 2);
+                    }
                     self.params = out[..p].to_vec();
                     self.adam_m = out[p..2 * p].to_vec();
                     self.adam_v = out[2 * p..3 * p].to_vec();
@@ -247,6 +249,31 @@ impl Trainer {
 
 #[cfg(test)]
 mod tests {
-    // Trainer needs real artifacts; integration tests live in
-    // rust/tests/train_integration.rs and run after `make artifacts`.
+    use super::*;
+    use crate::runtime::native_engine;
+
+    #[test]
+    fn init_respects_schema_and_bias_convention() {
+        let t = Trainer::new(native_engine(), TrainConfig::default()).unwrap();
+        let store = t.param_store();
+        assert_eq!(store.len(), crate::gnn::schema::param_specs().len());
+        // Output bias pre-shifted toward the label scale.
+        assert_eq!(store.get("head_w3_b").unwrap().as_f32().unwrap(), &[-2.0]);
+        // Other biases zero; matrices non-zero.
+        assert!(store.get("node_proj_b").unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(store.get("node_proj_w").unwrap().as_f32().unwrap().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn warm_start_roundtrip() {
+        let a = Trainer::new(native_engine(), TrainConfig::default()).unwrap();
+        let store = a.param_store();
+        let b = Trainer::new(native_engine(), TrainConfig { seed: 999, ..TrainConfig::default() })
+            .unwrap()
+            .with_params(&store)
+            .unwrap();
+        assert_eq!(b.param_store(), store);
+    }
+
+    // Full training integration tests live in rust/tests/runtime_integration.rs.
 }

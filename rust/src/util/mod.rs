@@ -1,8 +1,9 @@
 //! In-tree utility layer.
 //!
-//! The build environment is offline with only the xla-bridge crates vendored,
-//! so the usual ecosystem crates (rand, serde, clap, criterion, proptest) are
-//! unavailable. This module provides the small, well-tested subset we need:
+//! The build environment is offline (only in-tree vendored crates under
+//! `rust/vendor/`), so the usual ecosystem crates (rand, serde, clap,
+//! criterion, proptest) are unavailable. This module provides the small,
+//! well-tested subset we need:
 //!
 //! * [`rng`] — splitmix64/PCG-style deterministic PRNG;
 //! * [`json`] — minimal JSON value model, parser and writer (manifest +

@@ -1,5 +1,5 @@
-//! Coordinator integration: the batched scoring service against real
-//! artifacts, under concurrency, failure and shutdown.
+//! Coordinator integration: the batched scoring service on the native
+//! backend, under concurrency, failure and shutdown.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,13 +12,12 @@ use rdacost::dfg::WorkloadFamily;
 use rdacost::gnn;
 use rdacost::placer::random_placement;
 use rdacost::router::route_all;
-use rdacost::runtime::Engine;
+use rdacost::runtime::{native_engine, Engine};
 use rdacost::train::{TrainConfig, Trainer};
 use rdacost::util::rng::Rng;
 
 fn engine() -> Arc<Engine> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Arc::new(Engine::new(dir).expect("run `make artifacts` first"))
+    native_engine()
 }
 
 fn encoded_graph(rng: &mut Rng, fabric: &Fabric) -> gnn::GraphTensors {

@@ -1,0 +1,203 @@
+//! Golden tests for `gnn::encode` — the feature schema shared with
+//! `python/compile/model.py`.
+//!
+//! Two layers of pinning:
+//!
+//! 1. A **hand-built** 4-op pipeline on hand-picked units with a fixed
+//!    stage assignment, where every feature value is analytically known
+//!    (the fabric's deterministic unit/link quality hashes were evaluated
+//!    offline). Any change to the feature layout, the normalizers, the
+//!    fabric construction order, or the router's shortest-path behavior
+//!    fails loudly here.
+//! 2. A **fixed seed-1 workload** (the `mha` builder) whose encoded
+//!    `GraphTensors` shapes, bucket, live counts and op-type row are pinned
+//!    — schema drift vs python (feature dims, type indices) cannot slip
+//!    through.
+
+use rdacost::arch::{Fabric, FabricConfig, UnitId, UnitKind};
+use rdacost::dfg::{Dfg, OpKind};
+use rdacost::gnn::{self, schema};
+use rdacost::placer::Placement;
+use rdacost::router::route_all;
+use rdacost::util::rng::Rng;
+
+const TOL: f32 = 1e-4;
+
+fn assert_row(actual: &[f32], expected: &[f32], what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: width");
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        assert!(
+            (a - e).abs() < TOL,
+            "{what}[{i}]: got {a}, pinned {e} (full row {actual:?})"
+        );
+    }
+}
+
+/// load(256B) -> buffer -> gemm(8x8x8) -> store, placed by hand:
+/// load on DRAM port u128 (row 0, west), buffer on PMU u3 (tile 0,1),
+/// gemm on PCU u1 (tile 0,0), store on DRAM port u129 (row 2, west).
+#[test]
+fn hand_built_pipeline_features_are_pinned() {
+    let fabric = Fabric::new(FabricConfig::default());
+
+    // Pin the fabric construction order this test's unit choices rely on.
+    let expect_unit = |id: u32, kind: UnitKind, row: i32, col: i32| {
+        let u = fabric.unit(UnitId(id));
+        assert_eq!((u.kind, u.row, u.col), (kind, row, col), "fabric layout drift at unit {id}");
+    };
+    expect_unit(1, UnitKind::Pcu, 0, 0);
+    expect_unit(3, UnitKind::Pmu, 0, 1);
+    expect_unit(128, UnitKind::DramPort, 0, -1);
+    expect_unit(129, UnitKind::DramPort, 2, -1);
+
+    let mut g = Dfg::new("golden");
+    let load = g.add(OpKind::Load { bytes: 256 }, "in.load");
+    let buf = g.add(OpKind::Buffer { bytes: 256 }, "in.buf");
+    let mm = g.add(OpKind::Gemm { m: 8, n: 8, k: 8 }, "gemm");
+    let store = g.add(OpKind::Store { bytes: 256 }, "out.store");
+    g.connect_auto(load, buf);
+    g.connect_auto(buf, mm);
+    g.connect_auto(mm, store);
+    g.validate().unwrap();
+
+    let placement = Placement {
+        unit_of: vec![UnitId(128), UnitId(3), UnitId(1), UnitId(129)],
+        stage_of: vec![0, 1, 2, 3],
+    };
+    placement.validate(&g, &fabric).unwrap();
+    let routing = route_all(&fabric, &g, &placement).unwrap();
+
+    // Routes are forced (unique shortest paths through the mesh):
+    //   e0: u128 -> sw(0,0) -> sw(0,1) -> u3           (3 hops)
+    //   e1: u3 -> sw(0,1) -> sw(0,0) -> u1             (3 hops)
+    //   e2: u1 -> sw(0,0) -> sw(1,0) -> sw(2,0) -> u129 (4 hops)
+    assert_eq!(routing.routes[0].hops(), 3, "e0 route drifted");
+    assert_eq!(routing.routes[1].hops(), 3, "e1 route drifted");
+    assert_eq!(routing.routes[2].hops(), 4, "e2 route drifted");
+
+    let t = gnn::encode(&g, &fabric, &placement, &routing).unwrap();
+    assert_eq!(t.bucket.tag(), "n32_e96");
+    assert_eq!(t.live_nodes(), 4);
+    assert_eq!(t.live_edges(), 3);
+    assert_eq!(&t.node_type[..4], &[11, 13, 0, 12]);
+    assert_eq!(&t.node_stage[..4], &[0, 1, 2, 3]);
+    assert_eq!(&t.edge_src[..3], &[0, 1, 2]);
+    assert_eq!(&t.edge_dst[..3], &[1, 2, 3]);
+
+    // Node features: [onehot(4), log_flops, log_bytes, row/8, col/8,
+    // stage/4, unit_quality]. Quality values are the fabric's deterministic
+    // silicon-binning hash, evaluated offline and pinned.
+    let nf = schema::NODE_FEAT_DIM;
+    let ln257 = 0.277_453_8f32; // ln(1+256)/20
+    let ln1025 = 0.346_622_4f32; // ln(1+1024)/20
+    assert_row(
+        &t.node_feat[0..nf],
+        &[0.0, 0.0, 0.0, 1.0, 0.0, ln257, 0.0, -0.125, 0.0, 0.987_096_8],
+        "load node",
+    );
+    assert_row(
+        &t.node_feat[nf..2 * nf],
+        &[0.0, 1.0, 0.0, 0.0, 0.0, ln257, 0.0, 0.125, 0.25, 0.641_837_7],
+        "buffer node",
+    );
+    assert_row(
+        &t.node_feat[2 * nf..3 * nf],
+        &[1.0, 0.0, 0.0, 0.0, ln1025, ln257, 0.0, 0.0, 0.5, 0.6],
+        "gemm node",
+    );
+    assert_row(
+        &t.node_feat[3 * nf..4 * nf],
+        &[0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.25, -0.125, 0.75, 0.953_470_2],
+        "store node",
+    );
+
+    // Edge features: [hops/16, log_bytes, same_stage, shared/8, max_flows/8,
+    // touches_dram, min_q, mean_q, log_serial]. The 0.5-quality mesh link
+    // sw(0,0)<->sw(0,1) sits on e0 and e1; e2's column links are full rate.
+    let ef = schema::EDGE_FEAT_DIM;
+    let ln513 = 0.312_013_8f32; // ln(1+256/0.5)/20
+    assert_row(
+        &t.edge_feat[0..ef],
+        &[0.1875, ln257, 0.0, 0.25, 0.25, 1.0, 0.5, 0.833_333_3, ln513],
+        "edge load->buffer",
+    );
+    assert_row(
+        &t.edge_feat[ef..2 * ef],
+        &[0.1875, ln257, 0.0, 0.375, 0.25, 0.0, 0.5, 0.833_333_3, ln513],
+        "edge buffer->gemm",
+    );
+    assert_row(
+        &t.edge_feat[2 * ef..3 * ef],
+        &[0.25, ln257, 0.0, 0.125, 0.25, 1.0, 1.0, 1.0, ln257],
+        "edge gemm->store",
+    );
+
+    // Padding stays zero.
+    assert!(t.node_feat[4 * nf..].iter().all(|&x| x == 0.0));
+    assert!(t.edge_feat[3 * ef..].iter().all(|&x| x == 0.0));
+}
+
+/// The fixed seed-1 workload of the integration suites: shapes and schema
+/// indices pinned (placement-independent values only, so the pin survives
+/// placer evolution but not schema drift).
+#[test]
+fn seed1_mha_workload_shapes_are_pinned() {
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = rdacost::dfg::builders::mha(32, 128, 4);
+    assert_eq!(graph.num_nodes(), 18);
+    assert_eq!(graph.num_edges(), 20);
+
+    let mut rng = Rng::new(1);
+    let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+    let routing = route_all(&fabric, &graph, &placement).unwrap();
+    let t = gnn::encode(&graph, &fabric, &placement, &routing).unwrap();
+
+    assert_eq!(t.bucket.tag(), "n32_e96");
+    assert_eq!(t.node_type.len(), 32);
+    assert_eq!(t.node_feat.len(), 32 * schema::NODE_FEAT_DIM);
+    assert_eq!(t.edge_feat.len(), 96 * schema::EDGE_FEAT_DIM);
+    assert_eq!(t.live_nodes(), 18);
+    assert_eq!(t.live_edges(), 20);
+
+    // Op-type embedding indices of the mha builder, in construction order:
+    // load, buf, ln, q, k, v, qb, kb, vb, kT, qk, softmax, p.buf, pv,
+    // o.proj, residual-add, out.buf, store.
+    let expected_types: [i32; 18] =
+        [11, 13, 8, 0, 0, 0, 13, 13, 13, 9, 0, 7, 13, 0, 0, 1, 13, 12];
+    assert_eq!(&t.node_type[..18], &expected_types);
+
+    // One-hot block sums to exactly 1 on live nodes; masks are 0/1.
+    for v in 0..18 {
+        let row = &t.node_feat[v * schema::NODE_FEAT_DIM..][..schema::UNIT_KIND_COUNT];
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+    let mask_sum: f32 = t.node_mask.iter().sum();
+    assert_eq!(mask_sum, 18.0);
+    let emask_sum: f32 = t.edge_mask.iter().sum();
+    assert_eq!(emask_sum, 20.0);
+
+    // Checksums over the placement-independent feature columns: log_bytes
+    // of every edge is fixed by the builder regardless of the decision —
+    // at seq=32, d_model=128 every one of the 20 tensors is exactly 16 KiB
+    // (even qk's scores: [seq, seq*heads] = [32, 128]).
+    let mut log_bytes_sum = 0.0f64;
+    for e in 0..20 {
+        log_bytes_sum += t.edge_feat[e * schema::EDGE_FEAT_DIM + 1] as f64;
+    }
+    let expected = 20.0 * (16384.0f64.ln_1p() / 20.0);
+    assert!(
+        (log_bytes_sum - expected).abs() < 1e-3,
+        "edge log-bytes checksum drifted: {log_bytes_sum} vs {expected}"
+    );
+    // And the node-side annotation column: log_output_bytes over live nodes
+    // is likewise builder-determined (store contributes ln(1)=0).
+    let mut node_log_bytes = 0.0f64;
+    for v in 0..18 {
+        node_log_bytes += t.node_feat[v * schema::NODE_FEAT_DIM + schema::ANNOT_LO + 1] as f64;
+    }
+    let node_expected = 17.0 * (16384.0f64.ln_1p() / 20.0);
+    assert!(
+        (node_log_bytes - node_expected).abs() < 1e-3,
+        "node log-bytes checksum drifted: {node_log_bytes} vs {node_expected}"
+    );
+}

@@ -1,0 +1,137 @@
+//! Core-invariant test suite:
+//!
+//! * **placement feasibility** — injective unit assignment of the right
+//!   kind and monotone stages must survive *every* annealer move, for each
+//!   move kind in isolation (relocate / swap / stage-shift);
+//! * **router determinism** — the same placement must always produce the
+//!   identical `Routing` (routes, flows, bytes), because routed measurements
+//!   are reproducible labels for the learned cost model;
+//! * **simulator bounds** — `0 < normalized_throughput <= 1` and
+//!   `II >= theoretical_ii` across all dataset families and both eras.
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::cost::HeuristicCost;
+use rdacost::data::draw_workload;
+use rdacost::dfg::{builders, Dfg, WorkloadFamily};
+use rdacost::placer::{anneal, random_placement, AnnealParams, Objective, Placement};
+use rdacost::router::{route_all, Routing};
+use rdacost::sim;
+use rdacost::util::rng::Rng;
+
+/// An objective wrapper that validates the candidate placement on every
+/// single scoring call — i.e. after every proposed annealer move, not just
+/// on the final result.
+struct ValidatingObjective {
+    inner: HeuristicCost,
+    calls: usize,
+}
+
+impl Objective for ValidatingObjective {
+    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+        placement
+            .validate(graph, fabric)
+            .expect("annealer proposed an infeasible placement");
+        self.calls += 1;
+        self.inner.score(graph, fabric, placement, routing)
+    }
+
+    fn name(&self) -> &'static str {
+        "validating-heuristic"
+    }
+}
+
+#[test]
+fn every_annealer_move_kind_preserves_feasibility() {
+    let fabric = Fabric::new(FabricConfig::default());
+    // One config per move kind: the drawn kind always wins the roll, so the
+    // run exercises that kind (with fallback only when it has no candidate).
+    let configs: [(&str, f64, f64, f64); 3] = [
+        ("relocate", 1.0, 0.0, 0.0),
+        ("swap", 0.0, 1.0, 0.0),
+        ("stage-shift", 0.0, 0.0, 1.0),
+    ];
+    for (name, w_relocate, w_swap, w_stage) in configs {
+        for (gi, graph) in [builders::mha(32, 128, 4), builders::mlp(16, &[64, 128, 64])]
+            .iter()
+            .enumerate()
+        {
+            let params = AnnealParams {
+                iterations: 150,
+                w_relocate,
+                w_swap,
+                w_stage,
+                ..AnnealParams::default()
+            };
+            let mut obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0 };
+            let mut rng = Rng::new(100 + gi as u64);
+            let (best, _, log) = anneal(graph, &fabric, &mut obj, &params, &mut rng)
+                .unwrap_or_else(|e| panic!("{name}: anneal failed: {e:#}"));
+            best.validate(graph, &fabric)
+                .unwrap_or_else(|e| panic!("{name}: final placement infeasible: {e:#}"));
+            assert!(obj.calls > 100, "{name}: objective barely exercised ({} calls)", obj.calls);
+            assert!(log.evaluations >= obj.calls);
+        }
+    }
+}
+
+#[test]
+fn router_is_deterministic_for_identical_placements() {
+    let fabric = Fabric::new(FabricConfig::default());
+    for fam in WorkloadFamily::DATASET_FAMILIES {
+        for seed in [1u64, 2, 3] {
+            // Rebuild everything from the seed twice — catches hidden
+            // iteration-order nondeterminism (hash maps, heap ties) anywhere
+            // in the fabric/placer/router pipeline.
+            let run = |fabric: &Fabric| {
+                let mut rng = Rng::new(seed);
+                let graph = draw_workload(fam, &mut rng);
+                let placement = random_placement(&graph, fabric, &mut rng).unwrap();
+                let routing = route_all(fabric, &graph, &placement).unwrap();
+                (graph, placement, routing)
+            };
+            let fabric2 = Fabric::new(FabricConfig::default());
+            let (_, p1, r1) = run(&fabric);
+            let (_, p2, r2) = run(&fabric2);
+            assert_eq!(p1, p2, "{fam:?}/{seed}: placements diverged");
+            assert_eq!(r1.routes, r2.routes, "{fam:?}/{seed}: routes diverged");
+            assert_eq!(r1.link_flows, r2.link_flows, "{fam:?}/{seed}: flows diverged");
+            assert_eq!(r1.link_bytes, r2.link_bytes, "{fam:?}/{seed}: bytes diverged");
+
+            // And routing the same placement again is also identical.
+            let (graph, placement, first) = run(&fabric);
+            let again = route_all(&fabric, &graph, &placement).unwrap();
+            assert_eq!(first.routes, again.routes);
+        }
+    }
+}
+
+#[test]
+fn simulator_bounds_hold_across_families_and_eras() {
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(77);
+    for fam in WorkloadFamily::DATASET_FAMILIES {
+        for _ in 0..5 {
+            let graph = draw_workload(fam, &mut rng);
+            let placement = random_placement(&graph, &fabric, &mut rng).unwrap();
+            let routing = route_all(&fabric, &graph, &placement).unwrap();
+            let bound = sim::theoretical_ii(&fabric, &graph, &placement);
+            assert!(bound > 0.0 && bound.is_finite());
+            for era in [Era::Past, Era::Present] {
+                let rep = sim::measure(&fabric, &graph, &placement, &routing, era).unwrap();
+                assert!(
+                    rep.normalized_throughput > 0.0 && rep.normalized_throughput <= 1.0,
+                    "{fam:?}/{era:?}: normalized throughput {} out of (0,1]",
+                    rep.normalized_throughput
+                );
+                assert!(rep.ii_cycles.is_finite() && rep.ii_cycles > 0.0);
+                assert!(
+                    rep.ii_cycles >= bound * 0.9999,
+                    "{fam:?}/{era:?}: II {} beats the theoretical bound {bound}",
+                    rep.ii_cycles
+                );
+                assert_eq!(rep.ii_theoretical, bound);
+                assert!(rep.latency_cycles.is_finite() && rep.latency_cycles > 0.0);
+            }
+        }
+    }
+}

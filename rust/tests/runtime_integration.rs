@@ -1,39 +1,40 @@
-//! Integration: the rust runtime against the real AOT artifacts.
+//! Integration: the learned cost model and trainer against the **native**
+//! inference backend — no python, no libxla, no artifacts directory.
 //!
-//! Requires `make artifacts` (CI runs it via `make test`). These tests are
-//! the proof that all three layers compose: Pallas kernel -> JAX model ->
-//! HLO text -> PJRT execution from rust.
+//! These tests are the proof that the backend abstraction composes: encode
+//! -> backend forward pass -> LearnedCost predictions on the annealer path,
+//! and the fused native train step actually learns signal.
 
 use std::sync::Arc;
 
-use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::arch::{Fabric, FabricConfig};
 use rdacost::cost::{Ablation, LearnedCost};
 use rdacost::data::{generate_family, GenConfig};
 use rdacost::dfg::WorkloadFamily;
 use rdacost::gnn;
 use rdacost::placer::Objective;
-use rdacost::runtime::Engine;
+use rdacost::runtime::{native_engine, Engine};
 use rdacost::train::{TrainConfig, Trainer};
 use rdacost::util::rng::Rng;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn engine() -> Arc<Engine> {
-    Arc::new(Engine::new(artifacts_dir()).expect("run `make artifacts` first"))
+    native_engine()
 }
 
 #[test]
-fn manifest_matches_schema() {
+fn backend_schema_matches_shared_contract() {
     let e = engine();
-    gnn::schema::check_manifest(e.manifest()).unwrap();
-    assert_eq!(e.manifest().artifacts.len(), 9);
-    assert_eq!(e.manifest().hyper_usize("hidden_dim").unwrap(), 64);
+    assert_eq!(e.platform(), "native-cpu");
+    let want = gnn::schema::param_specs();
+    assert_eq!(e.param_specs().len(), want.len());
+    for ((name, shape), spec) in want.iter().zip(e.param_specs()) {
+        assert_eq!(&spec.name, name);
+        assert_eq!(&spec.shape, shape);
+    }
 }
 
 #[test]
-fn infer_artifact_runs_and_outputs_probability() {
+fn native_backend_scores_real_decision_in_unit_interval() {
     let eng = engine();
     let cfg = TrainConfig::default();
     let trainer = Trainer::new(eng.clone(), cfg).unwrap();
@@ -54,6 +55,28 @@ fn infer_artifact_runs_and_outputs_probability() {
     // Deterministic.
     let score2 = learned.score(&graph, &fabric, &placement, &routing);
     assert_eq!(score, score2);
+}
+
+#[test]
+fn native_predictions_finite_for_every_family() {
+    // Acceptance criterion: LearnedCost::score produces finite predictions
+    // via the native backend for every workload family.
+    let eng = engine();
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let mut learned =
+        LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(9);
+    for fam in WorkloadFamily::DATASET_FAMILIES {
+        for _ in 0..3 {
+            let graph = rdacost::data::draw_workload(fam, &mut rng);
+            let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+            let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
+            let score = learned.score(&graph, &fabric, &placement, &routing);
+            assert!(score.is_finite(), "{fam:?}: non-finite score");
+            assert!(score > 0.0 && score < 1.0, "{fam:?}: score {score} out of (0,1)");
+        }
+    }
 }
 
 #[test]
@@ -84,12 +107,8 @@ fn ablation_flags_change_output() {
 fn batch_and_single_inference_agree() {
     let eng = engine();
     let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
-    let mut learned = LearnedCost::from_store(
-        eng,
-        &trainer.param_store(),
-        Ablation::default(),
-    )
-    .unwrap();
+    let mut learned =
+        LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
 
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = Rng::new(3);
@@ -156,4 +175,14 @@ fn checkpoint_roundtrip_through_learned_cost() {
     let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
     let s = learned.score(&graph, &fabric, &placement, &routing);
     assert!(s > 0.0 && s < 1.0);
+}
+
+#[test]
+fn engine_factory_falls_back_to_native() {
+    // Default features: no PJRT compiled in, so any artifacts path yields
+    // the native backend and the whole stack works without `make artifacts`.
+    let e = rdacost::runtime::engine("artifacts").unwrap();
+    assert_eq!(e.platform(), "native-cpu");
+    let trainer = Trainer::new(e, TrainConfig::default()).unwrap();
+    assert!(trainer.param_store().num_elements() > 10_000);
 }

@@ -1,0 +1,195 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment is offline (no crates.io), so the workspace vendors
+//! the small subset of `anyhow` this codebase actually uses:
+//!
+//! * [`Error`] — a context-chain error type. `{}` prints the outermost
+//!   message; `{:#}` prints the full `outer: inner: ...` chain (the format
+//!   the crate's error tests assert against).
+//! * [`Result`] — `Result<T, Error>` alias with a defaulted error type.
+//! * [`anyhow!`] / [`bail!`] — format-style construction and early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `?`-conversion from any `std::error::Error` (the standard blanket
+//!   `From` impl; like real `anyhow`, [`Error`] deliberately does *not*
+//!   implement `std::error::Error` so the blanket impl does not conflict).
+
+use std::fmt;
+
+/// A context-chain error. The outermost message is the most recent context.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: convert from any std error, capturing its source chain.
+// (`Error` itself does not implement `std::error::Error`, so this does not
+// overlap with the reflexive `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs: Vec<String> = Vec::new();
+        let mut src: Option<&dyn std::error::Error> = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut chain: Option<Box<Error>> = None;
+        for msg in msgs.into_iter().rev() {
+            chain = Some(Box::new(Error { msg, source: chain }));
+        }
+        Error { msg: e.to_string(), source: chain }
+    }
+}
+
+/// `Result` with a defaulted error type, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and missing values).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert_eq!(e.chain(), vec!["outer", "middle", "inner"]);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert!(format!("{e:#}").contains("opening file"));
+        assert!(format!("{e:#}").contains("gone"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("gone"));
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Err(anyhow!("always fails: {}", x))
+        }
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero not allowed (got 0)");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "always fails: 3");
+    }
+}

@@ -1,0 +1,190 @@
+//! API-compatible **stub** of the `xla` PJRT-bridge crate.
+//!
+//! The offline build environment does not ship libxla or the real `xla`
+//! bindings, but the `pjrt` cargo feature of `rdacost` must still
+//! *typecheck* (`cargo check --features pjrt`). This crate declares exactly
+//! the API surface `rdacost::runtime::pjrt` uses; every entry point that
+//! would touch PJRT returns [`Error::Unavailable`] at runtime.
+//!
+//! Deploying against a real PJRT: replace this path dependency with the
+//! actual `xla` bindings (same signatures) and rebuild with
+//! `--features pjrt`.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's; implements `std::error::Error` so
+/// `?` converts into `anyhow::Error` at the call sites.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was invoked at runtime (no libxla in this build).
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT bindings (this build vendors a \
+                 typecheck-only stub; see rust/vendor/xla)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types the GNN artifacts use (plus enough variants that callers'
+/// `other =>` match arms are reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+/// Marker for host buffer element types accepted by the transfer APIs.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f64 {}
+
+/// A PJRT client handle.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    /// CPU-PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A device buffer.
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host literal.
+pub struct Literal {
+    _p: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _p: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// An HLO module parsed from text.
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
