@@ -48,7 +48,13 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = CompileConfig {
         era: Era::Past,
-        anneal: AnnealParams { iterations: args.get_usize("iters", 300), ..AnnealParams::default() },
+        anneal: AnnealParams {
+            iterations: args.get_usize("iters", 300),
+            // Fleet size per annealing step (`--proposals 8` batches the
+            // GNN scoring calls and routes candidates in parallel).
+            proposals_per_step: args.get_usize("proposals", 1).max(1),
+            ..AnnealParams::default()
+        },
         seed: 7,
     };
 

@@ -6,7 +6,7 @@
 //! batch size, and executes one backend call per batch. Prints throughput
 //! and batch occupancy.
 //!
-//! Run: `cargo run --release --example scoring_service -- --clients 4 --requests 128`
+//! Run: `cargo run --release --example scoring_service -- --clients 4 --requests 128 --fleet 8`
 
 use std::time::Duration;
 
@@ -37,6 +37,11 @@ fn main() -> anyhow::Result<()> {
         Duration::from_millis(4),
     )?;
 
+    // Each client submits fleets of up to 8 candidates via `score_many`
+    // (the batched-proposal annealer's client API): the whole fleet enters
+    // the dispatcher queue before the first reply is awaited, so batches
+    // fill on size instead of trickling through deadline flushes.
+    let fleet = args.get_usize("fleet", 8).max(1);
     let fabric = Fabric::new(FabricConfig::default());
     let t0 = std::time::Instant::now();
     let mut sums = Vec::new();
@@ -48,17 +53,23 @@ fn main() -> anyhow::Result<()> {
             handles.push(scope.spawn(move || -> anyhow::Result<f64> {
                 let mut rng = Rng::new(1000 + c as u64);
                 let mut sum = 0.0;
-                for i in 0..requests {
-                    let fam = match i % 3 {
+                let mut sent = 0usize;
+                while sent < requests {
+                    let burst = fleet.min(requests - sent);
+                    let fam = match sent % 3 {
                         0 => WorkloadFamily::Gemm,
                         1 => WorkloadFamily::Ffn,
                         _ => WorkloadFamily::Mha,
                     };
                     let graph = draw_workload(fam, &mut rng);
-                    let placement = random_placement(&graph, fabric, &mut rng)?;
-                    let routing = route_all(fabric, &graph, &placement)?;
-                    let enc = gnn::encode(&graph, fabric, &placement, &routing)?;
-                    sum += client.score(enc)?;
+                    let mut batch = Vec::with_capacity(burst);
+                    for _ in 0..burst {
+                        let placement = random_placement(&graph, fabric, &mut rng)?;
+                        let routing = route_all(fabric, &graph, &placement)?;
+                        batch.push(gnn::encode(&graph, fabric, &placement, &routing)?);
+                    }
+                    sum += client.score_many(batch)?.iter().sum::<f64>();
+                    sent += burst;
                 }
                 Ok(sum)
             }));

@@ -29,6 +29,16 @@ fn main() {
         black_box(anneal(&graph, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
     });
 
+    // Batched-proposal fleet (K=8): same step count, 8 routed+scored
+    // candidates per step on scoped threads.
+    let fleet =
+        AnnealParams { iterations: 100, proposals_per_step: 8, ..AnnealParams::default() };
+    b.bench("placer/anneal100xK8/heuristic/mha", || {
+        let mut rng = Rng::new(7);
+        let mut obj = HeuristicCost::new();
+        black_box(anneal(&graph, &fabric, &mut obj, &fleet, &mut rng).unwrap().2.best_score)
+    });
+
     // Initial placement generation.
     b.bench("placer/random_placement/mha", || {
         let mut rng = Rng::new(9);

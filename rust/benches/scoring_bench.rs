@@ -1,16 +1,19 @@
 //! Learned-cost-model scoring benchmarks: single-graph dispatch (the
-//! annealer path), batched inference (the evaluation path), and one fused
-//! train step, on the session's backend (native by default; PJRT when built
-//! with `--features pjrt` over real artifacts).
+//! annealer path), batched inference (the evaluation path), one fused train
+//! step, and the batched-proposal annealer itself (K=1 vs K=8 candidate
+//! evaluations/sec, emitted to `BENCH_annealer.json`), on the session's
+//! backend (native by default; PJRT when built with `--features pjrt` over
+//! real artifacts).
 
 use rdacost::arch::{Fabric, FabricConfig};
 use rdacost::cost::{Ablation, LearnedCost};
 use rdacost::dfg::builders;
 use rdacost::gnn::{self, GraphTensors};
-use rdacost::placer::{random_placement, Objective};
+use rdacost::placer::{anneal, random_placement, AnnealParams, Objective};
 use rdacost::router::route_all;
 use rdacost::train::{TrainConfig, Trainer};
-use rdacost::util::bench::{black_box, Bencher};
+use rdacost::util::bench::{black_box, fmt_ns, Bencher};
+use rdacost::util::json::Json;
 use rdacost::util::rng::Rng;
 
 fn main() {
@@ -66,7 +69,7 @@ fn main() {
         let ds = rdacost::data::Dataset { samples };
         let idx: Vec<usize> = (0..ds.len()).collect();
         let mut t = Trainer::new(
-            engine,
+            engine.clone(),
             TrainConfig { epochs: 1, ..TrainConfig::default() },
         )
         .unwrap();
@@ -74,6 +77,53 @@ fn main() {
         b.bench("train/epoch_32samples_b32", || {
             black_box(t.fit(&ds, &idx).unwrap().final_train_loss)
         });
+    }
+
+    // Batched-proposal annealing: candidate evaluations/sec at K=1 vs K=8
+    // under the learned objective. K=1 is the classic sequential hot path;
+    // K=8 routes the fleet on scoped threads and scores it in one batched
+    // inference. Emitted to BENCH_annealer.json (CI uploads it).
+    {
+        let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+        let iters = if quick { 60 } else { 240 };
+        let reps = if quick { 2 } else { 3 };
+        let graph = builders::mha(32, 128, 4);
+        let mut evals_per_sec = Vec::new();
+        for k in [1usize, 8] {
+            let params = AnnealParams {
+                iterations: iters,
+                proposals_per_step: k,
+                ..AnnealParams::default()
+            };
+            let mut best = 0.0f64;
+            for rep in 0..reps {
+                let mut rng = Rng::new(1000 + rep as u64);
+                let t0 = std::time::Instant::now();
+                let (_, _, log) =
+                    anneal(&graph, &fabric, &mut learned, &params, &mut rng).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                best = best.max(log.evaluations as f64 / dt);
+            }
+            println!(
+                "bench annealer/k{k}/mha: {best:.0} candidate evaluations/sec \
+                 ({iters} steps, {} per eval)",
+                fmt_ns(1e9 / best)
+            );
+            evals_per_sec.push(best);
+        }
+        let speedup = evals_per_sec[1] / evals_per_sec[0];
+        println!("bench annealer/batched-speedup: {speedup:.2}x (K=8 over K=1)");
+        let report = Json::obj()
+            .set("bench", "batched_proposal_annealing")
+            .set("backend", engine.platform())
+            .set("graph", "mha_seq32_d128_h4")
+            .set("iterations", iters)
+            .set("k1_evals_per_sec", evals_per_sec[0])
+            .set("k8_evals_per_sec", evals_per_sec[1])
+            .set("speedup_k8_over_k1", speedup)
+            .set("quick_mode", quick);
+        std::fs::write("BENCH_annealer.json", report.to_pretty()).unwrap();
+        println!("wrote BENCH_annealer.json");
     }
 
     b.write_csv("results/bench_scoring.csv").unwrap();

@@ -30,6 +30,10 @@ pub struct SubgraphReport {
     pub normalized_throughput: f64,
     pub latency_cycles: f64,
     pub anneal_evaluations: usize,
+    /// Batched scoring calls the annealer issued (= steps with candidates);
+    /// `anneal_evaluations / anneal_score_batches` ≈ the realized fleet
+    /// size K of `AnnealParams::proposals_per_step`.
+    pub anneal_score_batches: usize,
 }
 
 /// Whole-model compile outcome.
@@ -90,6 +94,7 @@ pub fn compile(
             normalized_throughput: report.normalized_throughput,
             latency_cycles: report.latency_cycles,
             anneal_evaluations: log.evaluations,
+            anneal_score_batches: log.score_batches,
         });
     }
 
@@ -138,6 +143,32 @@ mod tests {
         assert!(rep.total_ii > 0.0);
         assert!(rep.throughput > 0.0);
         assert_eq!(rep.cost_model, "heuristic");
+    }
+
+    #[test]
+    fn compile_with_batched_proposals() {
+        // The proposals_per_step knob threads through CompileConfig into the
+        // annealer: a K=4 compile evaluates ~K candidates per scoring call
+        // and still produces a valid report.
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut h = HeuristicCost::new();
+        let cfg = CompileConfig {
+            anneal: AnnealParams {
+                iterations: 40,
+                proposals_per_step: 4,
+                ..AnnealParams::default()
+            },
+            ..CompileConfig::default()
+        };
+        let rep = compile(&g, &f, &mut h, &cfg).unwrap();
+        assert!(rep.total_ii > 0.0 && rep.throughput > 0.0);
+        let sg = &rep.subgraphs[0];
+        assert!(sg.anneal_score_batches > 0 && sg.anneal_score_batches <= 40);
+        assert!(
+            sg.anneal_evaluations >= 2 * sg.anneal_score_batches,
+            "fleet scoring not engaged: {sg:?}"
+        );
     }
 
     #[test]

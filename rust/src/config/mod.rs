@@ -33,6 +33,7 @@
 //! iterations = 2000
 //! t_initial = 0.1
 //! t_final = 0.001
+//! proposals_per_step = 8
 //! ```
 
 use std::collections::BTreeMap;
@@ -153,6 +154,7 @@ impl RunConfig {
         raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
         raw.take_parse("dataset.frac_random", &mut cfg.dataset.frac_random)?;
         raw.take_parse("dataset.frac_walk", &mut cfg.dataset.frac_walk)?;
+        raw.take_parse("dataset.proposals_per_step", &mut cfg.dataset.proposals_per_step)?;
 
         raw.take_parse("train.epochs", &mut cfg.train.epochs)?;
         raw.take_parse("train.batch", &mut cfg.train.batch)?;
@@ -161,6 +163,7 @@ impl RunConfig {
         raw.take_parse("anneal.iterations", &mut cfg.anneal.iterations)?;
         raw.take_parse("anneal.t_initial", &mut cfg.anneal.t_initial)?;
         raw.take_parse("anneal.t_final", &mut cfg.anneal.t_final)?;
+        raw.take_parse("anneal.proposals_per_step", &mut cfg.anneal.proposals_per_step)?;
 
         if let Some(unknown) = raw.values.keys().next() {
             bail!("unknown config key {unknown:?}");
@@ -216,6 +219,7 @@ epochs = 5
 
 [anneal]
 iterations = 77
+proposals_per_step = 8
 "#,
         )
         .unwrap();
@@ -225,8 +229,10 @@ iterations = 77
         assert_eq!(cfg.dataset.era, Era::Present);
         assert_eq!(cfg.seed, 123);
         assert_eq!(cfg.dataset.total, 100);
+        assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);
         assert_eq!(cfg.anneal.iterations, 77);
+        assert_eq!(cfg.anneal.proposals_per_step, 8);
         // Unset keys keep defaults.
         assert_eq!(cfg.fabric.lanes, FabricConfig::default().lanes);
     }

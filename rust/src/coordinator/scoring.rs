@@ -29,10 +29,12 @@ use crate::gnn::{self, Bucket, GraphTensors};
 use crate::runtime::{Engine, Tensor};
 use crate::train::ParamStore;
 
-/// One in-flight request.
+/// One in-flight request. The reply carries the batch's failure message on
+/// error, so clients see *why* a batch failed instead of an opaque
+/// channel-recv error.
 struct Request {
     graph: GraphTensors,
-    reply: Sender<f64>,
+    reply: Sender<Result<f64, String>>,
     enqueued: Instant,
 }
 
@@ -66,12 +68,35 @@ impl ScoringClient {
     /// Submit one encoded graph and wait for its score.
     pub fn score(&self, graph: GraphTensors) -> Result<f64> {
         let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit(graph, reply_tx)?;
+        Self::await_reply(&reply_rx)
+    }
+
+    /// Submit a whole candidate set and await all replies, in submission
+    /// order. All requests enter the dispatcher queue before the first
+    /// reply is awaited, so a fleet fills batches instead of trickling
+    /// through one deadline flush at a time — this is the annealer-side
+    /// client API for batched-proposal search over the service.
+    pub fn score_many(&self, graphs: Vec<GraphTensors>) -> Result<Vec<f64>> {
+        let mut replies = Vec::with_capacity(graphs.len());
+        for graph in graphs {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.submit(graph, reply_tx)?;
+            replies.push(reply_rx);
+        }
+        replies.iter().map(Self::await_reply).collect()
+    }
+
+    fn submit(&self, graph: GraphTensors, reply: Sender<Result<f64, String>>) -> Result<()> {
         self.tx
-            .send(Request { graph, reply: reply_tx, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("scoring service shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("scoring service dropped the request"))
+            .send(Request { graph, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("scoring service shut down"))
+    }
+
+    fn await_reply(rx: &Receiver<Result<f64, String>>) -> Result<f64> {
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("scoring service dropped the request"))?
+            .map_err(|e| anyhow::anyhow!("scoring batch failed: {e}"))
     }
 }
 
@@ -198,12 +223,17 @@ fn execute_batch(
         match result {
             Ok(preds) => {
                 for (req, pred) in chunk.iter().zip(preds) {
-                    let _ = req.reply.send(pred);
+                    let _ = req.reply.send(Ok(pred));
                 }
             }
             Err(e) => {
-                eprintln!("scoring batch failed: {e:#}");
-                // Drop the reply senders; clients see a recv error.
+                // Propagate the failure message to every waiting client —
+                // an answered error beats an opaque dropped channel.
+                let msg = format!("{e:#}");
+                eprintln!("scoring batch failed: {msg}");
+                for req in chunk {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
             }
         }
     }
@@ -211,5 +241,149 @@ fn execute_batch(
 
 #[cfg(test)]
 mod tests {
-    // Service tests need real artifacts -> rust/tests/coordinator_integration.rs
+    use super::*;
+    use crate::arch::{Fabric, FabricConfig};
+    use crate::dfg::builders;
+    use crate::gnn::BUCKETS;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::runtime::{InferenceBackend, TensorSpec};
+    use crate::train::{TrainConfig, Trainer};
+    use crate::util::rng::Rng;
+
+    fn service(batch: usize, max_wait: Duration) -> ScoringService {
+        let engine = crate::runtime::native_engine();
+        let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+        ScoringService::start(engine, &trainer.param_store(), Ablation::default(), batch, max_wait)
+            .unwrap()
+    }
+
+    fn encoded(graph: &crate::dfg::Dfg, seed: u64) -> GraphTensors {
+        let fabric = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(graph, &fabric, &mut rng).unwrap();
+        let r = route_all(&fabric, graph, &p).unwrap();
+        gnn::encode(graph, &fabric, &p, &r).unwrap()
+    }
+
+    #[test]
+    fn deadline_flush_answers_partial_batches() {
+        // 3 requests against batch=32: only the deadline can flush them.
+        let svc = service(32, Duration::from_millis(5));
+        let client = svc.client();
+        let g = builders::mha(32, 128, 4);
+        for seed in 0..3u64 {
+            let score = client.score(encoded(&g, seed)).unwrap();
+            assert!(score > 0.0 && score < 1.0, "score {score}");
+        }
+        let stats = &svc.stats;
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.full_batches.load(Ordering::Relaxed), 0);
+        assert!(stats.deadline_flushes.load(Ordering::Relaxed) >= 1);
+        assert!(stats.occupancy(32) < 1.0);
+    }
+
+    #[test]
+    fn full_batches_and_occupancy_stats() {
+        // score_many submits the whole fleet before awaiting, so with a
+        // long deadline the dispatcher must flush on size, not time.
+        let svc = service(4, Duration::from_secs(5));
+        let client = svc.client();
+        let g = builders::mha(32, 128, 4);
+        let fleet: Vec<GraphTensors> = (0..8).map(|s| encoded(&g, s)).collect();
+        let scores = client.score_many(fleet).unwrap();
+        assert_eq!(scores.len(), 8);
+        assert!(scores.iter().all(|&s| s > 0.0 && s < 1.0));
+        let stats = &svc.stats;
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 8);
+        assert_eq!(stats.full_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.deadline_flushes.load(Ordering::Relaxed), 0);
+        assert!((stats.occupancy(4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_bucket_requests_queue_separately() {
+        // Graphs from different size buckets may never share a batch; both
+        // queues must still drain and answer.
+        let svc = service(2, Duration::from_millis(5));
+        let client = svc.client();
+        let small = builders::mha(32, 128, 4); // n32 bucket
+        let big = builders::mha(64, 256, 8); // n64 bucket
+        let enc_small = encoded(&small, 1);
+        let enc_big = encoded(&big, 2);
+        assert_eq!(enc_small.bucket, BUCKETS[0]);
+        assert_ne!(enc_small.bucket, enc_big.bucket);
+        let scores = client
+            .score_many(vec![enc_small, enc_big, encoded(&small, 3), encoded(&big, 4)])
+            .unwrap();
+        assert_eq!(scores.len(), 4);
+        assert!(scores.iter().all(|&s| s > 0.0 && s < 1.0));
+        // At least one executed batch per bucket.
+        assert!(svc.stats.batches.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn score_many_matches_single_scores() {
+        let svc = service(8, Duration::from_millis(2));
+        let client = svc.client();
+        let g = builders::mha(32, 128, 4);
+        let fleet: Vec<GraphTensors> = (0..4).map(|s| encoded(&g, 10 + s)).collect();
+        let singles: Vec<f64> = fleet.iter().map(|e| client.score(e.clone()).unwrap()).collect();
+        let batched = client.score_many(fleet).unwrap();
+        for (a, b) in singles.iter().zip(&batched) {
+            assert!((a - b).abs() < 1e-12, "single {a} vs batched {b}");
+        }
+    }
+
+    /// A backend whose inference always fails — exercises the error-reply
+    /// path end to end.
+    struct FailingEngine {
+        specs: Vec<TensorSpec>,
+    }
+
+    impl InferenceBackend for FailingEngine {
+        fn platform(&self) -> String {
+            "failing-mock".to_string()
+        }
+
+        fn param_specs(&self) -> &[TensorSpec] {
+            &self.specs
+        }
+
+        fn infer(&self, _bucket: Bucket, _batch: usize, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            anyhow::bail!("mock backend failure")
+        }
+
+        fn train_step(
+            &self,
+            _bucket: Bucket,
+            _batch: usize,
+            _inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            anyhow::bail!("mock backend cannot train")
+        }
+    }
+
+    #[test]
+    fn batch_failure_propagates_message_to_clients() {
+        let engine: Arc<crate::runtime::Engine> = Arc::new(FailingEngine { specs: Vec::new() });
+        let store = crate::train::ParamStore { tensors: Vec::new() };
+        let svc = ScoringService::start(
+            engine,
+            &store,
+            Ablation::default(),
+            4,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        let client = svc.client();
+        let g = builders::mha(32, 128, 4);
+        let err = client.score(encoded(&g, 1)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mock backend failure"), "unhelpful error: {msg}");
+        // And a fleet gets the message on every slot.
+        let errs = client.score_many(vec![encoded(&g, 2), encoded(&g, 3)]);
+        let msg = format!("{:#}", errs.unwrap_err());
+        assert!(msg.contains("mock backend failure"), "unhelpful fleet error: {msg}");
+    }
 }

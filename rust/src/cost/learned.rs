@@ -56,10 +56,17 @@ pub struct LearnedCost {
     inputs: Vec<Tensor>,
     n_params: usize,
     ablation: Ablation,
-    /// Per-bucket reusable encode buffer (annealer hot path).
-    scratch: HashMap<String, GraphTensors>,
+    /// Per-bucket pool of reusable encode buffers (annealer hot path). The
+    /// batched fleet path borrows one slot per candidate; the pool grows to
+    /// the largest fleet seen and is reused thereafter.
+    scratch: HashMap<String, Vec<GraphTensors>>,
     /// Scoring calls served (perf accounting).
     pub evaluations: u64,
+    /// Encode/infer failures mapped to a 0.0 score by the [`Objective`]
+    /// paths. A healthy checkpoint never errors, so a nonzero count means
+    /// the model is broken — not that every placement is bad; the first
+    /// failure (and every 1000th after) is logged to stderr.
+    pub scoring_errors: u64,
 }
 
 impl LearnedCost {
@@ -88,6 +95,7 @@ impl LearnedCost {
             ablation,
             scratch: HashMap::new(),
             evaluations: 0,
+            scoring_errors: 0,
         })
     }
 
@@ -126,10 +134,35 @@ impl LearnedCost {
         Ok(preds)
     }
 
-    fn scratch_for(&mut self, bucket: Bucket) -> GraphTensors {
-        self.scratch
-            .remove(&bucket.tag())
-            .unwrap_or_else(|| GraphTensors::zeroed(bucket))
+    /// Borrow `n` encode buffers for `bucket` from the pool, allocating any
+    /// shortfall. Callers return them with [`Self::pool_put`].
+    fn pool_take(&mut self, bucket: Bucket, n: usize) -> Vec<GraphTensors> {
+        let pool = self.scratch.entry(bucket.tag()).or_default();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match pool.pop() {
+                Some(g) => out.push(g),
+                None => out.push(GraphTensors::zeroed(bucket)),
+            }
+        }
+        out
+    }
+
+    fn pool_put(&mut self, bucket: Bucket, slots: Vec<GraphTensors>) {
+        self.scratch.entry(bucket.tag()).or_default().extend(slots);
+    }
+
+    /// Count a scoring failure (mapped to 0.0 by the `Objective` paths) and
+    /// log it, rate-limited, so a broken checkpoint cannot silently
+    /// masquerade as "every placement scores 0.0".
+    fn note_scoring_error(&mut self, err: &anyhow::Error) {
+        self.scoring_errors += 1;
+        if self.scoring_errors == 1 || self.scoring_errors % 1000 == 0 {
+            eprintln!(
+                "learned-cost: scoring failed ({} failure(s) so far; returning 0.0): {err:#}",
+                self.scoring_errors
+            );
+        }
     }
 }
 
@@ -148,15 +181,85 @@ impl Objective for LearnedCost {
     fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
         let bucket = match gnn::select_bucket(graph.num_nodes(), graph.num_edges()) {
             Ok(b) => b,
-            Err(_) => return 0.0,
+            Err(e) => {
+                self.note_scoring_error(&e);
+                return 0.0;
+            }
         };
-        let mut scratch = self.scratch_for(bucket);
+        let mut slots = self.pool_take(bucket, 1);
         let result = (|| -> Result<f64> {
-            gnn::encode_into(graph, fabric, placement, routing, &mut scratch)?;
-            self.predict_encoded(&scratch)
+            gnn::encode_into(graph, fabric, placement, routing, &mut slots[0])?;
+            self.predict_encoded(&slots[0])
         })();
-        self.scratch.insert(bucket.tag(), scratch);
-        result.unwrap_or(0.0)
+        self.pool_put(bucket, slots);
+        match result {
+            Ok(score) => score,
+            Err(e) => {
+                self.note_scoring_error(&e);
+                0.0
+            }
+        }
+    }
+
+    /// Score a whole candidate fleet with **one** `engine.infer` at
+    /// batch=K: each candidate is encoded into its own pooled scratch slot,
+    /// the slots are stacked once, and the backend runs the fleet in a
+    /// single call (the native backend spreads the batch over worker
+    /// threads). Errors map to 0.0 for every candidate, counted and logged
+    /// via the same rate-limited channel as [`Self::score`].
+    fn score_batch(
+        &mut self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        candidates: &[(Placement, Routing)],
+    ) -> Vec<f64> {
+        if candidates.is_empty() {
+            return Vec::new();
+        }
+        let bucket = match gnn::select_bucket(graph.num_nodes(), graph.num_edges()) {
+            Ok(b) => b,
+            Err(e) => {
+                self.note_scoring_error(&e);
+                return vec![0.0; candidates.len()];
+            }
+        };
+        let mut slots = self.pool_take(bucket, candidates.len());
+        let mut encode_err = None;
+        for ((placement, routing), slot) in candidates.iter().zip(slots.iter_mut()) {
+            if let Err(e) = gnn::encode_into(graph, fabric, placement, routing, slot) {
+                encode_err = Some(e);
+                break;
+            }
+        }
+        let scores = if let Some(e) = encode_err {
+            self.note_scoring_error(&e);
+            vec![0.0; candidates.len()]
+        } else {
+            let refs: Vec<&GraphTensors> = slots.iter().collect();
+            match self.predict_batch(&refs, refs.len()) {
+                Ok(scores) => scores,
+                Err(e) => {
+                    // Fleet-sized batches can be unsupported (the PJRT
+                    // backend ships fixed-batch artifacts only): record the
+                    // degradation, then fall back to batch=1 inference,
+                    // which every backend provides — the search stays
+                    // correct, just unamortized.
+                    self.note_scoring_error(&e);
+                    slots
+                        .iter()
+                        .map(|g| match self.predict_encoded(g) {
+                            Ok(s) => s,
+                            Err(e2) => {
+                                self.note_scoring_error(&e2);
+                                0.0
+                            }
+                        })
+                        .collect()
+                }
+            }
+        };
+        self.pool_put(bucket, slots);
+        scores
     }
 
     fn name(&self) -> &'static str {
@@ -188,6 +291,68 @@ mod tests {
             tensors: vec![("bogus".into(), Tensor::f32(&[2], vec![1.0, 2.0]))],
         };
         assert!(LearnedCost::from_store(engine, &store, Ablation::default()).is_err());
+    }
+
+    fn fresh_learned() -> LearnedCost {
+        let engine = crate::runtime::native_engine();
+        let trainer =
+            crate::train::Trainer::new(engine.clone(), crate::train::TrainConfig::default())
+                .unwrap();
+        LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default()).unwrap()
+    }
+
+    #[test]
+    fn scoring_errors_are_counted_not_silent() {
+        // An un-partitioned BERT graph exceeds every GNN bucket: scoring it
+        // must return 0.0 *and* bump the error counter — a broken input or
+        // checkpoint is distinguishable from a genuinely bad placement.
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::util::rng::Rng;
+
+        let mut learned = fresh_learned();
+        let small = builders::mha(32, 128, 4);
+        let fabric = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(3);
+        let p = crate::placer::random_placement(&small, &fabric, &mut rng).unwrap();
+        let r = crate::router::route_all(&fabric, &small, &p).unwrap();
+        assert!(learned.score(&small, &fabric, &p, &r) > 0.0);
+        assert_eq!(learned.scoring_errors, 0);
+
+        let oversize = builders::bert_large(16);
+        // The placement/routing are irrelevant: bucket selection fails first.
+        assert_eq!(learned.score(&oversize, &fabric, &p, &r), 0.0);
+        assert_eq!(learned.scoring_errors, 1);
+        let scores = learned.score_batch(&oversize, &fabric, std::slice::from_ref(&(p, r)));
+        assert_eq!(scores, vec![0.0]);
+        assert_eq!(learned.scoring_errors, 2);
+    }
+
+    #[test]
+    fn score_batch_matches_single_scores() {
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::util::rng::Rng;
+
+        let mut learned = fresh_learned();
+        let g = builders::mha(32, 128, 4);
+        let fabric = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(4);
+        let mut candidates = Vec::new();
+        for _ in 0..5 {
+            let p = crate::placer::random_placement(&g, &fabric, &mut rng).unwrap();
+            let r = crate::router::route_all(&fabric, &g, &p).unwrap();
+            candidates.push((p, r));
+        }
+        let batched = learned.score_batch(&g, &fabric, &candidates);
+        assert_eq!(batched.len(), candidates.len());
+        for ((p, r), want) in candidates.iter().zip(&batched) {
+            let single = learned.score(&g, &fabric, p, r);
+            assert_eq!(single.to_bits(), want.to_bits(), "batched != single");
+        }
+        assert_eq!(learned.scoring_errors, 0);
+        // One infer for the fleet + one per single re-score.
+        assert_eq!(learned.evaluations, 1 + candidates.len() as u64);
     }
 
     // End-to-end scoring tests live in rust/tests/runtime_integration.rs.

@@ -26,11 +26,23 @@ pub struct GenConfig {
     pub frac_walk: f64,
     // Remainder: endpoints of short randomized-SA runs guided by the
     // heuristic (realistic "compiler output" decisions).
+    /// Fleet size (K) for those short SA runs. Default 1 keeps every decision
+    /// stream bit-identical to the pre-batching corpus for a given seed;
+    /// raise it to collect decisions from batched-proposal searches. The
+    /// value is applied *after* `AnnealParams::randomized` so the randomized
+    /// schedule draws stay seed-compatible either way.
+    pub proposals_per_step: usize,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        GenConfig { total: 5878, era: Era::Past, frac_random: 0.5, frac_walk: 0.3 }
+        GenConfig {
+            total: 5878,
+            era: Era::Past,
+            frac_random: 0.5,
+            frac_walk: 0.3,
+            proposals_per_step: 1,
+        }
     }
 }
 
@@ -90,7 +102,8 @@ fn draw_decision(
         Ok(p)
     } else {
         // Short randomized-SA run guided by the heuristic cost model.
-        let params = AnnealParams::randomized(rng);
+        let mut params = AnnealParams::randomized(rng);
+        params.proposals_per_step = cfg.proposals_per_step.max(1);
         let mut heuristic = HeuristicCost::new();
         let (best, _, _) = anneal(graph, fabric, &mut heuristic, &params, rng)?;
         Ok(best)
@@ -238,6 +251,27 @@ mod tests {
         assert_eq!(samples.len(), 8);
         for s in &samples {
             assert_eq!(s.family, "gemm");
+            let l = s.label();
+            assert!(l > 0.0 && l <= 1.0, "label {l}");
+        }
+    }
+
+    #[test]
+    fn batched_sa_decisions_generate_valid_samples() {
+        // The proposals_per_step knob reaches the short-SA decision draws:
+        // force every decision onto that path and use a K=6 fleet.
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(21);
+        let cfg = GenConfig {
+            total: 0,
+            frac_random: 0.0,
+            frac_walk: 0.0,
+            proposals_per_step: 6,
+            ..GenConfig::default()
+        };
+        let samples = generate_family(WorkloadFamily::Ffn, 3, &f, &cfg, &mut rng).unwrap();
+        assert_eq!(samples.len(), 3);
+        for s in &samples {
             let l = s.label();
             assert!(l > 0.0 && l <= 1.0, "label {l}");
         }

@@ -72,7 +72,11 @@ pub fn run(ctx: &Ctx, seq: u64, blocks: Option<u64>) -> Result<()> {
                     truncated("gpt2-xl", b, seq, 1600, 6400, 25)),
     };
 
-    println!("\nLARGE MODELS — end-to-end compile throughput (era={})", ctx.cfg.era.name());
+    println!(
+        "\nLARGE MODELS — end-to-end compile throughput (era={}, K={} proposals/step)",
+        ctx.cfg.era.name(),
+        ctx.cfg.anneal.proposals_per_step.max(1)
+    );
     println!("  model        subgraphs   heuristic II   learned II   ΔTP");
     let mut rows = Vec::new();
     for graph in [bert, gpt] {

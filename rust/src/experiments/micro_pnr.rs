@@ -36,7 +36,11 @@ pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
         seed: ctx.cfg.seed ^ 0xA11C,
     };
 
-    println!("\nMICRO-PNR — compile latency, learned vs heuristic ({trials} trials/family)");
+    println!(
+        "\nMICRO-PNR — compile latency, learned vs heuristic ({trials} trials/family, \
+         K={} proposals/step)",
+        compile_cfg.anneal.proposals_per_step.max(1)
+    );
     println!("  family   mean latency reduction   mean II reduction");
     let mut rows = Vec::new();
     for family in [WorkloadFamily::Mlp, WorkloadFamily::Mha] {

@@ -58,7 +58,7 @@ USAGE: rdacost <subcommand> [options]
   train      [--dataset FILE] [--epochs N] [--ckpt FILE] [--era E]
   eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
   compile    --model gemm|mlp|ffn|mha|bert|gpt [--cost heuristic|learned|oracle]
-             [--seq N] [--blocks N] [--ckpt FILE]
+             [--seq N] [--blocks N] [--ckpt FILE] [--proposals K]
   bench      table1|fig2|table3|table2|micro-pnr|large-models|annotations
              [--folds N] [--trials N] [--seq N] [--blocks N] [--quick]
   serve-demo [--clients N] [--requests N]          scoring-service demo
@@ -102,6 +102,9 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
     cfg.anneal.iterations = args.get_usize("iters", cfg.anneal.iterations);
+    // Batched-proposal fleet size (K) for every annealing consumer.
+    cfg.anneal.proposals_per_step =
+        args.get_usize("proposals", cfg.anneal.proposals_per_step).max(1);
     if args.flag("quick") {
         // CI-speed profile: small corpus, few epochs, short anneals.
         cfg.dataset.total = cfg.dataset.total.min(400);

@@ -1,6 +1,12 @@
-//! Simulated-annealing search over placements.
+//! Simulated-annealing search over placements, with **batched candidate
+//! evaluation**: each step proposes a fleet of K distinct moves, routes them
+//! in parallel, scores all K in one [`Objective::score_batch`] call, and
+//! accepts via Boltzmann selection over the candidate set. K=1 reproduces
+//! the classic sequential Metropolis trajectory bit-for-bit under the same
+//! RNG seed (pinned by `k1_matches_reference_sequential_annealer`), so
+//! dataset generation stays comparable across the refactor.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::arch::Fabric;
 use crate::dfg::Dfg;
@@ -14,6 +20,23 @@ use super::placement::{random_placement, Placement};
 /// trait takes `&mut self` so learned models can batch and cache.
 pub trait Objective {
     fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64;
+
+    /// Score a whole candidate fleet in one call, returning one score per
+    /// candidate in order. The default loops over [`Objective::score`]
+    /// (correct for any implementation); batched backends override it to
+    /// amortize per-call overhead — [`crate::cost::LearnedCost`] runs the
+    /// entire fleet through a single `engine.infer` at batch=K.
+    fn score_batch(
+        &mut self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        candidates: &[(Placement, Routing)],
+    ) -> Vec<f64> {
+        candidates
+            .iter()
+            .map(|(p, r)| self.score(graph, fabric, p, r))
+            .collect()
+    }
 
     /// Name for logs/benches.
     fn name(&self) -> &'static str {
@@ -38,6 +61,10 @@ pub struct AnnealParams {
     pub w_stage: f64,
     /// Re-route all edges every N accepted moves (incremental routing drifts).
     pub reroute_every: usize,
+    /// Candidates proposed, routed and scored per annealing step (K).
+    /// 1 = the classic sequential Metropolis walk; K>1 routes the fleet on
+    /// scoped threads and scores it in one `score_batch` call.
+    pub proposals_per_step: usize,
 }
 
 impl Default for AnnealParams {
@@ -50,12 +77,16 @@ impl Default for AnnealParams {
             w_swap: 0.3,
             w_stage: 0.2,
             reroute_every: 25,
+            proposals_per_step: 1,
         }
     }
 }
 
 impl AnnealParams {
-    /// Draw a randomized schedule (dataset diversity).
+    /// Draw a randomized schedule (dataset diversity). `proposals_per_step`
+    /// stays 1 and is deliberately **not** drawn from the RNG: the dataset
+    /// generator's decision streams (and their seeds) must stay comparable
+    /// with the pre-batching corpus.
     pub fn randomized(rng: &mut Rng) -> AnnealParams {
         AnnealParams {
             iterations: rng.range_inclusive(50, 1200),
@@ -65,6 +96,7 @@ impl AnnealParams {
             w_swap: rng.f64_range(0.1, 1.0),
             w_stage: rng.f64_range(0.05, 0.8),
             reroute_every: rng.range_inclusive(10, 100),
+            proposals_per_step: 1,
         }
     }
 }
@@ -72,7 +104,10 @@ impl AnnealParams {
 /// Progress log of one annealing run.
 #[derive(Debug, Clone)]
 pub struct AnnealLog {
+    /// Candidate evaluations (one per scored (placement, routing) pair).
     pub evaluations: usize,
+    /// Batched scoring calls issued (= steps that had candidates).
+    pub score_batches: usize,
     pub accepted: usize,
     pub best_score: f64,
     pub initial_score: f64,
@@ -80,6 +115,7 @@ pub struct AnnealLog {
     pub trace: Vec<(usize, f64)>,
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Move {
     Relocate { node: usize, new_unit: crate::arch::UnitId },
     Swap { a: usize, b: usize },
@@ -88,6 +124,13 @@ enum Move {
 
 /// Run simulated annealing from a random initial placement; returns the best
 /// placement found, its routing, and the run log.
+///
+/// Each step proposes `params.proposals_per_step` distinct moves from the
+/// current state, routes the candidates in parallel (scoped threads), scores
+/// them in one [`Objective::score_batch`] call, Boltzmann-selects one
+/// candidate from the fleet, and Metropolis-accepts it against the current
+/// state. With K=1 the selection is a no-op and the RNG draw sequence is
+/// identical to the classic sequential annealer.
 pub fn anneal(
     graph: &Dfg,
     fabric: &Fabric,
@@ -95,17 +138,19 @@ pub fn anneal(
     params: &AnnealParams,
     rng: &mut Rng,
 ) -> Result<(Placement, Routing, AnnealLog)> {
+    let k = params.proposals_per_step.max(1);
     let mut current = random_placement(graph, fabric, rng)?;
-    let mut routing = route_all(fabric, graph, &current)?;
+    let routing = route_all(fabric, graph, &current)?;
     let mut current_score = objective.score(graph, fabric, &current, &routing);
 
     let mut best = current.clone();
-    let mut best_routing = routing.clone();
+    let mut best_routing = routing;
     let mut best_score = current_score;
     let initial_score = current_score;
 
     let mut log = AnnealLog {
         evaluations: 1,
+        score_batches: 0,
         accepted: 0,
         best_score,
         initial_score,
@@ -118,37 +163,76 @@ pub fn anneal(
     let mut accepted_since_reroute = 0usize;
 
     for it in 0..iters {
-        let Some(mv) = propose(graph, fabric, &current, params, rng) else {
+        let moves = propose_batch(graph, fabric, &current, params, rng, k);
+        if moves.is_empty() {
             temp *= cool;
             continue;
+        }
+
+        // Materialize the candidate fleet: apply each move to a copy of the
+        // current state, then route. Routing dominates candidate-preparation
+        // cost and is independent per candidate, so a fleet is routed on
+        // scoped threads; a single candidate is routed inline (no spawn
+        // overhead on the K=1 path).
+        let mut placements = Vec::with_capacity(moves.len());
+        for mv in &moves {
+            let mut candidate = current.clone();
+            apply(&mut candidate, mv);
+            debug_assert!(candidate.validate(graph, fabric).is_ok());
+            placements.push(candidate);
+        }
+        let mut candidates = route_candidates(graph, fabric, placements)?;
+
+        let scores = objective.score_batch(graph, fabric, &candidates);
+        if scores.len() != candidates.len() {
+            bail!(
+                "objective {} returned {} scores for {} candidates",
+                objective.name(),
+                scores.len(),
+                candidates.len()
+            );
+        }
+        log.evaluations += scores.len();
+        log.score_batches += 1;
+
+        // Track the best candidate *evaluated*, even if selection or the
+        // Metropolis step discards it below — fleet evaluations are never
+        // wasted. (At K=1 this records exactly the accepted-improving moves
+        // the sequential annealer records: a single candidate beating
+        // best_score necessarily beats current_score, so it is accepted.)
+        let mut fleet_best = 0usize;
+        for (i, &s) in scores.iter().enumerate() {
+            if s > scores[fleet_best] {
+                fleet_best = i;
+            }
+        }
+        if scores[fleet_best] > best_score {
+            best_score = scores[fleet_best];
+            best = candidates[fleet_best].0.clone();
+            best_routing = candidates[fleet_best].1.clone();
+            log.trace.push((it + 1, best_score));
+        }
+
+        // Boltzmann selection over the fleet (degenerate — and RNG-free —
+        // for a single candidate), then Metropolis accept vs the current
+        // state, exactly the classic criterion.
+        let chosen = if candidates.len() == 1 {
+            0
+        } else {
+            boltzmann_select(&scores, temp, rng)
         };
-        let mut candidate = current.clone();
-        apply(&mut candidate, &mv);
-        debug_assert!(candidate.validate(graph, fabric).is_ok());
-
-        let cand_routing = route_all(fabric, graph, &candidate)?;
-        let cand_score = objective.score(graph, fabric, &candidate, &cand_routing);
-        log.evaluations += 1;
-
-        let delta = cand_score - current_score;
+        let delta = scores[chosen] - current_score;
         let accept = delta >= 0.0 || rng.f64() < (delta / temp.max(1e-9)).exp();
         if accept {
-            current = candidate;
-            routing = cand_routing;
-            current_score = cand_score;
+            current = candidates.swap_remove(chosen).0;
+            current_score = scores[chosen];
             log.accepted += 1;
             accepted_since_reroute += 1;
-            if current_score > best_score {
-                best_score = current_score;
-                best = current.clone();
-                best_routing = routing.clone();
-                log.trace.push((it + 1, best_score));
-            }
             if accepted_since_reroute >= params.reroute_every {
                 // Periodic clean re-route (sequential routing is
                 // order-dependent; this keeps congestion estimates honest).
-                routing = route_all(fabric, graph, &current)?;
-                current_score = objective.score(graph, fabric, &current, &routing);
+                let clean = route_all(fabric, graph, &current)?;
+                current_score = objective.score(graph, fabric, &current, &clean);
                 log.evaluations += 1;
                 accepted_since_reroute = 0;
             }
@@ -158,6 +242,95 @@ pub fn anneal(
 
     log.best_score = best_score;
     Ok((best, best_routing, log))
+}
+
+/// Route every candidate placement, in parallel for fleets of 2+. Workers
+/// are capped at the core count and take contiguous chunks, so a large K
+/// costs at most `available_parallelism` thread spawns per step.
+fn route_candidates(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placements: Vec<Placement>,
+) -> Result<Vec<(Placement, Routing)>> {
+    if placements.len() == 1 {
+        let mut out = Vec::with_capacity(1);
+        for p in placements {
+            let r = route_all(fabric, graph, &p)?;
+            out.push((p, r));
+        }
+        return Ok(out);
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(placements.len());
+    let chunk = placements.len().div_ceil(workers);
+    let mut slots: Vec<Option<Result<Routing>>> = (0..placements.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (p_chunk, s_chunk) in placements.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (p, slot) in p_chunk.iter().zip(s_chunk.iter_mut()) {
+                    *slot = Some(route_all(fabric, graph, p));
+                }
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(placements.len());
+    for (p, slot) in placements.into_iter().zip(slots) {
+        let r = slot.expect("routing worker did not run")?;
+        out.push((p, r));
+    }
+    Ok(out)
+}
+
+/// Sample one candidate index with probability ∝ exp(score_i / temp)
+/// (softmax shifted by the max score for numerical stability). Consumes
+/// exactly one RNG draw; only called for fleets of 2+.
+fn boltzmann_select(scores: &[f64], temp: f64, rng: &mut Rng) -> usize {
+    let t = temp.max(1e-9);
+    let max_s = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut weights = Vec::with_capacity(scores.len());
+    let mut total = 0.0;
+    for &s in scores {
+        let w = ((s - max_s) / t).exp();
+        total += w;
+        weights.push(w);
+    }
+    let mut roll = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        if roll < w {
+            return i;
+        }
+        roll -= w;
+    }
+    weights.len() - 1
+}
+
+/// Propose up to `k` **distinct** moves from the current state. For k=1 this
+/// is exactly one `propose` call (the classic RNG draw sequence); for k>1 a
+/// bounded number of extra draws fills the fleet, skipping duplicates, and
+/// tiny move spaces simply yield a smaller fleet.
+fn propose_batch(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    params: &AnnealParams,
+    rng: &mut Rng,
+    k: usize,
+) -> Vec<Move> {
+    let mut moves: Vec<Move> = Vec::with_capacity(k);
+    let mut attempts = 0usize;
+    while moves.len() < k && attempts < 4 * k {
+        attempts += 1;
+        let Some(mv) = propose(graph, fabric, placement, params, rng) else {
+            break;
+        };
+        if k > 1 && moves.contains(&mv) {
+            continue;
+        }
+        moves.push(mv);
+    }
+    moves
 }
 
 fn propose(
@@ -275,6 +448,117 @@ mod tests {
         }
     }
 
+    /// The pre-refactor sequential annealer, verbatim: one proposal per
+    /// step, Metropolis accept. `k1_matches_reference_sequential_annealer`
+    /// pins the batched implementation at K=1 against this bit-for-bit.
+    fn reference_anneal(
+        graph: &Dfg,
+        fabric: &Fabric,
+        objective: &mut dyn Objective,
+        params: &AnnealParams,
+        rng: &mut Rng,
+    ) -> Result<(Placement, Routing, AnnealLog)> {
+        let mut current = random_placement(graph, fabric, rng)?;
+        let mut routing = route_all(fabric, graph, &current)?;
+        let mut current_score = objective.score(graph, fabric, &current, &routing);
+
+        let mut best = current.clone();
+        let mut best_routing = routing.clone();
+        let mut best_score = current_score;
+        let initial_score = current_score;
+
+        let mut log = AnnealLog {
+            evaluations: 1,
+            score_batches: 0,
+            accepted: 0,
+            best_score,
+            initial_score,
+            trace: vec![(0, best_score)],
+        };
+
+        let iters = params.iterations.max(1);
+        let cool = (params.t_final / params.t_initial).powf(1.0 / iters as f64);
+        let mut temp = params.t_initial;
+        let mut accepted_since_reroute = 0usize;
+
+        for it in 0..iters {
+            let Some(mv) = propose(graph, fabric, &current, params, rng) else {
+                temp *= cool;
+                continue;
+            };
+            let mut candidate = current.clone();
+            apply(&mut candidate, &mv);
+
+            let cand_routing = route_all(fabric, graph, &candidate)?;
+            let cand_score = objective.score(graph, fabric, &candidate, &cand_routing);
+            log.evaluations += 1;
+            log.score_batches += 1;
+
+            let delta = cand_score - current_score;
+            let accept = delta >= 0.0 || rng.f64() < (delta / temp.max(1e-9)).exp();
+            if accept {
+                current = candidate;
+                routing = cand_routing;
+                current_score = cand_score;
+                log.accepted += 1;
+                accepted_since_reroute += 1;
+                if current_score > best_score {
+                    best_score = current_score;
+                    best = current.clone();
+                    best_routing = routing.clone();
+                    log.trace.push((it + 1, best_score));
+                }
+                if accepted_since_reroute >= params.reroute_every {
+                    routing = route_all(fabric, graph, &current)?;
+                    current_score = objective.score(graph, fabric, &current, &routing);
+                    log.evaluations += 1;
+                    accepted_since_reroute = 0;
+                }
+            }
+            temp *= cool;
+        }
+
+        log.best_score = best_score;
+        Ok((best, best_routing, log))
+    }
+
+    #[test]
+    fn k1_matches_reference_sequential_annealer() {
+        // The batched annealer at K=1 must draw the same RNG sequence and
+        // take the identical accepted-move trajectory as the pre-refactor
+        // sequential loop — this is what keeps dataset generation (and every
+        // seeded experiment) comparable across the refactor.
+        let f = Fabric::new(FabricConfig::default());
+        for (seed, graph) in [
+            (21u64, builders::mha(32, 128, 4)),
+            (22, builders::ffn(32, 128, 512)),
+            (23, builders::mlp(16, &[64, 128, 64])),
+        ] {
+            let params = AnnealParams { iterations: 250, ..AnnealParams::default() };
+            assert_eq!(params.proposals_per_step, 1);
+
+            let mut rng_a = Rng::new(seed);
+            let mut oracle_a = Oracle { era: Era::Past };
+            let (best_a, routing_a, log_a) =
+                reference_anneal(&graph, &f, &mut oracle_a, &params, &mut rng_a).unwrap();
+
+            let mut rng_b = Rng::new(seed);
+            let mut oracle_b = Oracle { era: Era::Past };
+            let (best_b, routing_b, log_b) =
+                anneal(&graph, &f, &mut oracle_b, &params, &mut rng_b).unwrap();
+
+            assert_eq!(best_a, best_b, "seed {seed}: best placements diverged");
+            assert_eq!(routing_a.routes, routing_b.routes, "seed {seed}: routings diverged");
+            assert_eq!(log_a.best_score.to_bits(), log_b.best_score.to_bits(), "seed {seed}");
+            assert_eq!(log_a.initial_score.to_bits(), log_b.initial_score.to_bits());
+            assert_eq!(log_a.accepted, log_b.accepted, "seed {seed}: accept counts diverged");
+            assert_eq!(log_a.evaluations, log_b.evaluations);
+            assert_eq!(log_a.trace, log_b.trace, "seed {seed}: trajectories diverged");
+            // And the RNG streams are in the same state afterwards.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "seed {seed}: RNG streams diverged");
+        }
+    }
+
     #[test]
     fn annealing_improves_over_initial() {
         let g = builders::mha(32, 128, 4);
@@ -290,6 +574,102 @@ mod tests {
         );
         assert!(log.accepted > 0);
         assert!(log.evaluations > 100);
+    }
+
+    #[test]
+    fn batched_annealing_improves_over_initial() {
+        // The K=8 fleet path must deliver the same quality guarantees as the
+        // sequential walk.
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(11);
+        let mut oracle = Oracle { era: Era::Past };
+        let params = AnnealParams {
+            iterations: 120,
+            proposals_per_step: 8,
+            ..AnnealParams::default()
+        };
+        let (best, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        best.validate(&g, &f).unwrap();
+        assert!(
+            log.best_score >= log.initial_score,
+            "batched annealer made things worse: {log:?}"
+        );
+        assert!(log.accepted > 0);
+        // Fleet scoring: many more candidate evaluations than steps.
+        assert!(log.evaluations > 400, "fleet barely evaluated: {log:?}");
+        assert!(log.score_batches <= 120);
+        assert!(log.evaluations >= 4 * log.score_batches, "fleets too small: {log:?}");
+    }
+
+    #[test]
+    fn batched_matches_sequential_quality() {
+        // Same evaluation budget, two shapes: K=8 over iters/8 steps should
+        // land in the same quality ballpark as K=1 over iters steps (it is a
+        // population search, not a worse one).
+        let g = builders::ffn(32, 128, 512);
+        let f = Fabric::new(FabricConfig::default());
+        let mut oracle = Oracle { era: Era::Past };
+
+        let mut rng = Rng::new(31);
+        let seq = AnnealParams { iterations: 320, ..AnnealParams::default() };
+        let (_, _, log_seq) = anneal(&g, &f, &mut oracle, &seq, &mut rng).unwrap();
+
+        let mut rng = Rng::new(31);
+        let fleet = AnnealParams {
+            iterations: 40,
+            proposals_per_step: 8,
+            ..AnnealParams::default()
+        };
+        let (_, _, log_fleet) = anneal(&g, &f, &mut oracle, &fleet, &mut rng).unwrap();
+
+        // Same seed -> same initial placement; the fleet must make real
+        // progress from it (a catastrophically broken selection rule — e.g.
+        // always picking the worst candidate — fails this), though with 8x
+        // fewer accept opportunities it may trail the long sequential walk.
+        assert_eq!(log_fleet.initial_score.to_bits(), log_seq.initial_score.to_bits());
+        assert!(
+            log_fleet.best_score > log_fleet.initial_score,
+            "fleet never improved: {log_fleet:?}"
+        );
+        assert!(
+            log_fleet.best_score >= 0.5 * log_seq.best_score,
+            "fleet {log_fleet:?} far below sequential {log_seq:?}"
+        );
+    }
+
+    #[test]
+    fn boltzmann_select_prefers_better_candidates() {
+        let mut rng = Rng::new(5);
+        let scores = [0.10, 0.90, 0.15];
+        // Cold: essentially always the argmax.
+        let cold: Vec<usize> = (0..200).map(|_| boltzmann_select(&scores, 1e-6, &mut rng)).collect();
+        assert!(cold.iter().all(|&i| i == 1), "cold selection must be greedy");
+        // Hot: every candidate gets sampled.
+        let hot: Vec<usize> = (0..600).map(|_| boltzmann_select(&scores, 100.0, &mut rng)).collect();
+        for want in 0..scores.len() {
+            assert!(hot.contains(&want), "hot selection never chose {want}");
+        }
+        // Indices always in range.
+        assert!(hot.iter().all(|&i| i < scores.len()));
+    }
+
+    #[test]
+    fn propose_batch_yields_distinct_moves() {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(9);
+        let params = AnnealParams::default();
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        for _ in 0..20 {
+            let moves = propose_batch(&g, &f, &p, &params, &mut rng, 8);
+            assert!(!moves.is_empty() && moves.len() <= 8);
+            for (i, a) in moves.iter().enumerate() {
+                for b in &moves[i + 1..] {
+                    assert_ne!(a, b, "duplicate move in fleet");
+                }
+            }
+        }
     }
 
     #[test]
@@ -326,6 +706,7 @@ mod tests {
             assert!(p.iterations >= 50 && p.iterations <= 1200);
             assert!(p.t_initial > p.t_final);
             assert!(p.w_relocate > 0.0 && p.w_swap > 0.0 && p.w_stage > 0.0);
+            assert_eq!(p.proposals_per_step, 1, "randomized schedules stay sequential");
         }
     }
 
@@ -351,6 +732,23 @@ mod tests {
         let mut rng = Rng::new(15);
         let mut oracle = Oracle { era: Era::Past };
         let params = AnnealParams { iterations: 300, ..AnnealParams::default() };
+        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        for w in log.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");
+        }
+    }
+
+    #[test]
+    fn batched_trace_is_monotone() {
+        let g = builders::gemm_graph(64, 64, 64);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(16);
+        let mut oracle = Oracle { era: Era::Past };
+        let params = AnnealParams {
+            iterations: 80,
+            proposals_per_step: 4,
+            ..AnnealParams::default()
+        };
         let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
         for w in log.trace.windows(2) {
             assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");

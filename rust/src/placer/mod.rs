@@ -15,6 +15,13 @@
 //! models of [`crate::cost`]. Its schedule parameters are randomized by the
 //! dataset generator (paper §IV-A: "we randomized the search parameters of a
 //! simulated annealing placer") to produce diverse PnR decisions.
+//!
+//! Search is **fleet-based**: every step proposes
+//! `AnnealParams::proposals_per_step` (K) distinct moves, routes the
+//! candidates on scoped threads, scores the whole fleet through one
+//! [`Objective::score_batch`] call (one batched GNN inference for the
+//! learned model), and Boltzmann-selects the move to Metropolis-accept.
+//! K=1 reproduces the classic sequential trajectory bit-for-bit.
 
 mod annealer;
 mod placement;

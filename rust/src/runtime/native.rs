@@ -120,11 +120,38 @@ impl InferenceBackend for NativeEngine {
         let t8 = &inputs[NUM_PARAMS..NUM_PARAMS + 8];
         check_batch_tensors(bucket, batch, t8)?;
         let flags = read_flags(&inputs[NUM_PARAMS + 8])?;
-        let mut preds = Vec::with_capacity(batch);
-        for b in 0..batch {
-            let g = GraphView::slice(t8, bucket, b)?;
-            let tape = forward(&p, &g, flags);
-            preds.push(tape.pred);
+        // Per-sample forwards are independent, so a multi-sample batch is
+        // spread over worker threads (the per-slot results are bitwise
+        // identical to the sequential loop — each slot is a pure function of
+        // its own slice). Single-sample calls stay inline: the annealer's
+        // K=1 hot path must not pay a spawn.
+        let mut preds = vec![0f32; batch];
+        if batch == 1 {
+            let g = GraphView::slice(t8, bucket, 0)?;
+            preds[0] = forward(&p, &g, flags).pred;
+        } else if batch > 1 {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(batch);
+            let chunk = batch.div_ceil(workers);
+            let p_ref = &p;
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::with_capacity(workers);
+                for (wi, slot) in preds.chunks_mut(chunk).enumerate() {
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        for (j, out) in slot.iter_mut().enumerate() {
+                            let g = GraphView::slice(t8, bucket, wi * chunk + j)?;
+                            *out = forward(p_ref, &g, flags).pred;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("native infer worker panicked")?;
+                }
+                Ok(())
+            })?;
         }
         Ok(vec![Tensor::f32(&[batch], preds)])
     }

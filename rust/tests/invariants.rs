@@ -75,6 +75,31 @@ fn every_annealer_move_kind_preserves_feasibility() {
 }
 
 #[test]
+fn batched_annealer_moves_preserve_feasibility() {
+    // The fleet path must propose only feasible candidates too: the default
+    // `score_batch` loops over `score`, so the validating objective checks
+    // every candidate in every fleet.
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::mha(32, 128, 4);
+    let params = AnnealParams {
+        iterations: 60,
+        proposals_per_step: 6,
+        ..AnnealParams::default()
+    };
+    let mut obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0 };
+    let mut rng = Rng::new(404);
+    let (best, _, log) =
+        anneal(&graph, &fabric, &mut obj, &params, &mut rng).expect("batched anneal failed");
+    best.validate(&graph, &fabric).expect("final placement infeasible");
+    assert!(
+        obj.calls > 120,
+        "fleet objective barely exercised ({} calls for 60 K=6 steps)",
+        obj.calls
+    );
+    assert!(log.evaluations >= obj.calls);
+}
+
+#[test]
 fn router_is_deterministic_for_identical_placements() {
     let fabric = Fabric::new(FabricConfig::default());
     for fam in WorkloadFamily::DATASET_FAMILIES {
