@@ -6,9 +6,12 @@
 //! then measures everything with the simulator.
 //!
 //! Run after `examples/dataset_and_train.rs` (or pass `--ckpt`):
-//!   cargo run --release --example compile_bert -- --blocks 2
+//!   cargo run --release --example compile_bert -- --blocks 2 --workers 4
 //! `--blocks N` truncates BERT to N transformer blocks for a fast demo;
-//! omit it for all 24 (the full paper configuration).
+//! omit it for all 24 (the full paper configuration). `--workers N` fans
+//! the per-subgraph place-and-route over N threads (results are identical
+//! for every worker count); `--restarts R` runs R independent anneals per
+//! subgraph and keeps the best measured II.
 
 use rdacost::arch::{Era, Fabric, FabricConfig};
 use rdacost::compiler::{compile, CompileConfig};
@@ -56,11 +59,21 @@ fn main() -> anyhow::Result<()> {
             ..AnnealParams::default()
         },
         seed: 7,
+        // Subgraphs place-and-route concurrently; the default uses every
+        // core. Results are bit-identical for any worker count.
+        workers: args.get_usize(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        ),
+        restarts: args.get_usize("restarts", 1).max(1),
     };
 
-    println!("\ncompiling with heuristic cost model ...");
-    let mut heuristic = HeuristicCost::new();
-    let rep_h = compile(&graph, &fabric, &mut heuristic, &cfg)?;
+    println!(
+        "\ncompiling with heuristic cost model ({} workers, {} restart(s)/subgraph) ...",
+        cfg.workers, cfg.restarts
+    );
+    let heuristic = HeuristicCost::new();
+    let rep_h = compile(&graph, &fabric, &heuristic, &cfg)?;
     println!(
         "  {} subgraphs, total II {:.0} cycles/sample ({:.1}s)",
         rep_h.subgraphs.len(),
@@ -68,9 +81,9 @@ fn main() -> anyhow::Result<()> {
         rep_h.wall_seconds
     );
 
-    println!("compiling with learned cost model ...");
-    let mut learned = LearnedCost::from_store(engine, &store, Ablation::default())?;
-    let rep_l = compile(&graph, &fabric, &mut learned, &cfg)?;
+    println!("compiling with learned cost model (workers share one engine) ...");
+    let learned = LearnedCost::from_store(engine, &store, Ablation::default())?;
+    let rep_l = compile(&graph, &fabric, &learned, &cfg)?;
     println!(
         "  {} subgraphs, total II {:.0} cycles/sample ({:.1}s)",
         rep_l.subgraphs.len(),

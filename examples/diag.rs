@@ -18,7 +18,7 @@ use rdacost::metrics;
 fn main() -> anyhow::Result<()> {
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = Rng::new(3);
-    let mut h = HeuristicCost::new();
+    let h = HeuristicCost::new();
     let mut bn = std::collections::BTreeMap::<&'static str, usize>::new();
     for fam in WorkloadFamily::DATASET_FAMILIES {
         let mut pred = Vec::new();

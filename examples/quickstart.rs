@@ -42,10 +42,10 @@ fn main() -> anyhow::Result<()> {
     //    fleet of 4 candidates per step (routed in parallel, scored in one
     //    batched objective call; set to 1 for the classic sequential walk).
     let mut rng = Rng::new(42);
-    let mut heuristic = HeuristicCost::new();
+    let heuristic = HeuristicCost::new();
     let params =
         AnnealParams { iterations: 500, proposals_per_step: 4, ..AnnealParams::default() };
-    let (placement, _routing, log) = anneal(&graph, &fabric, &mut heuristic, &params, &mut rng)?;
+    let (placement, _routing, log) = anneal(&graph, &fabric, &heuristic, &params, &mut rng)?;
     println!(
         "annealed: {} candidate evaluations in {} batched scoring calls, \
          heuristic score {:.3} -> {:.3}",
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     //    parameters — demo of the serving path only).
     let engine = rdacost::runtime::engine("artifacts")?;
     let trainer = Trainer::new(engine.clone(), TrainConfig::default())?;
-    let mut learned = LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default())?;
+    let learned = LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default())?;
     let pred = learned.score(&graph, &fabric, &placement, &routing);
     println!("learned cost model (untrained) predicts: {pred:.3}");
     println!("\nquickstart OK — next: examples/dataset_and_train.rs");

@@ -1,0 +1,94 @@
+//! Compile-session benchmark: wall-clock of a multi-partition compile at
+//! workers = 1 / 2 / 4 with the heuristic objective, plus the bit-identity
+//! check across worker counts. Emits `BENCH_compile.json` (CI uploads it
+//! next to `BENCH_annealer.json`).
+//!
+//! The subgraph fan-out is the tentpole speedup of the parallel session:
+//! every partition's place-and-route is independent, so on a multi-partition
+//! graph wall time should drop near-linearly until cores (or partitions)
+//! run out.
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig, CompileReport};
+use rdacost::cost::HeuristicCost;
+use rdacost::dfg::builders;
+use rdacost::placer::AnnealParams;
+use rdacost::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+    let iters = if quick { 60 } else { 200 };
+    let reps = if quick { 2 } else { 3 };
+
+    // An 8-block BERT-large trunk partitions into ~4 fabric-sized
+    // subgraphs (each block is ~15 PCU ops against a 32-PCU budget) — the
+    // multi-configuration shape the session parallelizes.
+    let graph = builders::transformer_public("bert-8blk", 8, 16, 1024, 4096, 16);
+    let fabric = Fabric::new(FabricConfig::default());
+    let heuristic = HeuristicCost::new();
+
+    let worker_counts = [1usize, 2, 4];
+    let mut walls = Vec::new();
+    let mut reference: Option<CompileReport> = None;
+    let mut identical = true;
+    for &workers in &worker_counts {
+        let cfg = CompileConfig {
+            era: Era::Past,
+            anneal: AnnealParams { iterations: iters, ..AnnealParams::default() },
+            seed: 0xBE9C,
+            workers,
+            restarts: 1,
+        };
+        let mut best = f64::INFINITY;
+        let mut report = None;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let rep = compile(&graph, &fabric, &heuristic, &cfg).expect("compile failed");
+            best = best.min(t0.elapsed().as_secs_f64());
+            report = Some(rep);
+        }
+        let report = report.unwrap();
+        if let Some(r) = &reference {
+            // Worker counts must not change results — bit-for-bit.
+            identical &= r.total_ii.to_bits() == report.total_ii.to_bits()
+                && r.subgraphs.len() == report.subgraphs.len()
+                && r.subgraphs
+                    .iter()
+                    .zip(&report.subgraphs)
+                    .all(|(a, b)| a.ii_cycles.to_bits() == b.ii_cycles.to_bits());
+        } else {
+            println!(
+                "bench compile/{}: {} subgraphs, total II {:.0}",
+                graph.name,
+                report.subgraphs.len(),
+                report.total_ii
+            );
+            reference = Some(report.clone());
+        }
+        println!("bench compile/workers{workers}: {best:.3}s wall ({iters} iters/subgraph)");
+        walls.push(best);
+    }
+
+    let speedup_w2 = walls[0] / walls[1];
+    let speedup_w4 = walls[0] / walls[2];
+    println!("bench compile/speedup: {speedup_w2:.2}x (w=2), {speedup_w4:.2}x (w=4)");
+    println!("bench compile/identical-results: {identical}");
+    assert!(identical, "worker counts changed compile results");
+
+    let reference = reference.unwrap();
+    let report = Json::obj()
+        .set("bench", "parallel_compile_session")
+        .set("objective", "heuristic")
+        .set("graph", graph.name.as_str())
+        .set("subgraphs", reference.subgraphs.len() as f64)
+        .set("iterations_per_subgraph", iters)
+        .set("wall_seconds_w1", walls[0])
+        .set("wall_seconds_w2", walls[1])
+        .set("wall_seconds_w4", walls[2])
+        .set("speedup_w2_over_w1", speedup_w2)
+        .set("speedup_w4_over_w1", speedup_w4)
+        .set("identical_results_across_workers", identical)
+        .set("quick_mode", quick);
+    std::fs::write("BENCH_compile.json", report.to_pretty()).unwrap();
+    println!("wrote BENCH_compile.json");
+}

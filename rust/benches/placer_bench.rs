@@ -19,14 +19,14 @@ fn main() {
 
     b.bench("placer/anneal100/heuristic/mha", || {
         let mut rng = Rng::new(7);
-        let mut obj = HeuristicCost::new();
-        black_box(anneal(&graph, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+        let obj = HeuristicCost::new();
+        black_box(anneal(&graph, &fabric, &obj, &params, &mut rng).unwrap().2.best_score)
     });
 
     b.bench("placer/anneal100/oracle/mha", || {
         let mut rng = Rng::new(7);
-        let mut obj = OracleCost::new(Era::Past);
-        black_box(anneal(&graph, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+        let obj = OracleCost::new(Era::Past);
+        black_box(anneal(&graph, &fabric, &obj, &params, &mut rng).unwrap().2.best_score)
     });
 
     // Batched-proposal fleet (K=8): same step count, 8 routed+scored
@@ -35,8 +35,8 @@ fn main() {
         AnnealParams { iterations: 100, proposals_per_step: 8, ..AnnealParams::default() };
     b.bench("placer/anneal100xK8/heuristic/mha", || {
         let mut rng = Rng::new(7);
-        let mut obj = HeuristicCost::new();
-        black_box(anneal(&graph, &fabric, &mut obj, &fleet, &mut rng).unwrap().2.best_score)
+        let obj = HeuristicCost::new();
+        black_box(anneal(&graph, &fabric, &obj, &fleet, &mut rng).unwrap().2.best_score)
     });
 
     // Initial placement generation.
@@ -48,8 +48,8 @@ fn main() {
     let big = builders::ffn(64, 256, 1024);
     b.bench("placer/anneal100/heuristic/ffn", || {
         let mut rng = Rng::new(11);
-        let mut obj = HeuristicCost::new();
-        black_box(anneal(&big, &fabric, &mut obj, &params, &mut rng).unwrap().2.best_score)
+        let obj = HeuristicCost::new();
+        black_box(anneal(&big, &fabric, &obj, &params, &mut rng).unwrap().2.best_score)
     });
 
     b.write_csv("results/bench_placer.csv").unwrap();

@@ -21,7 +21,7 @@ fn main() {
     let engine = rdacost::runtime::engine("artifacts").expect("initializing backend");
     let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
     let store = trainer.param_store();
-    let mut learned =
+    let learned =
         LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
 
     let fabric = Fabric::new(FabricConfig::default());
@@ -100,7 +100,7 @@ fn main() {
                 let mut rng = Rng::new(1000 + rep as u64);
                 let t0 = std::time::Instant::now();
                 let (_, _, log) =
-                    anneal(&graph, &fabric, &mut learned, &params, &mut rng).unwrap();
+                    anneal(&graph, &fabric, &learned, &params, &mut rng).unwrap();
                 let dt = t0.elapsed().as_secs_f64();
                 best = best.max(log.evaluations as f64 / dt);
             }

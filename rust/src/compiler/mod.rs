@@ -1,10 +1,38 @@
 //! The end-to-end compile driver: what "compiling BERT with cost model X"
-//! means (paper §IV-B).
+//! means (paper §IV-B), as a **parallel compile session**.
 //!
 //! Pipeline: partition the model's DFG into fabric-sized subgraphs
-//! (paper footnote 1) → for each subgraph, run the annealing placer under
-//! the chosen cost model → route → **measure with the simulator** (the
+//! (paper footnote 1) → place and route every subgraph **concurrently**
+//! under the chosen cost model → **measure with the simulator** (the
 //! stand-in for running the compiled artifact on hardware).
+//!
+//! Architecture of a [`CompileSession`]:
+//!
+//! * **Shareable objectives.** The session takes a
+//!   [`crate::placer::ObjectiveFactory`] — the `Sync` side of the cost
+//!   model — and each worker thread draws its own cheap [`Objective`]
+//!   handle. For [`crate::cost::LearnedCost`] all handles multiplex onto
+//!   one shared inference engine, so concurrent subgraph annealers fill
+//!   real inference batches instead of each owning a backend.
+//! * **Per-subgraph seed streams.** Subgraph `i`, restart `r` anneals under
+//!   an RNG stream derived from `(seed, i, r)` ([`subgraph_rng`]) — not
+//!   from a generator threaded through the compile loop. Results therefore
+//!   do not depend on compile order or on the worker count: a `workers=N`
+//!   compile is **bit-identical** to `workers=1` (pinned by
+//!   `rust/tests/compile_session.rs`).
+//! * **Restarts.** `cfg.restarts` independent annealing runs per subgraph;
+//!   the best *measured* (simulator) II wins, ties to the earliest restart.
+//!   Because restart 0's stream is unchanged, raising `restarts` can only
+//!   improve (or tie) every subgraph.
+//! * **Worker fan-out.** Subgraphs are claimed off an atomic counter by
+//!   `cfg.workers` scoped threads (the coordinator pool's work-stealing
+//!   idiom); reports land in per-subgraph slots and are assembled in
+//!   partition order, so the [`CompileReport`] is deterministic regardless
+//!   of scheduling. Note that session workers compose multiplicatively
+//!   with the annealer's per-step candidate-routing threads
+//!   (`AnnealParams::proposals_per_step` > 1) and the native engine's
+//!   batched-infer threads: when the session already saturates the cores,
+//!   prefer K=1 (the default) so each worker anneals inline.
 //!
 //! Subgraphs execute as successive fabric configurations, so the whole
 //! model's steady-state cost per sample is the *sum* of subgraph IIs (the
@@ -16,24 +44,27 @@ use anyhow::Result;
 
 use crate::arch::{Era, Fabric};
 use crate::dfg::{partition, Dfg};
-use crate::placer::{anneal, AnnealParams, Objective};
+use crate::placer::{anneal, AnnealParams, Objective, ObjectiveFactory};
 use crate::router::route_all;
 use crate::sim;
 use crate::util::rng::Rng;
 
 /// Per-subgraph compile outcome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SubgraphReport {
     pub name: String,
     pub nodes: usize,
     pub ii_cycles: f64,
     pub normalized_throughput: f64,
     pub latency_cycles: f64,
+    /// Candidate evaluations, summed over all restarts.
     pub anneal_evaluations: usize,
-    /// Batched scoring calls the annealer issued (= steps with candidates);
-    /// `anneal_evaluations / anneal_score_batches` ≈ the realized fleet
-    /// size K of `AnnealParams::proposals_per_step`.
+    /// Batched scoring calls the annealer issued (= steps with candidates),
+    /// summed over all restarts; `anneal_evaluations / anneal_score_batches`
+    /// ≈ the realized fleet size K of `AnnealParams::proposals_per_step`.
     pub anneal_score_batches: usize,
+    /// Independent annealing restarts run for this subgraph.
+    pub anneal_restarts: usize,
 }
 
 /// Whole-model compile outcome.
@@ -44,7 +75,8 @@ pub struct CompileReport {
     pub subgraphs: Vec<SubgraphReport>,
     /// Σ subgraph II — cycles per sample through the whole model.
     pub total_ii: f64,
-    /// 1 / total_ii, in samples per kilocycle (scale-free comparison unit).
+    /// 1 / total_ii, in samples per kilocycle (scale-free comparison unit);
+    /// 0.0 for a degenerate compile (see [`CompileReport::throughput_for`]).
     pub throughput: f64,
     /// Σ subgraph latency (pipeline fill of each configuration).
     pub total_latency: f64,
@@ -57,59 +89,193 @@ pub struct CompileConfig {
     pub era: Era,
     pub anneal: AnnealParams,
     pub seed: u64,
+    /// Worker threads placing/routing subgraphs concurrently. Results are
+    /// bit-identical for every value; 1 runs inline with no thread spawns.
+    pub workers: usize,
+    /// Independent annealing restarts per subgraph (best measured II wins).
+    pub restarts: usize,
 }
 
 impl Default for CompileConfig {
     fn default() -> Self {
-        CompileConfig { era: Era::Past, anneal: AnnealParams::default(), seed: 0xC0DE }
+        CompileConfig {
+            era: Era::Past,
+            anneal: AnnealParams::default(),
+            seed: 0xC0DE,
+            workers: 1,
+            restarts: 1,
+        }
     }
 }
 
-/// Compile `graph` on `fabric` with the given cost model; measure with the
-/// simulator at `cfg.era`.
-pub fn compile(
-    graph: &Dfg,
-    fabric: &Fabric,
-    objective: &mut dyn Objective,
-    cfg: &CompileConfig,
-) -> Result<CompileReport> {
-    let t0 = std::time::Instant::now();
-    let parts = partition::partition(graph, fabric)?;
-    let mut rng = Rng::new(cfg.seed);
-    let mut subgraphs = Vec::with_capacity(parts.subgraphs.len());
-    let mut total_ii = 0.0;
-    let mut total_latency = 0.0;
+/// splitmix64 finalizer: decorrelates the per-subgraph seed tags.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
 
-    for sg in &parts.subgraphs {
-        let (placement, _, log) = anneal(sg, fabric, objective, &cfg.anneal, &mut rng)?;
-        // Final honest measurement: clean route + simulator.
-        let routing = route_all(fabric, sg, &placement)?;
-        let report = sim::measure(fabric, sg, &placement, &routing, cfg.era)?;
-        total_ii += report.ii_cycles;
-        total_latency += report.latency_cycles;
-        subgraphs.push(SubgraphReport {
+/// The seed of the independent RNG stream for `(master seed, subgraph
+/// index, restart)`. Public so tests (and external harnesses) can reproduce
+/// any single subgraph's anneal in isolation.
+pub fn subgraph_seed(master: u64, subgraph: usize, restart: usize) -> u64 {
+    let tag = (subgraph as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (restart as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    master ^ mix(tag)
+}
+
+/// The independent RNG stream for one `(seed, subgraph, restart)` cell.
+pub fn subgraph_rng(master: u64, subgraph: usize, restart: usize) -> Rng {
+    Rng::new(subgraph_seed(master, subgraph, restart))
+}
+
+/// A compile session: a fabric + settings, ready to compile graphs with any
+/// shareable objective. See the module docs for the architecture.
+pub struct CompileSession<'a> {
+    fabric: &'a Fabric,
+    cfg: CompileConfig,
+}
+
+impl<'a> CompileSession<'a> {
+    pub fn new(fabric: &'a Fabric, cfg: CompileConfig) -> CompileSession<'a> {
+        CompileSession { fabric, cfg }
+    }
+
+    /// Compile `graph` with the given cost model; measure with the
+    /// simulator at `cfg.era`.
+    pub fn compile(&self, graph: &Dfg, objective: &dyn ObjectiveFactory) -> Result<CompileReport> {
+        let t0 = std::time::Instant::now();
+        let parts = partition::partition(graph, self.fabric)?;
+        let n = parts.subgraphs.len();
+        let workers = self.cfg.workers.max(1).min(n.max(1));
+
+        let mut slots: Vec<Option<Result<SubgraphReport>>> = (0..n).map(|_| None).collect();
+        if workers <= 1 {
+            let handle = objective.handle();
+            for (i, (sg, slot)) in parts.subgraphs.iter().zip(slots.iter_mut()).enumerate() {
+                *slot = Some(self.compile_subgraph(sg, handle.as_ref(), i));
+            }
+        } else {
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let cells: Vec<std::sync::Mutex<Option<Result<SubgraphReport>>>> =
+                (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+            let (next_ref, cells_ref, parts_ref) = (&next, &cells, &parts);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(move || {
+                        // One scoring handle per worker thread, reused
+                        // across every subgraph this worker claims.
+                        let handle = objective.handle();
+                        loop {
+                            let i = next_ref
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= parts_ref.subgraphs.len() {
+                                break;
+                            }
+                            let rep = self.compile_subgraph(
+                                &parts_ref.subgraphs[i],
+                                handle.as_ref(),
+                                i,
+                            );
+                            *cells_ref[i].lock().unwrap() = Some(rep);
+                        }
+                    });
+                }
+            });
+            for (slot, cell) in slots.iter_mut().zip(cells) {
+                *slot = cell.into_inner().unwrap();
+            }
+        }
+
+        let mut subgraphs = Vec::with_capacity(n);
+        let mut total_ii = 0.0;
+        let mut total_latency = 0.0;
+        for slot in slots {
+            let rep = slot.expect("subgraph task not run")?;
+            total_ii += rep.ii_cycles;
+            total_latency += rep.latency_cycles;
+            subgraphs.push(rep);
+        }
+
+        Ok(CompileReport {
+            model: graph.name.clone(),
+            cost_model: objective.name(),
+            subgraphs,
+            total_ii,
+            throughput: CompileReport::throughput_for(total_ii),
+            total_latency,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Place, route and measure one subgraph: `restarts` independent anneals
+    /// from the subgraph's own seed streams, best measured II wins.
+    fn compile_subgraph(
+        &self,
+        sg: &Dfg,
+        handle: &dyn Objective,
+        index: usize,
+    ) -> Result<SubgraphReport> {
+        let restarts = self.cfg.restarts.max(1);
+        let mut evaluations = 0;
+        let mut score_batches = 0;
+        let mut best: Option<sim::SimReport> = None;
+        for r in 0..restarts {
+            let mut rng = subgraph_rng(self.cfg.seed, index, r);
+            let (placement, _, log) = anneal(sg, self.fabric, handle, &self.cfg.anneal, &mut rng)?;
+            // Final honest measurement: clean route + simulator.
+            let routing = route_all(self.fabric, sg, &placement)?;
+            let report = sim::measure(self.fabric, sg, &placement, &routing, self.cfg.era)?;
+            evaluations += log.evaluations;
+            score_batches += log.score_batches;
+            // Strict `<`: ties keep the earliest restart, so the winner is
+            // deterministic and restart 0 reproduces `restarts == 1`.
+            let better = match &best {
+                None => true,
+                Some(b) => report.ii_cycles < b.ii_cycles,
+            };
+            if better {
+                best = Some(report);
+            }
+        }
+        let report = best.expect("restarts >= 1");
+        Ok(SubgraphReport {
             name: sg.name.clone(),
             nodes: sg.num_nodes(),
             ii_cycles: report.ii_cycles,
             normalized_throughput: report.normalized_throughput,
             latency_cycles: report.latency_cycles,
-            anneal_evaluations: log.evaluations,
-            anneal_score_batches: log.score_batches,
-        });
+            anneal_evaluations: evaluations,
+            anneal_score_batches: score_batches,
+            anneal_restarts: restarts,
+        })
     }
+}
 
-    Ok(CompileReport {
-        model: graph.name.clone(),
-        cost_model: objective.name(),
-        subgraphs,
-        total_ii,
-        throughput: 1000.0 / total_ii,
-        total_latency,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-    })
+/// Compile `graph` on `fabric` with the given cost model — the one-shot
+/// convenience wrapper over [`CompileSession`].
+pub fn compile(
+    graph: &Dfg,
+    fabric: &Fabric,
+    objective: &dyn ObjectiveFactory,
+    cfg: &CompileConfig,
+) -> Result<CompileReport> {
+    CompileSession::new(fabric, cfg.clone()).compile(graph, objective)
 }
 
 impl CompileReport {
+    /// Samples per kilocycle for a summed II. Guards the degenerate cases —
+    /// an empty partition list or subgraphs all reporting `ii_cycles == 0`
+    /// would otherwise produce `inf`/NaN throughput.
+    pub fn throughput_for(total_ii: f64) -> f64 {
+        if total_ii > 0.0 && total_ii.is_finite() {
+            1000.0 / total_ii
+        } else {
+            0.0
+        }
+    }
+
     /// Relative throughput gain of `self` over `baseline`, in percent
     /// (the paper's ΔTP metric, Table II).
     pub fn throughput_gain_pct(&self, baseline: &CompileReport) -> f64 {
@@ -133,12 +299,12 @@ mod tests {
     fn compile_small_graph() {
         let g = builders::mha(32, 128, 4);
         let f = Fabric::new(FabricConfig::default());
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let cfg = CompileConfig {
             anneal: AnnealParams { iterations: 60, ..AnnealParams::default() },
             ..CompileConfig::default()
         };
-        let rep = compile(&g, &f, &mut h, &cfg).unwrap();
+        let rep = compile(&g, &f, &h, &cfg).unwrap();
         assert_eq!(rep.subgraphs.len(), 1);
         assert!(rep.total_ii > 0.0);
         assert!(rep.throughput > 0.0);
@@ -152,7 +318,7 @@ mod tests {
         // and still produces a valid report.
         let g = builders::mha(32, 128, 4);
         let f = Fabric::new(FabricConfig::default());
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let cfg = CompileConfig {
             anneal: AnnealParams {
                 iterations: 40,
@@ -161,7 +327,7 @@ mod tests {
             },
             ..CompileConfig::default()
         };
-        let rep = compile(&g, &f, &mut h, &cfg).unwrap();
+        let rep = compile(&g, &f, &h, &cfg).unwrap();
         assert!(rep.total_ii > 0.0 && rep.throughput > 0.0);
         let sg = &rep.subgraphs[0];
         assert!(sg.anneal_score_batches > 0 && sg.anneal_score_batches <= 40);
@@ -175,12 +341,12 @@ mod tests {
     fn compile_partitioned_model() {
         let g = builders::bert_large(16); // small seq, still partitions
         let f = Fabric::new(FabricConfig::default());
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let cfg = CompileConfig {
             anneal: AnnealParams { iterations: 8, ..AnnealParams::default() },
             ..CompileConfig::default()
         };
-        let rep = compile(&g, &f, &mut h, &cfg).unwrap();
+        let rep = compile(&g, &f, &h, &cfg).unwrap();
         assert!(rep.subgraphs.len() > 2);
         let sum: f64 = rep.subgraphs.iter().map(|s| s.ii_cycles).sum();
         assert!((sum - rep.total_ii).abs() < 1e-6);
@@ -197,16 +363,54 @@ mod tests {
             anneal: AnnealParams { iterations: 250, ..AnnealParams::default() },
             ..CompileConfig::default()
         };
-        let mut oracle = OracleCost::new(Era::Past);
-        let mut heuristic = HeuristicCost::new();
-        let rep_o = compile(&g, &f, &mut oracle, &cfg).unwrap();
-        let rep_h = compile(&g, &f, &mut heuristic, &cfg).unwrap();
+        let oracle = OracleCost::new(Era::Past);
+        let heuristic = HeuristicCost::new();
+        let rep_o = compile(&g, &f, &oracle, &cfg).unwrap();
+        let rep_h = compile(&g, &f, &heuristic, &cfg).unwrap();
         assert!(
             rep_o.total_ii <= rep_h.total_ii * 1.10,
             "oracle {} vs heuristic {}",
             rep_o.total_ii,
             rep_h.total_ii
         );
+    }
+
+    #[test]
+    fn throughput_guard_degenerate_cases() {
+        // A zero/NaN/infinite Σ II must not yield inf/NaN throughput.
+        assert_eq!(CompileReport::throughput_for(0.0), 0.0);
+        assert_eq!(CompileReport::throughput_for(-5.0), 0.0);
+        assert_eq!(CompileReport::throughput_for(f64::NAN), 0.0);
+        assert_eq!(CompileReport::throughput_for(f64::INFINITY), 0.0);
+        assert_eq!(CompileReport::throughput_for(500.0), 2.0);
+        // An empty-partition report assembles with throughput 0.0, not inf.
+        let empty = CompileReport {
+            model: "empty".into(),
+            cost_model: "heuristic",
+            subgraphs: vec![],
+            total_ii: 0.0,
+            throughput: CompileReport::throughput_for(0.0),
+            total_latency: 0.0,
+            wall_seconds: 0.0,
+        };
+        assert_eq!(empty.throughput, 0.0);
+        assert!(empty.throughput.is_finite());
+    }
+
+    #[test]
+    fn restart_streams_are_independent() {
+        // Distinct (subgraph, restart) cells must seed unrelated streams,
+        // and the mapping must be stable (documented determinism contract).
+        let mut seen = std::collections::HashSet::new();
+        for sg in 0..16 {
+            for r in 0..4 {
+                assert!(seen.insert(subgraph_seed(42, sg, r)), "seed collision at ({sg},{r})");
+            }
+        }
+        // Stable across calls.
+        assert_eq!(subgraph_seed(7, 3, 1), subgraph_seed(7, 3, 1));
+        // And actually a function of the master seed.
+        assert_ne!(subgraph_seed(7, 3, 1), subgraph_seed(8, 3, 1));
     }
 
     #[test]

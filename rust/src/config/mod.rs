@@ -18,6 +18,7 @@
 //! seed = 42
 //! artifacts = "artifacts"
 //! workers = 8
+//! restarts = 1
 //!
 //! [dataset]
 //! total = 5878
@@ -106,7 +107,11 @@ pub struct RunConfig {
     pub era: Era,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Worker threads: dataset-generation shards and compile-session
+    /// subgraph fan-out.
     pub workers: usize,
+    /// Independent annealing restarts per compiled subgraph (best kept).
+    pub restarts: usize,
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
@@ -120,6 +125,7 @@ impl Default for RunConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            restarts: 1,
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
@@ -150,6 +156,7 @@ impl RunConfig {
             cfg.artifacts_dir = a;
         }
         raw.take_parse("run.workers", &mut cfg.workers)?;
+        raw.take_parse("run.restarts", &mut cfg.restarts)?;
 
         raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
         raw.take_parse("dataset.frac_random", &mut cfg.dataset.frac_random)?;
@@ -210,6 +217,7 @@ cols = 4
 [run]
 era = "present"
 seed = 123
+restarts = 3
 
 [dataset]
 total = 100
@@ -228,6 +236,7 @@ proposals_per_step = 8
         assert_eq!(cfg.era, Era::Present);
         assert_eq!(cfg.dataset.era, Era::Present);
         assert_eq!(cfg.seed, 123);
+        assert_eq!(cfg.restarts, 3);
         assert_eq!(cfg.dataset.total, 100);
         assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);

@@ -8,7 +8,11 @@
 //!   dispatcher groups them by bucket, pads to the AOT batch size, executes
 //!   one PJRT call per batch, and fans results back out. This amortizes
 //!   dispatch overhead when many placer workers search in parallel (the
-//!   production setting the paper's compiler runs in).
+//!   production setting the paper's compiler runs in). The service also
+//!   implements [`crate::placer::ObjectiveFactory`]: a parallel
+//!   [`crate::compiler::CompileSession`] can hand every subgraph worker a
+//!   [`ServiceObjective`] handle, so concurrent annealers fill the
+//!   dispatcher's batches.
 //! * [`pool`] — the **dataset-generation worker pool**: the paper's
 //!   "industrial level CPU compute farm" in miniature. Shards the 5878-sample
 //!   corpus over threads with independent RNG streams and deterministic
@@ -18,4 +22,4 @@ pub mod pool;
 pub mod scoring;
 
 pub use pool::generate_parallel;
-pub use scoring::{ScoringClient, ScoringService, ServiceStats};
+pub use scoring::{ScoringClient, ScoringService, ServiceObjective, ServiceStats};

@@ -24,8 +24,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::arch::Fabric;
 use crate::cost::Ablation;
+use crate::dfg::Dfg;
 use crate::gnn::{self, Bucket, GraphTensors};
+use crate::placer::{Objective, ObjectiveFactory, Placement};
+use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
 use crate::train::ParamStore;
 
@@ -45,6 +49,9 @@ pub struct ServiceStats {
     pub batches: AtomicU64,
     pub full_batches: AtomicU64,
     pub deadline_flushes: AtomicU64,
+    /// Encode/score failures mapped to 0.0 by [`ServiceObjective`] handles
+    /// (the dispatcher logs the underlying batch failure itself).
+    pub scoring_errors: AtomicU64,
 }
 
 impl ServiceStats {
@@ -132,6 +139,81 @@ impl ScoringService {
 
     pub fn client(&self) -> ScoringClient {
         ScoringClient { tx: self.tx.as_ref().expect("service live").clone() }
+    }
+}
+
+/// An annealer objective backed by a [`ScoringClient`]: encodes the PnR
+/// decision and submits it to the shared dispatcher. When a concurrent
+/// compile session hands one of these to every subgraph worker, the
+/// dispatcher sees requests from *all* annealers at once and fills real
+/// batches — the production topology the service exists for.
+///
+/// Errors (encode failures, a dead service, batch failures) map to a 0.0
+/// score and are counted in [`ServiceStats::scoring_errors`]; the
+/// dispatcher separately logs the underlying failure.
+pub struct ServiceObjective {
+    client: ScoringClient,
+    stats: Arc<ServiceStats>,
+}
+
+impl ServiceObjective {
+    fn zero_on_error(&self, result: Result<f64>) -> f64 {
+        match result {
+            Ok(s) => s,
+            Err(_) => {
+                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                0.0
+            }
+        }
+    }
+}
+
+impl Objective for ServiceObjective {
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+        let result = gnn::encode(graph, fabric, placement, routing)
+            .and_then(|enc| self.client.score(enc));
+        self.zero_on_error(result)
+    }
+
+    fn score_batch(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        candidates: &[(Placement, Routing)],
+    ) -> Vec<f64> {
+        // Encode the whole fleet, then submit it in one `score_many` so the
+        // requests co-batch (and can co-batch with other workers' fleets).
+        let encoded: Result<Vec<GraphTensors>> = candidates
+            .iter()
+            .map(|(p, r)| gnn::encode(graph, fabric, p, r))
+            .collect();
+        let result = encoded.and_then(|fleet| self.client.score_many(fleet));
+        match result {
+            Ok(scores) => scores,
+            Err(_) => {
+                self.stats
+                    .scoring_errors
+                    .fetch_add(candidates.len() as u64, Ordering::Relaxed);
+                vec![0.0; candidates.len()]
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "learned-gnn-service"
+    }
+}
+
+impl ObjectiveFactory for ScoringService {
+    /// Each worker's handle is its own client; all handles feed the one
+    /// dispatcher, so a parallel compile session fills the service's
+    /// batches.
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        Box::new(ServiceObjective { client: self.client(), stats: self.stats.clone() })
+    }
+
+    fn name(&self) -> &'static str {
+        "learned-gnn-service"
     }
 }
 
@@ -362,6 +444,77 @@ mod tests {
         ) -> Result<Vec<Tensor>> {
             anyhow::bail!("mock backend cannot train")
         }
+    }
+
+    #[test]
+    fn service_objective_matches_direct_scores() {
+        // The ObjectiveFactory face of the service: handles score via the
+        // dispatcher and must agree with direct engine inference; errors on
+        // a dead/failing backend map to 0.0 and are counted.
+        use crate::cost::LearnedCost;
+
+        let engine = crate::runtime::native_engine();
+        let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+        let store = trainer.param_store();
+        let svc = ScoringService::start(
+            engine.clone(),
+            &store,
+            Ablation::default(),
+            8,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        let factory: &dyn crate::placer::ObjectiveFactory = &svc;
+        assert_eq!(factory.name(), "learned-gnn-service");
+        let handle = factory.handle();
+
+        let direct = LearnedCost::from_store(engine, &store, Ablation::default()).unwrap();
+        let fabric = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        let mut rng = Rng::new(21);
+        let mut candidates = Vec::new();
+        for _ in 0..3 {
+            let p = random_placement(&g, &fabric, &mut rng).unwrap();
+            let r = route_all(&fabric, &g, &p).unwrap();
+            candidates.push((p, r));
+        }
+        for (p, r) in &candidates {
+            let via_service = handle.score(&g, &fabric, p, r);
+            let via_direct = crate::placer::Objective::score(&direct, &g, &fabric, p, r);
+            assert!(
+                (via_service - via_direct).abs() < 1e-6,
+                "service {via_service} vs direct {via_direct}"
+            );
+        }
+        let fleet = handle.score_batch(&g, &fabric, &candidates);
+        assert_eq!(fleet.len(), candidates.len());
+        assert!(fleet.iter().all(|s| s.is_finite()));
+        assert_eq!(svc.stats.scoring_errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn service_objective_counts_failures_as_zero() {
+        let engine: Arc<crate::runtime::Engine> = Arc::new(FailingEngine { specs: Vec::new() });
+        let store = crate::train::ParamStore { tensors: Vec::new() };
+        let svc = ScoringService::start(
+            engine,
+            &store,
+            Ablation::default(),
+            4,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        let handle = crate::placer::ObjectiveFactory::handle(&svc);
+        let fabric = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        let mut rng = Rng::new(33);
+        let p = random_placement(&g, &fabric, &mut rng).unwrap();
+        let r = route_all(&fabric, &g, &p).unwrap();
+        assert_eq!(handle.score(&g, &fabric, &p, &r), 0.0);
+        assert_eq!(svc.stats.scoring_errors.load(Ordering::Relaxed), 1);
+        let fleet = handle.score_batch(&g, &fabric, std::slice::from_ref(&(p, r)));
+        assert_eq!(fleet, vec![0.0]);
+        assert_eq!(svc.stats.scoring_errors.load(Ordering::Relaxed), 2);
     }
 
     #[test]

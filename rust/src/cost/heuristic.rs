@@ -24,7 +24,7 @@
 
 use crate::arch::Fabric;
 use crate::dfg::{Dfg, OpKind};
-use crate::placer::{Objective, Placement};
+use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::sim;
 
@@ -209,10 +209,21 @@ impl Default for HeuristicCost {
 }
 
 impl Objective for HeuristicCost {
-    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
         let ii_est = self.estimate_ii(graph, fabric, placement, routing);
         let bound = sim::theoretical_ii(fabric, graph, placement);
         (bound / ii_est.max(1e-9)).clamp(0.0, 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+}
+
+impl ObjectiveFactory for HeuristicCost {
+    /// The rule table is `Copy`: a handle is just a copy of the constants.
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        Box::new(HeuristicCost { rules: self.rules })
     }
 
     fn name(&self) -> &'static str {
@@ -241,7 +252,7 @@ mod tests {
     #[test]
     fn scores_in_unit_interval() {
         let (f, g, p, r) = setup(1);
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let s = h.score(&g, &f, &p, &r);
         assert!(s > 0.0 && s <= 1.0, "score {s}");
     }
@@ -254,7 +265,7 @@ mod tests {
         // (paper Fig 2: per-family baseline ranks as low as ~0.1).
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(2);
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let mut est = Vec::new();
         let mut truth = Vec::new();
         let graphs = [
@@ -290,7 +301,7 @@ mod tests {
         let g = builders::mha(32, 128, 4);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(3);
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let mut re_sum = 0.0;
         let n = 30;
         for _ in 0..n {
@@ -309,7 +320,7 @@ mod tests {
     #[test]
     fn deterministic() {
         let (f, g, p, r) = setup(4);
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         assert_eq!(h.score(&g, &f, &p, &r), h.score(&g, &f, &p, &r));
     }
 
@@ -318,7 +329,7 @@ mod tests {
         // Synthetic: doubling flows on the busiest link must not *increase*
         // the heuristic's score (it charges k x serialization).
         let (f, g, p, r) = setup(5);
-        let mut h = HeuristicCost::new();
+        let h = HeuristicCost::new();
         let base = h.score(&g, &f, &p, &r);
         let mut congested = r.clone();
         let busiest = congested

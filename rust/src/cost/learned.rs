@@ -4,19 +4,26 @@
 //! Encodes the PnR decision into padded tensors ([`crate::gnn`]), then runs
 //! the GNN regressor through the session's [`crate::runtime::Engine`]
 //! backend (native pure-Rust by default; AOT/PJRT behind the `pjrt`
-//! feature) and returns the predicted normalized throughput. Per-bucket
-//! scratch encodings are cached so the annealer's scoring loop is
-//! allocation-light, and entirely python-free on every backend.
+//! feature) and returns the predicted normalized throughput.
+//!
+//! A `LearnedCost` is both a scoring handle ([`Objective`]) and a handle
+//! factory ([`ObjectiveFactory`]): the engine and the parameter tensors are
+//! shared behind `Arc` by every handle [`LearnedCost::fork`] produces, while
+//! the scratch-encoding pool and the flat call buffer are **per handle** —
+//! so N concurrent subgraph annealers multiplex onto one engine without
+//! contending on each other's buffers. Evaluation/error counters are shared
+//! atomics, aggregated across all handles of one family.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{Context, Result};
 
 use crate::arch::Fabric;
 use crate::dfg::Dfg;
 use crate::gnn::{self, Bucket, GraphTensors};
-use crate::placer::{Objective, Placement};
+use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
 use crate::train::ParamStore;
@@ -46,27 +53,58 @@ impl Ablation {
     }
 }
 
-/// The learned cost model.
-pub struct LearnedCost {
-    engine: Arc<Engine>,
+/// Per-handle mutable scratch: the flat call buffer and the encode pool.
+/// Behind a `Mutex` only so the handle can score through `&self` — each
+/// handle belongs to one worker thread, so the lock is uncontended; the
+/// cross-thread sharing happens at the [`LearnedCost::fork`] level, where
+/// every handle gets its *own* scratch.
+struct Scratch {
     /// Reusable flat call buffer whose prefix is the parameter set (built
-    /// once at construction); per-call batch tensors are truncated away and
-    /// re-appended behind it, so the annealer's scoring loop never re-clones
-    /// the ~220 KB of parameters.
+    /// once per handle); per-call batch tensors are truncated away and
+    /// re-appended behind it, so the scoring loop never re-clones the
+    /// ~220 KB of parameters.
     inputs: Vec<Tensor>,
-    n_params: usize,
-    ablation: Ablation,
     /// Per-bucket pool of reusable encode buffers (annealer hot path). The
     /// batched fleet path borrows one slot per candidate; the pool grows to
     /// the largest fleet seen and is reused thereafter.
-    scratch: HashMap<String, Vec<GraphTensors>>,
-    /// Scoring calls served (perf accounting).
-    pub evaluations: u64,
+    pool: HashMap<String, Vec<GraphTensors>>,
+}
+
+impl Scratch {
+    /// Borrow `n` encode buffers for `bucket`, allocating any shortfall.
+    /// Callers return them with [`Scratch::put`].
+    fn take(&mut self, bucket: Bucket, n: usize) -> Vec<GraphTensors> {
+        let pool = self.pool.entry(bucket.tag()).or_default();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match pool.pop() {
+                Some(g) => out.push(g),
+                None => out.push(GraphTensors::zeroed(bucket)),
+            }
+        }
+        out
+    }
+
+    fn put(&mut self, bucket: Bucket, slots: Vec<GraphTensors>) {
+        self.pool.entry(bucket.tag()).or_default().extend(slots);
+    }
+}
+
+/// The learned cost model. See module docs for the handle/factory split.
+pub struct LearnedCost {
+    engine: Arc<Engine>,
+    /// The immutable parameter tensors, shared by every forked handle.
+    params: Arc<Vec<Tensor>>,
+    ablation: Ablation,
+    /// Scoring calls served, aggregated over this handle family.
+    evaluations: Arc<AtomicU64>,
     /// Encode/infer failures mapped to a 0.0 score by the [`Objective`]
-    /// paths. A healthy checkpoint never errors, so a nonzero count means
-    /// the model is broken — not that every placement is bad; the first
-    /// failure (and every 1000th after) is logged to stderr.
-    pub scoring_errors: u64,
+    /// paths, aggregated over this handle family. A healthy checkpoint never
+    /// errors, so a nonzero count means the model is broken — not that every
+    /// placement is bad; the first failure (and every 1000th after) is
+    /// logged to stderr.
+    scoring_errors: Arc<AtomicU64>,
+    scratch: Mutex<Scratch>,
 }
 
 impl LearnedCost {
@@ -86,81 +124,105 @@ impl LearnedCost {
         store
             .matches_specs(engine.param_specs())
             .context("checkpoint does not match the inference backend's parameter schema")?;
-        let inputs = store.values();
-        let n_params = inputs.len();
+        let params = Arc::new(store.values());
+        let inputs = params.as_ref().clone();
         Ok(LearnedCost {
             engine,
-            inputs,
-            n_params,
+            params,
             ablation,
-            scratch: HashMap::new(),
-            evaluations: 0,
-            scoring_errors: 0,
+            evaluations: Arc::new(AtomicU64::new(0)),
+            scoring_errors: Arc::new(AtomicU64::new(0)),
+            scratch: Mutex::new(Scratch { inputs, pool: HashMap::new() }),
         })
     }
 
+    /// A sibling scoring handle: shares the engine, the parameters and the
+    /// counters with `self`, but owns fresh scratch — this is what makes
+    /// concurrent annealers safe and contention-free. Cost: one clone of the
+    /// parameter tensors for the flat call buffer.
+    pub fn fork(&self) -> LearnedCost {
+        LearnedCost {
+            engine: self.engine.clone(),
+            params: self.params.clone(),
+            ablation: self.ablation,
+            evaluations: self.evaluations.clone(),
+            scoring_errors: self.scoring_errors.clone(),
+            scratch: Mutex::new(Scratch {
+                inputs: self.params.as_ref().clone(),
+                pool: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Set the ablation for this handle (and any handle forked afterwards).
     pub fn set_ablation(&mut self, ablation: Ablation) {
         self.ablation = ablation;
     }
 
-    /// Predict for one already-encoded graph.
-    pub fn predict_encoded(&mut self, g: &GraphTensors) -> Result<f64> {
-        self.inputs.truncate(self.n_params);
-        let batch_tensors = gnn::stack_batch(&[g], g.bucket, 1)?;
-        self.inputs.extend(batch_tensors);
-        self.inputs.push(gnn::flags_tensor(self.ablation.flags()));
-        let out = self.engine.infer(g.bucket, 1, &self.inputs)?;
-        self.evaluations += 1;
-        Ok(out[0].as_f32()?[0] as f64)
+    /// Scoring calls served across this handle and all its forks.
+    pub fn evaluations(&self) -> u64 {
+        self.evaluations.load(Ordering::Relaxed)
     }
 
-    /// Predict a batch of encoded graphs (same bucket), chunked to the
-    /// backend batch size; used by evaluation harnesses and the service.
-    pub fn predict_batch(&mut self, graphs: &[&GraphTensors], batch: usize) -> Result<Vec<f64>> {
-        if graphs.is_empty() {
-            return Ok(Vec::new());
-        }
-        let bucket = graphs[0].bucket;
+    /// Scoring failures across this handle and all its forks.
+    pub fn scoring_errors(&self) -> u64 {
+        self.scoring_errors.load(Ordering::Relaxed)
+    }
+
+    fn lock_scratch(&self) -> MutexGuard<'_, Scratch> {
+        // A poisoned lock means another scoring call panicked mid-infer;
+        // the scratch holds no invariants beyond reusable buffers.
+        self.scratch.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run the engine over `graphs` (all in `bucket`), chunked to `batch`,
+    /// reusing the locked scratch's flat call buffer.
+    fn infer_locked(
+        &self,
+        scratch: &mut Scratch,
+        graphs: &[&GraphTensors],
+        bucket: Bucket,
+        batch: usize,
+    ) -> Result<Vec<f64>> {
+        let n_params = self.params.len();
         let mut preds = Vec::with_capacity(graphs.len());
         for chunk in graphs.chunks(batch) {
-            self.inputs.truncate(self.n_params);
+            scratch.inputs.truncate(n_params);
             let batch_tensors = gnn::stack_batch(chunk, bucket, batch)?;
-            self.inputs.extend(batch_tensors);
-            self.inputs.push(gnn::flags_tensor(self.ablation.flags()));
-            let out = self.engine.infer(bucket, batch, &self.inputs)?;
-            self.evaluations += 1;
+            scratch.inputs.extend(batch_tensors);
+            scratch.inputs.push(gnn::flags_tensor(self.ablation.flags()));
+            let out = self.engine.infer(bucket, batch, &scratch.inputs)?;
+            self.evaluations.fetch_add(1, Ordering::Relaxed);
             preds.extend(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64));
         }
         Ok(preds)
     }
 
-    /// Borrow `n` encode buffers for `bucket` from the pool, allocating any
-    /// shortfall. Callers return them with [`Self::pool_put`].
-    fn pool_take(&mut self, bucket: Bucket, n: usize) -> Vec<GraphTensors> {
-        let pool = self.scratch.entry(bucket.tag()).or_default();
-        let mut out = Vec::with_capacity(n);
-        while out.len() < n {
-            match pool.pop() {
-                Some(g) => out.push(g),
-                None => out.push(GraphTensors::zeroed(bucket)),
-            }
-        }
-        out
+    /// Predict for one already-encoded graph.
+    pub fn predict_encoded(&self, g: &GraphTensors) -> Result<f64> {
+        let mut scratch = self.lock_scratch();
+        self.infer_locked(&mut scratch, &[g], g.bucket, 1).map(|v| v[0])
     }
 
-    fn pool_put(&mut self, bucket: Bucket, slots: Vec<GraphTensors>) {
-        self.scratch.entry(bucket.tag()).or_default().extend(slots);
+    /// Predict a batch of encoded graphs (same bucket), chunked to the
+    /// backend batch size; used by evaluation harnesses and the service.
+    pub fn predict_batch(&self, graphs: &[&GraphTensors], batch: usize) -> Result<Vec<f64>> {
+        if graphs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bucket = graphs[0].bucket;
+        let mut scratch = self.lock_scratch();
+        self.infer_locked(&mut scratch, graphs, bucket, batch)
     }
 
     /// Count a scoring failure (mapped to 0.0 by the `Objective` paths) and
     /// log it, rate-limited, so a broken checkpoint cannot silently
     /// masquerade as "every placement scores 0.0".
-    fn note_scoring_error(&mut self, err: &anyhow::Error) {
-        self.scoring_errors += 1;
-        if self.scoring_errors == 1 || self.scoring_errors % 1000 == 0 {
+    fn note_scoring_error(&self, err: &anyhow::Error) {
+        let n = self.scoring_errors.fetch_add(1, Ordering::Relaxed) + 1;
+        if n == 1 || n % 1000 == 0 {
             eprintln!(
-                "learned-cost: scoring failed ({} failure(s) so far; returning 0.0): {err:#}",
-                self.scoring_errors
+                "learned-cost: scoring failed ({n} failure(s) so far; returning 0.0): {err:#}"
             );
         }
     }
@@ -178,7 +240,7 @@ pub fn train_artifact(bucket: Bucket, batch: usize) -> String {
 }
 
 impl Objective for LearnedCost {
-    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
         let bucket = match gnn::select_bucket(graph.num_nodes(), graph.num_edges()) {
             Ok(b) => b,
             Err(e) => {
@@ -186,12 +248,15 @@ impl Objective for LearnedCost {
                 return 0.0;
             }
         };
-        let mut slots = self.pool_take(bucket, 1);
-        let result = (|| -> Result<f64> {
-            gnn::encode_into(graph, fabric, placement, routing, &mut slots[0])?;
-            self.predict_encoded(&slots[0])
-        })();
-        self.pool_put(bucket, slots);
+        let mut scratch = self.lock_scratch();
+        let mut slots = scratch.take(bucket, 1);
+        let result = gnn::encode_into(graph, fabric, placement, routing, &mut slots[0]).and_then(
+            |()| {
+                self.infer_locked(&mut scratch, &[&slots[0]], bucket, 1)
+                    .map(|v| v[0])
+            },
+        );
+        scratch.put(bucket, slots);
         match result {
             Ok(score) => score,
             Err(e) => {
@@ -206,9 +271,9 @@ impl Objective for LearnedCost {
     /// the slots are stacked once, and the backend runs the fleet in a
     /// single call (the native backend spreads the batch over worker
     /// threads). Errors map to 0.0 for every candidate, counted and logged
-    /// via the same rate-limited channel as [`Self::score`].
+    /// via the same rate-limited channel as [`Objective::score`].
     fn score_batch(
-        &mut self,
+        &self,
         graph: &Dfg,
         fabric: &Fabric,
         candidates: &[(Placement, Routing)],
@@ -223,7 +288,8 @@ impl Objective for LearnedCost {
                 return vec![0.0; candidates.len()];
             }
         };
-        let mut slots = self.pool_take(bucket, candidates.len());
+        let mut scratch = self.lock_scratch();
+        let mut slots = scratch.take(bucket, candidates.len());
         let mut encode_err = None;
         for ((placement, routing), slot) in candidates.iter().zip(slots.iter_mut()) {
             if let Err(e) = gnn::encode_into(graph, fabric, placement, routing, slot) {
@@ -236,7 +302,7 @@ impl Objective for LearnedCost {
             vec![0.0; candidates.len()]
         } else {
             let refs: Vec<&GraphTensors> = slots.iter().collect();
-            match self.predict_batch(&refs, refs.len()) {
+            match self.infer_locked(&mut scratch, &refs, bucket, refs.len()) {
                 Ok(scores) => scores,
                 Err(e) => {
                     // Fleet-sized batches can be unsupported (the PJRT
@@ -247,8 +313,8 @@ impl Objective for LearnedCost {
                     self.note_scoring_error(&e);
                     slots
                         .iter()
-                        .map(|g| match self.predict_encoded(g) {
-                            Ok(s) => s,
+                        .map(|g| match self.infer_locked(&mut scratch, &[g], bucket, 1) {
+                            Ok(v) => v[0],
                             Err(e2) => {
                                 self.note_scoring_error(&e2);
                                 0.0
@@ -258,8 +324,18 @@ impl Objective for LearnedCost {
                 }
             }
         };
-        self.pool_put(bucket, slots);
+        scratch.put(bucket, slots);
         scores
+    }
+
+    fn name(&self) -> &'static str {
+        "learned-gnn"
+    }
+}
+
+impl ObjectiveFactory for LearnedCost {
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        Box::new(self.fork())
     }
 
     fn name(&self) -> &'static str {
@@ -310,22 +386,22 @@ mod tests {
         use crate::dfg::builders;
         use crate::util::rng::Rng;
 
-        let mut learned = fresh_learned();
+        let learned = fresh_learned();
         let small = builders::mha(32, 128, 4);
         let fabric = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(3);
         let p = crate::placer::random_placement(&small, &fabric, &mut rng).unwrap();
         let r = crate::router::route_all(&fabric, &small, &p).unwrap();
         assert!(learned.score(&small, &fabric, &p, &r) > 0.0);
-        assert_eq!(learned.scoring_errors, 0);
+        assert_eq!(learned.scoring_errors(), 0);
 
         let oversize = builders::bert_large(16);
         // The placement/routing are irrelevant: bucket selection fails first.
         assert_eq!(learned.score(&oversize, &fabric, &p, &r), 0.0);
-        assert_eq!(learned.scoring_errors, 1);
+        assert_eq!(learned.scoring_errors(), 1);
         let scores = learned.score_batch(&oversize, &fabric, std::slice::from_ref(&(p, r)));
         assert_eq!(scores, vec![0.0]);
-        assert_eq!(learned.scoring_errors, 2);
+        assert_eq!(learned.scoring_errors(), 2);
     }
 
     #[test]
@@ -334,7 +410,7 @@ mod tests {
         use crate::dfg::builders;
         use crate::util::rng::Rng;
 
-        let mut learned = fresh_learned();
+        let learned = fresh_learned();
         let g = builders::mha(32, 128, 4);
         let fabric = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(4);
@@ -350,9 +426,52 @@ mod tests {
             let single = learned.score(&g, &fabric, p, r);
             assert_eq!(single.to_bits(), want.to_bits(), "batched != single");
         }
-        assert_eq!(learned.scoring_errors, 0);
+        assert_eq!(learned.scoring_errors(), 0);
         // One infer for the fleet + one per single re-score.
-        assert_eq!(learned.evaluations, 1 + candidates.len() as u64);
+        assert_eq!(learned.evaluations(), 1 + candidates.len() as u64);
+    }
+
+    #[test]
+    fn forked_handles_share_counters_and_agree() {
+        // A fork must (a) produce bit-identical scores — same engine, same
+        // parameters — and (b) aggregate its evaluations into the shared
+        // counters, so compile reports can account for all worker handles.
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::util::rng::Rng;
+
+        let learned = fresh_learned();
+        let fork = learned.fork();
+        let g = builders::mha(32, 128, 4);
+        let fabric = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(6);
+        let p = crate::placer::random_placement(&g, &fabric, &mut rng).unwrap();
+        let r = crate::router::route_all(&fabric, &g, &p).unwrap();
+        let a = learned.score(&g, &fabric, &p, &r);
+        let b = fork.score(&g, &fabric, &p, &r);
+        assert_eq!(a.to_bits(), b.to_bits(), "fork diverged from parent");
+        assert_eq!(learned.evaluations(), 2, "fork evaluations not aggregated");
+        assert_eq!(fork.evaluations(), 2);
+
+        // Concurrent forks: one handle per thread, scores all identical.
+        let factory: &dyn ObjectiveFactory = &learned;
+        let mut scores = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let h = factory.handle();
+                    let (g, fabric, p, r) = (&g, &fabric, &p, &r);
+                    scope.spawn(move || h.score(g, fabric, p, r))
+                })
+                .collect();
+            for h in handles {
+                scores.push(h.join().unwrap());
+            }
+        });
+        for s in &scores {
+            assert_eq!(s.to_bits(), a.to_bits(), "concurrent handle diverged");
+        }
+        assert_eq!(learned.evaluations(), 5);
     }
 
     // End-to-end scoring tests live in rust/tests/runtime_integration.rs.

@@ -10,10 +10,16 @@
 //!   where a full measurement takes minutes — the very reason cost models
 //!   exist).
 //!
-//! All cost models implement [`crate::placer::Objective`] and *predict the
-//! normalized throughput* of a PnR decision (higher is better), so they are
-//! interchangeable inside the annealer and directly comparable against
-//! simulator ground truth with RE / Spearman metrics.
+//! All cost models implement [`crate::placer::Objective`] (a `&self`
+//! per-thread scoring handle) **and** [`crate::placer::ObjectiveFactory`]
+//! (the `Sync` source of such handles), and *predict the normalized
+//! throughput* of a PnR decision (higher is better) — so they are
+//! interchangeable inside the annealer, shareable across a parallel
+//! [`crate::compiler::CompileSession`]'s subgraph workers, and directly
+//! comparable against simulator ground truth with RE / Spearman metrics.
+//! `LearnedCost` handles all multiplex onto one shared inference engine
+//! (and [`crate::coordinator::ScoringService`] is a fourth factory whose
+//! handles feed the batched dispatcher).
 
 mod heuristic;
 pub mod learned;

@@ -3,7 +3,7 @@
 
 use crate::arch::{Era, Fabric};
 use crate::dfg::Dfg;
-use crate::placer::{Objective, Placement};
+use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::sim;
 
@@ -22,10 +22,20 @@ impl OracleCost {
 }
 
 impl Objective for OracleCost {
-    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
         sim::measure(fabric, graph, placement, routing, self.era)
             .map(|r| r.normalized_throughput)
             .unwrap_or(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+impl ObjectiveFactory for OracleCost {
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        Box::new(OracleCost::new(self.era))
     }
 
     fn name(&self) -> &'static str {
@@ -49,7 +59,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let p = random_placement(&g, &f, &mut rng).unwrap();
         let r = route_all(&f, &g, &p).unwrap();
-        let mut oracle = OracleCost::new(Era::Past);
+        let oracle = OracleCost::new(Era::Past);
         let s = oracle.score(&g, &f, &p, &r);
         let truth = sim::measure(&f, &g, &p, &r, Era::Past).unwrap();
         assert_eq!(s, truth.normalized_throughput);

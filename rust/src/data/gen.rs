@@ -104,8 +104,8 @@ fn draw_decision(
         // Short randomized-SA run guided by the heuristic cost model.
         let mut params = AnnealParams::randomized(rng);
         params.proposals_per_step = cfg.proposals_per_step.max(1);
-        let mut heuristic = HeuristicCost::new();
-        let (best, _, _) = anneal(graph, fabric, &mut heuristic, &params, rng)?;
+        let heuristic = HeuristicCost::new();
+        let (best, _, _) = anneal(graph, fabric, &heuristic, &params, rng)?;
         Ok(best)
     }
 }
@@ -176,7 +176,7 @@ pub fn generate_family(
     rng: &mut Rng,
 ) -> Result<Vec<Sample>> {
     let mut out = Vec::with_capacity(count);
-    let mut heuristic = HeuristicCost::new();
+    let heuristic = HeuristicCost::new();
     'outer: loop {
         let graph = draw_workload(family, rng);
         for _ in 0..DECISIONS_PER_WORKLOAD {

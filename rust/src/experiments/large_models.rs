@@ -51,13 +51,23 @@ pub fn compile_both(
         era: ctx.cfg.era,
         anneal: ctx.cfg.anneal.clone(),
         seed: ctx.cfg.seed ^ 0x1A26,
+        workers: ctx.cfg.workers,
+        restarts: ctx.cfg.restarts,
     };
-    let mut heuristic = HeuristicCost::new();
-    eprintln!("  compiling {} with heuristic ...", graph.name);
-    let rep_h = compile(graph, &fabric, &mut heuristic, &cfg)?;
-    let mut learned = LearnedCost::from_store(ctx.engine.clone(), store, Ablation::default())?;
-    eprintln!("  compiling {} with learned model ...", graph.name);
-    let rep_l = compile(graph, &fabric, &mut learned, &cfg)?;
+    let heuristic = HeuristicCost::new();
+    eprintln!(
+        "  compiling {} with heuristic ({} workers) ...",
+        graph.name,
+        cfg.workers.max(1)
+    );
+    let rep_h = compile(graph, &fabric, &heuristic, &cfg)?;
+    let learned = LearnedCost::from_store(ctx.engine.clone(), store, Ablation::default())?;
+    eprintln!(
+        "  compiling {} with learned model ({} workers sharing one engine) ...",
+        graph.name,
+        cfg.workers.max(1)
+    );
+    let rep_l = compile(graph, &fabric, &learned, &cfg)?;
     Ok(ModelResult { model: graph.name.clone(), heuristic: rep_h, learned: rep_l })
 }
 
@@ -73,9 +83,12 @@ pub fn run(ctx: &Ctx, seq: u64, blocks: Option<u64>) -> Result<()> {
     };
 
     println!(
-        "\nLARGE MODELS — end-to-end compile throughput (era={}, K={} proposals/step)",
+        "\nLARGE MODELS — end-to-end compile throughput (era={}, K={} proposals/step, \
+         {} workers, {} restart(s)/subgraph)",
         ctx.cfg.era.name(),
-        ctx.cfg.anneal.proposals_per_step.max(1)
+        ctx.cfg.anneal.proposals_per_step.max(1),
+        ctx.cfg.workers.max(1),
+        ctx.cfg.restarts.max(1)
     );
     println!("  model        subgraphs   heuristic II   learned II   ΔTP");
     let mut rows = Vec::new();

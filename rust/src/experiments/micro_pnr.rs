@@ -34,12 +34,16 @@ pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
         era: ctx.cfg.era,
         anneal: ctx.cfg.anneal.clone(),
         seed: ctx.cfg.seed ^ 0xA11C,
+        workers: ctx.cfg.workers,
+        restarts: ctx.cfg.restarts,
     };
 
     println!(
         "\nMICRO-PNR — compile latency, learned vs heuristic ({trials} trials/family, \
-         K={} proposals/step)",
-        compile_cfg.anneal.proposals_per_step.max(1)
+         K={} proposals/step, {} workers, {} restart(s)/subgraph)",
+        compile_cfg.anneal.proposals_per_step.max(1),
+        compile_cfg.workers.max(1),
+        compile_cfg.restarts.max(1)
     );
     println!("  family   mean latency reduction   mean II reduction");
     let mut rows = Vec::new();
@@ -49,13 +53,13 @@ pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
         let mut ii_red = Vec::new();
         for t in 0..trials {
             let graph = draw_workload(family, &mut rng);
-            let mut heuristic = HeuristicCost::new();
-            let mut learned =
+            let heuristic = HeuristicCost::new();
+            let learned =
                 LearnedCost::from_store(ctx.engine.clone(), &store, Ablation::default())?;
             let mut cfg = compile_cfg.clone();
             cfg.seed ^= t as u64;
-            let rep_h = compile(&graph, &fabric, &mut heuristic, &cfg)?;
-            let rep_l = compile(&graph, &fabric, &mut learned, &cfg)?;
+            let rep_h = compile(&graph, &fabric, &heuristic, &cfg)?;
+            let rep_l = compile(&graph, &fabric, &learned, &cfg)?;
             lat_red.push(rep_l.latency_reduction_pct(&rep_h));
             ii_red.push((1.0 - rep_l.total_ii / rep_h.total_ii) * 100.0);
         }

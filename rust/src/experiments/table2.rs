@@ -31,7 +31,12 @@ pub fn run(ctx_template: &Ctx, folds: usize, seq: u64, blocks: Option<u64>) -> R
         cfg.era = era;
         cfg.dataset.era = era;
         let ctx = Ctx::new(cfg)?;
-        eprintln!("== era {} ==", era.name());
+        eprintln!(
+            "== era {} ({} compile workers, {} restart(s)/subgraph) ==",
+            era.name(),
+            ctx.cfg.workers.max(1),
+            ctx.cfg.restarts.max(1)
+        );
 
         // Re-collect + retrain (cached per era).
         let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", era.name()))?;

@@ -13,8 +13,9 @@
 //!   head, plus the fused train step (`python/compile/model.py`).
 //! * **L3** — this crate: fabric model, DFG builders, SA placer, router,
 //!   throughput simulator, heuristic baseline, dataset generation, training
-//!   orchestration, batched scoring service, end-to-end compile driver, and
-//!   the experiment harnesses regenerating every paper table/figure.
+//!   orchestration, batched scoring service, parallel end-to-end compile
+//!   sessions (worker-count-invariant, per-subgraph seed streams), and the
+//!   experiment harnesses regenerating every paper table/figure.
 
 // Stylistic lints the in-tree substrate intentionally trips (kernel-style
 // index loops in the native backend, small argument-heavy builders, and the
@@ -55,18 +56,33 @@ USAGE: rdacost <subcommand> [options]
 
   smoke                         print backend, parameter and schema info
   gen-data   [--total N] [--era past|present] [--out FILE] [--workers N]
+             [--proposals K]
   train      [--dataset FILE] [--epochs N] [--ckpt FILE] [--era E]
   eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
   compile    --model gemm|mlp|ffn|mha|bert|gpt [--cost heuristic|learned|oracle]
              [--seq N] [--blocks N] [--ckpt FILE] [--proposals K]
+             [--workers N] [--restarts R]
   bench      table1|fig2|table3|table2|micro-pnr|large-models|annotations
              [--folds N] [--trials N] [--seq N] [--blocks N] [--quick]
+             [--full-models]
   serve-demo [--clients N] [--requests N]          scoring-service demo
 
 Common options:
   --config FILE     TOML config (see rust/src/config)
   --seed N          master seed (default 42)
   --artifacts DIR   artifacts directory (default: artifacts)
+  --iters N         annealer iterations per subgraph ([anneal] iterations)
+  --proposals K     annealer fleet size per step ([anneal] proposals_per_step)
+  --workers N       worker threads: gen-data shards and compile-session
+                    subgraph fan-out (default: all cores; results are
+                    bit-identical for every worker count)
+  --restarts R      independent annealing restarts per compiled subgraph,
+                    best measured II kept (default 1)
+  --out FILE        gen-data: output dataset path (default results/dataset.bin)
+  --dataset FILE    train/eval: input dataset path (default results/dataset.bin)
+  --quick           CI-speed profile: small corpus, few epochs, short anneals
+  --full-models     bench: full 24/48-block BERT/GPT2-XL instead of the
+                    4-block truncations (slow; the paper configuration)
 ";
 
 /// CLI entry point (kept in the library so integration tests can call it).
@@ -99,6 +115,8 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
         cfg.dataset.era = cfg.era;
     }
     cfg.workers = args.get_usize("workers", cfg.workers);
+    // Per-subgraph annealing restarts for compile sessions.
+    cfg.restarts = args.get_usize("restarts", cfg.restarts).max(1);
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
     cfg.anneal.iterations = args.get_usize("iters", cfg.anneal.iterations);
@@ -233,31 +251,36 @@ fn cmd_compile(args: &Args) -> Result<()> {
         era: cfg.era,
         anneal: cfg.anneal.clone(),
         seed: cfg.seed,
+        workers: cfg.workers,
+        restarts: cfg.restarts,
     };
 
     let report = match args.get_or("cost", "heuristic") {
         "heuristic" => {
-            let mut obj = cost::HeuristicCost::new();
-            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+            let obj = cost::HeuristicCost::new();
+            compiler::compile(&graph, &fabric, &obj, &compile_cfg)?
         }
         "oracle" => {
-            let mut obj = cost::OracleCost::new(cfg.era);
-            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+            let obj = cost::OracleCost::new(cfg.era);
+            compiler::compile(&graph, &fabric, &obj, &compile_cfg)?
         }
         "learned" => {
             let engine = runtime::engine(&cfg.artifacts_dir)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
-            let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
-            compiler::compile(&graph, &fabric, &mut obj, &compile_cfg)?
+            let obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
+            compiler::compile(&graph, &fabric, &obj, &compile_cfg)?
         }
         other => bail!("unknown --cost {other:?}"),
     };
 
     println!(
-        "compiled {} with {}: {} subgraphs, total II {:.0} cycles/sample, \
-         throughput {:.3} samples/kcycle, latency {:.0} cycles ({:.1}s wall)",
+        "compiled {} with {} ({} workers, {} restart(s)/subgraph): {} subgraphs, \
+         total II {:.0} cycles/sample, throughput {:.3} samples/kcycle, \
+         latency {:.0} cycles ({:.1}s wall)",
         report.model,
         report.cost_model,
+        compile_cfg.workers.max(1),
+        compile_cfg.restarts.max(1),
         report.subgraphs.len(),
         report.total_ii,
         report.throughput,
@@ -332,7 +355,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
                     let routing = router::route_all(fabric, &graph, &placement).unwrap();
                     let enc = gnn::encode(&graph, fabric, &placement, &routing).unwrap();
                     let score = client.score(enc).unwrap();
-                    assert!(score > 0.0 && score < 1.0);
+                    // An untrained model can legitimately emit boundary
+                    // values; only a non-finite or out-of-range prediction
+                    // means the serving path is broken.
+                    assert!(
+                        score.is_finite() && (0.0..=1.0).contains(&score),
+                        "service returned out-of-range score {score}"
+                    );
                 }
             });
         }

@@ -16,10 +16,16 @@ use crate::util::rng::Rng;
 use super::placement::{random_placement, Placement};
 
 /// The annealer's objective: **higher is better** (cost models predict
-/// normalized throughput). Implementations live in [`crate::cost`]; the
-/// trait takes `&mut self` so learned models can batch and cache.
+/// normalized throughput). Implementations live in [`crate::cost`].
+///
+/// Scoring takes `&self`: a handle is a *scoring view*, usable from the
+/// thread that owns it without exclusive access to anything global.
+/// Implementations that need per-call scratch (the learned model's encode
+/// buffers) keep it behind interior mutability inside the handle; shared
+/// expensive state (the inference engine, the parameter tensors) lives
+/// behind `Arc` in the [`ObjectiveFactory`] that handed the handle out.
 pub trait Objective {
-    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64;
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64;
 
     /// Score a whole candidate fleet in one call, returning one score per
     /// candidate in order. The default loops over [`Objective::score`]
@@ -27,7 +33,7 @@ pub trait Objective {
     /// amortize per-call overhead — [`crate::cost::LearnedCost`] runs the
     /// entire fleet through a single `engine.infer` at batch=K.
     fn score_batch(
-        &mut self,
+        &self,
         graph: &Dfg,
         fabric: &Fabric,
         candidates: &[(Placement, Routing)],
@@ -42,6 +48,29 @@ pub trait Objective {
     fn name(&self) -> &'static str {
         "objective"
     }
+}
+
+/// A shareable source of per-thread scoring handles.
+///
+/// This is the type concurrent compile sessions hold: one factory is shared
+/// (`&dyn ObjectiveFactory` is `Send` because the trait requires `Sync`)
+/// across subgraph workers, and each worker draws its own cheap
+/// [`Objective`] handle. Handles own any mutable scratch; the factory owns
+/// the shared immutable state, so N workers scoring concurrently never
+/// contend on a lock in the hot path.
+///
+/// All in-tree cost models implement both traits: a `HeuristicCost` *is* a
+/// scoring handle and also hands out copies of itself, while `LearnedCost`
+/// handles multiplex onto the factory's shared inference engine (and
+/// [`crate::coordinator::ScoringService`] hands out client-backed handles
+/// so concurrent annealers fill real inference batches).
+pub trait ObjectiveFactory: Sync {
+    /// Create a scoring handle for one worker thread. Cheap: at most a copy
+    /// of small rule tables or an `Arc` bump plus a scratch-buffer shell.
+    fn handle(&self) -> Box<dyn Objective + Send + '_>;
+
+    /// Name for reports (matches the handles' [`Objective::name`]).
+    fn name(&self) -> &'static str;
 }
 
 /// Annealing schedule + move-mix parameters. The dataset generator draws
@@ -134,7 +163,7 @@ enum Move {
 pub fn anneal(
     graph: &Dfg,
     fabric: &Fabric,
-    objective: &mut dyn Objective,
+    objective: &dyn Objective,
     params: &AnnealParams,
     rng: &mut Rng,
 ) -> Result<(Placement, Routing, AnnealLog)> {
@@ -437,7 +466,7 @@ mod tests {
     }
 
     impl Objective for Oracle {
-        fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+        fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
             sim::measure(fabric, graph, placement, routing, self.era)
                 .map(|r| r.normalized_throughput)
                 .unwrap_or(0.0)
@@ -454,7 +483,7 @@ mod tests {
     fn reference_anneal(
         graph: &Dfg,
         fabric: &Fabric,
-        objective: &mut dyn Objective,
+        objective: &dyn Objective,
         params: &AnnealParams,
         rng: &mut Rng,
     ) -> Result<(Placement, Routing, AnnealLog)> {
@@ -538,14 +567,14 @@ mod tests {
             assert_eq!(params.proposals_per_step, 1);
 
             let mut rng_a = Rng::new(seed);
-            let mut oracle_a = Oracle { era: Era::Past };
+            let oracle_a = Oracle { era: Era::Past };
             let (best_a, routing_a, log_a) =
-                reference_anneal(&graph, &f, &mut oracle_a, &params, &mut rng_a).unwrap();
+                reference_anneal(&graph, &f, &oracle_a, &params, &mut rng_a).unwrap();
 
             let mut rng_b = Rng::new(seed);
-            let mut oracle_b = Oracle { era: Era::Past };
+            let oracle_b = Oracle { era: Era::Past };
             let (best_b, routing_b, log_b) =
-                anneal(&graph, &f, &mut oracle_b, &params, &mut rng_b).unwrap();
+                anneal(&graph, &f, &oracle_b, &params, &mut rng_b).unwrap();
 
             assert_eq!(best_a, best_b, "seed {seed}: best placements diverged");
             assert_eq!(routing_a.routes, routing_b.routes, "seed {seed}: routings diverged");
@@ -564,9 +593,9 @@ mod tests {
         let g = builders::mha(32, 128, 4);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(11);
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
         let params = AnnealParams { iterations: 400, ..AnnealParams::default() };
-        let (best, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        let (best, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
         best.validate(&g, &f).unwrap();
         assert!(
             log.best_score >= log.initial_score,
@@ -583,13 +612,13 @@ mod tests {
         let g = builders::mha(32, 128, 4);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(11);
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
         let params = AnnealParams {
             iterations: 120,
             proposals_per_step: 8,
             ..AnnealParams::default()
         };
-        let (best, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        let (best, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
         best.validate(&g, &f).unwrap();
         assert!(
             log.best_score >= log.initial_score,
@@ -609,11 +638,11 @@ mod tests {
         // population search, not a worse one).
         let g = builders::ffn(32, 128, 512);
         let f = Fabric::new(FabricConfig::default());
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
 
         let mut rng = Rng::new(31);
         let seq = AnnealParams { iterations: 320, ..AnnealParams::default() };
-        let (_, _, log_seq) = anneal(&g, &f, &mut oracle, &seq, &mut rng).unwrap();
+        let (_, _, log_seq) = anneal(&g, &f, &oracle, &seq, &mut rng).unwrap();
 
         let mut rng = Rng::new(31);
         let fleet = AnnealParams {
@@ -621,7 +650,7 @@ mod tests {
             proposals_per_step: 8,
             ..AnnealParams::default()
         };
-        let (_, _, log_fleet) = anneal(&g, &f, &mut oracle, &fleet, &mut rng).unwrap();
+        let (_, _, log_fleet) = anneal(&g, &f, &oracle, &fleet, &mut rng).unwrap();
 
         // Same seed -> same initial placement; the fleet must make real
         // progress from it (a catastrophically broken selection rule — e.g.
@@ -679,7 +708,7 @@ mod tests {
         let g = builders::ffn(32, 128, 512);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(12);
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
 
         let mut random_scores = Vec::new();
         for _ in 0..12 {
@@ -690,7 +719,7 @@ mod tests {
         let mean_random: f64 = random_scores.iter().sum::<f64>() / random_scores.len() as f64;
 
         let params = AnnealParams { iterations: 500, ..AnnealParams::default() };
-        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        let (_, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
         assert!(
             log.best_score > mean_random,
             "anneal {} vs random mean {mean_random}",
@@ -730,9 +759,9 @@ mod tests {
         let g = builders::gemm_graph(64, 64, 64);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(15);
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
         let params = AnnealParams { iterations: 300, ..AnnealParams::default() };
-        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        let (_, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
         for w in log.trace.windows(2) {
             assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");
         }
@@ -743,13 +772,13 @@ mod tests {
         let g = builders::gemm_graph(64, 64, 64);
         let f = Fabric::new(FabricConfig::default());
         let mut rng = Rng::new(16);
-        let mut oracle = Oracle { era: Era::Past };
+        let oracle = Oracle { era: Era::Past };
         let params = AnnealParams {
             iterations: 80,
             proposals_per_step: 4,
             ..AnnealParams::default()
         };
-        let (_, _, log) = anneal(&g, &f, &mut oracle, &params, &mut rng).unwrap();
+        let (_, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
         for w in log.trace.windows(2) {
             assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");
         }

@@ -22,9 +22,14 @@
 //! [`Objective::score_batch`] call (one batched GNN inference for the
 //! learned model), and Boltzmann-selects the move to Metropolis-accept.
 //! K=1 reproduces the classic sequential trajectory bit-for-bit.
+//!
+//! Objectives come in two layers: [`Objective`] is a per-thread scoring
+//! handle (`&self` scoring, interior scratch), and [`ObjectiveFactory`] is
+//! the `Sync` shared source of such handles — what a concurrent
+//! [`crate::compiler::CompileSession`] fans out over worker threads.
 
 mod annealer;
 mod placement;
 
-pub use annealer::{anneal, AnnealLog, AnnealParams, Objective};
+pub use annealer::{anneal, AnnealLog, AnnealParams, Objective, ObjectiveFactory};
 pub use placement::{random_placement, Placement};

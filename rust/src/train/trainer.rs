@@ -206,7 +206,7 @@ impl Trainer {
 
     /// Predict labels for samples at `indices` (batched per bucket).
     pub fn predict(&self, dataset: &Dataset, indices: &[usize]) -> Result<Vec<f64>> {
-        let mut learned = crate::cost::LearnedCost::from_store(
+        let learned = crate::cost::LearnedCost::from_store(
             self.engine.clone(),
             &self.param_store(),
             self.config.ablation,

@@ -1,0 +1,180 @@
+//! Parallel compile-session invariants:
+//!
+//! * **worker-count determinism** — a `workers=N` compile produces a
+//!   `CompileReport` bit-identical to `workers=1` under the same seed, for
+//!   the heuristic *and* the learned objective (handles share one engine);
+//! * **order independence** — per-subgraph seed streams mean any subgraph's
+//!   placement can be reproduced in isolation from `(seed, index, restart)`
+//!   alone, so partition order / scheduling cannot leak into results;
+//! * **restart monotonicity** — restart 0's stream is unchanged, so raising
+//!   `restarts` can only improve (or tie) every subgraph's measured II;
+//! * **service-backed sessions** — the `ScoringService` works as the
+//!   session's `ObjectiveFactory`, with concurrent subgraph annealers
+//!   filling the dispatcher's batches.
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, subgraph_rng, CompileConfig, CompileReport};
+use rdacost::coordinator::ScoringService;
+use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
+use rdacost::dfg::{builders, partition};
+use rdacost::placer::{anneal, AnnealParams, ObjectiveFactory};
+use rdacost::router::route_all;
+use rdacost::sim;
+use rdacost::train::{TrainConfig, Trainer};
+
+fn test_cfg(iterations: usize, workers: usize, restarts: usize) -> CompileConfig {
+    CompileConfig {
+        era: Era::Past,
+        anneal: AnnealParams { iterations, ..AnnealParams::default() },
+        seed: 0x5E55,
+        workers,
+        restarts,
+    }
+}
+
+/// Everything except wall_seconds, bit-for-bit.
+fn assert_reports_identical(a: &CompileReport, b: &CompileReport, what: &str) {
+    assert_eq!(a.model, b.model, "{what}: model");
+    assert_eq!(a.cost_model, b.cost_model, "{what}: cost_model");
+    assert_eq!(a.total_ii.to_bits(), b.total_ii.to_bits(), "{what}: total_ii");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{what}: throughput");
+    assert_eq!(
+        a.total_latency.to_bits(),
+        b.total_latency.to_bits(),
+        "{what}: total_latency"
+    );
+    assert_eq!(a.subgraphs.len(), b.subgraphs.len(), "{what}: subgraph count");
+    for (sa, sb) in a.subgraphs.iter().zip(&b.subgraphs) {
+        assert_eq!(sa, sb, "{what}: subgraph {} diverged", sa.name);
+    }
+}
+
+#[test]
+fn workers_do_not_change_results_heuristic() {
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
+    let heuristic = HeuristicCost::new();
+    let serial = compile(&graph, &fabric, &heuristic, &test_cfg(25, 1, 1)).unwrap();
+    assert!(serial.subgraphs.len() >= 2, "graph must partition for this test");
+    for workers in [2, 4, 16] {
+        let parallel = compile(&graph, &fabric, &heuristic, &test_cfg(25, workers, 1)).unwrap();
+        assert_reports_identical(&serial, &parallel, &format!("workers={workers}"));
+    }
+}
+
+#[test]
+fn workers_do_not_change_results_learned() {
+    // The learned objective's worker handles share one inference engine;
+    // concurrent scoring must still be bit-deterministic.
+    let engine = rdacost::runtime::native_engine();
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+    let learned =
+        LearnedCost::from_store(engine, &trainer.param_store(), Ablation::default()).unwrap();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
+    let serial = compile(&graph, &fabric, &learned, &test_cfg(12, 1, 1)).unwrap();
+    assert!(serial.subgraphs.len() >= 2);
+    let parallel = compile(&graph, &fabric, &learned, &test_cfg(12, 3, 1)).unwrap();
+    assert_reports_identical(&serial, &parallel, "learned workers=3");
+    assert_eq!(learned.scoring_errors(), 0, "subgraphs must fit the GNN buckets");
+    assert!(learned.evaluations() > 0, "shared counters must aggregate worker handles");
+}
+
+#[test]
+fn subgraph_results_reproducible_in_isolation() {
+    // The per-subgraph seed stream is a pure function of (seed, index,
+    // restart): re-running any single subgraph's anneal outside the session
+    // reproduces the session's result exactly. This is what makes results
+    // independent of compile order and worker scheduling.
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
+    let cfg = test_cfg(20, 4, 1);
+    let heuristic = HeuristicCost::new();
+    let report = compile(&graph, &fabric, &heuristic, &cfg).unwrap();
+
+    let parts = partition::partition(&graph, &fabric).unwrap();
+    assert_eq!(parts.subgraphs.len(), report.subgraphs.len());
+    // Spot-check every subgraph, iterating in *reverse* order to make the
+    // order-independence explicit.
+    for (i, sg) in parts.subgraphs.iter().enumerate().rev() {
+        let handle = ObjectiveFactory::handle(&heuristic);
+        let mut rng = subgraph_rng(cfg.seed, i, 0);
+        let (placement, _, log) =
+            anneal(sg, &fabric, handle.as_ref(), &cfg.anneal, &mut rng).unwrap();
+        let routing = route_all(&fabric, sg, &placement).unwrap();
+        let measured = sim::measure(&fabric, sg, &placement, &routing, cfg.era).unwrap();
+        let in_session = &report.subgraphs[i];
+        assert_eq!(
+            measured.ii_cycles.to_bits(),
+            in_session.ii_cycles.to_bits(),
+            "subgraph {i} ({}) not reproducible in isolation",
+            in_session.name
+        );
+        assert_eq!(log.evaluations, in_session.anneal_evaluations, "subgraph {i} evaluations");
+        assert_eq!(log.score_batches, in_session.anneal_score_batches);
+    }
+}
+
+#[test]
+fn restarts_never_hurt() {
+    // Restart 0 uses the restarts=1 stream verbatim and the best measured II
+    // wins, so more restarts can only improve (or tie) each subgraph.
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
+    let heuristic = HeuristicCost::new();
+    let one = compile(&graph, &fabric, &heuristic, &test_cfg(20, 2, 1)).unwrap();
+    let three = compile(&graph, &fabric, &heuristic, &test_cfg(20, 2, 3)).unwrap();
+    assert_eq!(one.subgraphs.len(), three.subgraphs.len());
+    for (a, b) in one.subgraphs.iter().zip(&three.subgraphs) {
+        assert!(
+            b.ii_cycles <= a.ii_cycles,
+            "restarts made subgraph {} worse: {} -> {}",
+            a.name,
+            a.ii_cycles,
+            b.ii_cycles
+        );
+        assert_eq!(b.anneal_restarts, 3);
+        assert!(
+            b.anneal_evaluations > a.anneal_evaluations,
+            "restarts must add evaluations"
+        );
+    }
+    assert!(three.total_ii <= one.total_ii);
+    // And the restart sweep itself is deterministic.
+    let three_again = compile(&graph, &fabric, &heuristic, &test_cfg(20, 2, 3)).unwrap();
+    assert_reports_identical(&three, &three_again, "restarts=3 rerun");
+}
+
+#[test]
+fn scoring_service_drives_a_parallel_compile() {
+    // The service is an ObjectiveFactory: subgraph workers score through
+    // per-worker clients and the dispatcher batches across them.
+    let engine = rdacost::runtime::native_engine();
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+    let service = ScoringService::start(
+        engine,
+        &trainer.param_store(),
+        Ablation::default(),
+        8,
+        std::time::Duration::from_millis(2),
+    )
+    .unwrap();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
+    let cfg = CompileConfig {
+        anneal: AnnealParams { iterations: 10, ..AnnealParams::default() },
+        workers: 2,
+        ..CompileConfig::default()
+    };
+    let report = compile(&graph, &fabric, &service, &cfg).unwrap();
+    assert_eq!(report.cost_model, "learned-gnn-service");
+    assert!(report.subgraphs.len() >= 2);
+    assert!(report.total_ii > 0.0 && report.throughput > 0.0);
+    let served = service.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(served > 0, "no requests reached the dispatcher");
+    assert_eq!(
+        service.stats.scoring_errors.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "service-backed scoring failed"
+    );
+}

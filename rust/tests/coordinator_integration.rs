@@ -44,7 +44,7 @@ fn service_scores_match_direct_inference() {
 
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = Rng::new(1);
-    let mut direct = LearnedCost::from_store(eng, &store, Ablation::default()).unwrap();
+    let direct = LearnedCost::from_store(eng, &store, Ablation::default()).unwrap();
 
     for _ in 0..5 {
         let enc = encoded_graph(&mut rng, &fabric);

@@ -20,18 +20,19 @@ use rdacost::util::rng::Rng;
 
 /// An objective wrapper that validates the candidate placement on every
 /// single scoring call — i.e. after every proposed annealer move, not just
-/// on the final result.
+/// on the final result. (`Objective::score` takes `&self`, so the call
+/// counter lives in a `Cell` — the handle is used by one thread.)
 struct ValidatingObjective {
     inner: HeuristicCost,
-    calls: usize,
+    calls: std::cell::Cell<usize>,
 }
 
 impl Objective for ValidatingObjective {
-    fn score(&mut self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+    fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
         placement
             .validate(graph, fabric)
             .expect("annealer proposed an infeasible placement");
-        self.calls += 1;
+        self.calls.set(self.calls.get() + 1);
         self.inner.score(graph, fabric, placement, routing)
     }
 
@@ -62,14 +63,15 @@ fn every_annealer_move_kind_preserves_feasibility() {
                 w_stage,
                 ..AnnealParams::default()
             };
-            let mut obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0 };
+            let obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0.into() };
             let mut rng = Rng::new(100 + gi as u64);
-            let (best, _, log) = anneal(graph, &fabric, &mut obj, &params, &mut rng)
+            let (best, _, log) = anneal(graph, &fabric, &obj, &params, &mut rng)
                 .unwrap_or_else(|e| panic!("{name}: anneal failed: {e:#}"));
             best.validate(graph, &fabric)
                 .unwrap_or_else(|e| panic!("{name}: final placement infeasible: {e:#}"));
-            assert!(obj.calls > 100, "{name}: objective barely exercised ({} calls)", obj.calls);
-            assert!(log.evaluations >= obj.calls);
+            let calls = obj.calls.get();
+            assert!(calls > 100, "{name}: objective barely exercised ({calls} calls)");
+            assert!(log.evaluations >= calls);
         }
     }
 }
@@ -86,17 +88,14 @@ fn batched_annealer_moves_preserve_feasibility() {
         proposals_per_step: 6,
         ..AnnealParams::default()
     };
-    let mut obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0 };
+    let obj = ValidatingObjective { inner: HeuristicCost::new(), calls: 0.into() };
     let mut rng = Rng::new(404);
     let (best, _, log) =
-        anneal(&graph, &fabric, &mut obj, &params, &mut rng).expect("batched anneal failed");
+        anneal(&graph, &fabric, &obj, &params, &mut rng).expect("batched anneal failed");
     best.validate(&graph, &fabric).expect("final placement infeasible");
-    assert!(
-        obj.calls > 120,
-        "fleet objective barely exercised ({} calls for 60 K=6 steps)",
-        obj.calls
-    );
-    assert!(log.evaluations >= obj.calls);
+    let calls = obj.calls.get();
+    assert!(calls > 120, "fleet objective barely exercised ({calls} calls for 60 K=6 steps)");
+    assert!(log.evaluations >= calls);
 }
 
 #[test]

@@ -45,9 +45,10 @@ fn bert_partition_compile_smoke() {
         era: Era::Past,
         anneal: AnnealParams { iterations: 30, ..AnnealParams::default() },
         seed: 3,
+        ..CompileConfig::default()
     };
-    let mut heuristic = HeuristicCost::new();
-    let rep = compile(&graph, &fabric, &mut heuristic, &cfg).unwrap();
+    let heuristic = HeuristicCost::new();
+    let rep = compile(&graph, &fabric, &heuristic, &cfg).unwrap();
     assert_eq!(rep.subgraphs.len(), parts.subgraphs.len());
     assert!(rep.total_ii > 0.0);
     assert!(rep.throughput > 0.0);
@@ -64,11 +65,12 @@ fn oracle_annealing_beats_heuristic_annealing_on_truth() {
         era: Era::Past,
         anneal: AnnealParams { iterations: 300, ..AnnealParams::default() },
         seed: 11,
+        ..CompileConfig::default()
     };
-    let mut oracle = OracleCost::new(Era::Past);
-    let mut heuristic = HeuristicCost::new();
-    let rep_o = compile(&graph, &fabric, &mut oracle, &cfg).unwrap();
-    let rep_h = compile(&graph, &fabric, &mut heuristic, &cfg).unwrap();
+    let oracle = OracleCost::new(Era::Past);
+    let heuristic = HeuristicCost::new();
+    let rep_o = compile(&graph, &fabric, &oracle, &cfg).unwrap();
+    let rep_h = compile(&graph, &fabric, &heuristic, &cfg).unwrap();
     assert!(
         rep_o.total_ii <= rep_h.total_ii * 1.05,
         "oracle-guided {} vs heuristic-guided {}",
@@ -139,9 +141,9 @@ fn annealer_improves_true_throughput_not_just_objective() {
                 .normalized_throughput,
         );
     }
-    let mut heuristic = HeuristicCost::new();
+    let heuristic = HeuristicCost::new();
     let params = AnnealParams { iterations: 300, ..AnnealParams::default() };
-    let (best, _, _) = anneal(&graph, &fabric, &mut heuristic, &params, &mut rng).unwrap();
+    let (best, _, _) = anneal(&graph, &fabric, &heuristic, &params, &mut rng).unwrap();
     let routing = route_all(&fabric, &graph, &best).unwrap();
     let annealed = sim::measure(&fabric, &graph, &best, &routing, Era::Past)
         .unwrap()

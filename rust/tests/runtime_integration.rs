@@ -38,7 +38,7 @@ fn native_backend_scores_real_decision_in_unit_interval() {
     let eng = engine();
     let cfg = TrainConfig::default();
     let trainer = Trainer::new(eng.clone(), cfg).unwrap();
-    let mut learned =
+    let learned =
         LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
 
     // Encode a real PnR decision.
@@ -50,7 +50,7 @@ fn native_backend_scores_real_decision_in_unit_interval() {
 
     let score = learned.score(&graph, &fabric, &placement, &routing);
     assert!(score > 0.0 && score < 1.0, "prediction {score} not in (0,1)");
-    assert_eq!(learned.evaluations, 1);
+    assert_eq!(learned.evaluations(), 1);
 
     // Deterministic.
     let score2 = learned.score(&graph, &fabric, &placement, &routing);
@@ -63,7 +63,7 @@ fn native_predictions_finite_for_every_family() {
     // via the native backend for every workload family.
     let eng = engine();
     let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
-    let mut learned =
+    let learned =
         LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = Rng::new(9);
@@ -91,8 +91,8 @@ fn ablation_flags_change_output() {
     let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
     let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
 
-    let mut full = LearnedCost::from_store(eng.clone(), &store, Ablation::default()).unwrap();
-    let mut no_node = LearnedCost::from_store(
+    let full = LearnedCost::from_store(eng.clone(), &store, Ablation::default()).unwrap();
+    let no_node = LearnedCost::from_store(
         eng,
         &store,
         Ablation { use_node_emb: false, ..Ablation::default() },
@@ -107,7 +107,7 @@ fn ablation_flags_change_output() {
 fn batch_and_single_inference_agree() {
     let eng = engine();
     let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
-    let mut learned =
+    let learned =
         LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
 
     let fabric = Fabric::new(FabricConfig::default());
@@ -166,7 +166,7 @@ fn checkpoint_roundtrip_through_learned_cost() {
     let store = trainer.param_store();
     let path = std::env::temp_dir().join("rdacost_integration_ckpt.bin");
     store.save(&path).unwrap();
-    let mut learned = LearnedCost::load(eng, &path).unwrap();
+    let learned = LearnedCost::load(eng, &path).unwrap();
 
     let fabric = Fabric::new(FabricConfig::default());
     let graph = rdacost::dfg::builders::gemm_graph(64, 64, 64);
