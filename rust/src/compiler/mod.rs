@@ -24,6 +24,15 @@
 //!   the best *measured* (simulator) II wins, ties to the earliest restart.
 //!   Because restart 0's stream is unchanged, raising `restarts` can only
 //!   improve (or tie) every subgraph.
+//! * **Incremental PnR hot path.** Each subgraph's annealer evaluates
+//!   candidates on the incremental routing engine
+//!   ([`crate::router::RoutingState`]): delta re-route + apply/undo,
+//!   resynced every `AnnealParams::reroute_every` accepted moves
+//!   (`reroute_every = 1` forces the historical full-reroute path, which
+//!   compiles bit-identically to the pre-incremental driver — pinned by
+//!   `rust/tests/route_equivalence.rs`). The final per-subgraph
+//!   measurement always uses a clean batch route with the configured
+//!   `AnnealParams::router` tunables, never the annealer's working routes.
 //! * **Worker fan-out.** Subgraphs are claimed off an atomic counter by
 //!   `cfg.workers` scoped threads (the coordinator pool's work-stealing
 //!   idiom); reports land in per-subgraph slots and are assembled in
@@ -45,7 +54,7 @@ use anyhow::Result;
 use crate::arch::{Era, Fabric};
 use crate::dfg::{partition, Dfg};
 use crate::placer::{anneal, AnnealParams, Objective, ObjectiveFactory};
-use crate::router::route_all;
+use crate::router::route_all_with;
 use crate::sim;
 use crate::util::rng::Rng;
 
@@ -224,8 +233,9 @@ impl<'a> CompileSession<'a> {
         for r in 0..restarts {
             let mut rng = subgraph_rng(self.cfg.seed, index, r);
             let (placement, _, log) = anneal(sg, self.fabric, handle, &self.cfg.anneal, &mut rng)?;
-            // Final honest measurement: clean route + simulator.
-            let routing = route_all(self.fabric, sg, &placement)?;
+            // Final honest measurement: clean batch route + simulator —
+            // never the annealer's (possibly incremental) working routing.
+            let routing = route_all_with(self.fabric, sg, &placement, self.cfg.anneal.router)?;
             let report = sim::measure(self.fabric, sg, &placement, &routing, self.cfg.era)?;
             evaluations += log.evaluations;
             score_batches += log.score_batches;

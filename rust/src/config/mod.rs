@@ -35,6 +35,11 @@
 //! t_initial = 0.1
 //! t_final = 0.001
 //! proposals_per_step = 8
+//! reroute_every = 25
+//!
+//! [router]
+//! congestion_weight = 0.5
+//! refine_passes = 1
 //! ```
 
 use std::collections::BTreeMap;
@@ -171,6 +176,14 @@ impl RunConfig {
         raw.take_parse("anneal.t_initial", &mut cfg.anneal.t_initial)?;
         raw.take_parse("anneal.t_final", &mut cfg.anneal.t_final)?;
         raw.take_parse("anneal.proposals_per_step", &mut cfg.anneal.proposals_per_step)?;
+        raw.take_parse("anneal.reroute_every", &mut cfg.anneal.reroute_every)?;
+
+        // Router tunables feed every routing consumer: the annealer's
+        // incremental engine + resyncs, compile-session measurement routes,
+        // and the dataset generator's label routes.
+        raw.take_parse("router.congestion_weight", &mut cfg.anneal.router.congestion_weight)?;
+        raw.take_parse("router.refine_passes", &mut cfg.anneal.router.refine_passes)?;
+        cfg.dataset.router = cfg.anneal.router;
 
         if let Some(unknown) = raw.values.keys().next() {
             bail!("unknown config key {unknown:?}");
@@ -228,6 +241,11 @@ epochs = 5
 [anneal]
 iterations = 77
 proposals_per_step = 8
+reroute_every = 0
+
+[router]
+congestion_weight = 0.75
+refine_passes = 2
 "#,
         )
         .unwrap();
@@ -242,6 +260,12 @@ proposals_per_step = 8
         assert_eq!(cfg.train.epochs, 5);
         assert_eq!(cfg.anneal.iterations, 77);
         assert_eq!(cfg.anneal.proposals_per_step, 8);
+        assert_eq!(cfg.anneal.reroute_every, 0);
+        assert_eq!(cfg.anneal.router.congestion_weight, 0.75);
+        assert_eq!(cfg.anneal.router.refine_passes, 2);
+        // The dataset generator routes with the same tunables.
+        assert_eq!(cfg.dataset.router.congestion_weight, 0.75);
+        assert_eq!(cfg.dataset.router.refine_passes, 2);
         // Unset keys keep defaults.
         assert_eq!(cfg.fabric.lanes, FabricConfig::default().lanes);
     }

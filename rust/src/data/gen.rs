@@ -7,7 +7,7 @@ use crate::cost::HeuristicCost;
 use crate::dfg::{builders, Dfg, WorkloadFamily};
 use crate::gnn;
 use crate::placer::{anneal, random_placement, AnnealParams, Placement};
-use crate::router::route_all;
+use crate::router::{route_all_with, RouterParams};
 use crate::sim;
 use crate::util::rng::Rng;
 
@@ -32,6 +32,10 @@ pub struct GenConfig {
     /// value is applied *after* `AnnealParams::randomized` so the randomized
     /// schedule draws stay seed-compatible either way.
     pub proposals_per_step: usize,
+    /// Router tunables for the measurement routes *and* the short-SA
+    /// searches (`[router]` in the TOML config). Applied after
+    /// `AnnealParams::randomized`, like `proposals_per_step`.
+    pub router: RouterParams,
 }
 
 impl Default for GenConfig {
@@ -42,6 +46,7 @@ impl Default for GenConfig {
             frac_random: 0.5,
             frac_walk: 0.3,
             proposals_per_step: 1,
+            router: RouterParams::default(),
         }
     }
 }
@@ -101,9 +106,12 @@ fn draw_decision(
         }
         Ok(p)
     } else {
-        // Short randomized-SA run guided by the heuristic cost model.
+        // Short randomized-SA run guided by the heuristic cost model
+        // (candidate evaluation runs on the incremental routing engine —
+        // `randomized` draws reroute_every in 10..=100).
         let mut params = AnnealParams::randomized(rng);
         params.proposals_per_step = cfg.proposals_per_step.max(1);
+        params.router = cfg.router;
         let heuristic = HeuristicCost::new();
         let (best, _, _) = anneal(graph, fabric, &heuristic, &params, rng)?;
         Ok(best)
@@ -184,7 +192,7 @@ pub fn generate_family(
                 break 'outer;
             }
             let placement = draw_decision(&graph, fabric, cfg, rng)?;
-            let routing = route_all(fabric, &graph, &placement)?;
+            let routing = route_all_with(fabric, &graph, &placement, cfg.router)?;
             let report = sim::measure(fabric, &graph, &placement, &routing, cfg.era)?;
             let mut tensors = gnn::encode(&graph, fabric, &placement, &routing)?;
             tensors.label = report.normalized_throughput as f32;

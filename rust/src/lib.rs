@@ -73,6 +73,14 @@ Common options:
   --artifacts DIR   artifacts directory (default: artifacts)
   --iters N         annealer iterations per subgraph ([anneal] iterations)
   --proposals K     annealer fleet size per step ([anneal] proposals_per_step)
+  --reroute-every N incremental-routing resync cadence, in accepted moves
+                    ([anneal] reroute_every; 0 = never resync, 1 = full
+                    re-route of every candidate, i.e. the pre-incremental
+                    reference path; default 25)
+  --congestion-weight W   router congestion penalty per existing flow
+                    ([router] congestion_weight, default 0.5)
+  --refine-passes N router rip-up-and-reroute refinement passes
+                    ([router] refine_passes, default 1)
   --workers N       worker threads: gen-data shards and compile-session
                     subgraph fan-out (default: all cores; results are
                     bit-identical for every worker count)
@@ -123,6 +131,14 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
     // Batched-proposal fleet size (K) for every annealing consumer.
     cfg.anneal.proposals_per_step =
         args.get_usize("proposals", cfg.anneal.proposals_per_step).max(1);
+    // Incremental-routing resync cadence (0 = never, 1 = full re-route).
+    cfg.anneal.reroute_every = args.get_usize("reroute-every", cfg.anneal.reroute_every);
+    // Router tunables, mirrored into the dataset generator's label routes.
+    cfg.anneal.router.congestion_weight =
+        args.get_f64("congestion-weight", cfg.anneal.router.congestion_weight);
+    cfg.anneal.router.refine_passes =
+        args.get_usize("refine-passes", cfg.anneal.router.refine_passes);
+    cfg.dataset.router = cfg.anneal.router;
     if args.flag("quick") {
         // CI-speed profile: small corpus, few epochs, short anneals.
         cfg.dataset.total = cfg.dataset.total.min(400);

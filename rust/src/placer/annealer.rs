@@ -1,16 +1,34 @@
 //! Simulated-annealing search over placements, with **batched candidate
-//! evaluation**: each step proposes a fleet of K distinct moves, routes them
-//! in parallel, scores all K in one [`Objective::score_batch`] call, and
-//! accepts via Boltzmann selection over the candidate set. K=1 reproduces
-//! the classic sequential Metropolis trajectory bit-for-bit under the same
-//! RNG seed (pinned by `k1_matches_reference_sequential_annealer`), so
-//! dataset generation stays comparable across the refactor.
+//! evaluation** and an **incremental routing engine** on the hot path.
+//!
+//! Each step proposes a fleet of K distinct moves and scores all K in one
+//! [`Objective::score_batch`] call (Boltzmann selection over the candidate
+//! set, then the classic Metropolis criterion). Candidate *routing* — the
+//! dominant evaluation cost — runs in one of two modes, selected by
+//! [`AnnealParams::reroute_every`]:
+//!
+//! * **Incremental** (`reroute_every != 1`, the default): a
+//!   [`RoutingState`] owns the current routes and their aggregates; every
+//!   proposal is evaluated by `apply_move` (rip up + A*-re-route only the
+//!   edges incident to the moved nodes), scored in place, and `undo`ne if
+//!   rejected — near-O(affected edges) per candidate instead of O(all
+//!   edges). A clean `route_all` resync runs every `reroute_every` accepted
+//!   moves to correct congestion drift (`0` = never resync).
+//! * **Full re-route** (`reroute_every == 1`, "resync every step"): every
+//!   candidate is routed from scratch — the historical reference path,
+//!   kept bit-identical to the pre-incremental annealer (pinned by
+//!   `k1_matches_reference_sequential_annealer` and the compile-level
+//!   equivalence test in `rust/tests/route_equivalence.rs`).
+//!
+//! K=1 with full re-route reproduces the classic sequential Metropolis
+//! trajectory bit-for-bit under the same RNG seed, so dataset generation
+//! and seeded experiments stay comparable across both refactors.
 
 use anyhow::{bail, Result};
 
 use crate::arch::Fabric;
-use crate::dfg::Dfg;
-use crate::router::{route_all, Routing};
+use crate::dfg::{Dfg, NodeId};
+use crate::router::{route_all_with, RouterParams, Routing, RoutingState};
 use crate::util::rng::Rng;
 
 use super::placement::{random_placement, Placement};
@@ -88,12 +106,25 @@ pub struct AnnealParams {
     pub w_relocate: f64,
     pub w_swap: f64,
     pub w_stage: f64,
-    /// Re-route all edges every N accepted moves (incremental routing drifts).
+    /// Incremental-routing resync cadence: run a clean `route_all` (and
+    /// refresh the current score) every N **accepted** moves, correcting
+    /// the congestion drift that delta re-routing accumulates.
+    ///
+    /// * `0` — never resync (pure incremental).
+    /// * `1` — resync every step: candidates are routed from scratch and
+    ///   the incremental engine is bypassed entirely. This is the
+    ///   historical full-reroute annealer, preserved bit-for-bit as the
+    ///   equivalence reference.
+    /// * `N ≥ 2` — delta re-route per candidate, clean resync every N
+    ///   accepted moves (the default, 25).
     pub reroute_every: usize,
     /// Candidates proposed, routed and scored per annealing step (K).
-    /// 1 = the classic sequential Metropolis walk; K>1 routes the fleet on
-    /// scoped threads and scores it in one `score_batch` call.
+    /// 1 = the classic sequential Metropolis walk; K>1 evaluates a fleet
+    /// and scores it in one `score_batch` call.
     pub proposals_per_step: usize,
+    /// Router tunables used for every candidate route, the incremental
+    /// engine, and the periodic resync.
+    pub router: RouterParams,
 }
 
 impl Default for AnnealParams {
@@ -107,15 +138,22 @@ impl Default for AnnealParams {
             w_stage: 0.2,
             reroute_every: 25,
             proposals_per_step: 1,
+            router: RouterParams::default(),
         }
     }
 }
 
 impl AnnealParams {
     /// Draw a randomized schedule (dataset diversity). `proposals_per_step`
-    /// stays 1 and is deliberately **not** drawn from the RNG: the dataset
-    /// generator's decision streams (and their seeds) must stay comparable
-    /// with the pre-batching corpus.
+    /// stays 1 and `router` stays at the defaults — both are deliberately
+    /// **not** drawn from the RNG, keeping the *schedule draws themselves*
+    /// seed-compatible with the pre-batching corpus; router tunables are a
+    /// compiler setting, not a search-diversity knob (the generator
+    /// overrides them from its own config). Note the drawn `reroute_every`
+    /// (10..=100) now runs the incremental engine, so the short-SA
+    /// *trajectories* — and hence regenerated corpora — differ from the
+    /// pre-incremental ones; the bit-compatible reference is
+    /// `reroute_every = 1`.
     pub fn randomized(rng: &mut Rng) -> AnnealParams {
         AnnealParams {
             iterations: rng.range_inclusive(50, 1200),
@@ -126,6 +164,7 @@ impl AnnealParams {
             w_stage: rng.f64_range(0.05, 0.8),
             reroute_every: rng.range_inclusive(10, 100),
             proposals_per_step: 1,
+            router: RouterParams::default(),
         }
     }
 }
@@ -154,13 +193,30 @@ enum Move {
 /// Run simulated annealing from a random initial placement; returns the best
 /// placement found, its routing, and the run log.
 ///
-/// Each step proposes `params.proposals_per_step` distinct moves from the
-/// current state, routes the candidates in parallel (scoped threads), scores
-/// them in one [`Objective::score_batch`] call, Boltzmann-selects one
-/// candidate from the fleet, and Metropolis-accepts it against the current
-/// state. With K=1 the selection is a no-op and the RNG draw sequence is
-/// identical to the classic sequential annealer.
+/// Dispatches on [`AnnealParams::reroute_every`]: `1` runs the preserved
+/// full-reroute reference loop (every candidate routed from scratch,
+/// bit-identical to the pre-incremental annealer); any other value runs the
+/// incremental engine loop (delta re-route + apply/undo, periodic clean
+/// resync). See the module docs.
 pub fn anneal(
+    graph: &Dfg,
+    fabric: &Fabric,
+    objective: &dyn Objective,
+    params: &AnnealParams,
+    rng: &mut Rng,
+) -> Result<(Placement, Routing, AnnealLog)> {
+    if params.reroute_every == 1 {
+        anneal_full_reroute(graph, fabric, objective, params, rng)
+    } else {
+        anneal_incremental(graph, fabric, objective, params, rng)
+    }
+}
+
+/// The incremental-engine annealer: clone-free apply/score/undo on a
+/// [`RoutingState`]. Candidate evaluation is O(edges incident to the moved
+/// nodes); accepted moves keep the already-applied state (no re-route at
+/// all), rejected ones replay the delta backwards.
+fn anneal_incremental(
     graph: &Dfg,
     fabric: &Fabric,
     objective: &dyn Objective,
@@ -169,7 +225,184 @@ pub fn anneal(
 ) -> Result<(Placement, Routing, AnnealLog)> {
     let k = params.proposals_per_step.max(1);
     let mut current = random_placement(graph, fabric, rng)?;
-    let routing = route_all(fabric, graph, &current)?;
+    let mut engine = RoutingState::new(fabric, graph, &current, params.router)?;
+    let mut current_score = objective.score(graph, fabric, &current, engine.routing());
+
+    let mut best = current.clone();
+    let mut best_routing = engine.routing().clone();
+    let mut best_score = current_score;
+    let initial_score = current_score;
+
+    let mut log = AnnealLog {
+        evaluations: 1,
+        score_batches: 0,
+        accepted: 0,
+        best_score,
+        initial_score,
+        trace: vec![(0, best_score)],
+    };
+
+    let iters = params.iterations.max(1);
+    let cool = (params.t_final / params.t_initial).powf(1.0 / iters as f64);
+    let mut temp = params.t_initial;
+    let mut accepted_since_reroute = 0usize;
+
+    for it in 0..iters {
+        let moves = propose_batch(graph, fabric, &current, params, rng, k);
+        if moves.is_empty() {
+            temp *= cool;
+            continue;
+        }
+
+        let mut accepted_now = false;
+        if moves.len() == 1 {
+            // Single candidate: fully clone-free. Apply the move to the
+            // live placement + engine, score in place, and either keep the
+            // state (accept) or replay the inverse (reject).
+            let mv = moves[0];
+            let inverse = inverse_of(&current, &mv);
+            apply(&mut current, &mv);
+            debug_assert!(current.validate(graph, fabric).is_ok());
+            let delta = match engine.apply_move(fabric, graph, &current, &moved_nodes(&mv)) {
+                Ok(d) => d,
+                Err(e) => {
+                    apply(&mut current, &inverse);
+                    return Err(e);
+                }
+            };
+            let score = objective.score(graph, fabric, &current, engine.routing());
+            log.evaluations += 1;
+            log.score_batches += 1;
+
+            if score > best_score {
+                best_score = score;
+                best = current.clone();
+                best_routing = engine.routing().clone();
+                log.trace.push((it + 1, best_score));
+            }
+
+            let delta_s = score - current_score;
+            let accept = delta_s >= 0.0 || rng.f64() < (delta_s / temp.max(1e-9)).exp();
+            if accept {
+                current_score = score;
+                accepted_now = true;
+            } else {
+                engine.undo(graph, delta);
+                apply(&mut current, &inverse);
+            }
+        } else {
+            // K-fleet: evaluate each candidate by delta re-route on the
+            // live state, snapshotting (placement, routing) for the single
+            // batched scoring call, then undo back to the current state.
+            // The snapshots are memcpy-cheap next to the route_all-per-
+            // candidate they replace, but they are still O(all edges) per
+            // candidate; scoring base + per-candidate deltas would need an
+            // Objective::score_batch signature change and is the natural
+            // next optimization if K-fleet cloning ever dominates.
+            let mut candidates: Vec<(Placement, Routing)> = Vec::with_capacity(moves.len());
+            for mv in &moves {
+                let inverse = inverse_of(&current, mv);
+                apply(&mut current, mv);
+                debug_assert!(current.validate(graph, fabric).is_ok());
+                let delta = match engine.apply_move(fabric, graph, &current, &moved_nodes(mv)) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        apply(&mut current, &inverse);
+                        return Err(e);
+                    }
+                };
+                candidates.push((current.clone(), engine.routing().clone()));
+                engine.undo(graph, delta);
+                apply(&mut current, &inverse);
+            }
+
+            let scores = objective.score_batch(graph, fabric, &candidates);
+            if scores.len() != candidates.len() {
+                bail!(
+                    "objective {} returned {} scores for {} candidates",
+                    objective.name(),
+                    scores.len(),
+                    candidates.len()
+                );
+            }
+            log.evaluations += scores.len();
+            log.score_batches += 1;
+
+            // Track the best candidate *evaluated*, even if selection or
+            // the Metropolis step discards it below — fleet evaluations are
+            // never wasted.
+            let mut fleet_best = 0usize;
+            for (i, &s) in scores.iter().enumerate() {
+                if s > scores[fleet_best] {
+                    fleet_best = i;
+                }
+            }
+            if scores[fleet_best] > best_score {
+                best_score = scores[fleet_best];
+                best = candidates[fleet_best].0.clone();
+                best_routing = candidates[fleet_best].1.clone();
+                log.trace.push((it + 1, best_score));
+            }
+
+            let chosen = boltzmann_select(&scores, temp, rng);
+            let delta_s = scores[chosen] - current_score;
+            let accept = delta_s >= 0.0 || rng.f64() < (delta_s / temp.max(1e-9)).exp();
+            if accept {
+                // Re-apply the winning move: deterministic A* from the same
+                // state reproduces exactly the routes that were scored.
+                apply(&mut current, &moves[chosen]);
+                engine.apply_move(fabric, graph, &current, &moved_nodes(&moves[chosen]))?;
+                debug_assert_eq!(engine.routing().routes, candidates[chosen].1.routes);
+                current_score = scores[chosen];
+                accepted_now = true;
+            }
+        }
+
+        if accepted_now {
+            log.accepted += 1;
+            accepted_since_reroute += 1;
+            if params.reroute_every > 0 && accepted_since_reroute >= params.reroute_every {
+                // Periodic clean resync: incremental re-routing is exact on
+                // aggregates but path-dependent on route quality; a batch
+                // route_all re-derives congestion-honest routes.
+                engine.rebuild(fabric, graph, &current)?;
+                current_score = objective.score(graph, fabric, &current, engine.routing());
+                log.evaluations += 1;
+                accepted_since_reroute = 0;
+                // A resync is an evaluation too: clean routes can genuinely
+                // score above every drifted candidate seen so far (unlike
+                // the full-reroute path, where the resync reproduces the
+                // accepted candidate's routing bit-for-bit).
+                if current_score > best_score {
+                    best_score = current_score;
+                    best = current.clone();
+                    best_routing = engine.routing().clone();
+                    log.trace.push((it + 1, best_score));
+                }
+            }
+        }
+        temp *= cool;
+    }
+
+    log.best_score = best_score;
+    Ok((best, best_routing, log))
+}
+
+/// The preserved full-reroute annealer (`reroute_every == 1`): every
+/// candidate is routed from scratch with [`route_all_with`]. This is the
+/// pre-incremental reference path, kept bit-identical so seeded corpora and
+/// the equivalence tests have a fixed point; with K=1 it is also the
+/// classic sequential Metropolis walk.
+fn anneal_full_reroute(
+    graph: &Dfg,
+    fabric: &Fabric,
+    objective: &dyn Objective,
+    params: &AnnealParams,
+    rng: &mut Rng,
+) -> Result<(Placement, Routing, AnnealLog)> {
+    let k = params.proposals_per_step.max(1);
+    let mut current = random_placement(graph, fabric, rng)?;
+    let routing = route_all_with(fabric, graph, &current, params.router)?;
     let mut current_score = objective.score(graph, fabric, &current, &routing);
 
     let mut best = current.clone();
@@ -199,10 +432,10 @@ pub fn anneal(
         }
 
         // Materialize the candidate fleet: apply each move to a copy of the
-        // current state, then route. Routing dominates candidate-preparation
-        // cost and is independent per candidate, so a fleet is routed on
-        // scoped threads; a single candidate is routed inline (no spawn
-        // overhead on the K=1 path).
+        // current state, then route from scratch. Routing dominates
+        // candidate-preparation cost and is independent per candidate, so a
+        // fleet is routed on scoped threads; a single candidate is routed
+        // inline (no spawn overhead on the K=1 path).
         let mut placements = Vec::with_capacity(moves.len());
         for mv in &moves {
             let mut candidate = current.clone();
@@ -210,7 +443,7 @@ pub fn anneal(
             debug_assert!(candidate.validate(graph, fabric).is_ok());
             placements.push(candidate);
         }
-        let mut candidates = route_candidates(graph, fabric, placements)?;
+        let mut candidates = route_candidates(graph, fabric, placements, params.router)?;
 
         let scores = objective.score_batch(graph, fabric, &candidates);
         if scores.len() != candidates.len() {
@@ -258,9 +491,11 @@ pub fn anneal(
             log.accepted += 1;
             accepted_since_reroute += 1;
             if accepted_since_reroute >= params.reroute_every {
-                // Periodic clean re-route (sequential routing is
-                // order-dependent; this keeps congestion estimates honest).
-                let clean = route_all(fabric, graph, &current)?;
+                // Clean re-route (sequential routing is order-dependent;
+                // this keeps congestion estimates honest). At
+                // reroute_every == 1 this runs after every accepted move —
+                // the historical behavior this path preserves.
+                let clean = route_all_with(fabric, graph, &current, params.router)?;
                 current_score = objective.score(graph, fabric, &current, &clean);
                 log.evaluations += 1;
                 accepted_since_reroute = 0;
@@ -273,18 +508,20 @@ pub fn anneal(
     Ok((best, best_routing, log))
 }
 
-/// Route every candidate placement, in parallel for fleets of 2+. Workers
-/// are capped at the core count and take contiguous chunks, so a large K
-/// costs at most `available_parallelism` thread spawns per step.
+/// Route every candidate placement from scratch, in parallel for fleets of
+/// 2+ (full-reroute path only). Workers are capped at the core count and
+/// take contiguous chunks, so a large K costs at most
+/// `available_parallelism` thread spawns per step.
 fn route_candidates(
     graph: &Dfg,
     fabric: &Fabric,
     placements: Vec<Placement>,
+    router: RouterParams,
 ) -> Result<Vec<(Placement, Routing)>> {
     if placements.len() == 1 {
         let mut out = Vec::with_capacity(1);
         for p in placements {
-            let r = route_all(fabric, graph, &p)?;
+            let r = route_all_with(fabric, graph, &p, router)?;
             out.push((p, r));
         }
         return Ok(out);
@@ -299,7 +536,7 @@ fn route_candidates(
         for (p_chunk, s_chunk) in placements.chunks(chunk).zip(slots.chunks_mut(chunk)) {
             scope.spawn(move || {
                 for (p, slot) in p_chunk.iter().zip(s_chunk.iter_mut()) {
-                    *slot = Some(route_all(fabric, graph, p));
+                    *slot = Some(route_all_with(fabric, graph, p, router));
                 }
             });
         }
@@ -452,11 +689,37 @@ fn apply(placement: &mut Placement, mv: &Move) {
     }
 }
 
+/// The move that exactly reverses `mv` when applied after it (read the
+/// pre-move state from `placement`). Swaps are self-inverse.
+fn inverse_of(placement: &Placement, mv: &Move) -> Move {
+    match *mv {
+        Move::Relocate { node, .. } => {
+            Move::Relocate { node, new_unit: placement.unit_of[node] }
+        }
+        Move::Swap { a, b } => Move::Swap { a, b },
+        Move::StageShift { node, .. } => {
+            Move::StageShift { node, new_stage: placement.stage_of[node] }
+        }
+    }
+}
+
+/// The nodes whose *unit* changes under `mv` — the set whose incident edges
+/// the incremental router must re-route. Stage shifts move no unit, so
+/// their routing delta is empty.
+fn moved_nodes(mv: &Move) -> Vec<NodeId> {
+    match *mv {
+        Move::Relocate { node, .. } => vec![NodeId(node as u32)],
+        Move::Swap { a, b } => vec![NodeId(a as u32), NodeId(b as u32)],
+        Move::StageShift { .. } => Vec::new(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::{Era, FabricConfig};
     use crate::dfg::builders;
+    use crate::router::route_all;
     use crate::sim;
 
     /// Oracle objective: the simulator itself (what a perfect cost model
@@ -478,8 +741,9 @@ mod tests {
     }
 
     /// The pre-refactor sequential annealer, verbatim: one proposal per
-    /// step, Metropolis accept. `k1_matches_reference_sequential_annealer`
-    /// pins the batched implementation at K=1 against this bit-for-bit.
+    /// step, full re-route per candidate, Metropolis accept.
+    /// `k1_matches_reference_sequential_annealer` pins the production
+    /// implementation at K=1 / reroute_every=1 against this bit-for-bit.
     fn reference_anneal(
         graph: &Dfg,
         fabric: &Fabric,
@@ -553,17 +817,22 @@ mod tests {
 
     #[test]
     fn k1_matches_reference_sequential_annealer() {
-        // The batched annealer at K=1 must draw the same RNG sequence and
-        // take the identical accepted-move trajectory as the pre-refactor
-        // sequential loop — this is what keeps dataset generation (and every
-        // seeded experiment) comparable across the refactor.
+        // At reroute_every = 1 (resync every step) the production annealer
+        // must draw the same RNG sequence and take the identical
+        // accepted-move trajectory as the pre-refactor sequential
+        // full-reroute loop — this is what keeps seeded corpora and the
+        // incremental refactor's equivalence pin anchored.
         let f = Fabric::new(FabricConfig::default());
         for (seed, graph) in [
             (21u64, builders::mha(32, 128, 4)),
             (22, builders::ffn(32, 128, 512)),
             (23, builders::mlp(16, &[64, 128, 64])),
         ] {
-            let params = AnnealParams { iterations: 250, ..AnnealParams::default() };
+            let params = AnnealParams {
+                iterations: 250,
+                reroute_every: 1,
+                ..AnnealParams::default()
+            };
             assert_eq!(params.proposals_per_step, 1);
 
             let mut rng_a = Rng::new(seed);
@@ -667,6 +936,106 @@ mod tests {
         );
     }
 
+    /// Objective wrapper asserting every scored routing is internally
+    /// consistent (aggregates match routes) and every route actually
+    /// connects its endpoints — run against the incremental engine this
+    /// checks the delta re-router *in situ*, candidate by candidate.
+    struct RoutingVerifier {
+        inner: Oracle,
+    }
+
+    impl Objective for RoutingVerifier {
+        fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
+            routing
+                .verify_aggregates(graph)
+                .expect("annealer scored an inconsistent routing");
+            for (ei, e) in graph.edges().iter().enumerate() {
+                let mut cur = placement.unit(e.src);
+                for l in &routing.routes[ei].links {
+                    cur = fabric.link(*l).other(cur).expect("route link off path");
+                }
+                assert_eq!(cur, placement.unit(e.dst), "route does not reach destination");
+            }
+            self.inner.score(graph, fabric, placement, routing)
+        }
+
+        fn name(&self) -> &'static str {
+            "routing-verifier"
+        }
+    }
+
+    #[test]
+    fn incremental_routings_are_internally_consistent() {
+        // Every candidate the incremental engine hands the objective —
+        // including pure-incremental runs that never resync
+        // (reroute_every = 0) — must be a genuine routing of the candidate
+        // placement with exact aggregates.
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        for (k, reroute_every) in [(1usize, 0usize), (1, 25), (5, 0), (5, 10)] {
+            let params = AnnealParams {
+                iterations: 120,
+                proposals_per_step: k,
+                reroute_every,
+                ..AnnealParams::default()
+            };
+            let verifier = RoutingVerifier { inner: Oracle { era: Era::Past } };
+            let mut rng = Rng::new(77);
+            let (best, best_routing, log) =
+                anneal(&g, &f, &verifier, &params, &mut rng).unwrap();
+            best.validate(&g, &f).unwrap();
+            best_routing.verify_aggregates(&g).unwrap();
+            assert!(log.evaluations > 100, "K={k}: engine barely exercised: {log:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_annealer_is_deterministic() {
+        // Same seed, same params -> bit-identical outcome, for both fleet
+        // shapes of the incremental path (the engine's delta re-routes are
+        // deterministic just like the batch router).
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::ffn(32, 128, 512);
+        for k in [1usize, 4] {
+            let params = AnnealParams {
+                iterations: 150,
+                proposals_per_step: k,
+                ..AnnealParams::default()
+            };
+            let oracle = Oracle { era: Era::Past };
+            let mut rng_a = Rng::new(901);
+            let (best_a, routing_a, log_a) = anneal(&g, &f, &oracle, &params, &mut rng_a).unwrap();
+            let mut rng_b = Rng::new(901);
+            let (best_b, routing_b, log_b) = anneal(&g, &f, &oracle, &params, &mut rng_b).unwrap();
+            assert_eq!(best_a, best_b, "K={k}: placements diverged");
+            assert_eq!(routing_a.routes, routing_b.routes, "K={k}: routings diverged");
+            assert_eq!(log_a.best_score.to_bits(), log_b.best_score.to_bits());
+            assert_eq!(log_a.accepted, log_b.accepted);
+            assert_eq!(log_a.evaluations, log_b.evaluations);
+            assert_eq!(log_a.trace, log_b.trace);
+        }
+    }
+
+    #[test]
+    fn reroute_every_zero_never_resyncs() {
+        // reroute_every = 0 means "never resync": no extra rescore
+        // evaluations beyond the initial score and one per step. (Relocate
+        // proposals always exist on an under-committed fabric, so every
+        // step yields a candidate.)
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        let params = AnnealParams {
+            iterations: 200,
+            reroute_every: 0,
+            ..AnnealParams::default()
+        };
+        let oracle = Oracle { era: Era::Past };
+        let mut rng = Rng::new(404);
+        let (_, _, log) = anneal(&g, &f, &oracle, &params, &mut rng).unwrap();
+        assert_eq!(log.evaluations, 1 + 200, "resync ran despite reroute_every = 0: {log:?}");
+        assert!(log.accepted > 0);
+    }
+
     #[test]
     fn boltzmann_select_prefers_better_candidates() {
         let mut rng = Rng::new(5);
@@ -697,6 +1066,29 @@ mod tests {
                 for b in &moves[i + 1..] {
                     assert_ne!(a, b, "duplicate move in fleet");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_moves_round_trip() {
+        let g = builders::mlp(16, &[64, 128, 64]);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(18);
+        let params = AnnealParams::default();
+        let p0 = random_placement(&g, &f, &mut rng).unwrap();
+        let mut p = p0.clone();
+        for _ in 0..300 {
+            if let Some(mv) = propose(&g, &f, &p, &params, &mut rng) {
+                let inverse = inverse_of(&p, &mv);
+                apply(&mut p, &mv);
+                apply(&mut p, &inverse);
+                assert_eq!(p, p0, "inverse did not restore the placement for {mv:?}");
+                // Keep walking from the moved state next round.
+                apply(&mut p, &mv);
+                let back = inverse_of(&p, &inverse);
+                assert_eq!(back, mv, "inverse of inverse must be the move itself");
+                apply(&mut p, &inverse);
             }
         }
     }
@@ -736,6 +1128,11 @@ mod tests {
             assert!(p.t_initial > p.t_final);
             assert!(p.w_relocate > 0.0 && p.w_swap > 0.0 && p.w_stage > 0.0);
             assert_eq!(p.proposals_per_step, 1, "randomized schedules stay sequential");
+            // Randomized schedules always run the incremental engine with
+            // some resync cadence (never the degenerate 0/1 modes), and
+            // router tunables are not search-diversity knobs.
+            assert!(p.reroute_every >= 10 && p.reroute_every <= 100);
+            assert_eq!(p.router.refine_passes, RouterParams::default().refine_passes);
         }
     }
 

@@ -17,11 +17,19 @@
 //! simulated annealing placer") to produce diverse PnR decisions.
 //!
 //! Search is **fleet-based**: every step proposes
-//! `AnnealParams::proposals_per_step` (K) distinct moves, routes the
-//! candidates on scoped threads, scores the whole fleet through one
-//! [`Objective::score_batch`] call (one batched GNN inference for the
-//! learned model), and Boltzmann-selects the move to Metropolis-accept.
-//! K=1 reproduces the classic sequential trajectory bit-for-bit.
+//! `AnnealParams::proposals_per_step` (K) distinct moves, scores the whole
+//! fleet through one [`Objective::score_batch`] call (one batched GNN
+//! inference for the learned model), and Boltzmann-selects the move to
+//! Metropolis-accept.
+//!
+//! Candidate routing runs on the **incremental engine**
+//! ([`crate::router::RoutingState`]) by default: each proposal re-routes
+//! only the edges incident to its moved nodes (apply/score/undo on live
+//! state), with a clean `route_all` resync every
+//! `AnnealParams::reroute_every` accepted moves. `reroute_every = 1`
+//! selects the preserved full-reroute reference path instead — every
+//! candidate routed from scratch, bit-identical to the pre-incremental
+//! annealer (at K=1 that is the classic sequential trajectory).
 //!
 //! Objectives come in two layers: [`Objective`] is a per-thread scoring
 //! handle (`&self` scoring, interior scratch), and [`ObjectiveFactory`] is

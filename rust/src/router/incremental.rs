@@ -1,0 +1,449 @@
+//! The incremental routing engine: stateful delta re-routing for the
+//! annealer's hot path.
+//!
+//! [`RoutingState`] owns a [`Routing`] plus the bookkeeping needed to keep
+//! its per-link aggregates exact under local edits: when a proposal moves a
+//! node (or swaps two), only the edges *incident to the moved nodes* change
+//! endpoints — every other route stays valid. [`RoutingState::apply_move`]
+//! rips up exactly those edges, A*-re-routes them against the live
+//! congestion of all remaining routes (same deterministic descending-bytes
+//! order as the batch router), and returns a [`RouteDelta`] that
+//! [`RoutingState::undo`] can replay backwards when the proposal is
+//! rejected. A candidate evaluation is therefore O(affected edges), not
+//! O(all edges) — the difference between re-routing a whole subgraph per
+//! annealing step and touching the 2–10 routes a swap actually invalidates.
+//!
+//! **Aggregate maintenance.** `link_flows` is a plain per-link counter.
+//! `link_bytes` is multicast-deduped (several edges carrying one producer's
+//! tensor over a link count its bytes once — see [`Routing`]), so the state
+//! keeps a per-`(link, producer)` refcount map of the byte payloads
+//! crossing each link; install/remove update the per-link maximum
+//! incrementally and are exact inverses of each other, which is what makes
+//! `undo` restore aggregates bit-for-bit. The equivalence "state aggregates
+//! ≡ aggregates recomputed from the routes" is pinned by property tests
+//! (`rust/tests/route_equivalence.rs`) over long random move/undo
+//! sequences.
+//!
+//! **Drift and resync.** Incremental re-routing is deterministic but
+//! path-dependent: after many accepted moves the routes are generally *not*
+//! what a clean batch [`super::route_all`] of the same placement would produce
+//! (the batch router globally rips up and refines in byte order). The
+//! aggregates always describe the actual routes exactly — nothing is ever
+//! stale — but congestion quality can drift, so the annealer periodically
+//! calls [`RoutingState::rebuild`] (a clean `route_all` resync) every
+//! `AnnealParams::reroute_every` accepted moves.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Result};
+
+use crate::arch::Fabric;
+use crate::dfg::{Dfg, NodeId};
+use crate::placer::Placement;
+
+use super::{astar, route_all_with, AStarScratch, Route, RouterParams, Routing};
+
+/// Per-`(link, producer)` refcounts of byte payloads: `(bytes, count)`
+/// pairs, almost always length 1 (a producer's edges share one tensor
+/// size). The per-link multicast-deduped contribution of a producer is the
+/// max byte value present.
+type Counts = HashMap<(u32, u32), Vec<(u64, u32)>>;
+
+/// The inverse of one [`RoutingState::apply_move`]: the previous routes of
+/// every edge the move re-routed, in rip-up order.
+#[derive(Debug, Clone)]
+pub struct RouteDelta {
+    changed: Vec<(usize, Route)>,
+}
+
+impl RouteDelta {
+    /// Edges this move re-routed (0 for a pure stage-shift).
+    pub fn len(&self) -> usize {
+        self.changed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changed.is_empty()
+    }
+}
+
+/// Stateful incremental router: routes + exact aggregates under
+/// apply/undo edits. See the module docs for the contract.
+pub struct RoutingState {
+    params: RouterParams,
+    routing: Routing,
+    counts: Counts,
+    scratch: AStarScratch,
+}
+
+impl RoutingState {
+    /// Route `placement` from scratch and index the aggregates for
+    /// incremental maintenance.
+    pub fn new(
+        fabric: &Fabric,
+        graph: &Dfg,
+        placement: &Placement,
+        params: RouterParams,
+    ) -> Result<RoutingState> {
+        let mut state = RoutingState {
+            params,
+            routing: Routing { routes: Vec::new(), link_flows: Vec::new(), link_bytes: Vec::new() },
+            counts: Counts::new(),
+            scratch: AStarScratch::new(fabric.units().len()),
+        };
+        state.rebuild(fabric, graph, placement)?;
+        Ok(state)
+    }
+
+    /// The current routing (always internally consistent: aggregates match
+    /// the routes exactly).
+    pub fn routing(&self) -> &Routing {
+        &self.routing
+    }
+
+    /// The router tunables this state routes with.
+    pub fn params(&self) -> RouterParams {
+        self.params
+    }
+
+    /// Clean resync: replace the incremental routes with a from-scratch
+    /// [`route_all_with`] of `placement` (the periodic drift correction
+    /// `AnnealParams::reroute_every` schedules).
+    pub fn rebuild(&mut self, fabric: &Fabric, graph: &Dfg, placement: &Placement) -> Result<()> {
+        let mut routing = route_all_with(fabric, graph, placement, self.params)?;
+        // Re-derive link_bytes through the refcount map so install/remove
+        // stay exact inverses of this state; the result is identical to the
+        // batch router's dedup (same per-(link, producer) max rule).
+        let from_scratch = std::mem::take(&mut routing.link_bytes);
+        routing.link_bytes = vec![0u64; from_scratch.len()];
+        self.counts.clear();
+        self.routing = routing;
+        for (ei, e) in graph.edges().iter().enumerate() {
+            for l in &self.routing.routes[ei].links {
+                add_bytes(&mut self.counts, &mut self.routing.link_bytes, l.0, e.src.0, e.bytes);
+            }
+        }
+        debug_assert_eq!(self.routing.link_bytes, from_scratch);
+        Ok(())
+    }
+
+    /// Re-route the edges invalidated by moving `moved` (their new
+    /// endpoints are read from `placement`, which must already reflect the
+    /// move). Returns the delta that [`RoutingState::undo`] reverses; on a
+    /// routing failure the state is rolled back before the error
+    /// propagates. An empty `moved` (a stage-shift: no unit changed) is a
+    /// no-op returning an empty delta.
+    pub fn apply_move(
+        &mut self,
+        fabric: &Fabric,
+        graph: &Dfg,
+        placement: &Placement,
+        moved: &[NodeId],
+    ) -> Result<RouteDelta> {
+        // Gather incident edges off the DFG's per-node adjacency —
+        // O(deg(moved)), not a full-graph scan.
+        let mut affected: Vec<usize> = Vec::new();
+        for n in moved {
+            for e in graph.incoming(*n) {
+                affected.push(e.id.0 as usize);
+            }
+            for e in graph.outgoing(*n) {
+                affected.push(e.id.0 as usize);
+            }
+        }
+        // Same deterministic discipline as the batch router: big flows
+        // first, ties by edge id. Sorting makes duplicates adjacent (an
+        // edge between two moved nodes is gathered twice), so dedup after.
+        affected.sort_by(|&a, &b| {
+            let (ea, eb) = (graph.edges()[a], graph.edges()[b]);
+            eb.bytes.cmp(&ea.bytes).then(a.cmp(&b))
+        });
+        affected.dedup();
+
+        // Rip up every affected route first so the re-routes see the
+        // congestion of the surviving routes only.
+        let mut changed: Vec<(usize, Route)> = Vec::with_capacity(affected.len());
+        for &ei in &affected {
+            changed.push((ei, self.rip_up(graph, ei)));
+        }
+        for (done, &ei) in affected.iter().enumerate() {
+            let e = graph.edges()[ei];
+            let (src, dst) = (placement.unit(e.src), placement.unit(e.dst));
+            match astar(fabric, src, dst, &self.routing.link_flows, self.params, &mut self.scratch)
+            {
+                Ok(route) => self.install(graph, ei, route),
+                Err(err) => {
+                    // Roll back: drop the re-routes already installed, then
+                    // restore every ripped-up original.
+                    for &ok in &affected[..done] {
+                        self.rip_up(graph, ok);
+                    }
+                    for (ei, old) in changed {
+                        self.install(graph, ei, old);
+                    }
+                    return Err(err);
+                }
+            }
+        }
+        Ok(RouteDelta { changed })
+    }
+
+    /// Reverse one [`RoutingState::apply_move`] (rejected proposal):
+    /// restores routes and aggregates bit-for-bit.
+    pub fn undo(&mut self, graph: &Dfg, delta: RouteDelta) {
+        for (ei, old) in delta.changed.into_iter().rev() {
+            self.rip_up(graph, ei);
+            self.install(graph, ei, old);
+        }
+    }
+
+    /// Full consistency check (tests/debug): aggregates recomputed from the
+    /// routes must match the incrementally-maintained ones, and the
+    /// refcount map must mirror the routes exactly.
+    pub fn verify(&self, graph: &Dfg) -> Result<()> {
+        self.routing.verify_aggregates(graph)?;
+        let mut fresh = Counts::new();
+        let mut bytes = vec![0u64; self.routing.link_bytes.len()];
+        for (ei, e) in graph.edges().iter().enumerate() {
+            for l in &self.routing.routes[ei].links {
+                add_bytes(&mut fresh, &mut bytes, l.0, e.src.0, e.bytes);
+            }
+        }
+        let norm = |c: &Counts| -> BTreeMap<(u32, u32), Vec<(u64, u32)>> {
+            c.iter()
+                .map(|(k, v)| {
+                    let mut v = v.clone();
+                    v.sort_unstable();
+                    (*k, v)
+                })
+                .collect()
+        };
+        if norm(&self.counts) != norm(&fresh) {
+            bail!("incremental refcount map diverged from the routes");
+        }
+        Ok(())
+    }
+
+    /// Remove edge `ei`'s route from the aggregates and return it.
+    fn rip_up(&mut self, graph: &Dfg, ei: usize) -> Route {
+        let route = std::mem::replace(&mut self.routing.routes[ei], Route { links: Vec::new() });
+        let e = graph.edges()[ei];
+        for l in &route.links {
+            self.routing.link_flows[l.0 as usize] -= 1;
+            remove_bytes(&mut self.counts, &mut self.routing.link_bytes, l.0, e.src.0, e.bytes);
+        }
+        route
+    }
+
+    /// Install `route` as edge `ei`'s route, updating the aggregates.
+    fn install(&mut self, graph: &Dfg, ei: usize, route: Route) {
+        let e = graph.edges()[ei];
+        for l in &route.links {
+            self.routing.link_flows[l.0 as usize] += 1;
+            add_bytes(&mut self.counts, &mut self.routing.link_bytes, l.0, e.src.0, e.bytes);
+        }
+        self.routing.routes[ei] = route;
+    }
+}
+
+/// Count one crossing of `bytes` from `producer` over `link`, bumping the
+/// link's deduped byte total if this raises the producer's max.
+fn add_bytes(counts: &mut Counts, link_bytes: &mut [u64], link: u32, producer: u32, bytes: u64) {
+    let entry = counts.entry((link, producer)).or_default();
+    let old_max = entry.iter().map(|&(b, _)| b).max().unwrap_or(0);
+    match entry.iter_mut().find(|(b, _)| *b == bytes) {
+        Some((_, count)) => *count += 1,
+        None => entry.push((bytes, 1)),
+    }
+    if bytes > old_max {
+        link_bytes[link as usize] += bytes - old_max;
+    }
+}
+
+/// Exact inverse of [`add_bytes`].
+fn remove_bytes(counts: &mut Counts, link_bytes: &mut [u64], link: u32, producer: u32, bytes: u64) {
+    let entry = counts
+        .get_mut(&(link, producer))
+        .expect("removing a (link, producer) crossing that was never added");
+    let old_max = entry.iter().map(|&(b, _)| b).max().unwrap_or(0);
+    let pos = entry
+        .iter()
+        .position(|&(b, _)| b == bytes)
+        .expect("removing a byte payload that was never added");
+    entry[pos].1 -= 1;
+    if entry[pos].1 == 0 {
+        entry.swap_remove(pos);
+    }
+    let new_max = entry.iter().map(|&(b, _)| b).max().unwrap_or(0);
+    let now_empty = entry.is_empty();
+    if now_empty {
+        counts.remove(&(link, producer));
+    }
+    if old_max > new_max {
+        link_bytes[link as usize] -= old_max - new_max;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{FabricConfig, UnitKind};
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Fabric, Dfg, Placement, RoutingState) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let s = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+        (f, g, p, s)
+    }
+
+    /// Move one PCU op to a free PCU, returning (new placement, moved node).
+    fn relocate(
+        g: &Dfg,
+        f: &Fabric,
+        p: &Placement,
+        rng: &mut Rng,
+    ) -> Option<(Placement, Vec<NodeId>)> {
+        let node = rng.below(g.num_nodes());
+        let kind = g.nodes()[node].kind.unit_kind();
+        let free = p.free_units(f, kind);
+        if free.is_empty() {
+            return None;
+        }
+        let mut q = p.clone();
+        q.unit_of[node] = *rng.pick(&free);
+        Some((q, vec![NodeId(node as u32)]))
+    }
+
+    #[test]
+    fn new_state_matches_route_all() {
+        let (f, g, p, s) = setup(1);
+        let scratch = route_all(&f, &g, &p).unwrap();
+        assert_eq!(s.routing().routes, scratch.routes);
+        assert_eq!(s.routing().link_flows, scratch.link_flows);
+        assert_eq!(s.routing().link_bytes, scratch.link_bytes);
+        s.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn apply_then_undo_restores_exactly() {
+        let (f, g, p, mut s) = setup(2);
+        let before = s.routing().clone();
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let Some((q, moved)) = relocate(&g, &f, &p, &mut rng) else { continue };
+            let delta = s.apply_move(&f, &g, &q, &moved).unwrap();
+            assert!(!delta.is_empty(), "a relocate must re-route its incident edges");
+            s.verify(&g).unwrap();
+            s.undo(&g, delta);
+            assert_eq!(s.routing().routes, before.routes);
+            assert_eq!(s.routing().link_flows, before.link_flows);
+            assert_eq!(s.routing().link_bytes, before.link_bytes);
+        }
+        s.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn apply_move_touches_only_incident_edges() {
+        let (f, g, p, mut s) = setup(3);
+        let mut rng = Rng::new(7);
+        let (q, moved) = relocate(&g, &f, &p, &mut rng).unwrap();
+        let before = s.routing().routes.clone();
+        s.apply_move(&f, &g, &q, &moved).unwrap();
+        for (ei, e) in g.edges().iter().enumerate() {
+            let incident = moved.contains(&e.src) || moved.contains(&e.dst);
+            if !incident {
+                assert_eq!(
+                    s.routing().routes[ei],
+                    before[ei],
+                    "edge {ei} not incident to the move but re-routed"
+                );
+            }
+        }
+        s.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn stage_shift_is_an_empty_delta() {
+        // A stage-shift changes no unit assignment, so the engine re-routes
+        // nothing: the moved-node set is empty and so is the delta.
+        let (f, g, p, mut s) = setup(4);
+        let before = s.routing().clone();
+        let delta = s.apply_move(&f, &g, &p, &[]).unwrap();
+        assert!(delta.is_empty());
+        assert_eq!(s.routing().routes, before.routes);
+        assert_eq!(s.routing().link_bytes, before.link_bytes);
+    }
+
+    #[test]
+    fn routes_stay_valid_after_moves() {
+        let (f, g, mut p, mut s) = setup(5);
+        let mut rng = Rng::new(11);
+        for _ in 0..30 {
+            let Some((q, moved)) = relocate(&g, &f, &p, &mut rng) else { continue };
+            s.apply_move(&f, &g, &q, &moved).unwrap();
+            p = q;
+        }
+        // Every route must connect its (possibly moved) endpoints via
+        // switches only.
+        for (ei, e) in g.edges().iter().enumerate() {
+            let route = &s.routing().routes[ei];
+            assert!(!route.links.is_empty());
+            let mut cur = p.unit(e.src);
+            for (i, l) in route.links.iter().enumerate() {
+                cur = f.link(*l).other(cur).expect("route link not incident to path");
+                if i + 1 != route.links.len() {
+                    assert!(matches!(f.unit(cur).kind, UnitKind::Switch));
+                }
+            }
+            assert_eq!(cur, p.unit(e.dst));
+        }
+        s.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn rebuild_resyncs_to_batch_router() {
+        let (f, g, mut p, mut s) = setup(6);
+        let mut rng = Rng::new(13);
+        for _ in 0..15 {
+            let Some((q, moved)) = relocate(&g, &f, &p, &mut rng) else { continue };
+            s.apply_move(&f, &g, &q, &moved).unwrap();
+            p = q;
+        }
+        s.rebuild(&f, &g, &p).unwrap();
+        let scratch = route_all(&f, &g, &p).unwrap();
+        assert_eq!(s.routing().routes, scratch.routes);
+        assert_eq!(s.routing().link_flows, scratch.link_flows);
+        assert_eq!(s.routing().link_bytes, scratch.link_bytes);
+        s.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn swap_reroutes_both_nodes_edges() {
+        let (f, g, p, mut s) = setup(8);
+        // Swap two PCU ops.
+        let pcus: Vec<usize> = g
+            .nodes()
+            .iter()
+            .filter(|n| n.kind.unit_kind() == UnitKind::Pcu)
+            .map(|n| n.id.0 as usize)
+            .collect();
+        let (a, b) = (pcus[0], pcus[1]);
+        let mut q = p.clone();
+        q.unit_of.swap(a, b);
+        let moved = vec![NodeId(a as u32), NodeId(b as u32)];
+        let delta = s.apply_move(&f, &g, &q, &moved).unwrap();
+        let incident = g
+            .edges()
+            .iter()
+            .filter(|e| moved.contains(&e.src) || moved.contains(&e.dst))
+            .count();
+        assert_eq!(delta.len(), incident);
+        s.verify(&g).unwrap();
+    }
+}

@@ -1,11 +1,26 @@
 //! Routing: map every DFG edge onto a path of fabric links.
 //!
-//! Deterministic congestion-aware router: edges are routed in descending
-//! byte order (big flows get short paths) by A* over the link graph with a
-//! cost that penalizes links already carrying flows, followed by a
-//! rip-up-and-reroute refinement pass. Determinism matters: the same
-//! placement must always produce the same routes so measured throughputs are
-//! reproducible labels for the learned cost model.
+//! Two entry points share one deterministic congestion-aware core (A* over
+//! the link graph with a cost that penalizes links already carrying flows):
+//!
+//! * **Batch**: [`route_all`] / [`route_all_with`] route a whole placement
+//!   from scratch — edges in descending byte order (big flows get short
+//!   paths) plus a rip-up-and-reroute refinement pass. This is the honest
+//!   "clean route" used for final measurements, dataset labels, and the
+//!   annealer's periodic resync.
+//! * **Incremental**: [`RoutingState`] (see [`incremental`]) owns routes +
+//!   aggregates as mutable state and re-routes only the edges invalidated
+//!   by a placement move ([`RoutingState::apply_move`]), with an exact
+//!   [`RoutingState::undo`] for rejected proposals. This is the annealer's
+//!   hot path: a candidate evaluation costs O(edges incident to the moved
+//!   nodes) instead of O(all edges).
+//!
+//! Determinism matters in both: the same placement (batch) or the same
+//! move sequence (incremental) must always produce the same routes, so
+//! measured throughputs are reproducible labels for the learned cost
+//! model. [`Routing::verify_aggregates`] pins the shared aggregate
+//! invariant — `link_flows`/`link_bytes` recomputed from `routes` must
+//! match the stored vectors — for both producers.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -15,6 +30,10 @@ use anyhow::{bail, Result};
 use crate::arch::{Fabric, LinkId, UnitId};
 use crate::dfg::Dfg;
 use crate::placer::Placement;
+
+pub mod incremental;
+
+pub use incremental::{RouteDelta, RoutingState};
 
 /// The routed path of one DFG edge (links in order from source unit to
 /// destination unit).
@@ -60,6 +79,48 @@ impl Routing {
     pub fn total_hops(&self) -> usize {
         self.routes.iter().map(Route::hops).sum()
     }
+
+    /// Check the aggregate invariant: `link_flows` and `link_bytes`
+    /// recomputed from `routes` must equal the stored vectors. Both the
+    /// batch router and the incremental engine are required to keep this
+    /// true at all times (property-pinned in
+    /// `rust/tests/route_equivalence.rs`).
+    pub fn verify_aggregates(&self, graph: &Dfg) -> Result<()> {
+        let (flows, bytes) = aggregates_from_routes(graph, &self.routes, self.link_flows.len());
+        if flows != self.link_flows {
+            bail!("link_flows inconsistent with routes");
+        }
+        if bytes != self.link_bytes {
+            bail!("link_bytes inconsistent with routes (multicast dedup drifted)");
+        }
+        Ok(())
+    }
+}
+
+/// Recompute `(link_flows, link_bytes)` from scratch off a route set: flows
+/// are raw per-edge counts; bytes are multicast-deduped per
+/// `(link, producer)` — a producer's tensor crossing a link counts once (at
+/// the largest payload any of its edges carries there), because the switch
+/// replicates it in-fabric.
+pub fn aggregates_from_routes(
+    graph: &Dfg,
+    routes: &[Route],
+    num_links: usize,
+) -> (Vec<u32>, Vec<u64>) {
+    let mut link_flows = vec![0u32; num_links];
+    let mut dedup: HashMap<(u32, crate::dfg::NodeId), u64> = HashMap::new();
+    for (ei, edge) in graph.edges().iter().enumerate() {
+        for l in &routes[ei].links {
+            link_flows[l.0 as usize] += 1;
+            let slot = dedup.entry((l.0, edge.src)).or_insert(0);
+            *slot = (*slot).max(edge.bytes);
+        }
+    }
+    let mut link_bytes = vec![0u64; num_links];
+    for ((l, _src), bytes) in dedup {
+        link_bytes[l as usize] += bytes;
+    }
+    (link_flows, link_bytes)
 }
 
 /// Tunables for the router.
@@ -90,7 +151,6 @@ pub fn route_all_with(
 ) -> Result<Routing> {
     let num_links = fabric.links().len();
     let mut link_flows = vec![0u32; num_links];
-    let mut link_bytes = vec![0u64; num_links];
     let mut routes: Vec<Option<Route>> = vec![None; graph.num_edges()];
 
     // Deterministic order: descending bytes, then edge id.
@@ -102,9 +162,9 @@ pub fn route_all_with(
 
     let mut scratch = AStarScratch::new(fabric.units().len());
 
-    // Initial pass + refinement passes. (During search, congestion uses the
-    // raw per-flow counts; the final byte aggregate below is
-    // multicast-deduped.)
+    // Initial pass + refinement passes. (The search only tracks per-flow
+    // counts — that is all the congestion cost reads; byte aggregates are
+    // derived once, multicast-deduped, from the final routes below.)
     for pass in 0..=params.refine_passes {
         for &ei in &order {
             let edge = graph.edges()[ei];
@@ -112,7 +172,6 @@ pub fn route_all_with(
             if let Some(old) = routes[ei].take() {
                 for l in &old.links {
                     link_flows[l.0 as usize] -= 1;
-                    link_bytes[l.0 as usize] -= edge.bytes;
                 }
             }
             let src = placement.unit(edge.src);
@@ -120,7 +179,6 @@ pub fn route_all_with(
             let route = astar(fabric, src, dst, &link_flows, params, &mut scratch)?;
             for l in &route.links {
                 link_flows[l.0 as usize] += 1;
-                link_bytes[l.0 as usize] += edge.bytes;
             }
             routes[ei] = Some(route);
         }
@@ -128,20 +186,12 @@ pub fn route_all_with(
     }
     let routes: Vec<Route> = routes.into_iter().map(Option::unwrap).collect();
 
-    // Multicast-aware final byte accounting: per (link, producer) a tensor's
-    // bytes count once (the switch fans it out), taking the largest edge
-    // payload from that producer crossing the link.
-    let mut dedup: HashMap<(u32, crate::dfg::NodeId), u64> = HashMap::new();
-    for (ei, edge) in graph.edges().iter().enumerate() {
-        for l in &routes[ei].links {
-            let slot = dedup.entry((l.0, edge.src)).or_insert(0);
-            *slot = (*slot).max(edge.bytes);
-        }
-    }
-    let mut link_bytes = vec![0u64; num_links];
-    for ((l, _src), bytes) in dedup {
-        link_bytes[l as usize] += bytes;
-    }
+    // Final aggregates: flows were maintained during the search (the
+    // recompute must agree); bytes get the multicast-aware dedup — per
+    // (link, producer) a tensor's bytes count once (the switch fans it
+    // out), at the largest edge payload from that producer on the link.
+    let (flows_check, link_bytes) = aggregates_from_routes(graph, &routes, num_links);
+    debug_assert_eq!(flows_check, link_flows);
 
     Ok(Routing { routes, link_flows, link_bytes })
 }
