@@ -11,7 +11,9 @@
 //! omit it for all 24 (the full paper configuration). `--workers N` fans
 //! the per-subgraph place-and-route over N threads (results are identical
 //! for every worker count); `--restarts R` runs R independent anneals per
-//! subgraph and keeps the best measured II.
+//! subgraph and keeps the best measured II; `--cache FILE` persists the
+//! per-subgraph PnR cache so a re-run skips annealing entirely (results
+//! are bit-identical either way).
 
 use rdacost::arch::{Era, Fabric, FabricConfig};
 use rdacost::compiler::{compile, CompileConfig};
@@ -66,6 +68,11 @@ fn main() -> anyhow::Result<()> {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         ),
         restarts: args.get_usize("restarts", 1).max(1),
+        // In-session dedup collapses BERT's repeated encoder blocks to a
+        // few distinct anneals; `--cache FILE` persists them so a second
+        // run of this example skips place-and-route entirely.
+        cache: true,
+        cache_path: args.get("cache").map(String::from),
     };
 
     println!(

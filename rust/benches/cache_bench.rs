@@ -1,0 +1,105 @@
+//! Compile-cache benchmark: cold vs warm compile wall time + hit rate on
+//! an 8-block BERT trunk, with the bit-identity check between uncached,
+//! cold (filling the persistent tier), and warm (served from it) compiles.
+//! Emits `BENCH_cache.json` (CI uploads it next to the other BENCH_*.json
+//! artifacts).
+//!
+//! The point of the cache subsystem: warm recompiles of repeated-block
+//! models drop from O(blocks) anneals to zero, and even the *cold* compile
+//! only anneals O(distinct blocks) thanks to in-session dedup.
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig, CompileReport};
+use rdacost::cost::HeuristicCost;
+use rdacost::dfg::builders;
+use rdacost::placer::AnnealParams;
+use rdacost::util::json::Json;
+
+fn cfg(iters: usize, cache: bool, path: Option<&std::path::Path>) -> CompileConfig {
+    CompileConfig {
+        era: Era::Past,
+        anneal: AnnealParams { iterations: iters, ..AnnealParams::default() },
+        seed: 0xCAFE,
+        workers: 2,
+        restarts: 1,
+        cache,
+        cache_path: path.map(|p| p.to_string_lossy().into_owned()),
+    }
+}
+
+fn identical(a: &CompileReport, b: &CompileReport) -> bool {
+    a.total_ii.to_bits() == b.total_ii.to_bits()
+        && a.subgraphs.len() == b.subgraphs.len()
+        && a.subgraphs
+            .iter()
+            .zip(&b.subgraphs)
+            .all(|(x, y)| x.ii_cycles.to_bits() == y.ii_cycles.to_bits())
+}
+
+fn main() {
+    let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+    let iters = if quick { 60 } else { 200 };
+
+    let graph = builders::transformer_public("bert-8blk", 8, 16, 1024, 4096, 16);
+    let fabric = Fabric::new(FabricConfig::default());
+    let heuristic = HeuristicCost::new();
+    let path = std::env::temp_dir().join(format!("rdacost_cache_bench_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let time = |c: &CompileConfig| {
+        let t0 = std::time::Instant::now();
+        let rep = compile(&graph, &fabric, &heuristic, c).expect("compile failed");
+        (t0.elapsed().as_secs_f64(), rep)
+    };
+
+    // Uncached baseline: every subgraph annealed, no memoization at all.
+    let (wall_uncached, rep_uncached) = time(&cfg(iters, false, None));
+    println!(
+        "bench cache/uncached: {wall_uncached:.3}s ({} subgraphs annealed, {iters} iters each)",
+        rep_uncached.subgraphs.len()
+    );
+
+    // Cold: in-session dedup active, persistent tier being filled.
+    let (wall_cold, rep_cold) = time(&cfg(iters, true, Some(&path)));
+    println!(
+        "bench cache/cold: {wall_cold:.3}s ({} distinct anneals, {} in-session hit(s))",
+        rep_cold.cache.misses, rep_cold.cache.mem_hits
+    );
+
+    // Warm: a second session replays everything from disk.
+    let (wall_warm, rep_warm) = time(&cfg(iters, true, Some(&path)));
+    println!(
+        "bench cache/warm: {wall_warm:.3}s ({} disk hit(s), {} miss(es))",
+        rep_warm.cache.disk_hits, rep_warm.cache.misses
+    );
+
+    let ok = identical(&rep_uncached, &rep_cold) && identical(&rep_uncached, &rep_warm);
+    println!("bench cache/identical-results: {ok}");
+    assert!(ok, "caching changed compile results");
+    assert_eq!(rep_warm.cache.misses, 0, "warm compile must not anneal");
+
+    let speedup_cold = wall_uncached / wall_cold.max(1e-9);
+    let speedup_warm = wall_uncached / wall_warm.max(1e-9);
+    println!("bench cache/speedup: {speedup_cold:.2}x cold (dedup), {speedup_warm:.2}x warm");
+
+    let report = Json::obj()
+        .set("bench", "compile_cache")
+        .set("objective", "heuristic")
+        .set("graph", graph.name.as_str())
+        .set("subgraphs", rep_uncached.subgraphs.len() as f64)
+        .set("distinct_subgraphs", rep_cold.cache.misses as f64)
+        .set("iterations_per_subgraph", iters)
+        .set("wall_seconds_uncached", wall_uncached)
+        .set("wall_seconds_cold", wall_cold)
+        .set("wall_seconds_warm", wall_warm)
+        .set("speedup_cold_over_uncached", speedup_cold)
+        .set("speedup_warm_over_uncached", speedup_warm)
+        .set("cold_hit_rate", rep_cold.cache.hit_rate())
+        .set("warm_hit_rate", rep_warm.cache.hit_rate())
+        .set("warm_disk_hits", rep_warm.cache.disk_hits as f64)
+        .set("identical_results", ok)
+        .set("quick_mode", quick);
+    std::fs::write("BENCH_cache.json", report.to_pretty()).unwrap();
+    println!("wrote BENCH_cache.json");
+    let _ = std::fs::remove_file(&path);
+}

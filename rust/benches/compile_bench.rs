@@ -38,6 +38,10 @@ fn main() {
             seed: 0xBE9C,
             workers,
             restarts: 1,
+            // This bench measures the raw parallel PnR path; the cache's
+            // own cold/warm numbers live in cache_bench.
+            cache: false,
+            cache_path: None,
         };
         let mut best = f64::INFINITY;
         let mut report = None;

@@ -1,0 +1,888 @@
+//! The compile cache: PnR memoization keyed on canonical graph structure.
+//!
+//! Evaluating a mapping is the expensive thing in this entire system — the
+//! paper's premise — yet large models partition into long runs of
+//! *isomorphic* subgraphs (repeated transformer blocks), and a compile
+//! service sees the same graphs over and over. This module memoizes
+//! per-subgraph place-and-route outcomes so each distinct structure is
+//! annealed once:
+//!
+//! * **In-memory tier** — within one [`crate::compiler::CompileSession`]
+//!   compile, every distinct subgraph fingerprint is compiled once and its
+//!   [`CacheEntry`] (measured IIs + the winning canonical placement) is
+//!   replicated to isomorphic siblings.
+//! * **Persistent tier** — a versioned binary file (à la
+//!   [`crate::data::store`]) keyed by
+//!   `subgraph fingerprint ⊕ context fingerprint`, where the **context**
+//!   folds in the fabric config, era, master seed, restart count, every
+//!   annealer + router knob, and the objective/model fingerprint
+//!   ([`crate::placer::ObjectiveFactory::cache_fingerprint`]). A retrained
+//!   model or a changed knob changes the context, so stale entries can
+//!   never be served — they are counted as `stale` misses instead.
+//!
+//! **Bit-identity guarantee.** Compile sessions derive per-subgraph RNG
+//! streams from the subgraph *fingerprint* (not its partition index) and
+//! run PnR on the *canonical* graph ([`crate::dfg::canon`]), so a cache hit
+//! replays exactly what a recompute would have produced: a cached compile
+//! is bit-identical to an uncached one (pinned by
+//! `rust/tests/compile_cache.rs`). Lookups additionally compare the full
+//! canonical bytes, so even a 128-bit fingerprint collision (counted in
+//! [`CacheStats`]) degrades to a miss rather than a wrong answer.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::{Era, FabricConfig};
+use crate::dfg::canon::{Canon, Fingerprint, FingerprintHasher};
+use crate::dfg::Dfg;
+use crate::placer::{AnnealParams, Placement};
+use crate::router::{aggregates_from_routes, Routing};
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 4] = b"RDPC";
+const VERSION: u32 = 1;
+
+/// One memoized per-subgraph PnR outcome. Everything a
+/// [`crate::compiler::SubgraphReport`] needs, plus the winning placement in
+/// canonical node order so the full artifact can be replicated to any
+/// isomorphic sibling (see [`transport_placement`] / [`transport_routing`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// The canonical byte serialization of the subgraph this entry was
+    /// computed for — compared on lookup, so a fingerprint collision can
+    /// never serve a wrong result.
+    pub canon_bytes: Vec<u8>,
+    pub ii_cycles: f64,
+    pub normalized_throughput: f64,
+    pub latency_cycles: f64,
+    pub anneal_evaluations: u64,
+    pub anneal_score_batches: u64,
+    pub anneal_restarts: u32,
+    /// Winning placement of the canonical graph: unit id per canonical
+    /// node. Only meaningful under the same context (same fabric).
+    pub unit_of: Vec<u32>,
+    /// Pipeline stage per canonical node.
+    pub stage_of: Vec<u32>,
+}
+
+/// Where a hit was served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Mem,
+    Disk,
+}
+
+enum Slot {
+    Ready { entry: Arc<CacheEntry>, tier: Tier },
+    /// A worker holds the [`Reservation`] and is computing this entry;
+    /// concurrent lookups of the same fingerprint block until it is
+    /// fulfilled (or abandoned), so a compile session never computes one
+    /// structure twice — not even transiently under worker races.
+    Pending,
+}
+
+/// Outcome of [`PnrCache::lookup`].
+pub enum Lookup<'a> {
+    /// Served (after waiting out any in-flight computation of the same
+    /// fingerprint).
+    Hit(Arc<CacheEntry>),
+    /// Caller must compute. When a [`Reservation`] is attached, fulfilling
+    /// it publishes the entry and wakes waiting siblings; dropping it
+    /// unfulfilled (error/panic paths) releases them to compute for
+    /// themselves. `None` only on a fingerprint collision, where the slot
+    /// is already owned by a different structure.
+    Miss(Option<Reservation<'a>>),
+}
+
+/// The exclusive right (and obligation) to compute one cache entry.
+pub struct Reservation<'a> {
+    cache: &'a PnrCache,
+    fp: u128,
+    fulfilled: bool,
+}
+
+impl Reservation<'_> {
+    /// Publish the computed entry and wake any waiting siblings.
+    pub fn fulfill(mut self, entry: CacheEntry) {
+        let mut map = self.cache.lock_entries();
+        map.insert(self.fp, Slot::Ready { entry: Arc::new(entry), tier: Tier::Mem });
+        self.cache.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        self.fulfilled = true;
+        drop(map);
+        self.cache.ready.notify_all();
+    }
+}
+
+impl Drop for Reservation<'_> {
+    fn drop(&mut self) {
+        if self.fulfilled {
+            return;
+        }
+        // Abandoned (the computing path errored or panicked): clear the
+        // pending marker so blocked siblings retry on their own.
+        let mut map = self.cache.lock_entries();
+        if matches!(map.get(&self.fp), Some(Slot::Pending)) {
+            map.remove(&self.fp);
+        }
+        drop(map);
+        self.cache.ready.notify_all();
+    }
+}
+
+/// Live hit/miss counters (shared across compile-session workers).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub mem_hits: AtomicU64,
+    pub disk_hits: AtomicU64,
+    pub misses: AtomicU64,
+    /// Misses where the subgraph exists on disk under a *different*
+    /// context fingerprint (retrained model / changed knobs): correctly
+    /// refused rather than served stale.
+    pub stale: AtomicU64,
+    /// Misses where the fingerprint matched but the canonical bytes did
+    /// not (128-bit collision) — counted separately because it should be
+    /// approximately never.
+    pub collisions: AtomicU64,
+    pub inserts: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        CacheStatsSnapshot {
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            collisions: self.collisions.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`CacheStats`], carried in
+/// [`crate::compiler::CompileReport`] and bench JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStatsSnapshot {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub stale: u64,
+    pub collisions: u64,
+    pub inserts: u64,
+}
+
+impl CacheStatsSnapshot {
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+
+    /// Every lookup lands in exactly one of {mem hit, disk hit, miss};
+    /// `stale`/`collisions` annotate a subset of the misses.
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line human summary for CLI output and experiment banners.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hit(s) ({} mem, {} disk) / {} lookup(s), {} miss(es) ({} stale, {} collision(s)), {} insert(s)",
+            self.hits(),
+            self.mem_hits,
+            self.disk_hits,
+            self.lookups(),
+            self.misses,
+            self.stale,
+            self.collisions,
+            self.inserts
+        )
+    }
+}
+
+/// The two-tier PnR cache. One instance serves one compile (one context);
+/// the persistent file may hold entries for many contexts.
+pub struct PnrCache {
+    context: Fingerprint,
+    entries: Mutex<HashMap<u128, Slot>>,
+    /// Wakes lookups blocked on a [`Slot::Pending`] reservation.
+    ready: Condvar,
+    /// Subgraph fingerprints present on disk under *other* contexts —
+    /// lookups that land here count as `stale`.
+    foreign: HashSet<u128>,
+    /// Other-context entries preserved verbatim for rewrite on save:
+    /// `(context, subgraph fingerprint, entry)`.
+    foreign_entries: Vec<(u128, u128, CacheEntry)>,
+    path: Option<PathBuf>,
+    pub stats: CacheStats,
+}
+
+impl PnrCache {
+    /// In-memory tier only (within-session dedup; nothing touches disk).
+    pub fn in_memory(context: Fingerprint) -> PnrCache {
+        PnrCache {
+            context,
+            entries: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+            foreign: HashSet::new(),
+            foreign_entries: Vec::new(),
+            path: None,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Open the persistent tier at `path` (a missing file starts empty; a
+    /// malformed or wrong-version file fails loudly — delete to reset).
+    /// Entries matching `context` become servable; all others are retained
+    /// for the next [`PnrCache::save`] and tracked for stale accounting.
+    pub fn open(context: Fingerprint, path: impl AsRef<Path>) -> Result<PnrCache> {
+        let path = path.as_ref();
+        let mut cache = PnrCache::in_memory(context);
+        cache.path = Some(path.to_path_buf());
+        if !path.exists() {
+            return Ok(cache);
+        }
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening PnR cache {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not an rdacost PnR cache");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("PnR cache version {version} unsupported (want {VERSION}); delete {path:?}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut entries = HashMap::new();
+        for _ in 0..count {
+            let ctx = read_u128(&mut f)?;
+            let fp = read_u128(&mut f)?;
+            let entry = read_entry(&mut f)
+                .with_context(|| format!("PnR cache {path:?} truncated mid-entry"))?;
+            if ctx == context.0 {
+                entries.insert(fp, Slot::Ready { entry: Arc::new(entry), tier: Tier::Disk });
+            } else {
+                cache.foreign.insert(fp);
+                cache.foreign_entries.push((ctx, fp, entry));
+            }
+        }
+        cache.entries = Mutex::new(entries);
+        Ok(cache)
+    }
+
+    fn lock_entries(&self) -> MutexGuard<'_, HashMap<u128, Slot>> {
+        // A worker panicking mid-insert leaves the map structurally sound
+        // (HashMap::insert is not interrupted by our code); don't compound
+        // a worker panic with a poison panic here.
+        self.entries.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Look up `fp`, verifying the canonical bytes match. Counts exactly
+    /// one of {mem hit, disk hit, miss} per call. If another worker is
+    /// already computing this fingerprint, blocks until it publishes (then
+    /// counts a mem hit) or abandons (then this caller takes over the
+    /// reservation) — so each distinct structure is computed exactly once
+    /// per session, deterministically, regardless of worker scheduling.
+    pub fn lookup(&self, fp: Fingerprint, canon_bytes: &[u8]) -> Lookup<'_> {
+        enum Step {
+            Hit(Arc<CacheEntry>, Tier),
+            Collision,
+            Wait,
+            Reserve,
+        }
+        let mut map = self.lock_entries();
+        loop {
+            let step = match map.get(&fp.0) {
+                Some(Slot::Ready { entry, tier }) => {
+                    if entry.canon_bytes == canon_bytes {
+                        Step::Hit(entry.clone(), *tier)
+                    } else {
+                        // 128-bit collision: the slot belongs to a
+                        // different structure. Compute without caching.
+                        Step::Collision
+                    }
+                }
+                Some(Slot::Pending) => Step::Wait,
+                None => Step::Reserve,
+            };
+            match step {
+                Step::Hit(entry, tier) => {
+                    match tier {
+                        Tier::Mem => self.stats.mem_hits.fetch_add(1, Ordering::Relaxed),
+                        Tier::Disk => self.stats.disk_hits.fetch_add(1, Ordering::Relaxed),
+                    };
+                    return Lookup::Hit(entry);
+                }
+                Step::Collision => {
+                    self.stats.collisions.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return Lookup::Miss(None);
+                }
+                Step::Wait => {
+                    map = self.ready.wait(map).unwrap_or_else(|e| e.into_inner());
+                }
+                Step::Reserve => {
+                    if self.foreign.contains(&fp.0) {
+                        self.stats.stale.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    map.insert(fp.0, Slot::Pending);
+                    return Lookup::Miss(Some(Reservation {
+                        cache: self,
+                        fp: fp.0,
+                        fulfilled: false,
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Insert an entry directly (tests / external writers). The
+    /// reservation path ([`Lookup::Miss`] → [`Reservation::fulfill`]) is
+    /// what compile sessions use.
+    pub fn insert(&self, fp: Fingerprint, entry: CacheEntry) {
+        let mut map = self.lock_entries();
+        if !matches!(map.get(&fp.0), Some(Slot::Ready { .. })) {
+            map.insert(fp.0, Slot::Ready { entry: Arc::new(entry), tier: Tier::Mem });
+            self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+            drop(map);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Ready entries servable under the current context.
+    pub fn len(&self) -> usize {
+        self.lock_entries()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write the persistent tier (no-op for in-memory caches): current
+    /// entries plus every preserved other-context entry, sorted, written
+    /// atomically (tmp + rename). Last writer wins between concurrent
+    /// processes.
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let map = self.lock_entries();
+        let mut rows: Vec<(u128, u128, &CacheEntry)> = self
+            .foreign_entries
+            .iter()
+            .map(|(c, f, e)| (*c, *f, e))
+            .collect();
+        for (fp, slot) in map.iter() {
+            if let Slot::Ready { entry, .. } = slot {
+                rows.push((self.context.0, *fp, entry.as_ref()));
+            }
+        }
+        rows.sort_by_key(|&(c, f, _)| (c, f));
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // Per-process tmp name: two processes saving the same shared cache
+        // path must never interleave writes through one tmp file (the
+        // rename stays atomic, so last-writer-wins on the final file).
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(rows.len() as u32).to_le_bytes())?;
+            for (ctx, fp, entry) in rows {
+                f.write_all(&ctx.to_le_bytes())?;
+                f.write_all(&fp.to_le_bytes())?;
+                write_entry(&mut f, entry)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+fn write_entry(f: &mut impl Write, e: &CacheEntry) -> Result<()> {
+    f.write_all(&(e.canon_bytes.len() as u32).to_le_bytes())?;
+    f.write_all(&e.canon_bytes)?;
+    f.write_all(&e.ii_cycles.to_le_bytes())?;
+    f.write_all(&e.normalized_throughput.to_le_bytes())?;
+    f.write_all(&e.latency_cycles.to_le_bytes())?;
+    f.write_all(&e.anneal_evaluations.to_le_bytes())?;
+    f.write_all(&e.anneal_score_batches.to_le_bytes())?;
+    f.write_all(&e.anneal_restarts.to_le_bytes())?;
+    if e.unit_of.len() != e.stage_of.len() {
+        bail!("cache entry placement arity mismatch");
+    }
+    f.write_all(&(e.unit_of.len() as u32).to_le_bytes())?;
+    for &u in &e.unit_of {
+        f.write_all(&u.to_le_bytes())?;
+    }
+    for &s in &e.stage_of {
+        f.write_all(&s.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_entry(f: &mut impl Read) -> Result<CacheEntry> {
+    let canon_len = read_u32(f)? as usize;
+    let mut canon_bytes = vec![0u8; canon_len];
+    f.read_exact(&mut canon_bytes)?;
+    let ii_cycles = read_f64(f)?;
+    let normalized_throughput = read_f64(f)?;
+    let latency_cycles = read_f64(f)?;
+    let anneal_evaluations = read_u64(f)?;
+    let anneal_score_batches = read_u64(f)?;
+    let anneal_restarts = read_u32(f)?;
+    let n = read_u32(f)? as usize;
+    let mut unit_of = Vec::with_capacity(n);
+    for _ in 0..n {
+        unit_of.push(read_u32(f)?);
+    }
+    let mut stage_of = Vec::with_capacity(n);
+    for _ in 0..n {
+        stage_of.push(read_u32(f)?);
+    }
+    Ok(CacheEntry {
+        canon_bytes,
+        ii_cycles,
+        normalized_throughput,
+        latency_cycles,
+        anneal_evaluations,
+        anneal_score_batches,
+        anneal_restarts,
+        unit_of,
+        stage_of,
+    })
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u128(f: &mut impl Read) -> Result<u128> {
+    let mut b = [0u8; 16];
+    f.read_exact(&mut b)?;
+    Ok(u128::from_le_bytes(b))
+}
+
+fn read_f64(f: &mut impl Read) -> Result<f64> {
+    Ok(f64::from_bits(read_u64(f)?))
+}
+
+/// The context fingerprint: everything besides the subgraph itself that
+/// determines a PnR outcome. Any change here — fabric geometry, era, master
+/// seed, restart count, any annealer/router knob, the objective's own
+/// fingerprint — keys a disjoint cache namespace, so "stale" can never be
+/// "served".
+pub fn context_fingerprint(
+    fabric: &FabricConfig,
+    era: Era,
+    seed: u64,
+    restarts: usize,
+    anneal: &AnnealParams,
+    objective_name: &str,
+    objective_fp: Option<Fingerprint>,
+) -> Fingerprint {
+    let mut h = FingerprintHasher::new("rdacost-pnr-context-v1");
+    h.push_u64(fabric.rows as u64)
+        .push_u64(fabric.cols as u64)
+        .push_u64(fabric.lanes as u64)
+        .push_u64(fabric.stages as u64)
+        .push_u64(fabric.pmu_capacity)
+        .push_u64(fabric.dram_ports_per_side as u64)
+        .push_str(era.name())
+        .push_u64(seed)
+        .push_u64(restarts as u64)
+        .push_u64(anneal.iterations as u64)
+        .push_f64(anneal.t_initial)
+        .push_f64(anneal.t_final)
+        .push_f64(anneal.w_relocate)
+        .push_f64(anneal.w_swap)
+        .push_f64(anneal.w_stage)
+        .push_u64(anneal.reroute_every as u64)
+        .push_u64(anneal.proposals_per_step as u64)
+        .push_f64(anneal.router.congestion_weight)
+        .push_u64(anneal.router.refine_passes as u64)
+        .push_str(objective_name);
+    match objective_fp {
+        Some(fp) => h.push_u64(1).push_u128(fp.0),
+        None => h.push_u64(0),
+    };
+    h.finish()
+}
+
+/// Fingerprint a parameter tensor list (model weights) — the
+/// objective-side key material for [`crate::cost::LearnedCost`] and the
+/// scoring service.
+pub fn tensors_fingerprint(tensors: &[Tensor]) -> Fingerprint {
+    let mut h = FingerprintHasher::new("rdacost-tensors-v1");
+    h.push_u64(tensors.len() as u64);
+    for t in tensors {
+        match t {
+            Tensor::F32 { shape, data } => {
+                h.push_u64(0);
+                h.push_u64(shape.len() as u64);
+                for &d in shape {
+                    h.push_u64(d as u64);
+                }
+                for &x in data {
+                    h.push_f32(x);
+                }
+            }
+            Tensor::I32 { shape, data } => {
+                h.push_u64(1);
+                h.push_u64(shape.len() as u64);
+                for &d in shape {
+                    h.push_u64(d as u64);
+                }
+                for &x in data {
+                    h.push_u64(x as u32 as u64);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Transport a placement of `canon.graph` back onto the graph `canon` was
+/// computed from: original node `i` inherits the canonical node
+/// `canon.canon_of[i]`'s unit and stage. The result is feasible whenever
+/// the canonical placement is (kinds match under the permutation).
+pub fn transport_placement(canon: &Canon, canonical: &Placement) -> Placement {
+    let n = canon.canon_of.len();
+    assert_eq!(canonical.unit_of.len(), n, "placement is not for this canon");
+    let mut unit_of = Vec::with_capacity(n);
+    let mut stage_of = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = canon.canon_of[i] as usize;
+        unit_of.push(canonical.unit_of[c]);
+        stage_of.push(canonical.stage_of[c]);
+    }
+    Placement { unit_of, stage_of }
+}
+
+/// Transport a routing of `canon.graph` back onto `original`: each
+/// original edge takes the route of a canonical edge with the same
+/// `(canonical src, canonical dst, bytes)` signature (parallel duplicates
+/// are matched one-to-one), and the aggregates are recomputed — they equal
+/// the canonical aggregates because the multicast dedup key (link,
+/// producer) maps through the same permutation.
+pub fn transport_routing(canon: &Canon, original: &Dfg, canonical: &Routing) -> Routing {
+    let mut buckets: HashMap<(u32, u32, u64), VecDeque<usize>> = HashMap::new();
+    for (idx, e) in canon.graph.edges().iter().enumerate() {
+        buckets.entry((e.src.0, e.dst.0, e.bytes)).or_default().push_back(idx);
+    }
+    let routes: Vec<_> = original
+        .edges()
+        .iter()
+        .map(|e| {
+            let key = (
+                canon.canon_of[e.src.0 as usize],
+                canon.canon_of[e.dst.0 as usize],
+                e.bytes,
+            );
+            let idx = buckets
+                .get_mut(&key)
+                .and_then(VecDeque::pop_front)
+                .expect("original edge has no canonical counterpart — wrong canon?");
+            canonical.routes[idx].clone()
+        })
+        .collect();
+    let (link_flows, link_bytes) =
+        aggregates_from_routes(original, &routes, canonical.link_flows.len());
+    Routing { routes, link_flows, link_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Fabric, FabricConfig};
+    use crate::dfg::{builders, canonicalize};
+    use crate::placer::random_placement;
+    use crate::router::route_all;
+    use crate::sim;
+    use crate::util::rng::Rng;
+
+    fn entry(tag: u8) -> CacheEntry {
+        CacheEntry {
+            canon_bytes: vec![tag, 1, 2, 3],
+            ii_cycles: 100.0 + tag as f64,
+            normalized_throughput: 0.5,
+            latency_cycles: 900.0,
+            anneal_evaluations: 42,
+            anneal_score_batches: 21,
+            anneal_restarts: 1,
+            unit_of: vec![1, 2, 3],
+            stage_of: vec![0, 1, 2],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rdacost_pnrcache_{name}.bin"))
+    }
+
+    /// Unwrap a hit, or None on miss (dropping any reservation so the
+    /// pending marker is released).
+    fn as_hit(l: Lookup<'_>) -> Option<Arc<CacheEntry>> {
+        match l {
+            Lookup::Hit(e) => Some(e),
+            Lookup::Miss(_) => None,
+        }
+    }
+
+    #[test]
+    fn memory_tier_hit_miss_and_collision_accounting() {
+        let cache = PnrCache::in_memory(Fingerprint(7));
+        let fp = Fingerprint(11);
+        assert!(as_hit(cache.lookup(fp, &[9, 9])).is_none());
+        cache.insert(fp, entry(0));
+        let hit = as_hit(cache.lookup(fp, &entry(0).canon_bytes)).unwrap();
+        assert_eq!(hit.ii_cycles, 100.0);
+        // Same fingerprint, different canonical bytes: collision → miss,
+        // with no reservation (the slot belongs to another structure).
+        match cache.lookup(fp, &[9, 9, 9]) {
+            Lookup::Miss(None) => {}
+            Lookup::Miss(Some(_)) => panic!("collision must not reserve"),
+            Lookup::Hit(_) => panic!("collision served a wrong entry"),
+        }
+        let s = cache.snapshot();
+        assert_eq!(
+            (s.mem_hits, s.disk_hits, s.misses, s.collisions, s.inserts),
+            (1, 0, 2, 1, 1)
+        );
+        assert_eq!(s.lookups(), 3);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(s.summary().contains("1 hit"));
+    }
+
+    #[test]
+    fn reservation_fulfill_wakes_waiting_sibling() {
+        let cache = PnrCache::in_memory(Fingerprint(7));
+        let fp = Fingerprint(21);
+        let reservation = match cache.lookup(fp, &entry(0).canon_bytes) {
+            Lookup::Miss(Some(r)) => r,
+            _ => panic!("first lookup must reserve"),
+        };
+        std::thread::scope(|scope| {
+            let t = scope.spawn(|| match cache.lookup(fp, &entry(0).canon_bytes) {
+                Lookup::Hit(e) => e.ii_cycles,
+                Lookup::Miss(_) => panic!("sibling must block until fulfill, then hit"),
+            });
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            reservation.fulfill(entry(0));
+            assert_eq!(t.join().unwrap(), 100.0);
+        });
+        let s = cache.snapshot();
+        assert_eq!((s.misses, s.mem_hits, s.inserts), (1, 1, 1));
+    }
+
+    #[test]
+    fn abandoned_reservation_releases_siblings() {
+        // The computing worker errors/panics → its Reservation drops
+        // unfulfilled → a blocked sibling takes over instead of hanging.
+        let cache = PnrCache::in_memory(Fingerprint(7));
+        let fp = Fingerprint(22);
+        let reservation = match cache.lookup(fp, &entry(0).canon_bytes) {
+            Lookup::Miss(Some(r)) => r,
+            _ => panic!("first lookup must reserve"),
+        };
+        std::thread::scope(|scope| {
+            let t = scope.spawn(|| match cache.lookup(fp, &entry(0).canon_bytes) {
+                Lookup::Miss(Some(r2)) => {
+                    r2.fulfill(entry(0));
+                    true
+                }
+                Lookup::Miss(None) => panic!("takeover must get a reservation"),
+                Lookup::Hit(_) => false,
+            });
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            drop(reservation);
+            assert!(t.join().unwrap(), "sibling must take over the abandoned slot");
+        });
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.snapshot().misses, 2);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_first() {
+        let cache = PnrCache::in_memory(Fingerprint(7));
+        cache.insert(Fingerprint(1), entry(0));
+        let mut racing = entry(0);
+        racing.ii_cycles = -1.0; // would be identical in a real race
+        cache.insert(Fingerprint(1), racing);
+        let e = as_hit(cache.lookup(Fingerprint(1), &entry(0).canon_bytes)).unwrap();
+        assert_eq!(e.ii_cycles, 100.0);
+        assert_eq!(cache.snapshot().inserts, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn persistent_roundtrip_and_stale_context() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let ctx_a = Fingerprint(0xA);
+        let ctx_b = Fingerprint(0xB);
+
+        let cache = PnrCache::open(ctx_a, &path).unwrap();
+        cache.insert(Fingerprint(1), entry(1));
+        cache.insert(Fingerprint(2), entry(2));
+        cache.save().unwrap();
+        let tmp_name = path.with_extension(format!("tmp.{}", std::process::id()));
+        assert!(!tmp_name.exists(), "save must be atomic (no tmp left behind)");
+
+        // Same context: disk hits.
+        let warm = PnrCache::open(ctx_a, &path).unwrap();
+        assert_eq!(warm.len(), 2);
+        let e = as_hit(warm.lookup(Fingerprint(1), &entry(1).canon_bytes)).unwrap();
+        assert_eq!(*e, entry(1));
+        let s = warm.snapshot();
+        assert_eq!((s.disk_hits, s.mem_hits, s.misses), (1, 0, 0));
+
+        // Different context: the same fingerprints are stale, not served.
+        let other = PnrCache::open(ctx_b, &path).unwrap();
+        assert_eq!(other.len(), 0);
+        assert!(as_hit(other.lookup(Fingerprint(1), &entry(1).canon_bytes)).is_none());
+        let s = other.snapshot();
+        assert_eq!((s.misses, s.stale), (1, 1));
+
+        // Inserting under ctx_b and saving preserves ctx_a's entries.
+        other.insert(Fingerprint(3), entry(3));
+        other.save().unwrap();
+        let back_a = PnrCache::open(ctx_a, &path).unwrap();
+        assert_eq!(back_a.len(), 2);
+        let back_b = PnrCache::open(ctx_b, &path).unwrap();
+        assert_eq!(back_b.len(), 1);
+    }
+
+    #[test]
+    fn missing_file_starts_empty_and_garbage_fails() {
+        let path = tmp("missing");
+        let _ = std::fs::remove_file(&path);
+        let cache = PnrCache::open(Fingerprint(1), &path).unwrap();
+        assert!(cache.is_empty());
+
+        let bad = tmp("garbage");
+        std::fs::write(&bad, b"XXXXnot a cache").unwrap();
+        assert!(PnrCache::open(Fingerprint(1), &bad).is_err());
+    }
+
+    #[test]
+    fn context_fingerprint_sensitivity() {
+        let fab = FabricConfig::default();
+        let anneal = AnnealParams::default();
+        let base = context_fingerprint(&fab, Era::Past, 42, 1, &anneal, "heuristic", None);
+        // Stable.
+        assert_eq!(
+            base,
+            context_fingerprint(&fab, Era::Past, 42, 1, &anneal, "heuristic", None)
+        );
+        // Every knob class must shift the context.
+        assert_ne!(
+            base,
+            context_fingerprint(&fab, Era::Present, 42, 1, &anneal, "heuristic", None)
+        );
+        assert_ne!(base, context_fingerprint(&fab, Era::Past, 43, 1, &anneal, "heuristic", None));
+        assert_ne!(base, context_fingerprint(&fab, Era::Past, 42, 2, &anneal, "heuristic", None));
+        let mut a2 = anneal.clone();
+        a2.iterations += 1;
+        assert_ne!(base, context_fingerprint(&fab, Era::Past, 42, 1, &a2, "heuristic", None));
+        let mut a3 = anneal.clone();
+        a3.router.congestion_weight += 0.25;
+        assert_ne!(base, context_fingerprint(&fab, Era::Past, 42, 1, &a3, "heuristic", None));
+        let mut fab2 = fab.clone();
+        fab2.rows += 1;
+        assert_ne!(base, context_fingerprint(&fab2, Era::Past, 42, 1, &anneal, "heuristic", None));
+        assert_ne!(base, context_fingerprint(&fab, Era::Past, 42, 1, &anneal, "oracle", None));
+        assert_ne!(
+            base,
+            context_fingerprint(&fab, Era::Past, 42, 1, &anneal, "heuristic", Some(Fingerprint(9)))
+        );
+    }
+
+    #[test]
+    fn tensors_fingerprint_tracks_values_and_shapes() {
+        let a = vec![Tensor::f32(&[2], vec![1.0, 2.0])];
+        let b = vec![Tensor::f32(&[2], vec![1.0, 2.5])];
+        let c = vec![Tensor::f32(&[1, 2], vec![1.0, 2.0])];
+        assert_eq!(tensors_fingerprint(&a), tensors_fingerprint(&a));
+        assert_ne!(tensors_fingerprint(&a), tensors_fingerprint(&b));
+        assert_ne!(tensors_fingerprint(&a), tensors_fingerprint(&c));
+    }
+
+    #[test]
+    fn transported_pnr_measures_bit_identically() {
+        // The core "equal canon ⇒ equal PnR problem" claim, end to end: a
+        // placement + routing computed on the canonical graph, transported
+        // back to the original, measures to the exact same simulator
+        // report.
+        let fabric = Fabric::new(FabricConfig::default());
+        for (i, graph) in [
+            builders::mha(32, 128, 4),
+            builders::ffn(32, 128, 512),
+            builders::mlp(16, &[64, 128, 64]),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let canon = canonicalize(graph);
+            let mut rng = Rng::new(100 + i as u64);
+            let p_canon = random_placement(&canon.graph, &fabric, &mut rng).unwrap();
+            let r_canon = route_all(&fabric, &canon.graph, &p_canon).unwrap();
+            let m_canon =
+                sim::measure(&fabric, &canon.graph, &p_canon, &r_canon, Era::Past).unwrap();
+
+            let p_orig = transport_placement(&canon, &p_canon);
+            p_orig.validate(graph, &fabric).unwrap();
+            let r_orig = transport_routing(&canon, graph, &r_canon);
+            r_orig.verify_aggregates(graph).unwrap();
+            assert_eq!(r_orig.link_flows, r_canon.link_flows, "graph {i}: flows");
+            assert_eq!(r_orig.link_bytes, r_canon.link_bytes, "graph {i}: bytes");
+            let m_orig = sim::measure(&fabric, graph, &p_orig, &r_orig, Era::Past).unwrap();
+            assert_eq!(
+                m_canon.ii_cycles.to_bits(),
+                m_orig.ii_cycles.to_bits(),
+                "graph {i}: II diverged under transport"
+            );
+            assert_eq!(
+                m_canon.latency_cycles.to_bits(),
+                m_orig.latency_cycles.to_bits(),
+                "graph {i}: latency diverged under transport"
+            );
+            assert_eq!(
+                m_canon.normalized_throughput.to_bits(),
+                m_orig.normalized_throughput.to_bits(),
+                "graph {i}: throughput diverged under transport"
+            );
+        }
+    }
+}

@@ -19,6 +19,8 @@
 //! artifacts = "artifacts"
 //! workers = 8
 //! restarts = 1
+//! cache = true
+//! cache_path = "results/pnr.cache"
 //!
 //! [dataset]
 //! total = 5878
@@ -117,6 +119,12 @@ pub struct RunConfig {
     pub workers: usize,
     /// Independent annealing restarts per compiled subgraph (best kept).
     pub restarts: usize,
+    /// Compile cache: in-session dedup of isomorphic subgraphs (results
+    /// are bit-identical with it on or off). `--no-cache` turns it off.
+    pub cache: bool,
+    /// Persistent compile-cache file (`--cache FILE` / `[run] cache_path`);
+    /// `None` keeps memoization within a session.
+    pub cache_path: Option<String>,
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
@@ -131,6 +139,8 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             restarts: 1,
+            cache: true,
+            cache_path: None,
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
@@ -162,6 +172,10 @@ impl RunConfig {
         }
         raw.take_parse("run.workers", &mut cfg.workers)?;
         raw.take_parse("run.restarts", &mut cfg.restarts)?;
+        raw.take_parse("run.cache", &mut cfg.cache)?;
+        if let Some(p) = raw.values.remove("run.cache_path") {
+            cfg.cache_path = Some(p);
+        }
 
         raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
         raw.take_parse("dataset.frac_random", &mut cfg.dataset.frac_random)?;
@@ -231,6 +245,8 @@ cols = 4
 era = "present"
 seed = 123
 restarts = 3
+cache = false
+cache_path = "results/pnr.cache"
 
 [dataset]
 total = 100
@@ -255,6 +271,8 @@ refine_passes = 2
         assert_eq!(cfg.dataset.era, Era::Present);
         assert_eq!(cfg.seed, 123);
         assert_eq!(cfg.restarts, 3);
+        assert!(!cfg.cache);
+        assert_eq!(cfg.cache_path.as_deref(), Some("results/pnr.cache"));
         assert_eq!(cfg.dataset.total, 100);
         assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);
@@ -293,6 +311,8 @@ refine_passes = 2
         let cfg = RunConfig::from_file(None).unwrap();
         assert_eq!(cfg.era, Era::Past);
         assert_eq!(cfg.dataset.total, 5878);
+        assert!(cfg.cache, "compile cache defaults on");
+        assert!(cfg.cache_path.is_none());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::arch::Fabric;
-use crate::data::{Dataset, GenConfig, Sample};
+use crate::data::{Dataset, GenConfig, GenStats, Sample};
 use crate::dfg::WorkloadFamily;
 use crate::util::rng::Rng;
 
@@ -41,7 +41,7 @@ pub fn generate_parallel(
 
     // Run tasks on `workers` threads (simple work-stealing via index).
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<Result<Vec<Sample>>>>> =
+    let results: Vec<std::sync::Mutex<Option<Result<(Vec<Sample>, GenStats)>>>> =
         (0..tasks.len()).map(|_| std::sync::Mutex::new(None)).collect();
     let tasks_ref = &tasks;
     let results_ref = &results;
@@ -56,18 +56,59 @@ pub fn generate_parallel(
                 }
                 let (fam, count, rng) = &tasks_ref[i];
                 let mut rng = rng.clone();
-                let out = crate::data::generate_family(*fam, *count, fabric, cfg, &mut rng);
+                let out =
+                    crate::data::generate_family_with_stats(*fam, *count, fabric, cfg, &mut rng);
                 *results_ref[i].lock().unwrap() = Some(out);
             });
         }
     });
 
     let mut samples = Vec::with_capacity(cfg.total);
+    let mut duplicates_skipped = 0usize;
     for cell in results {
         let r = cell.into_inner().unwrap().expect("worker task not run");
-        samples.extend(r?);
+        let (shard, stats) = r?;
+        samples.extend(shard);
+        duplicates_skipped += stats.duplicates_skipped;
+    }
+    if duplicates_skipped > 0 {
+        eprintln!(
+            "dataset generation: skipped {duplicates_skipped} duplicate (graph, decision) \
+             sample(s) within shards"
+        );
+    }
+    // The per-shard dedup cannot see across shard boundaries (each worker
+    // owns its own `seen` set). Detect survivors by hashing the encoded
+    // sample content — identical (graph, decision) pairs encode to
+    // identical tensors — and report them; counts are left intact so the
+    // corpus size stays exactly `cfg.total`.
+    let mut seen = std::collections::HashSet::with_capacity(samples.len());
+    let cross_shard = samples
+        .iter()
+        .filter(|s| !seen.insert(sample_fingerprint(s)))
+        .count();
+    if cross_shard > 0 {
+        eprintln!(
+            "dataset generation: {cross_shard} cross-shard duplicate sample(s) survived \
+             (per-shard dedup only; regenerate with --workers 1 for a fully deduped corpus)"
+        );
     }
     Ok(Dataset { samples })
+}
+
+/// Content fingerprint of one encoded sample (family + every tensor).
+fn sample_fingerprint(s: &Sample) -> u128 {
+    let mut h = crate::dfg::canon::FingerprintHasher::new("rdacost-sample-v1");
+    h.push_str(&s.family);
+    let t = &s.tensors;
+    h.push_u64(t.bucket.nodes as u64).push_u64(t.bucket.edges as u64).push_f32(t.label);
+    for &x in t.node_type.iter().chain(&t.node_stage).chain(&t.edge_src).chain(&t.edge_dst) {
+        h.push_u64(x as u32 as u64);
+    }
+    for &x in t.node_feat.iter().chain(&t.node_mask).chain(&t.edge_feat).chain(&t.edge_mask) {
+        h.push_f32(x);
+    }
+    h.finish().0
 }
 
 #[cfg(test)]

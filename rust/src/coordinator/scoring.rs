@@ -112,6 +112,9 @@ pub struct ScoringService {
     tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     pub stats: Arc<ServiceStats>,
+    /// Compile-cache key material captured at start (params + ablation);
+    /// see [`crate::placer::ObjectiveFactory::cache_fingerprint`].
+    params_fp: crate::dfg::Fingerprint,
 }
 
 impl ScoringService {
@@ -129,12 +132,21 @@ impl ScoringService {
         let stats = Arc::new(ServiceStats::default());
         let stats2 = stats.clone();
         let param_values: Vec<Tensor> = params.values();
+        let params_fp = {
+            let mut h =
+                crate::dfg::canon::FingerprintHasher::new("rdacost-learned-gnn-service-v1");
+            for f in ablation.flags() {
+                h.push_f32(f);
+            }
+            h.push_u128(crate::cache::tensors_fingerprint(&param_values).0);
+            h.finish()
+        };
         let dispatcher = std::thread::Builder::new()
             .name("rdacost-scoring".into())
             .spawn(move || {
                 dispatcher_loop(engine, param_values, ablation, batch, max_wait, rx, stats2)
             })?;
-        Ok(ScoringService { tx: Some(tx), dispatcher: Some(dispatcher), stats })
+        Ok(ScoringService { tx: Some(tx), dispatcher: Some(dispatcher), stats, params_fp })
     }
 
     pub fn client(&self) -> ScoringClient {
@@ -214,6 +226,13 @@ impl ObjectiveFactory for ScoringService {
 
     fn name(&self) -> &'static str {
         "learned-gnn-service"
+    }
+
+    /// Params + ablation, captured when the dispatcher started. Tagged
+    /// separately from a direct [`crate::cost::LearnedCost`] so the two
+    /// serving paths never share cache entries.
+    fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        Some(self.params_fp)
     }
 }
 

@@ -229,6 +229,30 @@ impl ObjectiveFactory for HeuristicCost {
     fn name(&self) -> &'static str {
         "heuristic"
     }
+
+    /// The rule constants are the whole model: hash them, so a re-tuned
+    /// rule table invalidates cached PnR results.
+    fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        let r = &self.rules;
+        let mut h = crate::dfg::canon::FingerprintHasher::new("rdacost-heuristic-v1");
+        for v in [
+            r.gemm_rate,
+            r.elementwise_rate,
+            r.softmax_rate,
+            r.layernorm_rate,
+            r.transpose_rate,
+            r.reduce_rate,
+            r.pmu_bytes_per_cycle,
+            r.dram_bytes_per_cycle,
+            r.hop_cycles,
+            r.link_bytes_per_cycle,
+            r.stage_overhead,
+            r.calibration,
+        ] {
+            h.push_f64(v);
+        }
+        Some(h.finish())
+    }
 }
 
 #[cfg(test)]

@@ -341,6 +341,17 @@ impl ObjectiveFactory for LearnedCost {
     fn name(&self) -> &'static str {
         "learned-gnn"
     }
+
+    /// Hash of the parameter tensors + ablation flags: a retrained (or
+    /// differently ablated) model keys a disjoint compile-cache namespace.
+    fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        let mut h = crate::dfg::canon::FingerprintHasher::new("rdacost-learned-gnn-v1");
+        for f in self.ablation.flags() {
+            h.push_f32(f);
+        }
+        h.push_u128(crate::cache::tensors_fingerprint(&self.params).0);
+        Some(h.finish())
+    }
 }
 
 #[cfg(test)]

@@ -41,6 +41,14 @@ impl ObjectiveFactory for OracleCost {
     fn name(&self) -> &'static str {
         "oracle"
     }
+
+    /// The simulator is fully determined by the era (the fabric and knobs
+    /// are part of the cache's context key already).
+    fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        let mut h = crate::dfg::canon::FingerprintHasher::new("rdacost-oracle-v1");
+        h.push_str(self.era.name());
+        Some(h.finish())
+    }
 }
 
 #[cfg(test)]

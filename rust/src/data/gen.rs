@@ -1,9 +1,12 @@
 //! Random PnR decision sampling and measurement (the label factory).
 
-use anyhow::Result;
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
 
 use crate::arch::{Era, Fabric};
 use crate::cost::HeuristicCost;
+use crate::dfg::canon::{canonicalize, Canon, Fingerprint, FingerprintHasher};
 use crate::dfg::{builders, Dfg, WorkloadFamily};
 use crate::gnn;
 use crate::placer::{anneal, random_placement, AnnealParams, Placement};
@@ -175,6 +178,27 @@ fn one_random_move(graph: &Dfg, fabric: &Fabric, p: &Placement, rng: &mut Rng) -
 /// dataset must contain that comparison.
 pub const DECISIONS_PER_WORKLOAD: usize = 8;
 
+/// Generation-side counters (surfaced by the parallel coordinator).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GenStats {
+    /// (graph, decision) pairs skipped because an identical pair — same
+    /// canonical graph structure, same placement in canonical node order —
+    /// was already emitted by this shard. Duplicate samples carry zero new
+    /// information and double-weight their labels in training.
+    pub duplicates_skipped: usize,
+}
+
+/// Fingerprint of one PnR decision in *canonical* node order, so two
+/// isomorphic graphs with corresponding placements dedup to one key.
+fn decision_fingerprint(canon: &Canon, p: &Placement) -> Fingerprint {
+    let mut h = FingerprintHasher::new("rdacost-decision-v1");
+    for &o in &canon.orig_of {
+        h.push_u64(p.unit_of[o as usize].0 as u64);
+        h.push_u64(p.stage_of[o as usize] as u64);
+    }
+    h.finish()
+}
+
 /// Generate `count` labelled samples for one family.
 pub fn generate_family(
     family: WorkloadFamily,
@@ -183,15 +207,53 @@ pub fn generate_family(
     cfg: &GenConfig,
     rng: &mut Rng,
 ) -> Result<Vec<Sample>> {
+    generate_family_with_stats(family, count, fabric, cfg, rng).map(|(samples, _)| samples)
+}
+
+/// [`generate_family`] plus its [`GenStats`]. Exact duplicate (graph,
+/// decision) pairs — keyed on the graph's canonical fingerprint
+/// ([`crate::dfg::canon`]) ⊕ the decision's canonical-order fingerprint —
+/// are skipped *before* the expensive route/measure/encode work, so each
+/// **call's** output is duplicate-free at no extra cost. (Parallel
+/// generation shards a family over several calls with independent `seen`
+/// sets; the coordinator detects and reports any cross-shard survivors.)
+/// The RNG consumption per drawn decision is unchanged, so corpora
+/// without natural duplicates are bit-identical to the pre-dedup
+/// generator for a given seed.
+pub fn generate_family_with_stats(
+    family: WorkloadFamily,
+    count: usize,
+    fabric: &Fabric,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> Result<(Vec<Sample>, GenStats)> {
     let mut out = Vec::with_capacity(count);
+    let mut stats = GenStats::default();
     let heuristic = HeuristicCost::new();
+    let mut seen: HashSet<(u128, u128)> = HashSet::new();
     'outer: loop {
         let graph = draw_workload(family, rng);
+        let canon = canonicalize(&graph);
         for _ in 0..DECISIONS_PER_WORKLOAD {
             if out.len() >= count {
                 break 'outer;
             }
             let placement = draw_decision(&graph, fabric, cfg, rng)?;
+            let key = (canon.fingerprint.0, decision_fingerprint(&canon, &placement).0);
+            if !seen.insert(key) {
+                stats.duplicates_skipped += 1;
+                // A stall here would mean the decision space is saturated
+                // (conceivable only for degenerate fabrics); fail loudly
+                // instead of looping forever.
+                if stats.duplicates_skipped > 64 * count.max(1) {
+                    bail!(
+                        "dataset generation stalled: {} duplicates for {} fresh samples",
+                        stats.duplicates_skipped,
+                        out.len()
+                    );
+                }
+                continue;
+            }
             let routing = route_all_with(fabric, &graph, &placement, cfg.router)?;
             let report = sim::measure(fabric, &graph, &placement, &routing, cfg.era)?;
             let mut tensors = gnn::encode(&graph, fabric, &placement, &routing)?;
@@ -208,7 +270,7 @@ pub fn generate_family(
             break;
         }
     }
-    Ok(out)
+    Ok((out, stats))
 }
 
 /// Generate the full corpus: `cfg.total` split evenly over the four §IV-A
@@ -219,9 +281,15 @@ pub fn generate(fabric: &Fabric, cfg: &GenConfig, rng: &mut Rng) -> Result<Datas
     let per = cfg.total / fams.len();
     let extra = cfg.total % fams.len();
     let mut samples = Vec::with_capacity(cfg.total);
+    let mut skipped = 0usize;
     for (i, fam) in fams.iter().enumerate() {
         let count = per + usize::from(i < extra);
-        samples.extend(generate_family(*fam, count, fabric, cfg, rng)?);
+        let (s, stats) = generate_family_with_stats(*fam, count, fabric, cfg, rng)?;
+        samples.extend(s);
+        skipped += stats.duplicates_skipped;
+    }
+    if skipped > 0 {
+        eprintln!("dataset generation: skipped {skipped} duplicate (graph, decision) sample(s)");
     }
     Ok(Dataset { samples })
 }
@@ -308,6 +376,71 @@ mod tests {
         // 10 = 3+3+2+2
         assert_eq!(ds.family_indices("gemm").len(), 3);
         assert_eq!(ds.family_indices("mlp").len(), 3);
+    }
+
+    #[test]
+    fn decision_fingerprint_is_canonical_order_invariant() {
+        // The same structure built twice with node order shuffled: the
+        // *transported* placements must hash to one decision key.
+        let f = Fabric::new(FabricConfig::default());
+        let g = draw_workload(WorkloadFamily::Ffn, &mut Rng::new(8));
+        let canon = canonicalize(&g);
+        let mut rng = Rng::new(9);
+        let p_canon = random_placement(&canon.graph, &f, &mut rng).unwrap();
+        // Placement expressed on the canonical graph vs transported onto
+        // the original graph: one decision, two index spaces, same key.
+        let p_orig = crate::cache::transport_placement(&canon, &p_canon);
+        let self_canon = canonicalize(&canon.graph);
+        assert_eq!(self_canon.fingerprint, canon.fingerprint);
+        assert_eq!(
+            decision_fingerprint(&self_canon, &p_canon),
+            decision_fingerprint(&canon, &p_orig)
+        );
+        // And a genuinely different decision gets a different key.
+        let p_other = random_placement(&g, &f, &mut rng).unwrap();
+        assert_ne!(
+            decision_fingerprint(&canon, &p_orig),
+            decision_fingerprint(&canon, &p_other)
+        );
+    }
+
+    #[test]
+    fn duplicate_decisions_are_skipped_and_counted() {
+        // On the tiny fabric a GEMM workload has exactly 8 feasible random
+        // placements (2 PCU choices × 2 PMU orders × 2 DRAM orders), so a
+        // 120-sample pure-random corpus must revisit decisions; dedup skips
+        // them and the count is still met with fresh pairs.
+        let f = Fabric::new(FabricConfig::tiny());
+        let mut rng = Rng::new(5);
+        let cfg = GenConfig {
+            total: 0,
+            frac_random: 1.0,
+            frac_walk: 0.0,
+            ..GenConfig::default()
+        };
+        let (samples, stats) =
+            generate_family_with_stats(WorkloadFamily::Gemm, 120, &f, &cfg, &mut rng).unwrap();
+        assert_eq!(samples.len(), 120);
+        assert!(
+            stats.duplicates_skipped > 0,
+            "a saturated decision space must produce duplicates to skip"
+        );
+    }
+
+    #[test]
+    fn dedup_does_not_change_duplicate_free_corpora() {
+        // On the default fabric the decision space is astronomically large:
+        // no duplicates occur, so the generator's output (and RNG stream)
+        // is unchanged by the dedup pass.
+        let f = Fabric::new(FabricConfig::default());
+        let cfg = GenConfig { total: 0, ..GenConfig::default() };
+        let mut rng = Rng::new(2);
+        let (samples, stats) =
+            generate_family_with_stats(WorkloadFamily::Gemm, 8, &f, &cfg, &mut rng).unwrap();
+        assert_eq!(stats.duplicates_skipped, 0);
+        let mut rng2 = Rng::new(2);
+        let wrapper = generate_family(WorkloadFamily::Gemm, 8, &f, &cfg, &mut rng2).unwrap();
+        assert_eq!(samples, wrapper);
     }
 
     #[test]

@@ -17,5 +17,7 @@
 pub mod gen;
 mod store;
 
-pub use gen::{draw_workload, generate, generate_family, GenConfig};
+pub use gen::{
+    draw_workload, generate, generate_family, generate_family_with_stats, GenConfig, GenStats,
+};
 pub use store::{load_dataset, save_dataset, Dataset, Sample};

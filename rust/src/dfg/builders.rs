@@ -222,8 +222,19 @@ fn transformer_block(g: &mut Dfg, input: NodeId, seq: u64, d_model: u64, d_ff: u
     );
     g.connect_auto(q, scores);
     g.connect_auto(kt, scores);
+    // Attention scaling (softmax(QKᵀ/√d_head)) — present in the trunk
+    // blocks (the standalone `mha` family folds it into the softmax
+    // microcode to keep its pinned encoding goldens stable). It also makes
+    // a block exactly 16 PCU ops, so the default 32-PCU fabric cuts the
+    // trunk at block boundaries and interior chunks repeat — the structure
+    // the compile cache's fingerprint dedup exploits.
+    let scale = g.add(
+        OpKind::Elementwise { func: EwFunc::Mul, n: seq * seq * heads },
+        format!("{prefix}.scale"),
+    );
+    g.connect_auto(scores, scale);
     let sm = g.add(OpKind::Softmax { rows: seq * heads, cols: seq }, format!("{prefix}.sm"));
-    g.connect_auto(scores, sm);
+    g.connect_auto(scale, sm);
     let smb = buffered(g, sm, &format!("{prefix}.p.buf"));
     let ctx = g.add(OpKind::Gemm { m: seq, n: d_model, k: seq }, format!("{prefix}.pv"));
     g.connect_auto(smb, ctx);
@@ -378,6 +389,20 @@ mod tests {
             .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
             .count();
         assert_eq!(gemms, 24 * 8);
+    }
+
+    #[test]
+    fn transformer_block_is_sixteen_pcu_ops() {
+        // Partition alignment contract: one block = exactly 16 PCU ops, so
+        // the default 32-PCU fabric cuts trunks at block boundaries and
+        // interior chunks are isomorphic (what the compile cache dedups).
+        let one = transformer_public("t1", 1, 16, 1024, 4096, 16);
+        let two = transformer_public("t2", 2, 16, 1024, 4096, 16);
+        assert_eq!(
+            two.unit_demand().0 - one.unit_demand().0,
+            16,
+            "per-block PCU demand drifted; compile-cache dedup alignment breaks"
+        );
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Canonical form + structural fingerprint for a [`Dfg`].
+//!
+//! The compile cache ([`crate::cache`]) keys PnR results on *graph
+//! structure*: two subgraphs that are isomorphic as labelled multigraphs —
+//! same op kinds (with all dimension parameters), same edge payloads, same
+//! topology; node **names excluded** — describe the same place-and-route
+//! problem and must share a cache entry. This module computes:
+//!
+//! * a deterministic **canonical relabeling** of a graph (Weisfeiler–Leman
+//!   color refinement over (kind, edge-bytes, direction) signatures, ties
+//!   broken by original index), materialized as an actual [`Dfg`] with
+//!   synthetic node names and edges in sorted canonical order;
+//! * the **canonical byte serialization** of that relabeled structure; and
+//! * a 128-bit **fingerprint** (FNV-1a) of those bytes.
+//!
+//! ## Guarantees
+//!
+//! * **Soundness** (`equal canon bytes ⇒ equal PnR problem`): the byte
+//!   serialization fully determines the relabeled graph, so two graphs with
+//!   equal canonical bytes are isomorphic — and their canonical [`Dfg`]s
+//!   are **bit-identical** (same node order, same edge order, same names).
+//!   Any deterministic computation run on the canonical graph (annealing,
+//!   routing, simulation) therefore produces bit-identical results for
+//!   both. This is what makes cache replication lossless; consumers that
+//!   cannot tolerate a fingerprint collision compare the full canonical
+//!   bytes (the cache does).
+//! * **Completeness** (best effort): isomorphic graphs *usually* agree —
+//!   WL refinement separates every node class that occurs in the in-tree
+//!   workloads, and in the common case (the partitioner emitting repeated
+//!   transformer chunks in identical construction order) the tie-break by
+//!   original index is itself isomorphism-aligned. Graphs that WL cannot
+//!   distinguish may canonicalize differently; the failure mode is a
+//!   missed cache hit, never a wrong one.
+
+use std::fmt;
+
+use crate::util::rng::mix64;
+
+use super::graph::{Dfg, NodeId};
+use super::op::OpKind;
+
+/// A 128-bit structural fingerprint (FNV-1a over canonical bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+impl Fingerprint {
+    /// The top 64 bits as hex — a short tag for names and logs.
+    pub fn short(&self) -> String {
+        format!("{:016x}", (self.0 >> 64) as u64)
+    }
+}
+
+/// FNV-1a over a byte slice, 128-bit variant.
+pub fn fnv128(data: &[u8]) -> u128 {
+    const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013B;
+    let mut h = OFFSET;
+    for &b in data {
+        h ^= b as u128;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Incremental builder for fingerprints over heterogeneous data (config
+/// knobs, parameter tensors, placements). Field order matters and is part
+/// of each consumer's versioned tag, so fingerprints are stable across
+/// runs and platforms (everything is serialized little-endian).
+#[derive(Debug, Clone)]
+pub struct FingerprintHasher {
+    bytes: Vec<u8>,
+}
+
+impl FingerprintHasher {
+    /// `tag` names (and versions) the keying scheme, e.g.
+    /// `"rdacost-pnr-context-v1"` — bump it whenever the field layout
+    /// changes so old fingerprints can never alias new ones.
+    pub fn new(tag: &str) -> FingerprintHasher {
+        let mut h = FingerprintHasher { bytes: Vec::with_capacity(64) };
+        h.push_str(tag);
+        h
+    }
+
+    pub fn push_u64(&mut self, v: u64) -> &mut Self {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn push_u128(&mut self, v: u128) -> &mut Self {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Bit pattern of an `f64` (NaN payloads included — exactness over
+    /// prettiness; config knobs are never NaN in practice).
+    pub fn push_f64(&mut self, v: f64) -> &mut Self {
+        self.push_u64(v.to_bits())
+    }
+
+    pub fn push_f32(&mut self, v: f32) -> &mut Self {
+        self.bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    pub fn push_str(&mut self, s: &str) -> &mut Self {
+        self.push_u64(s.len() as u64);
+        self.bytes.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn push_bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.push_u64(b.len() as u64);
+        self.bytes.extend_from_slice(b);
+        self
+    }
+
+    pub fn finish(&self) -> Fingerprint {
+        Fingerprint(fnv128(&self.bytes))
+    }
+}
+
+/// The canonical form of one graph. See the module docs for guarantees.
+#[derive(Debug, Clone)]
+pub struct Canon {
+    /// The canonically relabeled graph: node `c` is the original node
+    /// `orig_of[c]`, names are synthetic (`"v0"`, `"v1"`, …), edges are in
+    /// sorted `(src, dst, bytes)` order. Bit-identical across every graph
+    /// with the same canonical bytes — PnR runs on *this* graph so results
+    /// replicate exactly to isomorphic siblings.
+    pub graph: Dfg,
+    /// Original node index → canonical index.
+    pub canon_of: Vec<u32>,
+    /// Canonical index → original node index (inverse of `canon_of`).
+    pub orig_of: Vec<u32>,
+    /// The canonical byte serialization (the proof object: equal bytes ⇒
+    /// isomorphic graphs).
+    pub bytes: Vec<u8>,
+    /// `fnv128(bytes)`.
+    pub fingerprint: Fingerprint,
+}
+
+/// Stable byte serialization of an op kind: `type_index` tag + all
+/// dimension parameters. Everything PnR and the simulator read off a node
+/// is a function of these bytes (names are display-only).
+fn push_kind_bytes(kind: &OpKind, out: &mut Vec<u8>) {
+    out.push(kind.type_index() as u8);
+    match *kind {
+        OpKind::Gemm { m, n, k } => push_dims(&[m, n, k], out),
+        OpKind::Elementwise { n, .. } => push_dims(&[n], out),
+        OpKind::Softmax { rows, cols }
+        | OpKind::LayerNorm { rows, cols }
+        | OpKind::Transpose { rows, cols }
+        | OpKind::Reduce { rows, cols } => push_dims(&[rows, cols], out),
+        OpKind::Load { bytes } | OpKind::Store { bytes } | OpKind::Buffer { bytes } => {
+            push_dims(&[bytes], out)
+        }
+    }
+}
+
+fn push_dims(dims: &[u64], out: &mut Vec<u8>) {
+    for &d in dims {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+}
+
+fn distinct_count(colors: &[u64]) -> usize {
+    let mut sorted: Vec<u64> = colors.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    sorted.len()
+}
+
+/// Compute the canonical form of `g`. Cost is O((V + E) · rounds · log),
+/// negligible next to a single annealing step on the same graph.
+pub fn canonicalize(g: &Dfg) -> Canon {
+    let n = g.num_nodes();
+
+    // Initial colors: hash of the op kind (with dimensions).
+    let mut color: Vec<u64> = g
+        .nodes()
+        .iter()
+        .map(|node| {
+            let mut kb = Vec::with_capacity(32);
+            push_kind_bytes(&node.kind, &mut kb);
+            let h = fnv128(&kb);
+            mix64(h as u64 ^ (h >> 64) as u64)
+        })
+        .collect();
+
+    // WL refinement: fold each node's sorted (bytes, neighbor color)
+    // multisets — incoming and outgoing separately — into its color until
+    // the partition stops refining.
+    let mut distinct = distinct_count(&color);
+    for _ in 0..n.max(1) {
+        let mut next = vec![0u64; n];
+        let mut ins: Vec<(u64, u64)> = Vec::new();
+        let mut outs: Vec<(u64, u64)> = Vec::new();
+        for i in 0..n {
+            let nid = NodeId(i as u32);
+            ins.clear();
+            outs.clear();
+            ins.extend(g.incoming(nid).map(|e| (e.bytes, color[e.src.0 as usize])));
+            outs.extend(g.outgoing(nid).map(|e| (e.bytes, color[e.dst.0 as usize])));
+            ins.sort_unstable();
+            outs.sort_unstable();
+            let mut h = mix64(color[i] ^ 0x9E37_79B9_7F4A_7C15);
+            for &(b, c) in &ins {
+                h = mix64(h ^ mix64(b ^ 0xA5A5_A5A5_A5A5_A5A5));
+                h = mix64(h ^ c);
+            }
+            h = mix64(h ^ 0xC3C3_C3C3_C3C3_C3C3);
+            for &(b, c) in &outs {
+                h = mix64(h ^ mix64(b ^ 0x5C5C_5C5C_5C5C_5C5C));
+                h = mix64(h ^ c);
+            }
+            next[i] = h;
+        }
+        color = next;
+        let d = distinct_count(&color);
+        if d == distinct {
+            break;
+        }
+        distinct = d;
+    }
+
+    // Total order: final color, ties broken by original index (see the
+    // module docs on completeness).
+    let mut orig_of: Vec<u32> = (0..n as u32).collect();
+    orig_of.sort_by_key(|&i| (color[i as usize], i));
+    let mut canon_of = vec![0u32; n];
+    for (c, &o) in orig_of.iter().enumerate() {
+        canon_of[o as usize] = c as u32;
+    }
+
+    // Canonical edge list, sorted (parallel edges collapse to adjacent
+    // identical tuples — order among them is immaterial).
+    let mut edges: Vec<(u32, u32, u64)> = g
+        .edges()
+        .iter()
+        .map(|e| (canon_of[e.src.0 as usize], canon_of[e.dst.0 as usize], e.bytes))
+        .collect();
+    edges.sort_unstable();
+
+    // Serialize: header, node kinds in canonical order, sorted edges.
+    let mut bytes = Vec::with_capacity(16 + 16 * n + 16 * edges.len());
+    bytes.extend_from_slice(b"RDCN");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&(n as u32).to_le_bytes());
+    for &o in &orig_of {
+        push_kind_bytes(&g.node(NodeId(o)).kind, &mut bytes);
+    }
+    bytes.extend_from_slice(&(edges.len() as u32).to_le_bytes());
+    for &(s, d, b) in &edges {
+        bytes.extend_from_slice(&s.to_le_bytes());
+        bytes.extend_from_slice(&d.to_le_bytes());
+        bytes.extend_from_slice(&b.to_le_bytes());
+    }
+    let fingerprint = Fingerprint(fnv128(&bytes));
+
+    // Materialize the canonical graph (fully determined by `bytes`).
+    let mut cg = Dfg::new(format!("canon-{}", fingerprint.short()));
+    for (c, &o) in orig_of.iter().enumerate() {
+        cg.add(g.node(NodeId(o)).kind, format!("v{c}"));
+    }
+    for &(s, d, b) in &edges {
+        cg.connect(NodeId(s), NodeId(d), b);
+    }
+
+    Canon { graph: cg, canon_of, orig_of, bytes, fingerprint }
+}
+
+/// Convenience: the fingerprint alone.
+pub fn fingerprint(g: &Dfg) -> Fingerprint {
+    canonicalize(g).fingerprint
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::builders;
+    use crate::dfg::op::EwFunc;
+
+    fn chain(names: [&str; 4], gemm_k: u64) -> Dfg {
+        let mut g = Dfg::new("chain");
+        let l = g.add(OpKind::Load { bytes: 64 }, names[0]);
+        let a = g.add(OpKind::Gemm { m: 4, n: 4, k: gemm_k }, names[1]);
+        let r = g.add(OpKind::Elementwise { func: EwFunc::Relu, n: 16 }, names[2]);
+        let s = g.add(OpKind::Store { bytes: 64 }, names[3]);
+        g.connect_auto(l, a);
+        g.connect_auto(a, r);
+        g.connect_auto(r, s);
+        g
+    }
+
+    #[test]
+    fn names_do_not_affect_fingerprint() {
+        let a = chain(["in", "gemm", "relu", "out"], 4);
+        let b = chain(["blk7.in", "blk7.gemm", "blk7.relu", "blk7.out"], 4);
+        let ca = canonicalize(&a);
+        let cb = canonicalize(&b);
+        assert_eq!(ca.fingerprint, cb.fingerprint);
+        assert_eq!(ca.bytes, cb.bytes);
+        // The canonical graphs are bit-identical, names included.
+        assert_eq!(ca.graph.num_nodes(), cb.graph.num_nodes());
+        for (x, y) in ca.graph.nodes().iter().zip(cb.graph.nodes()) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.name, y.name);
+        }
+        assert_eq!(ca.graph.edges(), cb.graph.edges());
+    }
+
+    #[test]
+    fn node_order_does_not_affect_fingerprint() {
+        // The same diamond built in two different insertion orders.
+        let build = |order_swapped: bool| {
+            let mut g = Dfg::new("diamond");
+            let l = g.add(OpKind::Load { bytes: 4 }, "in");
+            let (a, b) = if order_swapped {
+                let b = g.add(OpKind::Elementwise { func: EwFunc::Mul, n: 8 }, "b");
+                let a = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 8 }, "a");
+                (a, b)
+            } else {
+                let a = g.add(OpKind::Elementwise { func: EwFunc::Add, n: 8 }, "a");
+                let b = g.add(OpKind::Elementwise { func: EwFunc::Mul, n: 8 }, "b");
+                (a, b)
+            };
+            let c = g.add(OpKind::Elementwise { func: EwFunc::Bias, n: 8 }, "c");
+            let s = g.add(OpKind::Store { bytes: 4 }, "out");
+            g.connect_auto(l, a);
+            g.connect_auto(l, b);
+            g.connect_auto(a, c);
+            g.connect_auto(b, c);
+            g.connect_auto(c, s);
+            g
+        };
+        let ca = canonicalize(&build(false));
+        let cb = canonicalize(&build(true));
+        assert_eq!(ca.fingerprint, cb.fingerprint, "isomorphic graphs must agree");
+        assert_eq!(ca.bytes, cb.bytes);
+    }
+
+    #[test]
+    fn structural_changes_change_fingerprint() {
+        let base = fingerprint(&chain(["i", "g", "r", "o"], 4));
+        // A dimension change inside one op kind.
+        assert_ne!(base, fingerprint(&chain(["i", "g", "r", "o"], 8)));
+        // An edge-byte change.
+        let mut g = chain(["i", "g", "r", "o"], 4);
+        let extra = g.add(OpKind::Buffer { bytes: 64 }, "buf");
+        g.connect(NodeId(2), extra, 64);
+        let with_node = fingerprint(&g);
+        assert_ne!(base, with_node, "added node+edge must change the fingerprint");
+        // A different op kind in the same position.
+        let mut h = Dfg::new("chain2");
+        let l = h.add(OpKind::Load { bytes: 64 }, "i");
+        let a = h.add(OpKind::Gemm { m: 4, n: 4, k: 4 }, "g");
+        let r = h.add(OpKind::Elementwise { func: EwFunc::Gelu, n: 16 }, "r");
+        let s = h.add(OpKind::Store { bytes: 64 }, "o");
+        h.connect_auto(l, a);
+        h.connect_auto(a, r);
+        h.connect_auto(r, s);
+        assert_ne!(base, fingerprint(&h), "relu vs gelu must differ");
+    }
+
+    #[test]
+    fn topology_changes_change_fingerprint() {
+        // Same node multiset, different wiring: load feeding both
+        // elementwise ops vs a chain through the first.
+        let mut a = Dfg::new("fanout");
+        let l = a.add(OpKind::Load { bytes: 8 }, "l");
+        let x = a.add(OpKind::Elementwise { func: EwFunc::Add, n: 2 }, "x");
+        let y = a.add(OpKind::Elementwise { func: EwFunc::Add, n: 2 }, "y");
+        let s = a.add(OpKind::Store { bytes: 8 }, "s");
+        a.connect(l, x, 8);
+        a.connect(l, y, 8);
+        a.connect(x, s, 8);
+        a.connect(y, s, 8);
+
+        let mut b = Dfg::new("chain");
+        let l = b.add(OpKind::Load { bytes: 8 }, "l");
+        let x = b.add(OpKind::Elementwise { func: EwFunc::Add, n: 2 }, "x");
+        let y = b.add(OpKind::Elementwise { func: EwFunc::Add, n: 2 }, "y");
+        let s = b.add(OpKind::Store { bytes: 8 }, "s");
+        b.connect(l, x, 8);
+        b.connect(x, y, 8);
+        b.connect(y, s, 8);
+        b.connect(l, s, 8);
+
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn canonical_graph_is_equivalent_and_maps_back() {
+        let g = builders::mha(32, 128, 4);
+        let c = canonicalize(&g);
+        assert_eq!(c.graph.num_nodes(), g.num_nodes());
+        assert_eq!(c.graph.num_edges(), g.num_edges());
+        c.graph.validate().unwrap();
+        assert_eq!(c.graph.total_flops(), g.total_flops());
+        assert_eq!(c.graph.unit_demand(), g.unit_demand());
+        // canon_of / orig_of are inverse permutations preserving kinds.
+        for i in 0..g.num_nodes() {
+            let ci = c.canon_of[i] as usize;
+            assert_eq!(c.orig_of[ci] as usize, i);
+            assert_eq!(c.graph.node(NodeId(ci as u32)).kind, g.node(NodeId(i as u32)).kind);
+        }
+        // Canonicalization is idempotent (the canonical graph's canon is
+        // itself).
+        let cc = canonicalize(&c.graph);
+        assert_eq!(cc.fingerprint, c.fingerprint);
+        assert_eq!(cc.bytes, c.bytes);
+    }
+
+    #[test]
+    fn repeated_transformer_chunks_share_fingerprints() {
+        // The premise of the compile cache (ISSUE 5): an 8-block BERT trunk
+        // partitions into chunks where the interior repeats — same
+        // fingerprint — while the prologue/epilogue chunks stay distinct.
+        use crate::arch::{Fabric, FabricConfig};
+        let g = builders::transformer_public("bert-8blk", 8, 16, 1024, 4096, 16);
+        let fabric = Fabric::new(FabricConfig::default());
+        let parts = crate::dfg::partition::partition(&g, &fabric).unwrap();
+        let fps: Vec<Fingerprint> =
+            parts.subgraphs.iter().map(|sg| canonicalize(sg).fingerprint).collect();
+        let distinct: std::collections::BTreeSet<u128> = fps.iter().map(|f| f.0).collect();
+        assert!(
+            distinct.len() < fps.len(),
+            "no repeated chunks in an 8-block trunk: fingerprints {:?}",
+            fps.iter().map(|f| f.short()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fingerprint_hasher_is_stable_and_order_sensitive() {
+        let a = FingerprintHasher::new("t").push_u64(1).push_u64(2).finish();
+        let b = FingerprintHasher::new("t").push_u64(1).push_u64(2).finish();
+        let c = FingerprintHasher::new("t").push_u64(2).push_u64(1).finish();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let d = FingerprintHasher::new("other").push_u64(1).push_u64(2).finish();
+        assert_ne!(a, d, "tag must namespace the hash");
+        // Strings are length-prefixed: ("ab","c") != ("a","bc").
+        let e = FingerprintHasher::new("t").push_str("ab").push_str("c").finish();
+        let f = FingerprintHasher::new("t").push_str("a").push_str("bc").finish();
+        assert_ne!(e, f);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let fp = Fingerprint(0xDEAD_BEEF);
+        assert_eq!(fp.to_string().len(), 32);
+        assert!(fp.to_string().ends_with("deadbeef"));
+        assert_eq!(fp.short().len(), 16);
+    }
+}

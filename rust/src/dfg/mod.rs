@@ -13,14 +13,19 @@
 //!   GPT2-XL (§IV-B);
 //! * [`partition`] — fabric-sized partitioning for graphs too large to map
 //!   at once (paper footnote 1: "compilers first partition the full graph
-//!   into subgraphs").
+//!   into subgraphs");
+//! * [`canon`] — deterministic canonical form + 128-bit structural
+//!   fingerprint (names excluded) keying the compile cache
+//!   ([`crate::cache`]): equal canonical bytes ⇒ the same PnR problem.
 
 pub mod builders;
+pub mod canon;
 mod graph;
 mod op;
 pub mod partition;
 
 pub use builders::{bert_large, ffn, gemm_graph, gpt2_xl, mha, mlp, WorkloadFamily};
+pub use canon::{canonicalize, Canon, Fingerprint};
 pub use graph::{Dfg, EdgeId, Node, NodeId, TensorEdge};
 pub use op::{EwFunc, OpKind};
 pub use partition::{partition, Partition};

@@ -237,6 +237,97 @@ mod tests {
     }
 
     #[test]
+    fn node_map_bijection_budget_and_cut_accounting() {
+        // Property pinning the partitioner's three contracts at once
+        // (ISSUE 5 satellite):
+        //  1. `node_map` is a bijection from the original nodes onto the
+        //     subgraphs' non-cut nodes (kinds and names preserved);
+        //  2. every subgraph respects the `Budget`;
+        //  3. `cut_bytes` equals the sum of the materialized cut-consumer
+        //     edge bytes (one `buf -> consumer` edge per original cut
+        //     edge). Store/Load node bytes are ≤ that sum because multiple
+        //     consumers of one cut tensor share a single store and a
+        //     single (load, buffer) pair per consumer subgraph.
+        prop::check("partition-bijection-cuts", 32, |rng| {
+            let g = match rng.below(3) {
+                0 => {
+                    let depth = rng.range_inclusive(2, 5);
+                    let dims: Vec<u64> = (0..=depth).map(|_| 32 << rng.below(3)).collect();
+                    builders::mlp(8, &dims)
+                }
+                1 => builders::ffn(8 << rng.below(3), 64, 256),
+                _ => builders::mha(16, 64 << rng.below(2), 4),
+            };
+            let budget = Budget {
+                pcus: rng.range_inclusive(3, 8),
+                pmus: rng.range_inclusive(4, 8),
+                dram: rng.range_inclusive(4, 8),
+            };
+            let p = partition_with_budget(&g, budget).unwrap();
+
+            // (1) bijection onto non-cut nodes.
+            assert_eq!(p.node_map.len(), g.num_nodes(), "node_map not total");
+            let mut images = std::collections::HashSet::new();
+            for (orig, &(sg, nid)) in &p.node_map {
+                assert!(sg < p.subgraphs.len(), "subgraph index out of range");
+                assert!(images.insert((sg, nid)), "node_map not injective at {orig}");
+                let node = p.subgraphs[sg].node(nid);
+                assert_eq!(node.kind, g.node(*orig).kind, "kind changed through node_map");
+                assert_eq!(node.name, g.node(*orig).name, "name changed through node_map");
+                assert!(!node.name.contains(".cut."), "node_map points at a cut node");
+            }
+            let non_cut_total: usize = p
+                .subgraphs
+                .iter()
+                .map(|sg| sg.nodes().iter().filter(|n| !n.name.contains(".cut.")).count())
+                .sum();
+            assert_eq!(non_cut_total, g.num_nodes(), "node_map not onto non-cut nodes");
+
+            // (2) budgets + structural validity.
+            for sg in &p.subgraphs {
+                let (pcu, pmu, dram) = sg.unit_demand();
+                assert!(pcu <= budget.pcus, "pcu budget violated: {pcu}");
+                assert!(pmu <= budget.pmus, "pmu budget violated: {pmu}");
+                assert!(dram <= budget.dram, "dram budget violated: {dram}");
+                sg.validate().unwrap();
+            }
+
+            // (3) cut accounting.
+            let mut cut_consumer_bytes = 0u64;
+            let mut store_bytes = 0u64;
+            let mut load_bytes = 0u64;
+            for sg in &p.subgraphs {
+                for e in sg.edges() {
+                    if sg.node(e.src).name.ends_with(".cut.buf") {
+                        cut_consumer_bytes += e.bytes;
+                    }
+                }
+                for n in sg.nodes() {
+                    match n.kind {
+                        OpKind::Store { bytes } if n.name.ends_with(".cut.store") => {
+                            store_bytes += bytes;
+                        }
+                        OpKind::Load { bytes } if n.name.ends_with(".cut.load") => {
+                            load_bytes += bytes;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            assert_eq!(
+                cut_consumer_bytes, p.cut_bytes,
+                "cut_bytes out of sync with materialized cut edges"
+            );
+            assert!(store_bytes <= p.cut_bytes, "stores exceed cut traffic");
+            assert!(load_bytes <= p.cut_bytes, "loads exceed cut traffic");
+            if p.subgraphs.len() > 1 {
+                assert!(p.cut_bytes > 0, "multi-chunk partition with no cut traffic");
+                assert!(store_bytes > 0 && load_bytes > 0);
+            }
+        });
+    }
+
+    #[test]
     fn random_graphs_partition_within_budget() {
         prop::check("partition-budget", 24, |rng| {
             let depth = rng.range_inclusive(2, 6);

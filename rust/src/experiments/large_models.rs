@@ -53,6 +53,8 @@ pub fn compile_both(
         seed: ctx.cfg.seed ^ 0x1A26,
         workers: ctx.cfg.workers,
         restarts: ctx.cfg.restarts,
+        cache: ctx.cfg.cache,
+        cache_path: ctx.cfg.cache_path.clone(),
     };
     let heuristic = HeuristicCost::new();
     eprintln!(
@@ -61,6 +63,9 @@ pub fn compile_both(
         cfg.workers.max(1)
     );
     let rep_h = compile(graph, &fabric, &heuristic, &cfg)?;
+    if cfg.cache {
+        eprintln!("    cache: {}", rep_h.cache.summary());
+    }
     let learned = LearnedCost::from_store(ctx.engine.clone(), store, Ablation::default())?;
     eprintln!(
         "  compiling {} with learned model ({} workers sharing one engine) ...",
@@ -68,6 +73,9 @@ pub fn compile_both(
         cfg.workers.max(1)
     );
     let rep_l = compile(graph, &fabric, &learned, &cfg)?;
+    if cfg.cache {
+        eprintln!("    cache: {}", rep_l.cache.summary());
+    }
     Ok(ModelResult { model: graph.name.clone(), heuristic: rep_h, learned: rep_l })
 }
 

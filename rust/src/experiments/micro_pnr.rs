@@ -36,6 +36,8 @@ pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
         seed: ctx.cfg.seed ^ 0xA11C,
         workers: ctx.cfg.workers,
         restarts: ctx.cfg.restarts,
+        cache: ctx.cfg.cache,
+        cache_path: ctx.cfg.cache_path.clone(),
     };
 
     println!(

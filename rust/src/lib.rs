@@ -30,6 +30,7 @@
 )]
 
 pub mod arch;
+pub mod cache;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
@@ -61,7 +62,7 @@ USAGE: rdacost <subcommand> [options]
   eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
   compile    --model gemm|mlp|ffn|mha|bert|gpt [--cost heuristic|learned|oracle]
              [--seq N] [--blocks N] [--ckpt FILE] [--proposals K]
-             [--workers N] [--restarts R]
+             [--workers N] [--restarts R] [--cache FILE] [--no-cache]
   bench      table1|fig2|table3|table2|micro-pnr|large-models|annotations
              [--folds N] [--trials N] [--seq N] [--blocks N] [--quick]
              [--full-models]
@@ -86,6 +87,14 @@ Common options:
                     bit-identical for every worker count)
   --restarts R      independent annealing restarts per compiled subgraph,
                     best measured II kept (default 1)
+  --cache FILE      persistent compile cache ([run] cache_path): memoized
+                    per-subgraph PnR keyed on canonical graph structure ⊕
+                    fabric ⊕ objective/model ⊕ anneal/router knobs; warm
+                    recompiles of repeated-block models skip their anneals
+                    entirely (see README \"Compile cache\")
+  --no-cache        disable the compile cache (in-session dedup and the
+                    persistent tier); reports are bit-identical either way
+                    ([run] cache = false)
   --out FILE        gen-data: output dataset path (default results/dataset.bin)
   --dataset FILE    train/eval: input dataset path (default results/dataset.bin)
   --quick           CI-speed profile: small corpus, few epochs, short anneals
@@ -125,6 +134,18 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
     cfg.workers = args.get_usize("workers", cfg.workers);
     // Per-subgraph annealing restarts for compile sessions.
     cfg.restarts = args.get_usize("restarts", cfg.restarts).max(1);
+    // Compile cache: `--cache FILE` enables the persistent tier (and
+    // overrides a `[run] cache = false` in the config file — an explicit
+    // flag wins); `--no-cache` disables memoization entirely (and
+    // overrides any configured path).
+    if let Some(p) = args.get("cache") {
+        cfg.cache = true;
+        cfg.cache_path = Some(p.to_string());
+    }
+    if args.flag("no-cache") {
+        cfg.cache = false;
+        cfg.cache_path = None;
+    }
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
     cfg.anneal.iterations = args.get_usize("iters", cfg.anneal.iterations);
@@ -269,6 +290,8 @@ fn cmd_compile(args: &Args) -> Result<()> {
         seed: cfg.seed,
         workers: cfg.workers,
         restarts: cfg.restarts,
+        cache: cfg.cache,
+        cache_path: cfg.cache_path.clone(),
     };
 
     let report = match args.get_or("cost", "heuristic") {
@@ -308,6 +331,12 @@ fn cmd_compile(args: &Args) -> Result<()> {
             "  {:<28} {:>3} nodes  II {:>8.0}  norm-tp {:.3}",
             sg.name, sg.nodes, sg.ii_cycles, sg.normalized_throughput
         );
+    }
+    if compile_cfg.cache {
+        match &compile_cfg.cache_path {
+            Some(p) => println!("  cache [{p}]: {}", report.cache.summary()),
+            None => println!("  cache [in-session]: {}", report.cache.summary()),
+        }
     }
     Ok(())
 }

@@ -89,6 +89,19 @@ pub trait ObjectiveFactory: Sync {
 
     /// Name for reports (matches the handles' [`Objective::name`]).
     fn name(&self) -> &'static str;
+
+    /// A fingerprint of everything that determines this factory's scores —
+    /// rule constants, model parameters, ablation flags. The compile cache
+    /// folds it into its context key so a retrained model can never serve
+    /// another model's memoized PnR results.
+    ///
+    /// The default, `None`, means "unknown": [`crate::compiler`] then
+    /// restricts caching for this objective to the in-memory tier of a
+    /// single compile (always safe — one factory per compile call) and
+    /// refuses to persist entries to disk.
+    fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        None
+    }
 }
 
 /// Annealing schedule + move-mix parameters. The dataset generator draws

@@ -307,7 +307,12 @@ pub fn measure(
     // builders stage them through Buffer ops). Each PMU's resident demand is
     // 2x the buffer bytes it hosts; overflow stalls the producer
     // proportionally.
-    let mut pmu_demand: HashMap<crate::arch::UnitId, u64> = HashMap::new();
+    // BTreeMap, not HashMap: the stall factors multiply below, and f64
+    // multiplication is only exact under reordering for ≤2 factors — a
+    // deterministic iteration order keeps `measure` bit-reproducible call
+    // to call (the compile cache's replay guarantee depends on it).
+    let mut pmu_demand: std::collections::BTreeMap<crate::arch::UnitId, u64> =
+        std::collections::BTreeMap::new();
     for node in graph.nodes() {
         if let OpKind::Buffer { bytes } = node.kind {
             let cross_stage = graph

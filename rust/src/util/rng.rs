@@ -12,13 +12,21 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// The splitmix64 *finalizer* (no state increment): a cheap, high-quality
+/// 64-bit bit mixer. Shared by the seed expansion below, the compile
+/// session's content-addressed seed tags ([`crate::compiler::pnr_seed`])
+/// and the WL color folding in [`crate::dfg::canon`].
 #[inline]
-fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
+pub fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    mix64(*state)
 }
 
 #[inline]

@@ -1,0 +1,159 @@
+//! Compile-cache pins (ISSUE 5 acceptance):
+//!
+//! * **bit-identity** — an 8-block BERT `CompileSession` with caching
+//!   enabled produces a `CompileReport` bit-identical (IIs, throughputs,
+//!   latencies, evaluation counts) to an uncached compile — for in-session
+//!   dedup *and* for a cold→warm replay across two sessions sharing a
+//!   persistent cache file;
+//! * **in-session dedup** — the interior chunks of a repeated-block trunk
+//!   share canonical fingerprints, so the session compiles only the
+//!   distinct structures and replicates the rest (hits + misses account
+//!   for every subgraph exactly);
+//! * **invalidation** — a changed annealer knob or a different objective
+//!   changes the context fingerprint: the warm session *misses* (counted
+//!   `stale`) and recomputes instead of serving stale entries.
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig, CompileReport};
+use rdacost::cost::{HeuristicCost, OracleCost};
+use rdacost::dfg::{builders, canonicalize, partition, Dfg};
+use rdacost::placer::AnnealParams;
+
+fn bert8() -> Dfg {
+    builders::transformer_public("bert-8blk", 8, 16, 1024, 4096, 16)
+}
+
+fn cfg(iterations: usize, cache: bool, path: Option<&std::path::Path>) -> CompileConfig {
+    CompileConfig {
+        era: Era::Past,
+        anneal: AnnealParams { iterations, ..AnnealParams::default() },
+        seed: 0xCAC4E,
+        workers: 2,
+        restarts: 1,
+        cache,
+        cache_path: path.map(|p| p.to_string_lossy().into_owned()),
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rdacost_compile_cache_{name}.bin"))
+}
+
+/// Everything PnR-derived, bit-for-bit (wall time and cache counters are
+/// legitimately different between runs).
+fn assert_reports_identical(a: &CompileReport, b: &CompileReport, what: &str) {
+    assert_eq!(a.model, b.model, "{what}: model");
+    assert_eq!(a.cost_model, b.cost_model, "{what}: cost_model");
+    assert_eq!(a.total_ii.to_bits(), b.total_ii.to_bits(), "{what}: total_ii");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{what}: throughput");
+    assert_eq!(
+        a.total_latency.to_bits(),
+        b.total_latency.to_bits(),
+        "{what}: total_latency"
+    );
+    assert_eq!(a.subgraphs.len(), b.subgraphs.len(), "{what}: subgraph count");
+    for (sa, sb) in a.subgraphs.iter().zip(&b.subgraphs) {
+        assert_eq!(sa, sb, "{what}: subgraph {} diverged", sa.name);
+    }
+}
+
+#[test]
+fn cached_compiles_are_bit_identical_to_uncached() {
+    let graph = bert8();
+    let fabric = Fabric::new(FabricConfig::default());
+    let heuristic = HeuristicCost::new();
+
+    // Ground truth: no cache at all.
+    let uncached = compile(&graph, &fabric, &heuristic, &cfg(18, false, None)).unwrap();
+    let n = uncached.subgraphs.len();
+    assert!(n >= 3, "8-block BERT must partition into several chunks");
+    assert_eq!(uncached.cache.lookups(), 0, "cache off must not count lookups");
+
+    // How many *distinct* PnR problems does the partition contain?
+    let parts = partition::partition(&graph, &fabric).unwrap();
+    let distinct: std::collections::BTreeSet<u128> = parts
+        .subgraphs
+        .iter()
+        .map(|sg| canonicalize(sg).fingerprint.0)
+        .collect();
+    assert!(
+        distinct.len() < n,
+        "repeated encoder blocks must yield repeated chunks ({n} chunks, {} distinct)",
+        distinct.len()
+    );
+
+    // In-session dedup: same numbers, fewer anneals.
+    let in_session = compile(&graph, &fabric, &heuristic, &cfg(18, true, None)).unwrap();
+    assert_reports_identical(&uncached, &in_session, "in-session dedup");
+    assert_eq!(in_session.cache.lookups() as usize, n);
+    assert_eq!(in_session.cache.misses as usize, distinct.len(), "one anneal per distinct chunk");
+    assert_eq!(
+        in_session.cache.mem_hits as usize,
+        n - distinct.len(),
+        "every isomorphic sibling must be replicated, not re-annealed"
+    );
+    assert_eq!(in_session.cache.disk_hits, 0);
+    assert_eq!(in_session.cache.stale, 0);
+
+    // Cold → warm across two sessions sharing one persistent file.
+    let path = tmp("cold_warm");
+    let _ = std::fs::remove_file(&path);
+    let cold = compile(&graph, &fabric, &heuristic, &cfg(18, true, Some(&path))).unwrap();
+    assert_reports_identical(&uncached, &cold, "cold persistent session");
+    assert!(path.exists(), "cold session must persist its entries");
+    assert_eq!(cold.cache.misses as usize, distinct.len());
+
+    let warm = compile(&graph, &fabric, &heuristic, &cfg(18, true, Some(&path))).unwrap();
+    assert_reports_identical(&uncached, &warm, "warm persistent session");
+    assert_eq!(warm.cache.misses, 0, "warm session must not anneal at all");
+    assert_eq!(warm.cache.lookups() as usize, n);
+    assert!(
+        warm.cache.disk_hits as usize >= distinct.len(),
+        "distinct chunks must be served from disk: {:?}",
+        warm.cache
+    );
+    assert_eq!(warm.cache.stale, 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn changed_knobs_or_objective_miss_instead_of_serving_stale() {
+    let graph = bert8();
+    let fabric = Fabric::new(FabricConfig::default());
+    let heuristic = HeuristicCost::new();
+    let path = tmp("invalidation");
+    let _ = std::fs::remove_file(&path);
+
+    // Session A fills the cache at iterations=15.
+    let a = compile(&graph, &fabric, &heuristic, &cfg(15, true, Some(&path))).unwrap();
+    assert!(a.cache.inserts > 0);
+
+    // Session B changes an annealer knob: every lookup must be a stale
+    // miss, and the result must equal a from-scratch compile at the new
+    // knob — never session A's numbers.
+    let b = compile(&graph, &fabric, &heuristic, &cfg(16, true, Some(&path))).unwrap();
+    assert_eq!(b.cache.disk_hits, 0, "changed knobs must never hit: {:?}", b.cache);
+    assert!(b.cache.stale > 0, "fingerprint present under old context must count stale");
+    let b_fresh = compile(&graph, &fabric, &heuristic, &cfg(16, false, None)).unwrap();
+    assert_reports_identical(&b_fresh, &b, "post-invalidation compile");
+    assert!(
+        b.total_ii.to_bits() != a.total_ii.to_bits()
+            || b.subgraphs
+                .iter()
+                .zip(&a.subgraphs)
+                .any(|(x, y)| x.anneal_evaluations != y.anneal_evaluations),
+        "iterations=16 must not replay the iterations=15 results"
+    );
+
+    // Session C changes the objective (oracle): its own namespace, and the
+    // file still serves session A's context afterwards.
+    let oracle = OracleCost::new(Era::Past);
+    let c = compile(&graph, &fabric, &oracle, &cfg(15, true, Some(&path))).unwrap();
+    assert_eq!(c.cache.disk_hits, 0, "objective change must never hit");
+    assert!(c.cache.stale > 0);
+
+    let a_again = compile(&graph, &fabric, &heuristic, &cfg(15, true, Some(&path))).unwrap();
+    assert_reports_identical(&a, &a_again, "original context replay after other sessions");
+    assert_eq!(a_again.cache.misses, 0, "original entries must survive other contexts' saves");
+    let _ = std::fs::remove_file(&path);
+}

@@ -3,9 +3,11 @@
 //! * **worker-count determinism** — a `workers=N` compile produces a
 //!   `CompileReport` bit-identical to `workers=1` under the same seed, for
 //!   the heuristic *and* the learned objective (handles share one engine);
-//! * **order independence** — per-subgraph seed streams mean any subgraph's
-//!   placement can be reproduced in isolation from `(seed, index, restart)`
-//!   alone, so partition order / scheduling cannot leak into results;
+//! * **content-addressed order independence** — per-subgraph seed streams
+//!   are derived from `(seed, canonical fingerprint, restart)` and PnR runs
+//!   on the canonical graph, so any subgraph's result can be reproduced in
+//!   isolation from its *structure* alone — partition order, scheduling,
+//!   and sibling count cannot leak into results;
 //! * **restart monotonicity** — restart 0's stream is unchanged, so raising
 //!   `restarts` can only improve (or tie) every subgraph's measured II;
 //! * **service-backed sessions** — the `ScoringService` works as the
@@ -13,10 +15,10 @@
 //!   filling the dispatcher's batches.
 
 use rdacost::arch::{Era, Fabric, FabricConfig};
-use rdacost::compiler::{compile, subgraph_rng, CompileConfig, CompileReport};
+use rdacost::compiler::{compile, pnr_rng, CompileConfig, CompileReport};
 use rdacost::coordinator::ScoringService;
 use rdacost::cost::{Ablation, HeuristicCost, LearnedCost};
-use rdacost::dfg::{builders, partition};
+use rdacost::dfg::{builders, canonicalize, partition};
 use rdacost::placer::{anneal, AnnealParams, ObjectiveFactory};
 use rdacost::router::route_all;
 use rdacost::sim;
@@ -29,6 +31,8 @@ fn test_cfg(iterations: usize, workers: usize, restarts: usize) -> CompileConfig
         seed: 0x5E55,
         workers,
         restarts,
+        cache: true,
+        cache_path: None,
     }
 }
 
@@ -82,10 +86,11 @@ fn workers_do_not_change_results_learned() {
 
 #[test]
 fn subgraph_results_reproducible_in_isolation() {
-    // The per-subgraph seed stream is a pure function of (seed, index,
-    // restart): re-running any single subgraph's anneal outside the session
+    // The per-subgraph seed stream is a pure function of (seed, canonical
+    // fingerprint, restart), and PnR runs on the canonical graph:
+    // re-running any single subgraph's anneal outside the session
     // reproduces the session's result exactly. This is what makes results
-    // independent of compile order and worker scheduling.
+    // independent of compile order, worker scheduling, and cache hits.
     let fabric = Fabric::new(FabricConfig::default());
     let graph = builders::transformer_public("bert-3blk", 3, 16, 1024, 4096, 16);
     let cfg = test_cfg(20, 4, 1);
@@ -97,12 +102,13 @@ fn subgraph_results_reproducible_in_isolation() {
     // Spot-check every subgraph, iterating in *reverse* order to make the
     // order-independence explicit.
     for (i, sg) in parts.subgraphs.iter().enumerate().rev() {
+        let canon = canonicalize(sg);
         let handle = ObjectiveFactory::handle(&heuristic);
-        let mut rng = subgraph_rng(cfg.seed, i, 0);
+        let mut rng = pnr_rng(cfg.seed, canon.fingerprint, 0);
         let (placement, _, log) =
-            anneal(sg, &fabric, handle.as_ref(), &cfg.anneal, &mut rng).unwrap();
-        let routing = route_all(&fabric, sg, &placement).unwrap();
-        let measured = sim::measure(&fabric, sg, &placement, &routing, cfg.era).unwrap();
+            anneal(&canon.graph, &fabric, handle.as_ref(), &cfg.anneal, &mut rng).unwrap();
+        let routing = route_all(&fabric, &canon.graph, &placement).unwrap();
+        let measured = sim::measure(&fabric, &canon.graph, &placement, &routing, cfg.era).unwrap();
         let in_session = &report.subgraphs[i];
         assert_eq!(
             measured.ii_cycles.to_bits(),

@@ -11,12 +11,14 @@
 //!   `CompileSession` with resync forced every step (`reroute_every = 1`)
 //!   produces a report bit-identical to a frozen copy of the pre-refactor
 //!   full-reroute compile loop (sequential annealer, `route_all` per
-//!   candidate) embedded in this file.
+//!   candidate) embedded in this file, driven over the session's
+//!   content-addressed per-subgraph streams (canonical subgraph +
+//!   fingerprint-derived seed, see `compiler::pnr_rng`).
 
 use rdacost::arch::{Era, Fabric, FabricConfig, UnitId};
-use rdacost::compiler::{compile, subgraph_rng, CompileConfig};
+use rdacost::compiler::{compile, pnr_rng, CompileConfig};
 use rdacost::cost::HeuristicCost;
-use rdacost::dfg::{builders, partition, Dfg, NodeId};
+use rdacost::dfg::{builders, canonicalize, partition, Dfg, NodeId};
 use rdacost::placer::{random_placement, AnnealParams, Objective, Placement};
 use rdacost::router::{aggregates_from_routes, route_all, RouteDelta, RouterParams, RoutingState};
 use rdacost::sim;
@@ -329,21 +331,27 @@ fn bert_compile_bit_identical_to_full_reroute_reference_at_resync_every_step() {
         seed: 0x1DE7,
         workers: 2,
         restarts: 1,
+        // Cache off: this test pins the raw *compute* path (the cache's
+        // own bit-identity pin lives in rust/tests/compile_cache.rs).
+        cache: false,
+        cache_path: None,
     };
     let report = compile(&graph, &fabric, &heuristic, &cfg).unwrap();
     assert!(report.subgraphs.len() >= 3, "8-block BERT must partition");
 
-    // Frozen reference: same partitioning, same per-subgraph seed streams,
-    // sequential pre-refactor anneal + clean measurement route.
+    // Frozen reference: same partitioning, same content-addressed seed
+    // streams over the canonical subgraphs, sequential pre-refactor anneal
+    // + clean measurement route.
     let parts = partition::partition(&graph, &fabric).unwrap();
     assert_eq!(parts.subgraphs.len(), report.subgraphs.len());
     let mut ref_total_ii = 0.0f64;
     for (i, sg) in parts.subgraphs.iter().enumerate() {
-        let mut rng = subgraph_rng(cfg.seed, i, 0);
+        let canon = canonicalize(sg);
+        let mut rng = pnr_rng(cfg.seed, canon.fingerprint, 0);
         let (best, evaluations, score_batches) =
-            ref_anneal(sg, &fabric, &heuristic, &anneal_params, &mut rng);
-        let routing = route_all(&fabric, sg, &best).unwrap();
-        let measured = sim::measure(&fabric, sg, &best, &routing, cfg.era).unwrap();
+            ref_anneal(&canon.graph, &fabric, &heuristic, &anneal_params, &mut rng);
+        let routing = route_all(&fabric, &canon.graph, &best).unwrap();
+        let measured = sim::measure(&fabric, &canon.graph, &best, &routing, cfg.era).unwrap();
         ref_total_ii += measured.ii_cycles;
 
         let in_session = &report.subgraphs[i];
@@ -387,6 +395,8 @@ fn incremental_compile_is_deterministic_and_measures_cleanly() {
         seed: 0xACE5,
         workers: 1,
         restarts: 1,
+        cache: true,
+        cache_path: None,
     };
     assert_ne!(cfg.anneal.reroute_every, 1, "this test covers the incremental path");
     let a = compile(&graph, &fabric, &heuristic, &cfg).unwrap();
