@@ -1,0 +1,134 @@
+//! Compile-service saturation benchmark: open-loop traffic at multiple
+//! arrival rates, Zipf-repeated vs all-unique graphs, against one service
+//! per scenario. Emits `BENCH_service.json` (CI uploads it next to the
+//! other BENCH_*.json artifacts).
+//!
+//! The headline contrast: Zipf traffic re-submits a small hot set, so most
+//! requests replay from the shared PnR cache — higher cache-hit rate and
+//! lower p50 than the unique-graph baseline at the same arrival rate. The
+//! bench asserts both orderings rather than just printing them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::compiler::CompileConfig;
+use rdacost::cost::HeuristicCost;
+use rdacost::placer::AnnealParams;
+use rdacost::service::traffic::{run_traffic, TrafficConfig};
+use rdacost::service::{CompileService, ServeConfig, ServeSummary};
+use rdacost::util::json::Json;
+
+struct Scenario {
+    name: &'static str,
+    rate: f64,
+    zipf: Option<f64>,
+}
+
+fn run_scenario(sc: &Scenario, duration: Duration, iters: usize) -> ServeSummary {
+    let compile = CompileConfig {
+        anneal: AnnealParams { iterations: iters, ..AnnealParams::default() },
+        ..CompileConfig::default()
+    };
+    let svc = CompileService::start(
+        Arc::new(Fabric::new(FabricConfig::default())),
+        Arc::new(HeuristicCost::new()),
+        ServeConfig { queue_depth: 512, workers: 4, compile, report_every: None },
+    )
+    .expect("service start");
+    let traffic = run_traffic(
+        &svc,
+        &TrafficConfig {
+            rate: sc.rate,
+            duration,
+            zipf: sc.zipf,
+            catalog: 32,
+            seed: 0xBE7C,
+            deadline: None,
+            priorities: 1,
+        },
+    );
+    let summary = svc.shutdown().expect("shutdown");
+    assert_eq!(
+        traffic.completed, summary.completed,
+        "generator and service disagree on completions"
+    );
+    assert_eq!(summary.compile_errors, 0, "compiles failed under load");
+    summary
+}
+
+fn main() {
+    let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+    let duration = Duration::from_secs_f64(if quick { 2.0 } else { 5.0 });
+    let iters = if quick { 40 } else { 120 };
+
+    let scenarios = [
+        Scenario { name: "zipf_20rps", rate: 20.0, zipf: Some(1.5) },
+        Scenario { name: "zipf_100rps", rate: 100.0, zipf: Some(1.5) },
+        Scenario { name: "unique_20rps", rate: 20.0, zipf: None },
+    ];
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for sc in &scenarios {
+        let s = run_scenario(sc, duration, iters);
+        let hit_rate = s.cache.map(|c| c.hit_rate()).unwrap_or(0.0);
+        println!(
+            "bench service/{}: {} completed ({} shed), {:.1} req/s, \
+             p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, cache hit rate {:.2}",
+            sc.name,
+            s.completed,
+            s.shed,
+            s.req_per_sec,
+            s.latency.p50_ms(),
+            s.latency.p95_ms(),
+            s.latency.p99_ms(),
+            hit_rate,
+        );
+        rows.push(
+            Json::obj()
+                .set("name", sc.name)
+                .set("rate", sc.rate)
+                .set("zipf", sc.zipf.unwrap_or(0.0))
+                .set("duration_s", duration.as_secs_f64())
+                .set("submitted", s.submitted)
+                .set("completed", s.completed)
+                .set("shed", s.shed)
+                .set("req_per_sec", s.req_per_sec)
+                .set("p50_ms", s.latency.p50_ms())
+                .set("p95_ms", s.latency.p95_ms())
+                .set("p99_ms", s.latency.p99_ms())
+                .set("queue_wait_p50_ms", s.queue_wait.p50_ms())
+                .set("cache_hit_rate", hit_rate),
+        );
+        results.push((sc.name, s, hit_rate));
+    }
+
+    // The point of the shared cache, asserted: Zipf repeats serve from it
+    // (high hit rate, low p50); unique traffic cannot.
+    let zipf = &results[0];
+    let unique = &results[2];
+    assert!(
+        zipf.2 > unique.2,
+        "zipf hit rate {:.2} should beat unique {:.2}",
+        zipf.2,
+        unique.2
+    );
+    assert!(
+        zipf.1.latency.p50_us < unique.1.latency.p50_us,
+        "zipf p50 {:.1}ms should beat unique p50 {:.1}ms",
+        zipf.1.latency.p50_ms(),
+        unique.1.latency.p50_ms()
+    );
+
+    let report = Json::obj()
+        .set("bench", "service")
+        .set("quick", quick)
+        .set("catalog", 32u64)
+        .set("service_workers", 4u64)
+        .set("queue_depth", 512u64)
+        .set("anneal_iterations", iters as u64)
+        .set("scenarios", rows);
+    std::fs::write("BENCH_service.json", report.to_pretty()).unwrap();
+    println!("wrote BENCH_service.json");
+}

@@ -29,7 +29,7 @@
 //! canonical bytes, so even a 128-bit fingerprint collision (counted in
 //! [`CacheStats`]) degrades to a miss rather than a wrong answer.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -253,25 +253,8 @@ impl PnrCache {
         if !path.exists() {
             return Ok(cache);
         }
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening PnR cache {path:?}"))?,
-        );
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?} is not an rdacost PnR cache");
-        }
-        let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("PnR cache version {version} unsupported (want {VERSION}); delete {path:?}");
-        }
-        let count = read_u32(&mut f)? as usize;
         let mut entries = HashMap::new();
-        for _ in 0..count {
-            let ctx = read_u128(&mut f)?;
-            let fp = read_u128(&mut f)?;
-            let entry = read_entry(&mut f)
-                .with_context(|| format!("PnR cache {path:?} truncated mid-entry"))?;
+        for (ctx, fp, entry) in read_file(path)? {
             if ctx == context.0 {
                 entries.insert(fp, Slot::Ready { entry: Arc::new(entry), tier: Tier::Disk });
             } else {
@@ -375,39 +358,58 @@ impl PnrCache {
         self.len() == 0
     }
 
-    /// Write the persistent tier (no-op for in-memory caches): current
-    /// entries plus every preserved other-context entry, sorted, written
-    /// atomically (tmp + rename). Last writer wins between concurrent
-    /// processes.
+    /// Write the persistent tier (no-op for in-memory caches). The file is
+    /// **re-read and merged** at save time — entries another session saved
+    /// since this cache was opened survive instead of being clobbered by
+    /// whichever session saved last. Precedence on a `(context,
+    /// fingerprint)` collision: this session's own entries, then the file's
+    /// current contents, then entries preserved from open time (contexts
+    /// are deterministic keys, so colliding entries are identical in
+    /// practice). The write itself stays atomic (per-process tmp + rename);
+    /// two saves racing between the re-read and the rename can still drop
+    /// the loser's fresh rows, but sequential interleaved saves — the
+    /// common multi-session pattern — are now lossless.
     pub fn save(&self) -> Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
         let map = self.lock_entries();
-        let mut rows: Vec<(u128, u128, &CacheEntry)> = self
-            .foreign_entries
-            .iter()
-            .map(|(c, f, e)| (*c, *f, e))
-            .collect();
+        let disk_rows = if path.exists() {
+            match read_file(path) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    eprintln!("PnR cache {path:?} unreadable at save ({e:#}); overwriting");
+                    Vec::new()
+                }
+            }
+        } else {
+            Vec::new()
+        };
+        // Least-authoritative first; later inserts overwrite.
+        let mut merged: BTreeMap<(u128, u128), &CacheEntry> = BTreeMap::new();
+        for (c, f, e) in &self.foreign_entries {
+            merged.insert((*c, *f), e);
+        }
+        for (c, f, e) in &disk_rows {
+            merged.insert((*c, *f), e);
+        }
         for (fp, slot) in map.iter() {
             if let Slot::Ready { entry, .. } = slot {
-                rows.push((self.context.0, *fp, entry.as_ref()));
+                merged.insert((self.context.0, *fp), entry.as_ref());
             }
         }
-        rows.sort_by_key(|&(c, f, _)| (c, f));
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
         // Per-process tmp name: two processes saving the same shared cache
-        // path must never interleave writes through one tmp file (the
-        // rename stays atomic, so last-writer-wins on the final file).
+        // path must never interleave writes through one tmp file.
         let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
         {
             let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
             f.write_all(MAGIC)?;
             f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&(rows.len() as u32).to_le_bytes())?;
-            for (ctx, fp, entry) in rows {
+            f.write_all(&(merged.len() as u32).to_le_bytes())?;
+            for ((ctx, fp), entry) in &merged {
                 f.write_all(&ctx.to_le_bytes())?;
                 f.write_all(&fp.to_le_bytes())?;
                 write_entry(&mut f, entry)?;
@@ -421,6 +423,33 @@ impl PnrCache {
     pub fn snapshot(&self) -> CacheStatsSnapshot {
         self.stats.snapshot()
     }
+}
+
+/// Parse a persistent cache file into `(context, fingerprint, entry)` rows.
+/// Shared by [`PnrCache::open`] and the save-time merge.
+fn read_file(path: &Path) -> Result<Vec<(u128, u128, CacheEntry)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening PnR cache {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not an rdacost PnR cache");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("PnR cache version {version} unsupported (want {VERSION}); delete {path:?}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut rows = Vec::new();
+    for _ in 0..count {
+        let ctx = read_u128(&mut f)?;
+        let fp = read_u128(&mut f)?;
+        let entry = read_entry(&mut f)
+            .with_context(|| format!("PnR cache {path:?} truncated mid-entry"))?;
+        rows.push((ctx, fp, entry));
+    }
+    Ok(rows)
 }
 
 fn write_entry(f: &mut impl Write, e: &CacheEntry) -> Result<()> {
@@ -782,6 +811,54 @@ mod tests {
         assert_eq!(back_a.len(), 2);
         let back_b = PnrCache::open(ctx_b, &path).unwrap();
         assert_eq!(back_b.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_saves_merge_instead_of_clobbering() {
+        // Two sessions open the same (empty) cache file, compile disjoint
+        // graphs, and save one after the other. The second save used to
+        // rewrite the file from its own open-time snapshot — which predates
+        // the first session's save — silently dropping those entries.
+        let path = tmp("interleaved");
+        let _ = std::fs::remove_file(&path);
+        let ctx = Fingerprint(0xC);
+
+        let a = PnrCache::open(ctx, &path).unwrap();
+        let b = PnrCache::open(ctx, &path).unwrap();
+        a.insert(Fingerprint(1), entry(1));
+        b.insert(Fingerprint(2), entry(2));
+        a.save().unwrap();
+        b.save().unwrap();
+
+        let merged = PnrCache::open(ctx, &path).unwrap();
+        assert_eq!(merged.len(), 2, "second save dropped the first session's entries");
+        assert_eq!(*as_hit(merged.lookup(Fingerprint(1), &entry(1).canon_bytes)).unwrap(), entry(1));
+        assert_eq!(*as_hit(merged.lookup(Fingerprint(2), &entry(2).canon_bytes)).unwrap(), entry(2));
+    }
+
+    #[test]
+    fn interleaved_saves_merge_across_contexts() {
+        // Same interleaving, but the sessions run under different contexts
+        // (e.g. two model versions sharing one cache file): each context's
+        // namespace must survive the other's save.
+        let path = tmp("interleaved_ctx");
+        let _ = std::fs::remove_file(&path);
+        let ctx_a = Fingerprint(0xA1);
+        let ctx_b = Fingerprint(0xB1);
+
+        let a = PnrCache::open(ctx_a, &path).unwrap();
+        let b = PnrCache::open(ctx_b, &path).unwrap();
+        a.insert(Fingerprint(1), entry(1));
+        b.insert(Fingerprint(2), entry(2));
+        a.save().unwrap();
+        b.save().unwrap();
+
+        let back_a = PnrCache::open(ctx_a, &path).unwrap();
+        assert_eq!(back_a.len(), 1);
+        assert!(as_hit(back_a.lookup(Fingerprint(1), &entry(1).canon_bytes)).is_some());
+        let back_b = PnrCache::open(ctx_b, &path).unwrap();
+        assert_eq!(back_b.len(), 1);
+        assert!(as_hit(back_b.lookup(Fingerprint(2), &entry(2).canon_bytes)).is_some());
     }
 
     #[test]

@@ -195,9 +195,16 @@ impl<'a> CompileSession<'a> {
         CompileSession { fabric, cfg }
     }
 
-    /// Build the compile cache for one compile call, honoring
+    /// Build a compile cache for this session's settings, honoring
     /// `cfg.cache`/`cfg.cache_path` and the objective's fingerprint.
-    fn build_cache(&self, objective: &dyn ObjectiveFactory) -> Result<Option<PnrCache>> {
+    ///
+    /// [`CompileSession::compile`] calls this per compile; a long-running
+    /// [`crate::service::CompileService`] calls it **once** and shares the
+    /// returned cache across every request via
+    /// [`CompileSession::compile_cached`] — the context fingerprint is a
+    /// pure function of (fabric, settings, objective), so the shared cache
+    /// serves exactly the entries a per-call cache would.
+    pub fn build_cache(&self, objective: &dyn ObjectiveFactory) -> Result<Option<PnrCache>> {
         if !self.cfg.cache {
             return Ok(None);
         }
@@ -230,28 +237,55 @@ impl<'a> CompileSession<'a> {
     }
 
     /// Compile `graph` with the given cost model; measure with the
-    /// simulator at `cfg.era`.
+    /// simulator at `cfg.era`. Builds (and saves) a per-call cache per the
+    /// session settings; see [`CompileSession::compile_cached`] to share
+    /// one cache across many compiles.
     pub fn compile(&self, graph: &Dfg, objective: &dyn ObjectiveFactory) -> Result<CompileReport> {
+        let pnr_cache = self.build_cache(objective)?;
+        let report = self.compile_cached(graph, objective, pnr_cache.as_ref())?;
+        if let Some(c) = &pnr_cache {
+            c.save()?;
+        }
+        Ok(report)
+    }
+
+    /// Compile against a caller-owned cache (or `None` for no memoization
+    /// at all). This is the compile-service entry point: the service builds
+    /// one cache with [`CompileSession::build_cache`] and shares it across
+    /// every request, so repeated graphs replay instead of re-annealing.
+    ///
+    /// The cache is **not** saved here — its owner persists it (typically
+    /// once, at shutdown). `report.cache` snapshots the shared cache's
+    /// counters at completion, so under a shared cache the numbers are
+    /// cumulative across requests, not per-compile. PnR results are
+    /// bit-identical to [`CompileSession::compile`] either way.
+    pub fn compile_cached(
+        &self,
+        graph: &Dfg,
+        objective: &dyn ObjectiveFactory,
+        pnr_cache: Option<&PnrCache>,
+    ) -> Result<CompileReport> {
         let t0 = std::time::Instant::now();
         let parts = partition::partition(graph, self.fabric)?;
         let n = parts.subgraphs.len();
         // Canonical forms drive the seed streams (and the cache keys), so
         // they are computed whether or not the cache is enabled.
         let canons: Vec<Canon> = parts.subgraphs.iter().map(canonicalize).collect();
-        let pnr_cache = self.build_cache(objective)?;
-        let workers = self.cfg.workers.max(1).min(n.max(1));
 
-        let mut slots: Vec<Option<Result<SubgraphReport>>> = (0..n).map(|_| None).collect();
-        if workers <= 1 {
-            let handle = objective.handle();
-            let cache_ref = pnr_cache.as_ref();
-            for (i, (sg, slot)) in parts.subgraphs.iter().zip(slots.iter_mut()).enumerate() {
-                // Same panic containment as the worker path below, so the
-                // "panic becomes a clean Err" contract holds at every
-                // worker count.
+        // Shared fan-out layer: subgraphs are claimed by index, each worker
+        // draws one scoring handle, and results land in partition order.
+        // A panicking objective (or a bug in PnR) must not abort the
+        // process via a cross-thread double panic — `catch_unwind` maps it
+        // to a clean `Err` at every worker count.
+        let slots: Vec<Result<SubgraphReport>> = crate::coordinator::work::fan_out_indexed(
+            self.cfg.workers,
+            n,
+            || objective.handle(),
+            |handle, i| {
+                let sg = &parts.subgraphs[i];
                 let canon = &canons[i];
-                let rep = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    self.compile_subgraph(sg, canon, handle.as_ref(), cache_ref)
+                std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    self.compile_subgraph(sg, canon, handle.as_ref(), pnr_cache)
                 }))
                 .unwrap_or_else(|payload| {
                     Err(anyhow!(
@@ -259,71 +293,22 @@ impl<'a> CompileSession<'a> {
                         sg.name,
                         panic_message(payload)
                     ))
-                });
-                *slot = Some(rep);
-            }
-        } else {
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            let cells: Vec<std::sync::Mutex<Option<Result<SubgraphReport>>>> =
-                (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-            let (next_ref, cells_ref, parts_ref, canons_ref, cache_ref) =
-                (&next, &cells, &parts, &canons, pnr_cache.as_ref());
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(move || {
-                        // One scoring handle per worker thread, reused
-                        // across every subgraph this worker claims.
-                        let handle = objective.handle();
-                        loop {
-                            let i = next_ref
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if i >= parts_ref.subgraphs.len() {
-                                break;
-                            }
-                            // A panicking objective (or a bug in PnR) must
-                            // not abort the process via a cross-thread
-                            // double panic: catch it and surface a clean
-                            // `Err` through the result cell instead.
-                            let sg = &parts_ref.subgraphs[i];
-                            let canon = &canons_ref[i];
-                            let rep = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                                self.compile_subgraph(sg, canon, handle.as_ref(), cache_ref)
-                            }))
-                            .unwrap_or_else(|payload| {
-                                Err(anyhow!(
-                                    "subgraph {i} ({}) place-and-route panicked: {}",
-                                    sg.name,
-                                    panic_message(payload)
-                                ))
-                            });
-                            // A sibling worker's panic may have poisoned
-                            // nothing we care about here, but be tolerant
-                            // anyway: the cell holds a plain Option.
-                            *cells_ref[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(rep);
-                        }
-                    });
-                }
-            });
-            for (slot, cell) in slots.iter_mut().zip(cells) {
-                *slot = cell.into_inner().unwrap_or_else(|e| e.into_inner());
-            }
-        }
+                })
+            },
+        );
 
         let mut subgraphs = Vec::with_capacity(n);
         let mut total_ii = 0.0;
         let mut total_latency = 0.0;
         for slot in slots {
-            let rep = slot.expect("subgraph task not run")?;
+            let rep = slot?;
             total_ii += rep.ii_cycles;
             total_latency += rep.latency_cycles;
             subgraphs.push(rep);
         }
 
-        let cache_stats = match &pnr_cache {
-            Some(c) => {
-                c.save()?;
-                c.snapshot()
-            }
+        let cache_stats = match pnr_cache {
+            Some(c) => c.snapshot(),
             None => CacheStatsSnapshot::default(),
         };
 

@@ -42,6 +42,10 @@
 //! [router]
 //! congestion_weight = 0.5
 //! refine_passes = 1
+//!
+//! [service]
+//! queue_depth = 64
+//! workers = 2
 //! ```
 
 use std::collections::BTreeMap;
@@ -128,6 +132,12 @@ pub struct RunConfig {
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
+    /// Compile-service admission bound (`[service] queue_depth`): requests
+    /// beyond this many queued are shed at submission.
+    pub service_queue_depth: usize,
+    /// Compile-service drain threads (`[service] workers`). Distinct from
+    /// `workers`, which fans out *within* one compile.
+    pub service_workers: usize,
 }
 
 impl Default for RunConfig {
@@ -144,6 +154,8 @@ impl Default for RunConfig {
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
+            service_queue_depth: 64,
+            service_workers: 2,
         }
     }
 }
@@ -198,6 +210,9 @@ impl RunConfig {
         raw.take_parse("router.congestion_weight", &mut cfg.anneal.router.congestion_weight)?;
         raw.take_parse("router.refine_passes", &mut cfg.anneal.router.refine_passes)?;
         cfg.dataset.router = cfg.anneal.router;
+
+        raw.take_parse("service.queue_depth", &mut cfg.service_queue_depth)?;
+        raw.take_parse("service.workers", &mut cfg.service_workers)?;
 
         if let Some(unknown) = raw.values.keys().next() {
             bail!("unknown config key {unknown:?}");
@@ -262,6 +277,10 @@ reroute_every = 0
 [router]
 congestion_weight = 0.75
 refine_passes = 2
+
+[service]
+queue_depth = 128
+workers = 3
 "#,
         )
         .unwrap();
@@ -284,6 +303,8 @@ refine_passes = 2
         // The dataset generator routes with the same tunables.
         assert_eq!(cfg.dataset.router.congestion_weight, 0.75);
         assert_eq!(cfg.dataset.router.refine_passes, 2);
+        assert_eq!(cfg.service_queue_depth, 128);
+        assert_eq!(cfg.service_workers, 3);
         // Unset keys keep defaults.
         assert_eq!(cfg.fabric.lanes, FabricConfig::default().lanes);
     }

@@ -17,9 +17,15 @@
 //!   "industrial level CPU compute farm" in miniature. Shards the 5878-sample
 //!   corpus over threads with independent RNG streams and deterministic
 //!   merge order.
+//!
+//! Both (and the compile session's subgraph fan-out, and the compile
+//! service's request pipeline) share the [`work`] layer: indexed task
+//! fan-out plus a bounded admission-controlled priority queue.
 
 pub mod pool;
 pub mod scoring;
+pub mod work;
 
 pub use pool::generate_parallel;
 pub use scoring::{ScoringClient, ScoringService, ServiceObjective, ServiceStats};
+pub use work::{fan_out_indexed, BoundedQueue, PushError};

@@ -39,34 +39,17 @@ pub fn generate_parallel(
         }
     }
 
-    // Run tasks on `workers` threads (simple work-stealing via index).
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<Result<(Vec<Sample>, GenStats)>>>> =
-        (0..tasks.len()).map(|_| std::sync::Mutex::new(None)).collect();
-    let tasks_ref = &tasks;
-    let results_ref = &results;
-    let next_ref = &next;
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(move || loop {
-                let i = next_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= tasks_ref.len() {
-                    break;
-                }
-                let (fam, count, rng) = &tasks_ref[i];
-                let mut rng = rng.clone();
-                let out =
-                    crate::data::generate_family_with_stats(*fam, *count, fabric, cfg, &mut rng);
-                *results_ref[i].lock().unwrap() = Some(out);
-            });
-        }
+    // Run tasks through the shared fan-out layer (work-stealing by index,
+    // results merged in task order).
+    let results = super::work::fan_out_indexed(workers, tasks.len(), || (), |_, i| {
+        let (fam, count, rng) = &tasks[i];
+        let mut rng = rng.clone();
+        crate::data::generate_family_with_stats(*fam, *count, fabric, cfg, &mut rng)
     });
 
     let mut samples = Vec::with_capacity(cfg.total);
     let mut duplicates_skipped = 0usize;
-    for cell in results {
-        let r = cell.into_inner().unwrap().expect("worker task not run");
+    for r in results {
         let (shard, stats) = r?;
         samples.extend(shard);
         duplicates_skipped += stats.duplicates_skipped;

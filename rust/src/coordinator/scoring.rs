@@ -275,6 +275,12 @@ fn dispatcher_loop(
                     let (bucket, q) = queues.remove(&b.tag()).unwrap();
                     execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
                 }
+                // Deadline check on *every* arrival, not only on recv
+                // timeout: under sustained sub-batch traffic `recv_timeout`
+                // keeps returning `Ok` and the timeout arm below never
+                // runs, which used to starve a never-filling bucket past
+                // `max_wait` indefinitely.
+                flush_overdue(&mut queues, max_wait, &engine, &params, ablation, batch, &stats);
             }
             Err(RecvTimeoutError::Timeout) => {
                 // Flush everything past deadline (and anything else queued —
@@ -298,6 +304,30 @@ fn dispatcher_loop(
                 return;
             }
         }
+    }
+}
+
+/// Flush every bucket whose **oldest** request has waited `max_wait` or
+/// longer. Requests append in arrival order, so the queue head is the
+/// oldest; one flush per overdue bucket counts as one deadline flush.
+fn flush_overdue(
+    queues: &mut HashMap<String, (Bucket, Vec<Request>)>,
+    max_wait: Duration,
+    engine: &Engine,
+    params: &[Tensor],
+    ablation: Ablation,
+    batch: usize,
+    stats: &ServiceStats,
+) {
+    let overdue: Vec<String> = queues
+        .iter()
+        .filter(|(_, (_, q))| q.first().map_or(false, |r| r.enqueued.elapsed() >= max_wait))
+        .map(|(k, _)| k.clone())
+        .collect();
+    for k in overdue {
+        let (bucket, q) = queues.remove(&k).unwrap();
+        stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        execute_batch(engine, params, ablation, batch, bucket, q, stats);
     }
 }
 
@@ -434,6 +464,64 @@ mod tests {
         for (a, b) in singles.iter().zip(&batched) {
             assert!((a - b).abs() < 1e-12, "single {a} vs batched {b}");
         }
+    }
+
+    #[test]
+    fn sustained_arrivals_do_not_starve_subbatch_bucket() {
+        // The starvation regression: a single n64-bucket request queued
+        // behind a sustained flood of n32 traffic. The flood keeps
+        // `recv_timeout` returning `Ok` (the channel is never empty until
+        // the backlog drains), so the timeout arm — the only place the
+        // deadline flush used to live — never runs, and the lone request
+        // used to wait out the entire flood instead of its 10ms deadline.
+        // The fix checks deadlines on every arrival, so the request must be
+        // answered in ~max_wait regardless of cross-bucket load.
+        let svc = service(32, Duration::from_millis(10));
+        let client = svc.client();
+        let small = builders::mha(32, 128, 4); // n32 bucket
+        let big = builders::mha(64, 256, 8); // n64 bucket
+        let enc_small = encoded(&small, 1);
+        let enc_big = encoded(&big, 2);
+        assert_ne!(enc_small.bucket, enc_big.bucket);
+
+        let floods = 1600usize;
+        let t0 = Instant::now();
+        // The starved request first, then the flood — submitted fire-and-
+        // forget (replies discarded) so the dispatcher's channel stays
+        // continuously occupied while the backlog drains.
+        let (big_tx, big_rx) = mpsc::channel();
+        client.submit(enc_big, big_tx).unwrap();
+        let (flood_tx, _flood_rx) = mpsc::channel();
+        for _ in 0..floods {
+            client.submit(enc_small.clone(), flood_tx.clone()).unwrap();
+        }
+        // Sentinel: the last submission; its reply marks the drain end.
+        let (sentinel_tx, sentinel_rx) = mpsc::channel();
+        client.submit(enc_small.clone(), sentinel_tx).unwrap();
+
+        let big_score = big_rx.recv().expect("starved request dropped").expect("batch failed");
+        let big_latency = t0.elapsed();
+        assert!(big_score.is_finite());
+        sentinel_rx.recv().expect("sentinel dropped").expect("sentinel batch failed");
+        let drain_wall = t0.elapsed();
+
+        let stats = &svc.stats;
+        assert_eq!(stats.requests.load(Ordering::Relaxed), floods as u64 + 2);
+        assert!(
+            stats.deadline_flushes.load(Ordering::Relaxed) >= 1,
+            "the lone n64 request can only be answered by a deadline flush"
+        );
+        // Bounded queue latency: ~max_wait plus in-flight batch executions,
+        // never the whole flood. The relative bound keeps the regression
+        // meaningful on any machine speed (the starved path would score
+        // big_latency ≈ drain_wall); the 40ms floor absorbs scheduler
+        // jitter on fast machines.
+        let bound = std::cmp::max(drain_wall / 3, Duration::from_millis(40));
+        assert!(
+            big_latency <= bound,
+            "n64 request starved: answered after {big_latency:?} \
+             (drain took {drain_wall:?}, max_wait 10ms)"
+        );
     }
 
     /// A backend whose inference always fails — exercises the error-reply

@@ -1,0 +1,316 @@
+//! The shared work layer: indexed task fan-out and the bounded priority
+//! queue.
+//!
+//! Two fan-out consumers grew the same scaffolding independently — the
+//! dataset-generation pool ([`super::pool`]) and the compile session's
+//! subgraph workers ([`crate::compiler`]) both claimed indices off an atomic
+//! counter into per-slot result cells under `std::thread::scope`. That
+//! pattern now lives here as [`fan_out_indexed`], and the compile service
+//! ([`crate::service`]) builds its request pipeline on the same layer plus
+//! [`BoundedQueue`] — a capacity-limited priority queue with immediate
+//! admission-control rejection (backpressure by shedding, never by blocking
+//! the submitter).
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Run `count` indexed tasks on up to `workers` threads and return the
+/// results in index order.
+///
+/// * `init` builds one per-worker state (an objective handle, a scratch
+///   buffer) **inside** the worker thread; the inline path calls it once.
+/// * `task` consumes the state and an index. Tasks are claimed off an
+///   atomic counter, so scheduling is work-stealing but the returned `Vec`
+///   is always in index order — callers stay deterministic regardless of
+///   which worker ran what.
+///
+/// `workers <= 1` (or `count == 1`) runs inline on the caller's thread with
+/// no spawns. A panic inside `task` propagates out of the scope (poisoned
+/// result cells are tolerated on the way); callers that need panics mapped
+/// to clean errors wrap `task` in `catch_unwind`, as the compile session
+/// does.
+pub fn fan_out_indexed<S, T: Send>(
+    workers: usize,
+    count: usize,
+    init: impl Fn() -> S + Sync,
+    task: impl Fn(&mut S, usize) -> T + Sync,
+) -> Vec<T> {
+    if count == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(count);
+    if workers <= 1 {
+        let mut state = init();
+        return (0..count).map(|i| task(&mut state, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let cells: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let (next_ref, cells_ref, init_ref, task_ref) = (&next, &cells, &init, &task);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || {
+                let mut state = init_ref();
+                loop {
+                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= count {
+                        break;
+                    }
+                    let out = task_ref(&mut state, i);
+                    // A sibling's panic may have poisoned this mutex while
+                    // we computed; the cell holds a plain Option either way.
+                    *cells_ref[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+                }
+            });
+        }
+    });
+    cells
+        .into_iter()
+        .map(|c| {
+            c.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("fan-out task not run")
+        })
+        .collect()
+}
+
+/// Why a [`BoundedQueue::try_push`] was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity — admission control sheds the item back to
+    /// the caller immediately instead of blocking.
+    Full(T),
+    /// The queue was closed; no further items are accepted.
+    Closed(T),
+}
+
+struct QueueEntry<T> {
+    priority: u8,
+    /// Monotonic submission counter; earlier wins within a priority.
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for QueueEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl<T> Eq for QueueEntry<T> {}
+impl<T> PartialOrd for QueueEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for QueueEntry<T> {
+    /// Max-heap order: higher priority first, FIFO (lower seq) within one.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct QueueInner<T> {
+    heap: BinaryHeap<QueueEntry<T>>,
+    seq: u64,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer priority queue.
+///
+/// * [`BoundedQueue::try_push`] never blocks: a full queue rejects the item
+///   immediately ([`PushError::Full`]) so submitters get backpressure as an
+///   explicit shed, not a stall.
+/// * [`BoundedQueue::pop`] blocks until an item is available; after
+///   [`BoundedQueue::close`] it drains the backlog and then returns `None`.
+/// * Higher `priority` pops first; within a priority, submission order.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(QueueInner {
+                heap: BinaryHeap::new(),
+                seq: 0,
+                closed: false,
+            }),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued (racy snapshot, for stats/tests).
+    pub fn len(&self) -> usize {
+        self.lock().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue, or reject immediately when full/closed.
+    pub fn try_push(&self, priority: u8, item: T) -> Result<(), PushError<T>> {
+        let mut q = self.lock();
+        if q.closed {
+            return Err(PushError::Closed(item));
+        }
+        if q.heap.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        let seq = q.seq;
+        q.seq += 1;
+        q.heap.push(QueueEntry { priority, seq, item });
+        drop(q);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available. Returns `None` once the queue is
+    /// closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.lock();
+        loop {
+            if let Some(entry) = q.heap.pop() {
+                return Some(entry.item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.available.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Stop accepting new items and wake all blocked consumers. Already
+    /// queued items remain poppable.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn fan_out_returns_in_index_order_at_any_worker_count() {
+        for workers in [1, 2, 4, 9] {
+            let out = fan_out_indexed(workers, 7, || (), |_, i| i * 10);
+            assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60], "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fan_out_empty_and_single() {
+        let out: Vec<usize> = fan_out_indexed(4, 0, || (), |_, i| i);
+        assert!(out.is_empty());
+        let out = fan_out_indexed(4, 1, || (), |_, i| i + 1);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn fan_out_init_runs_once_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let _ = fan_out_indexed(
+            3,
+            12,
+            || inits.fetch_add(1, Ordering::Relaxed),
+            |_, i| i,
+        );
+        let n = inits.load(Ordering::Relaxed);
+        assert!(n >= 1 && n <= 3, "init ran {n} times for 3 workers");
+
+        inits.store(0, Ordering::Relaxed);
+        let _ = fan_out_indexed(
+            1,
+            5,
+            || inits.fetch_add(1, Ordering::Relaxed),
+            |_, i| i,
+        );
+        assert_eq!(inits.load(Ordering::Relaxed), 1, "inline path: exactly one init");
+    }
+
+    #[test]
+    fn fan_out_state_is_per_worker_and_mutable() {
+        // Each worker's state accumulates only its own claims; the sum over
+        // all tasks must still be complete.
+        let total = AtomicUsize::new(0);
+        let out = fan_out_indexed(
+            4,
+            20,
+            || 0usize,
+            |state, i| {
+                *state += 1;
+                total.fetch_add(i, Ordering::Relaxed);
+                *state
+            },
+        );
+        assert_eq!(out.len(), 20);
+        assert_eq!(total.load(Ordering::Relaxed), (0..20).sum::<usize>());
+        // Per-worker counters are all >= 1 and each worker's claims sum to 20.
+        assert!(out.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn queue_priority_then_fifo() {
+        let q: BoundedQueue<&'static str> = BoundedQueue::new(8);
+        q.try_push(0, "low-1").unwrap();
+        q.try_push(5, "high-1").unwrap();
+        q.try_push(0, "low-2").unwrap();
+        q.try_push(5, "high-2").unwrap();
+        q.close();
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec!["high-1", "high-2", "low-1", "low-2"]);
+    }
+
+    #[test]
+    fn queue_rejects_when_full_and_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.try_push(0, 1).unwrap();
+        q.try_push(0, 2).unwrap();
+        match q.try_push(0, 3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        q.close();
+        match q.try_push(9, 4) {
+            Err(PushError::Closed(4)) => {}
+            other => panic!("expected Closed(4), got {other:?}"),
+        }
+        // Backlog still drains after close.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_pop_blocks_until_push_or_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        std::thread::scope(|scope| {
+            let consumer = scope.spawn(|| q.pop());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.try_push(1, 42).unwrap();
+            assert_eq!(consumer.join().unwrap(), Some(42));
+
+            let consumer = scope.spawn(|| q.pop());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.close();
+            assert_eq!(consumer.join().unwrap(), None);
+        });
+    }
+}

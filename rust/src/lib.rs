@@ -43,6 +43,7 @@ pub mod metrics;
 pub mod placer;
 pub mod router;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod train;
 pub mod util;
@@ -66,6 +67,11 @@ USAGE: rdacost <subcommand> [options]
   bench      table1|fig2|table3|table2|micro-pnr|large-models|annotations
              [--folds N] [--trials N] [--seq N] [--blocks N] [--quick]
              [--full-models]
+  serve      [--rate R] [--duration SECS] [--queue-depth N]
+             [--service-workers N] [--zipf S] [--catalog N] [--deadline MS]
+             [--priorities N] [--report-every SECS] [--cost C] [--out FILE]
+             [--expect-no-shed] [--expect-cache-hits]
+                                compile service under generated traffic
   serve-demo [--clients N] [--requests N]          scoring-service demo
 
 Common options:
@@ -98,6 +104,27 @@ Common options:
   --out FILE        gen-data: output dataset path (default results/dataset.bin)
   --dataset FILE    train/eval: input dataset path (default results/dataset.bin)
   --quick           CI-speed profile: small corpus, few epochs, short anneals
+
+Serve options (compile-as-a-service; see README \"Compile service\"):
+  --rate R          target arrivals per second (default 20)
+  --duration SECS   arrival window length (default 10; drains after)
+  --queue-depth N   admission bound: requests beyond N queued are shed
+                    ([service] queue_depth, default 64)
+  --service-workers N  threads draining the request queue ([service]
+                    workers, default 2); --workers still fans out *within*
+                    one compile (serve default: 1)
+  --zipf S          Zipf-repeat traffic over the catalog with exponent S
+                    (hot graphs hit the shared PnR cache); omit for
+                    all-unique graphs
+  --catalog N       distinct graphs in the Zipf catalog (default 32)
+  --deadline MS     per-request deadline; requests that wait longer are
+                    answered with an error instead of compiled (default:
+                    none)
+  --priorities N    cycle request priorities 0..N (default 1 = uniform)
+  --report-every S  seconds between one-line stats reports (0 = quiet)
+  --out FILE        write the final summary JSON here
+  --expect-no-shed  exit nonzero if any request was shed (CI assertion)
+  --expect-cache-hits  exit nonzero unless the shared cache served hits
   --full-models     bench: full 24/48-block BERT/GPT2-XL instead of the
                     4-block truncations (slow; the paper configuration)
 ";
@@ -111,6 +138,7 @@ pub fn cli_main(args: &Args) -> Result<()> {
         Some("eval") => cmd_eval(args),
         Some("compile") => cmd_compile(args),
         Some("bench") => cmd_bench(args),
+        Some("serve") => cmd_serve(args),
         Some("serve-demo") => cmd_serve_demo(args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -367,6 +395,132 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "table2" => experiments::table2::run(&ctx, folds, seq, blocks),
         other => bail!("unknown bench target {other:?}"),
     }
+}
+
+/// The shareable objective for a compile service, per `--cost`.
+fn serve_objective(
+    args: &Args,
+    cfg: &config::RunConfig,
+) -> Result<std::sync::Arc<dyn placer::ObjectiveFactory + Send + Sync>> {
+    Ok(match args.get_or("cost", "heuristic") {
+        "heuristic" => std::sync::Arc::new(cost::HeuristicCost::new()),
+        "oracle" => std::sync::Arc::new(cost::OracleCost::new(cfg.era)),
+        "learned" => {
+            let engine = runtime::engine(&cfg.artifacts_dir)?;
+            let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
+            std::sync::Arc::new(cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?)
+        }
+        other => bail!("unknown --cost {other:?}"),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let rate = args.get_f64("rate", 20.0);
+    let duration = std::time::Duration::from_secs_f64(args.get_f64("duration", 10.0));
+    let zipf = match args.get("zipf") {
+        Some(s) => {
+            Some(s.parse::<f64>().map_err(|e| anyhow::anyhow!("--zipf {s:?}: {e}"))?)
+        }
+        None => None,
+    };
+    let deadline_ms = args.get_u64("deadline", 0);
+    let report_secs = args.get_f64("report-every", 1.0);
+
+    let compile_cfg = compiler::CompileConfig {
+        era: cfg.era,
+        anneal: cfg.anneal.clone(),
+        seed: cfg.seed,
+        // Throughput comes from draining requests concurrently
+        // (--service-workers); per-request subgraph fan-out stays serial
+        // unless --workers asks otherwise.
+        workers: if args.get("workers").is_some() { cfg.workers } else { 1 },
+        restarts: cfg.restarts,
+        cache: cfg.cache,
+        cache_path: cfg.cache_path.clone(),
+    };
+    let serve_cfg = service::ServeConfig {
+        queue_depth: args.get_usize("queue-depth", cfg.service_queue_depth),
+        workers: args.get_usize("service-workers", cfg.service_workers),
+        compile: compile_cfg,
+        report_every: (report_secs > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(report_secs)),
+    };
+    let traffic_cfg = service::traffic::TrafficConfig {
+        rate,
+        duration,
+        zipf,
+        catalog: args.get_usize("catalog", 32),
+        seed: cfg.seed,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        priorities: args.get_usize("priorities", 1).clamp(1, u8::MAX as usize) as u8,
+    };
+
+    let objective = serve_objective(args, &cfg)?;
+    let fabric = std::sync::Arc::new(arch::Fabric::new(cfg.fabric.clone()));
+    let queue_depth = serve_cfg.queue_depth;
+    println!(
+        "serve: {} traffic at {rate:.0} req/s for {:.0}s (queue depth {}, {} worker(s), {})",
+        match zipf {
+            Some(s) => format!("zipf(s={s})"),
+            None => "unique-graph".to_string(),
+        },
+        duration.as_secs_f64(),
+        serve_cfg.queue_depth,
+        serve_cfg.workers,
+        objective.name(),
+    );
+    let svc = service::CompileService::start(fabric, objective, serve_cfg)?;
+    let traffic = service::traffic::run_traffic(&svc, &traffic_cfg);
+    let summary = svc.shutdown()?;
+
+    println!("{}", summary.render());
+    println!(
+        "traffic: {} submitted, {} shed, {} completed, {} expired, {} error(s) \
+         in {:.1}s wall",
+        traffic.submitted,
+        traffic.shed,
+        traffic.completed,
+        traffic.expired,
+        traffic.errors,
+        traffic.wall_ms as f64 / 1e3,
+    );
+    if let Some(out) = args.get("out") {
+        let j = summary.to_json().set(
+            "traffic",
+            util::json::Json::obj()
+                .set("rate", rate)
+                .set("zipf", zipf.unwrap_or(0.0))
+                .set("catalog", traffic_cfg.catalog)
+                .set("submitted", traffic.submitted)
+                .set("shed", traffic.shed)
+                .set("completed", traffic.completed)
+                .set("expired", traffic.expired)
+                .set("errors", traffic.errors)
+                .set("wall_ms", traffic.wall_ms),
+        );
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(out, j.to_pretty())?;
+        println!("summary -> {out}");
+    }
+    if args.flag("expect-no-shed") && summary.shed > 0 {
+        bail!(
+            "expected zero shed requests, got {} (queue depth {queue_depth} too small \
+             for {rate} req/s?)",
+            summary.shed,
+        );
+    }
+    if args.flag("expect-cache-hits") {
+        let hits = summary.cache.map(|c| c.hits()).unwrap_or(0);
+        if hits == 0 {
+            bail!("expected shared-cache hits, got none (cache disabled or traffic all-unique?)");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_serve_demo(args: &Args) -> Result<()> {

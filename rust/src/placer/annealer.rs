@@ -287,7 +287,13 @@ fn anneal_incremental(
             log.evaluations += 1;
             log.score_batches += 1;
 
-            if score > best_score {
+            // Non-finite scores (a poisoned objective returning NaN/±inf)
+            // are rejected outright: a +inf score would otherwise become an
+            // unbeatable best_score/current_score and wedge the walk. The
+            // finite-score RNG draw sequence is unchanged; poisoned scores
+            // skip their Metropolis draw (deliberately — that draw's result
+            // was already vacuous).
+            if score.is_finite() && score > best_score {
                 best_score = score;
                 best = current.clone();
                 best_routing = engine.routing().clone();
@@ -295,7 +301,10 @@ fn anneal_incremental(
             }
 
             let delta_s = score - current_score;
-            let accept = delta_s >= 0.0 || rng.f64() < (delta_s / temp.max(1e-9)).exp();
+            let accept = score.is_finite()
+                && (!current_score.is_finite()
+                    || delta_s >= 0.0
+                    || rng.f64() < (delta_s / temp.max(1e-9)).exp());
             if accept {
                 current_score = score;
                 accepted_now = true;
@@ -341,33 +350,42 @@ fn anneal_incremental(
             log.evaluations += scores.len();
             log.score_batches += 1;
 
-            // Track the best candidate *evaluated*, even if selection or
-            // the Metropolis step discards it below — fleet evaluations are
-            // never wasted.
-            let mut fleet_best = 0usize;
+            // Track the best *finite* candidate evaluated, even if
+            // selection or the Metropolis step discards it below — fleet
+            // evaluations are never wasted. Non-finite scores are excluded:
+            // a +inf best_score would be unbeatable forever.
+            let mut fleet_best: Option<usize> = None;
             for (i, &s) in scores.iter().enumerate() {
-                if s > scores[fleet_best] {
-                    fleet_best = i;
+                if s.is_finite() && fleet_best.map_or(true, |b| s > scores[b]) {
+                    fleet_best = Some(i);
                 }
             }
-            if scores[fleet_best] > best_score {
-                best_score = scores[fleet_best];
-                best = candidates[fleet_best].0.clone();
-                best_routing = candidates[fleet_best].1.clone();
-                log.trace.push((it + 1, best_score));
+            if let Some(fb) = fleet_best {
+                if scores[fb] > best_score {
+                    best_score = scores[fb];
+                    best = candidates[fb].0.clone();
+                    best_routing = candidates[fb].1.clone();
+                    log.trace.push((it + 1, best_score));
+                }
             }
 
-            let chosen = boltzmann_select(&scores, temp, rng);
-            let delta_s = scores[chosen] - current_score;
-            let accept = delta_s >= 0.0 || rng.f64() < (delta_s / temp.max(1e-9)).exp();
-            if accept {
-                // Re-apply the winning move: deterministic A* from the same
-                // state reproduces exactly the routes that were scored.
-                apply(&mut current, &moves[chosen]);
-                engine.apply_move(fabric, graph, &current, &moved_nodes(&moves[chosen]))?;
-                debug_assert_eq!(engine.routing().routes, candidates[chosen].1.routes);
-                current_score = scores[chosen];
-                accepted_now = true;
+            // `None` means no candidate scored finite: reject the whole
+            // fleet and cool — don't let a NaN/±inf walk into the state.
+            if let Some(chosen) = boltzmann_select(&scores, temp, rng) {
+                let delta_s = scores[chosen] - current_score;
+                let accept = !current_score.is_finite()
+                    || delta_s >= 0.0
+                    || rng.f64() < (delta_s / temp.max(1e-9)).exp();
+                if accept {
+                    // Re-apply the winning move: deterministic A* from the
+                    // same state reproduces exactly the routes that were
+                    // scored.
+                    apply(&mut current, &moves[chosen]);
+                    engine.apply_move(fabric, graph, &current, &moved_nodes(&moves[chosen]))?;
+                    debug_assert_eq!(engine.routing().routes, candidates[chosen].1.routes);
+                    current_score = scores[chosen];
+                    accepted_now = true;
+                }
             }
         }
 
@@ -470,48 +488,61 @@ fn anneal_full_reroute(
         log.evaluations += scores.len();
         log.score_batches += 1;
 
-        // Track the best candidate *evaluated*, even if selection or the
-        // Metropolis step discards it below — fleet evaluations are never
-        // wasted. (At K=1 this records exactly the accepted-improving moves
-        // the sequential annealer records: a single candidate beating
-        // best_score necessarily beats current_score, so it is accepted.)
-        let mut fleet_best = 0usize;
+        // Track the best *finite* candidate evaluated, even if selection or
+        // the Metropolis step discards it below — fleet evaluations are
+        // never wasted. Non-finite scores are excluded: a +inf best_score
+        // would be unbeatable forever. (At K=1 this records exactly the
+        // accepted-improving moves the sequential annealer records: a
+        // single candidate beating best_score necessarily beats
+        // current_score, so it is accepted.)
+        let mut fleet_best: Option<usize> = None;
         for (i, &s) in scores.iter().enumerate() {
-            if s > scores[fleet_best] {
-                fleet_best = i;
+            if s.is_finite() && fleet_best.map_or(true, |b| s > scores[b]) {
+                fleet_best = Some(i);
             }
         }
-        if scores[fleet_best] > best_score {
-            best_score = scores[fleet_best];
-            best = candidates[fleet_best].0.clone();
-            best_routing = candidates[fleet_best].1.clone();
-            log.trace.push((it + 1, best_score));
+        if let Some(fb) = fleet_best {
+            if scores[fb] > best_score {
+                best_score = scores[fb];
+                best = candidates[fb].0.clone();
+                best_routing = candidates[fb].1.clone();
+                log.trace.push((it + 1, best_score));
+            }
         }
 
         // Boltzmann selection over the fleet (degenerate — and RNG-free —
         // for a single candidate), then Metropolis accept vs the current
-        // state, exactly the classic criterion.
+        // state, exactly the classic criterion. `None` means every
+        // candidate scored non-finite: reject the fleet and cool.
         let chosen = if candidates.len() == 1 {
-            0
+            if scores[0].is_finite() {
+                Some(0)
+            } else {
+                None
+            }
         } else {
             boltzmann_select(&scores, temp, rng)
         };
-        let delta = scores[chosen] - current_score;
-        let accept = delta >= 0.0 || rng.f64() < (delta / temp.max(1e-9)).exp();
-        if accept {
-            current = candidates.swap_remove(chosen).0;
-            current_score = scores[chosen];
-            log.accepted += 1;
-            accepted_since_reroute += 1;
-            if accepted_since_reroute >= params.reroute_every {
-                // Clean re-route (sequential routing is order-dependent;
-                // this keeps congestion estimates honest). At
-                // reroute_every == 1 this runs after every accepted move —
-                // the historical behavior this path preserves.
-                let clean = route_all_with(fabric, graph, &current, params.router)?;
-                current_score = objective.score(graph, fabric, &current, &clean);
-                log.evaluations += 1;
-                accepted_since_reroute = 0;
+        if let Some(chosen) = chosen {
+            let delta = scores[chosen] - current_score;
+            let accept = !current_score.is_finite()
+                || delta >= 0.0
+                || rng.f64() < (delta / temp.max(1e-9)).exp();
+            if accept {
+                current = candidates.swap_remove(chosen).0;
+                current_score = scores[chosen];
+                log.accepted += 1;
+                accepted_since_reroute += 1;
+                if accepted_since_reroute >= params.reroute_every {
+                    // Clean re-route (sequential routing is order-dependent;
+                    // this keeps congestion estimates honest). At
+                    // reroute_every == 1 this runs after every accepted move
+                    // — the historical behavior this path preserves.
+                    let clean = route_all_with(fabric, graph, &current, params.router)?;
+                    current_score = objective.score(graph, fabric, &current, &clean);
+                    log.evaluations += 1;
+                    accepted_since_reroute = 0;
+                }
             }
         }
         temp *= cool;
@@ -563,26 +594,52 @@ fn route_candidates(
 }
 
 /// Sample one candidate index with probability ∝ exp(score_i / temp)
-/// (softmax shifted by the max score for numerical stability). Consumes
-/// exactly one RNG draw; only called for fleets of 2+.
-fn boltzmann_select(scores: &[f64], temp: f64, rng: &mut Rng) -> usize {
+/// (softmax shifted by the max **finite** score for numerical stability).
+/// Only called for fleets of 2+.
+///
+/// Non-finite scores are skipped deterministically — a NaN used to poison
+/// the whole softmax (NaN total → NaN roll → silently select the last
+/// index), and a +inf candidate was *always* selected and then
+/// unconditionally accepted, wedging `current_score` at +inf for the rest
+/// of the walk. Returns `None` (consuming **no** RNG draw) when no
+/// candidate is finite, so callers reject the fleet. On an all-finite fleet
+/// this consumes exactly one RNG draw and reproduces the historical
+/// selection bit for bit (pinned by the route-equivalence tests).
+fn boltzmann_select(scores: &[f64], temp: f64, rng: &mut Rng) -> Option<usize> {
     let t = temp.max(1e-9);
-    let max_s = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let max_s = scores
+        .iter()
+        .cloned()
+        .filter(|s| s.is_finite())
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !max_s.is_finite() {
+        return None;
+    }
     let mut weights = Vec::with_capacity(scores.len());
     let mut total = 0.0;
-    for &s in scores {
-        let w = ((s - max_s) / t).exp();
+    let mut last_finite = 0usize;
+    for (i, &s) in scores.iter().enumerate() {
+        let w = if s.is_finite() {
+            last_finite = i;
+            ((s - max_s) / t).exp()
+        } else {
+            0.0
+        };
         total += w;
         weights.push(w);
     }
     let mut roll = rng.f64() * total;
     for (i, &w) in weights.iter().enumerate() {
-        if roll < w {
-            return i;
+        if w > 0.0 {
+            if roll < w {
+                return Some(i);
+            }
+            roll -= w;
         }
-        roll -= w;
     }
-    weights.len() - 1
+    // Float round-off spilled past the end: take the last finite candidate
+    // (== the last index on an all-finite fleet, the historical fallback).
+    Some(last_finite)
 }
 
 /// Propose up to `k` **distinct** moves from the current state. For k=1 this
@@ -1054,15 +1111,147 @@ mod tests {
         let mut rng = Rng::new(5);
         let scores = [0.10, 0.90, 0.15];
         // Cold: essentially always the argmax.
-        let cold: Vec<usize> = (0..200).map(|_| boltzmann_select(&scores, 1e-6, &mut rng)).collect();
+        let cold: Vec<usize> =
+            (0..200).map(|_| boltzmann_select(&scores, 1e-6, &mut rng).unwrap()).collect();
         assert!(cold.iter().all(|&i| i == 1), "cold selection must be greedy");
         // Hot: every candidate gets sampled.
-        let hot: Vec<usize> = (0..600).map(|_| boltzmann_select(&scores, 100.0, &mut rng)).collect();
+        let hot: Vec<usize> =
+            (0..600).map(|_| boltzmann_select(&scores, 100.0, &mut rng).unwrap()).collect();
         for want in 0..scores.len() {
             assert!(hot.contains(&want), "hot selection never chose {want}");
         }
         // Indices always in range.
         assert!(hot.iter().all(|&i| i < scores.len()));
+    }
+
+    #[test]
+    fn boltzmann_select_skips_non_finite_candidates() {
+        let mut rng = Rng::new(6);
+        assert_eq!(boltzmann_select(&[f64::NAN, f64::NAN], 1.0, &mut rng), None);
+        assert_eq!(boltzmann_select(&[f64::INFINITY, f64::NEG_INFINITY], 1.0, &mut rng), None);
+
+        // An all-non-finite fleet consumes no RNG draw: the stream is
+        // exactly where it was.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(boltzmann_select(&[f64::NAN, f64::INFINITY], 1.0, &mut a), None);
+        assert_eq!(a.next_u64(), b.next_u64());
+
+        // The single finite candidate always wins, at any temperature.
+        for temp in [1e-6, 1.0, 100.0] {
+            for seed in 0..20 {
+                let mut rng = Rng::new(seed);
+                assert_eq!(
+                    boltzmann_select(&[f64::NAN, 5.0, f64::NAN], temp, &mut rng),
+                    Some(1)
+                );
+            }
+        }
+
+        // Mixed fleet: only finite indices are ever selected (a +inf used
+        // to be selected *always*; a NaN hijacked the softmax fallback),
+        // and at high temperature both finite candidates get sampled.
+        let scores = [f64::NAN, 1.0, f64::INFINITY, 2.0];
+        let mut rng = Rng::new(8);
+        let picks: Vec<usize> =
+            (0..400).map(|_| boltzmann_select(&scores, 50.0, &mut rng).unwrap()).collect();
+        assert!(picks.iter().all(|&i| i == 1 || i == 3), "selected a non-finite candidate");
+        assert!(picks.contains(&1) && picks.contains(&3));
+    }
+
+    /// Objective that always returns the same poisoned score.
+    struct Poisoned {
+        score: f64,
+    }
+
+    impl Objective for Poisoned {
+        fn score(&self, _: &Dfg, _: &Fabric, _: &Placement, _: &Routing) -> f64 {
+            self.score
+        }
+
+        fn name(&self) -> &'static str {
+            "poisoned"
+        }
+    }
+
+    #[test]
+    fn non_finite_objective_rejects_cleanly_instead_of_wedging() {
+        // A cost model gone bad (NaN / +inf on every score) must leave the
+        // annealer functional: every poisoned candidate is rejected
+        // deterministically. Previously a single +inf candidate was always
+        // selected and then unconditionally accepted (delta = +inf >= 0),
+        // wedging current_score at +inf for the rest of the walk.
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        for bad in [f64::NAN, f64::INFINITY] {
+            // Covers: incremental single-candidate, incremental fleet,
+            // full-reroute single-candidate, full-reroute fleet.
+            for (k, reroute_every) in [(1usize, 25usize), (8, 25), (1, 1), (8, 1)] {
+                let params = AnnealParams {
+                    iterations: 60,
+                    proposals_per_step: k,
+                    reroute_every,
+                    ..AnnealParams::default()
+                };
+                let mut rng = Rng::new(51);
+                let (best, routing, log) =
+                    anneal(&g, &f, &Poisoned { score: bad }, &params, &mut rng).unwrap();
+                best.validate(&g, &f).unwrap();
+                routing.verify_aggregates(&g).unwrap();
+                assert_eq!(log.accepted, 0, "accepted a {bad} score (K={k})");
+                assert_eq!(log.trace.len(), 1, "best advanced on {bad} (K={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn intermittent_nan_scores_do_not_stall_the_walk() {
+        // A cost model that intermittently emits NaN: poisoned candidates
+        // are rejected, finite ones keep the walk alive and the reported
+        // best stays finite.
+        use std::cell::Cell;
+        struct Flaky {
+            inner: Oracle,
+            calls: Cell<u64>,
+        }
+        impl Objective for Flaky {
+            fn score(
+                &self,
+                g: &Dfg,
+                f: &Fabric,
+                p: &Placement,
+                r: &Routing,
+            ) -> f64 {
+                let n = self.calls.get();
+                self.calls.set(n + 1);
+                if n % 3 == 2 {
+                    f64::NAN
+                } else {
+                    self.inner.score(g, f, p, r)
+                }
+            }
+
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+        }
+
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        for (k, reroute_every) in [(1usize, 25usize), (4, 25), (4, 1)] {
+            let params = AnnealParams {
+                iterations: 150,
+                proposals_per_step: k,
+                reroute_every,
+                ..AnnealParams::default()
+            };
+            let flaky = Flaky { inner: Oracle { era: Era::Past }, calls: Cell::new(0) };
+            let mut rng = Rng::new(61);
+            let (best, _, log) = anneal(&g, &f, &flaky, &params, &mut rng).unwrap();
+            best.validate(&g, &f).unwrap();
+            assert!(log.accepted > 0, "K={k}: flaky objective stalled the walk");
+            assert!(log.best_score.is_finite(), "K={k}: non-finite best: {log:?}");
+        }
     }
 
     #[test]

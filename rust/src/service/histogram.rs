@@ -1,0 +1,262 @@
+//! HDR-style latency histogram: fixed memory, bounded relative error.
+//!
+//! Values are recorded in microseconds into log-linear buckets — exact below
+//! 64µs, then 32 sub-buckets per power of two — giving ≤ 1/32 (~3%) relative
+//! error per recorded value across the full `u64` range with a flat
+//! `Vec<u64>` of under 2k counters. Quantiles report each bucket's **lower
+//! bound**, so p50/p95/p99 never over-state latency; the tracked exact
+//! maximum caps the top bucket.
+//!
+//! No external deps (hdrhistogram is not vendored in this environment); the
+//! scheme is the standard value → `(exponent, mantissa-slice)` indexing that
+//! HDR-class histograms use.
+
+use std::time::Duration;
+
+/// Sub-buckets per power-of-two range (and the exact-value region size).
+const LINEAR: u64 = 32;
+/// Bucket count covering the full u64 microsecond range: 64 exact buckets
+/// plus 32 per exponent 1..=58.
+const BUCKETS: usize = (2 * LINEAR as usize) + 58 * LINEAR as usize;
+
+/// Index of the bucket containing `v` (µs).
+fn bucket_of(v: u64) -> usize {
+    if v < 2 * LINEAR {
+        return v as usize;
+    }
+    // bitlen >= 7 here; e >= 1. Values in [2^(e+5), 2^(e+6)) share exponent
+    // e and split into 32 linear sub-buckets of width 2^e.
+    let bitlen = 64 - v.leading_zeros() as u64;
+    let e = bitlen - 6;
+    (((e + 1) * LINEAR) + ((v >> e) & (LINEAR - 1))) as usize
+}
+
+/// Lower bound (µs) of bucket `b` — the value `quantile_us` reports.
+fn bucket_lower(b: usize) -> u64 {
+    let b = b as u64;
+    if b < 2 * LINEAR {
+        return b;
+    }
+    let e = b / LINEAR - 1;
+    let rem = b % LINEAR;
+    (LINEAR + rem) << e
+}
+
+/// A latency histogram in microseconds. `merge` combines worker-local
+/// histograms; all quantities are deterministic functions of the recorded
+/// multiset.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u128,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in µs: the lower bound of the bucket
+    /// holding the `ceil(q·count)`-th smallest recorded value (capped by the
+    /// exact maximum). 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cumulative = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cumulative += c;
+            if cumulative >= target {
+                return bucket_lower(b).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count,
+            p50_us: self.quantile_us(0.50),
+            p95_us: self.quantile_us(0.95),
+            p99_us: self.quantile_us(0.99),
+            mean_us: self.mean_us(),
+            max_us: self.max_us,
+        }
+    }
+}
+
+/// Point-in-time quantile snapshot, carried in the service summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+}
+
+impl HistogramSummary {
+    pub fn p50_ms(&self) -> f64 {
+        self.p50_us as f64 / 1e3
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.p95_us as f64 / 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.p99_us as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < 1 << 40 {
+            let b = bucket_of(v);
+            assert!(b < BUCKETS, "value {v} -> bucket {b} out of range");
+            assert!(b >= prev, "bucket index regressed at value {v}");
+            prev = b;
+            v = (v * 17 / 16) + 1;
+        }
+        assert!(bucket_of(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn bucket_lower_bound_brackets_values() {
+        for v in [0, 1, 63, 64, 65, 127, 128, 1000, 123_456, 1 << 30, u64::MAX / 2] {
+            let b = bucket_of(v);
+            let lo = bucket_lower(b);
+            assert!(lo <= v, "lower bound {lo} above value {v}");
+            // Relative error bound: the bucket spans at most v/32 above lo.
+            if v >= 2 * LINEAR {
+                assert!(
+                    (v - lo) as f64 <= v as f64 / LINEAR as f64 + 1.0,
+                    "bucket too wide at {v}: lower {lo}"
+                );
+            } else {
+                assert_eq!(lo, v, "exact region must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for us in [0u64, 1, 5, 42, 63] {
+            h.record_us(us);
+        }
+        assert_eq!(h.quantile_us(0.0), 0);
+        assert_eq!(h.quantile_us(0.5), 5);
+        assert_eq!(h.quantile_us(1.0), 63);
+        assert_eq!(h.max_us(), 63);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn quantiles_of_uniform_range() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        let p50 = h.quantile_us(0.50) as f64;
+        let p99 = h.quantile_us(0.99) as f64;
+        // Lower-bound reporting: within one bucket width below the true
+        // quantile, never above it.
+        assert!(p50 <= 500.0 && p50 >= 500.0 * (1.0 - 1.0 / 16.0), "p50 {p50}");
+        assert!(p99 <= 990.0 && p99 >= 990.0 * (1.0 - 1.0 / 16.0), "p99 {p99}");
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for us in [3u64, 70, 900, 12_000, 5] {
+            a.record_us(us);
+            all.record_us(us);
+        }
+        for us in [44u64, 800_000, 17] {
+            b.record_us(us);
+            all.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.max_us(), all.max_us());
+        assert_eq!(a.mean_us(), all.mean_us());
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile_us(q), all.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        let s = h.summary();
+        assert_eq!((s.count, s.p50_us, s.max_us), (0, 0, 0));
+    }
+
+    #[test]
+    fn duration_recording_truncates_to_micros() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(250));
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max_us(), 3000);
+        assert!(h.quantile_us(0.5) >= 248 && h.quantile_us(0.5) <= 250);
+    }
+}

@@ -1,0 +1,609 @@
+//! Compile-as-a-service: a persistent, bounded-queue compile server.
+//!
+//! [`CompileService`] wraps a [`CompileSession`] behind a
+//! [`BoundedQueue`](crate::coordinator::BoundedQueue) drained by a pool of
+//! worker threads, turning one-shot compiles into a long-running server:
+//!
+//! * **Admission control.** The request queue is bounded; when it is full,
+//!   [`CompileService::submit`] fails *immediately* with
+//!   [`ServeError::QueueFull`] instead of buffering without limit. Load
+//!   shedding is the caller's signal to back off.
+//! * **Priority + deadlines.** Requests carry a priority (higher drains
+//!   first; FIFO within a priority) and an optional deadline measured from
+//!   submission. A request whose deadline lapses while queued is answered
+//!   with [`ServeError::DeadlineExpired`] without burning compile time on
+//!   an answer nobody is waiting for.
+//! * **Shared PnR cache.** All workers compile through
+//!   [`CompileSession::compile_cached`] against **one** cache built at
+//!   startup, so a graph any request compiled before replays from the cache
+//!   for every later request. The cache context is a pure function of
+//!   (fabric, settings, objective), which keeps the shared cache exactly as
+//!   safe as per-compile caches; persistence (if configured) happens once,
+//!   at shutdown, through the merge-on-save path.
+//! * **Latency accounting.** Queue wait and end-to-end latency feed
+//!   fixed-memory [`LatencyHistogram`]s; [`CompileService::shutdown`]
+//!   returns a [`ServeSummary`] with p50/p95/p99, throughput, shed/expired
+//!   counts, and cache counters, serializable via [`ServeSummary::to_json`].
+//!
+//! Results are bit-identical to direct [`CompileSession::compile`] calls —
+//! the service changes *when* and *where* work runs, never *what* PnR
+//! produces (pinned by `tests/compile_service.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::Fabric;
+use crate::cache::{CacheStatsSnapshot, PnrCache};
+use crate::compiler::{CompileConfig, CompileReport, CompileSession};
+use crate::coordinator::{BoundedQueue, PushError};
+use crate::dfg::Dfg;
+use crate::placer::ObjectiveFactory;
+use crate::util::json::Json;
+
+pub mod histogram;
+pub mod traffic;
+
+pub use histogram::{HistogramSummary, LatencyHistogram};
+
+/// Service settings, orthogonal to the per-request [`CompileConfig`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Admission-control bound: requests beyond this many queued are shed.
+    pub queue_depth: usize,
+    /// Worker threads draining the queue; each request compiles on one
+    /// worker (with `compile.workers` sub-workers for its subgraphs —
+    /// services usually keep that at 1 and scale via `workers` here).
+    pub workers: usize,
+    /// Per-request compile settings. `cache`/`cache_path` govern the single
+    /// shared cache the service builds at startup.
+    pub compile: CompileConfig,
+    /// Emit a one-line stats report at this interval (`None`: quiet).
+    pub report_every: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 64,
+            workers: 2,
+            compile: CompileConfig::default(),
+            report_every: None,
+        }
+    }
+}
+
+/// One compile request.
+#[derive(Debug, Clone)]
+pub struct CompileRequest {
+    pub graph: Dfg,
+    /// Higher drains first; equal priorities drain FIFO.
+    pub priority: u8,
+    /// Answered with [`ServeError::DeadlineExpired`] if still queued this
+    /// long after submission. `None`: wait indefinitely.
+    pub deadline: Option<Duration>,
+}
+
+impl CompileRequest {
+    pub fn new(graph: Dfg) -> CompileRequest {
+        CompileRequest { graph, priority: 0, deadline: None }
+    }
+
+    pub fn priority(mut self, priority: u8) -> CompileRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> CompileRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Why the service did not (or could not) produce a report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Shed at admission: the queue already held `depth` requests.
+    QueueFull { depth: usize },
+    /// Spent its whole deadline waiting in the queue; never compiled.
+    DeadlineExpired { waited_ms: u64 },
+    /// The service is shutting down (or gone) and will not answer.
+    ShutDown,
+    /// The compile itself failed; the rendered error chain.
+    Compile(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth } => {
+                write!(f, "compile queue full ({depth} requests); request shed, try again later")
+            }
+            ServeError::DeadlineExpired { waited_ms } => {
+                write!(f, "deadline expired after {waited_ms}ms in queue; compile skipped")
+            }
+            ServeError::ShutDown => write!(f, "compile service is shut down"),
+            ServeError::Compile(msg) => write!(f, "compile failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A finished request: the compile outcome plus its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct CompileResponse {
+    pub result: std::result::Result<CompileReport, ServeError>,
+    /// Submission → dequeue (admission to a worker).
+    pub queue_wait: Duration,
+    /// Submission → reply (queue wait + compile, or just queue wait for a
+    /// request answered without compiling).
+    pub total_latency: Duration,
+    /// Global completion tick: strictly increases in the order workers
+    /// finished requests. Exposes drain order to tests and clients.
+    pub finished_seq: u64,
+}
+
+/// Handle to one in-flight request; redeem with [`CompileTicket::wait`].
+pub struct CompileTicket {
+    rx: mpsc::Receiver<CompileResponse>,
+}
+
+impl CompileTicket {
+    /// Block until the service answers. `Err(ShutDown)` if it never will
+    /// (service dropped with the request still queued).
+    pub fn wait(self) -> std::result::Result<CompileResponse, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::ShutDown)
+    }
+
+    /// Non-blocking probe; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<CompileResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct QueuedRequest {
+    graph: Dfg,
+    deadline: Option<Duration>,
+    submitted: Instant,
+    reply: mpsc::Sender<CompileResponse>,
+}
+
+/// Counters + histograms shared by workers, the reporter, and the summary.
+struct ServeStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    compile_errors: AtomicU64,
+    queue_wait: Mutex<LatencyHistogram>,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl ServeStats {
+    fn new() -> ServeStats {
+        ServeStats {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            compile_errors: AtomicU64::new(0),
+            queue_wait: Mutex::new(LatencyHistogram::new()),
+            latency: Mutex::new(LatencyHistogram::new()),
+        }
+    }
+
+    fn record_queue_wait(&self, d: Duration) {
+        // A poisoned histogram lock only loses metrics, never answers.
+        if let Ok(mut h) = self.queue_wait.lock() {
+            h.record(d);
+        }
+    }
+
+    fn record_latency(&self, d: Duration) {
+        if let Ok(mut h) = self.latency.lock() {
+            h.record(d);
+        }
+    }
+}
+
+struct Shared {
+    fabric: Arc<Fabric>,
+    objective: Arc<dyn ObjectiveFactory + Send + Sync>,
+    compile_cfg: CompileConfig,
+    queue: BoundedQueue<QueuedRequest>,
+    cache: Option<PnrCache>,
+    stats: ServeStats,
+    finished_seq: AtomicU64,
+}
+
+/// The running service. Submit from any number of threads; drop or call
+/// [`CompileService::shutdown`] to drain and stop.
+pub struct CompileService {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    reporter: Option<(Arc<(Mutex<bool>, Condvar)>, thread::JoinHandle<()>)>,
+    started: Instant,
+    finished: bool,
+}
+
+impl CompileService {
+    /// Build the shared cache, spawn `cfg.workers` drain threads (and the
+    /// stats reporter if configured), and start accepting requests.
+    pub fn start(
+        fabric: Arc<Fabric>,
+        objective: Arc<dyn ObjectiveFactory + Send + Sync>,
+        cfg: ServeConfig,
+    ) -> Result<CompileService> {
+        let cache = CompileSession::new(&fabric, cfg.compile.clone())
+            .build_cache(objective.as_ref())?;
+        let shared = Arc::new(Shared {
+            fabric,
+            objective,
+            compile_cfg: cfg.compile.clone(),
+            queue: BoundedQueue::new(cfg.queue_depth),
+            cache,
+            stats: ServeStats::new(),
+            finished_seq: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("compile-serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .map_err(|e| anyhow!("spawning service worker {i}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let reporter = cfg.report_every.map(|every| {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::new((Mutex::new(false), Condvar::new()));
+            let flag = Arc::clone(&stop);
+            let handle = thread::spawn(move || reporter_loop(&shared, &flag, every));
+            (stop, handle)
+        });
+        Ok(CompileService {
+            shared,
+            workers,
+            reporter,
+            started: Instant::now(),
+            finished: false,
+        })
+    }
+
+    /// Admit one request. On success the returned ticket resolves when a
+    /// worker answers; on a full queue the request is shed here and now.
+    pub fn submit(
+        &self,
+        req: CompileRequest,
+    ) -> std::result::Result<CompileTicket, ServeError> {
+        self.shared.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let queued = QueuedRequest {
+            graph: req.graph,
+            deadline: req.deadline,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        match self.shared.queue.try_push(req.priority, queued) {
+            Ok(()) => Ok(CompileTicket { rx }),
+            Err(PushError::Full(_)) => {
+                self.shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::QueueFull { depth: self.shared.queue.capacity() })
+            }
+            Err(PushError::Closed(_)) => Err(ServeError::ShutDown),
+        }
+    }
+
+    /// Requests currently waiting for a worker.
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Cumulative cache counters across every request so far (`None` when
+    /// the compile cache is disabled).
+    pub fn cache_snapshot(&self) -> Option<CacheStatsSnapshot> {
+        self.shared.cache.as_ref().map(|c| c.snapshot())
+    }
+
+    /// Stop admitting, drain the backlog, join the workers, persist the
+    /// cache (if configured), and return the final tally.
+    pub fn shutdown(mut self) -> Result<ServeSummary> {
+        self.stop_threads();
+        if let Some(cache) = &self.shared.cache {
+            cache.save()?;
+        }
+        Ok(self.summarize())
+    }
+
+    /// Point-in-time summary without stopping the service (used by the
+    /// reporter and tests; `uptime`/`req_per_sec` reflect time so far).
+    pub fn summarize(&self) -> ServeSummary {
+        let stats = &self.shared.stats;
+        let uptime = self.started.elapsed().as_secs_f64();
+        let completed = stats.completed.load(Ordering::Relaxed);
+        let latency = stats
+            .latency
+            .lock()
+            .map(|h| h.summary())
+            .unwrap_or_else(|_| LatencyHistogram::new().summary());
+        let queue_wait = stats
+            .queue_wait
+            .lock()
+            .map(|h| h.summary())
+            .unwrap_or_else(|_| LatencyHistogram::new().summary());
+        ServeSummary {
+            uptime_seconds: uptime,
+            submitted: stats.submitted.load(Ordering::Relaxed),
+            completed,
+            shed: stats.shed.load(Ordering::Relaxed),
+            expired: stats.expired.load(Ordering::Relaxed),
+            compile_errors: stats.compile_errors.load(Ordering::Relaxed),
+            req_per_sec: if uptime > 0.0 { completed as f64 / uptime } else { 0.0 },
+            latency,
+            queue_wait,
+            cache: self.cache_snapshot(),
+        }
+    }
+
+    fn stop_threads(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        // close() rejects new pushes but lets pop() drain what is queued,
+        // so every admitted request still gets an answer.
+        self.shared.queue.close();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        if let Some((stop, handle)) = self.reporter.take() {
+            if let Ok(mut flag) = stop.0.lock() {
+                *flag = true;
+            }
+            stop.1.notify_all();
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for CompileService {
+    fn drop(&mut self) {
+        // Drain-and-join even when the caller skips shutdown(); the cache
+        // is not saved on this path (saving can fail, Drop cannot report).
+        self.stop_threads();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(req) = shared.queue.pop() {
+        let waited = req.submitted.elapsed();
+        shared.stats.record_queue_wait(waited);
+        let result = match req.deadline {
+            Some(deadline) if waited >= deadline => {
+                shared.stats.expired.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::DeadlineExpired { waited_ms: waited.as_millis() as u64 })
+            }
+            _ => {
+                let session = CompileSession::new(&shared.fabric, shared.compile_cfg.clone());
+                match session.compile_cached(
+                    &req.graph,
+                    shared.objective.as_ref(),
+                    shared.cache.as_ref(),
+                ) {
+                    Ok(report) => {
+                        shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                        Ok(report)
+                    }
+                    Err(e) => {
+                        shared.stats.compile_errors.fetch_add(1, Ordering::Relaxed);
+                        Err(ServeError::Compile(format!("{e:#}")))
+                    }
+                }
+            }
+        };
+        let total_latency = req.submitted.elapsed();
+        if result.is_ok() {
+            // Only served compiles shape the latency distribution; expired
+            // and failed requests are counted, not mixed into quantiles.
+            shared.stats.record_latency(total_latency);
+        }
+        let finished_seq = shared.finished_seq.fetch_add(1, Ordering::SeqCst);
+        // A caller that dropped its ticket just doesn't read the answer.
+        let _ = req.reply.send(CompileResponse {
+            result,
+            queue_wait: waited,
+            total_latency,
+            finished_seq,
+        });
+    }
+}
+
+fn reporter_loop(shared: &Shared, stop: &(Mutex<bool>, Condvar), every: Duration) {
+    let Ok(mut stopped) = stop.0.lock() else { return };
+    loop {
+        let Ok((guard, _)) = stop.1.wait_timeout(stopped, every) else { return };
+        stopped = guard;
+        if *stopped {
+            return;
+        }
+        let stats = &shared.stats;
+        let latency = stats
+            .latency
+            .lock()
+            .map(|h| h.summary())
+            .unwrap_or_else(|_| LatencyHistogram::new().summary());
+        let cache_line = shared
+            .cache
+            .as_ref()
+            .map(|c| format!(" cache_hit_rate={:.2}", c.snapshot().hit_rate()))
+            .unwrap_or_default();
+        eprintln!(
+            "serve: queued={} completed={} shed={} expired={} p50={:.1}ms p99={:.1}ms{}",
+            shared.queue.len(),
+            stats.completed.load(Ordering::Relaxed),
+            stats.shed.load(Ordering::Relaxed),
+            stats.expired.load(Ordering::Relaxed),
+            latency.p50_ms(),
+            latency.p99_ms(),
+            cache_line,
+        );
+    }
+}
+
+/// Final service tally: volume, outcome counts, latency quantiles, cache.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub uptime_seconds: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub compile_errors: u64,
+    /// Completed compiles per second of uptime.
+    pub req_per_sec: f64,
+    /// End-to-end latency of *completed* compiles.
+    pub latency: HistogramSummary,
+    /// Queue wait of every dequeued request (including expired ones).
+    pub queue_wait: HistogramSummary,
+    pub cache: Option<CacheStatsSnapshot>,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("uptime_seconds", self.uptime_seconds)
+            .set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("shed", self.shed)
+            .set("expired", self.expired)
+            .set("compile_errors", self.compile_errors)
+            .set("req_per_sec", self.req_per_sec)
+            .set(
+                "latency_ms",
+                Json::obj()
+                    .set("count", self.latency.count)
+                    .set("p50", self.latency.p50_ms())
+                    .set("p95", self.latency.p95_ms())
+                    .set("p99", self.latency.p99_ms())
+                    .set("mean", self.latency.mean_us / 1e3)
+                    .set("max", self.latency.max_us as f64 / 1e3),
+            )
+            .set(
+                "queue_wait_ms",
+                Json::obj()
+                    .set("count", self.queue_wait.count)
+                    .set("p50", self.queue_wait.p50_ms())
+                    .set("p95", self.queue_wait.p95_ms())
+                    .set("p99", self.queue_wait.p99_ms()),
+            );
+        if let Some(c) = &self.cache {
+            j = j.set(
+                "cache",
+                Json::obj()
+                    .set("lookups", c.lookups())
+                    .set("hits", c.hits())
+                    .set("hit_rate", c.hit_rate())
+                    .set("inserts", c.inserts),
+            );
+        }
+        j
+    }
+
+    /// One-line human rendering for CLI output.
+    pub fn render(&self) -> String {
+        let cache_line = self
+            .cache
+            .map(|c| format!(", cache hit rate {:.1}%", 100.0 * c.hit_rate()))
+            .unwrap_or_default();
+        format!(
+            "{} completed / {} submitted ({} shed, {} expired, {} failed) in {:.1}s — \
+             {:.1} req/s, p50 {:.1}ms, p95 {:.1}ms, p99 {:.1}ms{}",
+            self.completed,
+            self.submitted,
+            self.shed,
+            self.expired,
+            self.compile_errors,
+            self.uptime_seconds,
+            self.req_per_sec,
+            self.latency.p50_ms(),
+            self.latency.p95_ms(),
+            self.latency.p99_ms(),
+            cache_line,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::cost::HeuristicCost;
+    use crate::dfg::builders;
+
+    fn quick_cfg() -> CompileConfig {
+        CompileConfig {
+            anneal: crate::placer::AnnealParams {
+                iterations: 60,
+                ..crate::placer::AnnealParams::default()
+            },
+            ..CompileConfig::default()
+        }
+    }
+
+    #[test]
+    fn serves_a_single_request_end_to_end() {
+        let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+        let objective = Arc::new(HeuristicCost::new());
+        let svc = CompileService::start(
+            fabric,
+            objective,
+            ServeConfig { queue_depth: 4, workers: 1, compile: quick_cfg(), report_every: None },
+        )
+        .expect("service start");
+        let ticket = svc.submit(CompileRequest::new(builders::mlp(4, &[16, 16]))).expect("admit");
+        let resp = ticket.wait().expect("reply");
+        let report = resp.result.expect("compile ok");
+        assert!(report.total_ii > 0.0);
+        assert!(resp.total_latency >= resp.queue_wait);
+        let summary = svc.shutdown().expect("shutdown");
+        assert_eq!(summary.completed, 1);
+        assert_eq!(summary.submitted, 1);
+        assert_eq!(summary.shed, 0);
+        assert_eq!(summary.latency.count, 1);
+    }
+
+    #[test]
+    fn drop_without_shutdown_drains_admitted_requests() {
+        let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+        let objective = Arc::new(HeuristicCost::new());
+        let svc = CompileService::start(
+            fabric,
+            objective,
+            ServeConfig { queue_depth: 8, workers: 2, compile: quick_cfg(), report_every: None },
+        )
+        .expect("service start");
+        let tickets: Vec<CompileTicket> = (0..3)
+            .map(|i| {
+                svc.submit(CompileRequest::new(builders::mlp(2 + i, &[8, 8]))).expect("admit")
+            })
+            .collect();
+        drop(svc);
+        for t in tickets {
+            let resp = t.wait().expect("drained on drop");
+            assert!(resp.result.is_ok(), "{:?}", resp.result);
+        }
+    }
+
+    #[test]
+    fn serve_error_messages_are_actionable() {
+        let full = ServeError::QueueFull { depth: 8 }.to_string();
+        assert!(full.contains("full") && full.contains('8'), "{full}");
+        let expired = ServeError::DeadlineExpired { waited_ms: 15 }.to_string();
+        assert!(expired.contains("deadline") && expired.contains("15"), "{expired}");
+    }
+}

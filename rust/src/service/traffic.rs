@@ -1,0 +1,229 @@
+//! Deterministic open-loop traffic for the compile service.
+//!
+//! [`run_traffic`] submits requests at a fixed arrival rate against a
+//! running [`CompileService`], drawn from a catalog of graphs spanning the
+//! builder families (GEMM / MLP / FFN / MHA) at varying sizes. Two arrival
+//! mixes:
+//!
+//! * **Zipf** (`zipf: Some(s)`) — catalog indices are sampled from a Zipf
+//!   distribution with exponent `s`, the classic skew of production compile
+//!   traffic (a few hot models dominate). Repeats hit the shared PnR cache.
+//! * **Unique** (`zipf: None`) — every request is a structurally distinct
+//!   graph, the cache-adversarial baseline.
+//!
+//! Arrivals are *open-loop* (request `i` targets `start + i/rate`,
+//! regardless of how the service keeps up), so saturation shows up as queue
+//! growth and shedding rather than a silently throttled generator. The
+//! whole schedule — graph sequence, priorities, deadlines — is a pure
+//! function of [`TrafficConfig`], so runs are reproducible.
+
+use std::time::{Duration, Instant};
+
+use crate::dfg::{builders, Dfg};
+use crate::util::rng::Rng;
+
+use super::{CompileRequest, CompileService, CompileTicket, ServeError};
+
+/// Traffic-shape settings.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Target arrivals per second.
+    pub rate: f64,
+    /// Length of the arrival window (tickets are then awaited to drain).
+    pub duration: Duration,
+    /// `Some(s)`: Zipf-skewed repeats over the catalog with exponent `s`;
+    /// `None`: every request unique.
+    pub zipf: Option<f64>,
+    /// Distinct graphs available to the Zipf mix.
+    pub catalog: usize,
+    pub seed: u64,
+    /// Deadline attached to every request (`None`: none).
+    pub deadline: Option<Duration>,
+    /// Priorities cycle `0..priorities` across requests (1 = uniform).
+    pub priorities: u8,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            rate: 20.0,
+            duration: Duration::from_secs(5),
+            zipf: Some(1.1),
+            catalog: 32,
+            seed: 7,
+            deadline: None,
+            priorities: 1,
+        }
+    }
+}
+
+/// Generator-side tally of one traffic run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficReport {
+    pub submitted: u64,
+    /// Rejected at admission ([`ServeError::QueueFull`]).
+    pub shed: u64,
+    pub completed: u64,
+    /// Answered with [`ServeError::DeadlineExpired`].
+    pub expired: u64,
+    /// Compile failures and shutdown-dropped replies.
+    pub errors: u64,
+    pub wall_ms: u64,
+}
+
+/// The `idx`-th catalog graph: the builder families interleave and grow
+/// with `idx`, so every index is structurally distinct (distinct canonical
+/// fingerprint) while staying comparable in compile cost.
+pub fn catalog_graph(idx: usize) -> Dfg {
+    let k = (idx / 4) as u64;
+    match idx % 4 {
+        0 => builders::gemm_graph(32 + k, 32, 32),
+        1 => builders::mlp(8 + k, &[64, 64]),
+        2 => builders::ffn(8 + k, 64, 128),
+        _ => builders::mha(8 + k, 64, 4),
+    }
+}
+
+/// Precomputed Zipf CDF over `n` items: weight of item `k` is
+/// `1/(k+1)^s`, normalized.
+struct ZipfCdf {
+    cdf: Vec<f64>,
+}
+
+impl ZipfCdf {
+    fn new(n: usize, s: f64) -> ZipfCdf {
+        let mut cdf = Vec::with_capacity(n.max(1));
+        let mut total = 0.0;
+        for k in 0..n.max(1) {
+            total += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfCdf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let roll = rng.f64();
+        // Catalogs are small (tens of entries); a linear scan beats binary
+        // search bookkeeping and is trivially correct.
+        self.cdf.iter().position(|&c| roll < c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// Drive one open-loop traffic run to completion: submit through the
+/// arrival window, then await every admitted ticket.
+pub fn run_traffic(service: &CompileService, cfg: &TrafficConfig) -> TrafficReport {
+    assert!(cfg.rate > 0.0, "arrival rate must be positive");
+    let zipf = cfg.zipf.map(|s| ZipfCdf::new(cfg.catalog.max(1), s));
+    let mut rng = Rng::new(cfg.seed);
+    let start = Instant::now();
+    let mut tickets: Vec<CompileTicket> = Vec::new();
+    let mut shed = 0u64;
+    let mut submitted = 0u64;
+    let mut i = 0u64;
+    loop {
+        let due = Duration::from_secs_f64(i as f64 / cfg.rate);
+        if due >= cfg.duration {
+            break;
+        }
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let idx = match &zipf {
+            Some(z) => z.sample(&mut rng),
+            None => i as usize,
+        };
+        let mut req = CompileRequest::new(catalog_graph(idx));
+        if cfg.priorities > 1 {
+            req = req.priority((i % cfg.priorities as u64) as u8);
+        }
+        if let Some(d) = cfg.deadline {
+            req = req.deadline(d);
+        }
+        submitted += 1;
+        match service.submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::QueueFull { .. }) => shed += 1,
+            Err(_) => shed += 1,
+        }
+        i += 1;
+    }
+    let mut completed = 0u64;
+    let mut expired = 0u64;
+    let mut errors = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(resp) => match resp.result {
+                Ok(_) => completed += 1,
+                Err(ServeError::DeadlineExpired { .. }) => expired += 1,
+                Err(_) => errors += 1,
+            },
+            Err(_) => errors += 1,
+        }
+    }
+    TrafficReport {
+        submitted,
+        shed,
+        completed,
+        expired,
+        errors,
+        wall_ms: start.elapsed().as_millis() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::canon::canonicalize;
+
+    #[test]
+    fn catalog_graphs_are_structurally_distinct() {
+        let fps: Vec<_> = (0..16)
+            .map(|i| canonicalize(&catalog_graph(i)).fingerprint)
+            .collect();
+        for a in 0..fps.len() {
+            for b in (a + 1)..fps.len() {
+                assert_ne!(fps[a], fps[b], "catalog {a} and {b} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_low_indices() {
+        let cdf = ZipfCdf::new(32, 1.1);
+        let mut rng = Rng::new(42);
+        let mut counts = vec![0u64; 32];
+        for _ in 0..4000 {
+            counts[cdf.sample(&mut rng)] += 1;
+        }
+        assert!(
+            counts[0] > counts[8] && counts[0] > counts[31],
+            "head not hot: {counts:?}"
+        );
+        // With s=1.1 over 32 items the top item carries ~24% of the mass.
+        assert!(counts[0] as f64 > 0.15 * 4000.0, "head too cold: {}", counts[0]);
+    }
+
+    #[test]
+    fn zipf_sampling_is_deterministic_in_the_seed() {
+        let cdf = ZipfCdf::new(16, 1.0);
+        let seq = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| cdf.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(9), seq(9));
+        assert_ne!(seq(9), seq(10), "different seeds should differ");
+    }
+
+    #[test]
+    fn zipf_cdf_is_normalized_and_monotone() {
+        let cdf = ZipfCdf::new(8, 1.3);
+        assert!((cdf.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        for w in cdf.cdf.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

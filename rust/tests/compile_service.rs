@@ -1,0 +1,196 @@
+//! Compile-service behavior contracts: admission control sheds at the
+//! bound, deadlines are honored, priorities reorder the drain, and served
+//! results are bit-identical to direct `CompileSession` compiles.
+//!
+//! The queueing tests plug the single worker with a *gated* objective whose
+//! `handle()` blocks until the test opens the gate — queue states are then
+//! constructed deterministically instead of raced against compile speed.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::compiler::{CompileConfig, CompileSession};
+use rdacost::cost::HeuristicCost;
+use rdacost::dfg::builders;
+use rdacost::placer::{AnnealParams, Objective, ObjectiveFactory};
+use rdacost::service::{
+    CompileRequest, CompileService, CompileTicket, ServeConfig, ServeError,
+};
+
+/// Wraps [`HeuristicCost`] behind a gate: `handle()` blocks until
+/// [`GatedCost::open`]. A plugged request keeps one service worker busy for
+/// as long as the test needs, with real scoring once released.
+struct GatedCost {
+    inner: HeuristicCost,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl GatedCost {
+    fn new() -> (Arc<GatedCost>, Arc<(Mutex<bool>, Condvar)>) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let cost = Arc::new(GatedCost { inner: HeuristicCost::new(), gate: Arc::clone(&gate) });
+        (cost, gate)
+    }
+}
+
+fn open_gate(gate: &(Mutex<bool>, Condvar)) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+impl ObjectiveFactory for GatedCost {
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        let (lock, cvar) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cvar.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.handle()
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-heuristic"
+    }
+}
+
+fn quick_compile_cfg() -> CompileConfig {
+    CompileConfig {
+        anneal: AnnealParams { iterations: 60, ..AnnealParams::default() },
+        ..CompileConfig::default()
+    }
+}
+
+fn serve_cfg(queue_depth: usize, workers: usize) -> ServeConfig {
+    ServeConfig { queue_depth, workers, compile: quick_compile_cfg(), report_every: None }
+}
+
+fn small_graph(tag: u64) -> rdacost::dfg::Dfg {
+    builders::mlp(2 + tag, &[8, 8])
+}
+
+/// Submit one request and block until a worker has *picked it up* (the
+/// queue is empty again) — from then on the worker sits inside the gated
+/// objective and every later submission lands in the queue.
+fn plug_worker(svc: &CompileService) -> CompileTicket {
+    let ticket = svc.submit(CompileRequest::new(small_graph(0))).expect("plug admitted");
+    let t0 = Instant::now();
+    while svc.queue_len() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never picked up the plug");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ticket
+}
+
+#[test]
+fn full_queue_sheds_with_queue_full_error() {
+    let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+    let (cost, gate) = GatedCost::new();
+    let svc = CompileService::start(fabric, cost, serve_cfg(2, 1)).expect("start");
+
+    let plug = plug_worker(&svc);
+    let q1 = svc.submit(CompileRequest::new(small_graph(1))).expect("fits in queue");
+    let q2 = svc.submit(CompileRequest::new(small_graph(2))).expect("fits in queue");
+    // Queue now holds 2 of 2: the next submission is shed immediately.
+    let shed = svc.submit(CompileRequest::new(small_graph(3)));
+    assert_eq!(shed.err(), Some(ServeError::QueueFull { depth: 2 }));
+
+    open_gate(&gate);
+    for t in [plug, q1, q2] {
+        let resp = t.wait().expect("replied");
+        assert!(resp.result.is_ok(), "admitted request failed: {:?}", resp.result);
+    }
+    let summary = svc.shutdown().expect("shutdown");
+    assert_eq!(summary.submitted, 4);
+    assert_eq!(summary.shed, 1);
+    assert_eq!(summary.completed, 3);
+}
+
+#[test]
+fn expired_deadline_is_answered_without_compiling() {
+    let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+    let (cost, gate) = GatedCost::new();
+    let svc = CompileService::start(fabric, cost, serve_cfg(8, 1)).expect("start");
+
+    let plug = plug_worker(&svc);
+    let doomed = svc
+        .submit(CompileRequest::new(small_graph(1)).deadline(Duration::from_millis(1)))
+        .expect("admitted");
+    // Let the deadline lapse while the worker is still plugged.
+    std::thread::sleep(Duration::from_millis(30));
+    open_gate(&gate);
+
+    assert!(plug.wait().expect("plug replied").result.is_ok());
+    let resp = doomed.wait().expect("doomed replied");
+    match resp.result {
+        Err(ServeError::DeadlineExpired { waited_ms }) => {
+            assert!(waited_ms >= 1, "reported wait {waited_ms}ms");
+        }
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    let summary = svc.shutdown().expect("shutdown");
+    assert_eq!(summary.expired, 1);
+    assert_eq!(summary.completed, 1, "only the plug compiled");
+    // Expired requests are tallied, never mixed into compile latency.
+    assert_eq!(summary.latency.count, 1);
+    assert_eq!(summary.queue_wait.count, 2, "queue wait counts every dequeue");
+}
+
+#[test]
+fn higher_priority_drains_first_fifo_within_priority() {
+    let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+    let (cost, gate) = GatedCost::new();
+    let svc = CompileService::start(fabric, cost, serve_cfg(8, 1)).expect("start");
+
+    let plug = plug_worker(&svc);
+    let a = svc.submit(CompileRequest::new(small_graph(1)).priority(0)).expect("a");
+    let b = svc.submit(CompileRequest::new(small_graph(2)).priority(5)).expect("b");
+    let c = svc.submit(CompileRequest::new(small_graph(3)).priority(0)).expect("c");
+    open_gate(&gate);
+
+    let plug_seq = plug.wait().expect("plug").finished_seq;
+    let a_seq = a.wait().expect("a").finished_seq;
+    let b_seq = b.wait().expect("b").finished_seq;
+    let c_seq = c.wait().expect("c").finished_seq;
+    // The plug was already running; then priority 5 jumps the queue, and
+    // the two priority-0 requests keep submission order.
+    assert!(plug_seq < b_seq, "plug first: {plug_seq} vs {b_seq}");
+    assert!(b_seq < a_seq, "priority 5 before priority 0: {b_seq} vs {a_seq}");
+    assert!(a_seq < c_seq, "FIFO within priority 0: {a_seq} vs {c_seq}");
+    svc.shutdown().expect("shutdown");
+}
+
+#[test]
+fn served_compile_is_bit_identical_to_direct_session() {
+    let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+    let graph = builders::mha(16, 64, 4);
+    let direct = CompileSession::new(&fabric, quick_compile_cfg())
+        .compile(&graph, &HeuristicCost::new())
+        .expect("direct compile");
+
+    let svc = CompileService::start(
+        Arc::clone(&fabric),
+        Arc::new(HeuristicCost::new()),
+        serve_cfg(8, 2),
+    )
+    .expect("start");
+    // The same graph twice: the second ride replays from the shared cache
+    // and must still match the from-scratch answer bit for bit.
+    let t1 = svc.submit(CompileRequest::new(graph.clone())).expect("admit 1");
+    let t2 = svc.submit(CompileRequest::new(graph.clone())).expect("admit 2");
+    let r1 = t1.wait().expect("reply 1").result.expect("compile 1");
+    let r2 = t2.wait().expect("reply 2").result.expect("compile 2");
+    let summary = svc.shutdown().expect("shutdown");
+
+    for served in [&r1, &r2] {
+        assert_eq!(served.total_ii.to_bits(), direct.total_ii.to_bits());
+        assert_eq!(served.throughput.to_bits(), direct.throughput.to_bits());
+        assert_eq!(served.total_latency.to_bits(), direct.total_latency.to_bits());
+        assert_eq!(served.subgraphs, direct.subgraphs);
+        assert_eq!(served.cost_model, direct.cost_model);
+    }
+    assert_eq!(summary.completed, 2);
+    let cache = summary.cache.expect("cache on by default");
+    assert!(cache.hits() > 0, "second ride should hit the shared cache: {cache:?}");
+}
