@@ -1,0 +1,182 @@
+//! Scoring hot-loop benchmark: the gate for the incremental-encoding +
+//! SoA-kernel + score-cache overhaul.
+//!
+//! Measures candidate evaluations/sec through the annealer under the
+//! learned objective, incremental encoding ON vs OFF (scratch re-encode),
+//! at K=1 and K=8; splits one scoring call into its encode and infer
+//! stages; and demonstrates the score cache on a repeated-state anneal
+//! (same seed replayed → every state revisits). Emits `BENCH_score.json`
+//! (CI uploads it as the BENCH_score artifact) and smoke-asserts that the
+//! incremental path does not lose to scratch at K=1 and that the repeated
+//! anneal produced score-cache hits.
+//!
+//! `RDACOST_BENCH_QUICK=1` shrinks iterations/reps to CI scale.
+
+use std::time::Instant;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::dfg::builders;
+use rdacost::gnn;
+use rdacost::placer::{anneal, random_placement, AnnealParams};
+use rdacost::router::route_all;
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::bench::{black_box, fmt_ns};
+use rdacost::util::json::Json;
+use rdacost::util::rng::Rng;
+
+/// Best-of-reps candidate evaluations/sec for one annealer configuration.
+fn anneal_evals_per_sec(
+    graph: &rdacost::dfg::Dfg,
+    fabric: &Fabric,
+    objective: &LearnedCost,
+    iters: usize,
+    k: usize,
+    reps: usize,
+) -> f64 {
+    let params =
+        AnnealParams { iterations: iters, proposals_per_step: k, ..AnnealParams::default() };
+    let mut best = 0.0f64;
+    for rep in 0..reps {
+        let mut rng = Rng::new(2000 + rep as u64);
+        let t0 = Instant::now();
+        let (_, _, log) = anneal(graph, fabric, objective, &params, &mut rng).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.max(log.evaluations as f64 / dt);
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+    let iters = if quick { 80 } else { 300 };
+    let reps = if quick { 2 } else { 3 };
+
+    let engine = rdacost::runtime::engine("artifacts").expect("initializing backend");
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::mha(32, 128, 4);
+
+    // Incremental handle (default) vs scratch re-encode, same engine.
+    let incremental =
+        LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
+    let mut scratch =
+        LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
+    scratch.set_incremental(false);
+
+    let mut results = Json::obj()
+        .set("bench", "score_hot_loop")
+        .set("backend", engine.platform())
+        .set("graph", "mha_seq32_d128_h4")
+        .set("iterations", iters)
+        .set("quick_mode", quick);
+
+    // Warm both objectives (bucket select, executable caches).
+    {
+        let mut rng = Rng::new(7);
+        let p = random_placement(&graph, &fabric, &mut rng).unwrap();
+        let r = route_all(&fabric, &graph, &p).unwrap();
+        use rdacost::placer::Objective;
+        incremental.score(&graph, &fabric, &p, &r);
+        scratch.score(&graph, &fabric, &p, &r);
+    }
+
+    // K=1 and K=8, incremental vs scratch.
+    let mut k1_ratio = 0.0;
+    for k in [1usize, 8] {
+        let inc = anneal_evals_per_sec(&graph, &fabric, &incremental, iters, k, reps);
+        let scr = anneal_evals_per_sec(&graph, &fabric, &scratch, iters, k, reps);
+        let ratio = inc / scr;
+        println!(
+            "bench score/k{k}: incremental {inc:.0} evals/s ({} per eval) vs \
+             scratch {scr:.0} evals/s ({} per eval) — {ratio:.2}x",
+            fmt_ns(1e9 / inc),
+            fmt_ns(1e9 / scr)
+        );
+        results = results.set(
+            &format!("k{k}"),
+            Json::obj()
+                .set("incremental_evals_per_sec", inc)
+                .set("scratch_evals_per_sec", scr)
+                .set("speedup_incremental_over_scratch", ratio),
+        );
+        if k == 1 {
+            k1_ratio = ratio;
+        }
+    }
+
+    // Encode vs infer split for one scoring call (scratch decomposition:
+    // a full score = encode + infer; the incremental path shrinks the
+    // encode term to the touched rows).
+    {
+        let mut rng = Rng::new(9);
+        let p = random_placement(&graph, &fabric, &mut rng).unwrap();
+        let r = route_all(&fabric, &graph, &p).unwrap();
+        let timing_iters = if quick { 200 } else { 1000 };
+        let t0 = Instant::now();
+        for _ in 0..timing_iters {
+            black_box(gnn::encode(&graph, &fabric, &p, &r).unwrap());
+        }
+        let encode_ns = t0.elapsed().as_nanos() as f64 / timing_iters as f64;
+        let enc = gnn::encode(&graph, &fabric, &p, &r).unwrap();
+        let one = [&enc];
+        incremental.predict_batch(&one, 1).unwrap(); // warm
+        let t0 = Instant::now();
+        for _ in 0..timing_iters {
+            black_box(incremental.predict_batch(&one, 1).unwrap());
+        }
+        let infer_ns = t0.elapsed().as_nanos() as f64 / timing_iters as f64;
+        println!(
+            "bench score/split: encode {} infer {} per call",
+            fmt_ns(encode_ns),
+            fmt_ns(infer_ns)
+        );
+        results = results
+            .set("encode_ns_per_call", encode_ns)
+            .set("infer_ns_per_call", infer_ns);
+    }
+
+    // Score cache on a repeated-state anneal: replaying the same seed
+    // walks the identical state sequence, so the second run must hit.
+    {
+        let mut cached =
+            LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
+        cached.set_score_cache_capacity(1 << 14);
+        let params = AnnealParams { iterations: iters, ..AnnealParams::default() };
+        for _ in 0..2 {
+            let mut rng = Rng::new(3000);
+            anneal(&graph, &fabric, &cached, &params, &mut rng).unwrap();
+        }
+        let stats = cached.score_cache_stats().unwrap();
+        println!(
+            "bench score/cache: {} on a replayed anneal (hit rate {:.2})",
+            stats.summary(),
+            stats.hit_rate()
+        );
+        results = results.set(
+            "score_cache",
+            Json::obj()
+                .set("hits", stats.hits)
+                .set("lookups", stats.lookups())
+                .set("hit_rate", stats.hit_rate())
+                .set("inserts", stats.inserts)
+                .set("evictions", stats.evictions),
+        );
+        assert!(
+            stats.hits > 0,
+            "replayed anneal produced no score-cache hits: {stats:?}"
+        );
+    }
+
+    std::fs::write("BENCH_score.json", results.to_pretty()).unwrap();
+    println!("wrote BENCH_score.json");
+
+    // Smoke floor, not a perf target: incremental encoding must not lose
+    // to scratch re-encode on the K=1 hot path (small tolerance absorbs
+    // shared-runner timer noise; the JSON carries the real ratio).
+    assert!(
+        k1_ratio >= 0.95,
+        "incremental K=1 path lost to scratch: {k1_ratio:.2}x"
+    );
+}

@@ -27,7 +27,8 @@ fn main() {
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = Rng::new(42);
 
-    // Single-graph scoring (annealer hot path), per bucket.
+    // Single-graph scoring (annealer hot path), per bucket — total, plus
+    // the encode vs infer split so regressions point at the right stage.
     for (name, graph) in [
         ("n32_bucket/gemm", builders::gemm_graph(64, 64, 64)),
         ("n32_bucket/mha", builders::mha(32, 128, 4)),
@@ -39,6 +40,14 @@ fn main() {
         learned.score(&graph, &fabric, &placement, &routing);
         b.bench(&format!("scoring/single/{name}"), || {
             black_box(learned.score(&graph, &fabric, &placement, &routing))
+        });
+        b.bench(&format!("scoring/encode/{name}"), || {
+            black_box(gnn::encode(&graph, &fabric, &placement, &routing).unwrap())
+        });
+        let enc = gnn::encode(&graph, &fabric, &placement, &routing).unwrap();
+        let one = [&enc];
+        b.bench(&format!("scoring/infer/{name}"), || {
+            black_box(learned.predict_batch(&one, 1).unwrap())
         });
     }
 

@@ -68,6 +68,7 @@ use anyhow::{anyhow, Result};
 
 use crate::arch::{Era, Fabric};
 use crate::cache::{self, CacheEntry, CacheStatsSnapshot, PnrCache};
+use crate::cost::ScoreCacheStats;
 use crate::dfg::canon::{canonicalize, Canon, Fingerprint};
 use crate::dfg::{partition, Dfg};
 use crate::placer::{anneal, AnnealParams, Objective, ObjectiveFactory, Placement};
@@ -114,6 +115,11 @@ pub struct CompileReport {
     /// `CompileConfig::cache` is off). Hits/misses never change the PnR
     /// numbers above — only how much work it took to produce them.
     pub cache: CacheStatsSnapshot,
+    /// Score-cache counters from the objective's scoring hot loop, if the
+    /// objective carries one (see `LearnedCost::set_score_cache_capacity`).
+    /// Like `cache`, a shared score cache reports cumulative counters; a
+    /// hit never changes a score, only whether the engine ran.
+    pub score_cache: Option<ScoreCacheStats>,
 }
 
 /// Compile settings.
@@ -321,6 +327,7 @@ impl<'a> CompileSession<'a> {
             total_latency,
             wall_seconds: t0.elapsed().as_secs_f64(),
             cache: cache_stats,
+            score_cache: objective.score_cache_stats(),
         })
     }
 
@@ -591,6 +598,7 @@ mod tests {
             total_latency: 0.0,
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
+            score_cache: None,
         };
         assert_eq!(empty.throughput, 0.0);
         assert!(empty.throughput.is_finite());
@@ -675,6 +683,7 @@ mod tests {
             total_latency: 900.0,
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
+            score_cache: None,
         };
         let b = CompileReport {
             model: "x".into(),
@@ -685,6 +694,7 @@ mod tests {
             total_latency: 1000.0,
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
+            score_cache: None,
         };
         assert!((a.throughput_gain_pct(&b) - 11.111).abs() < 0.01);
         assert!((a.latency_reduction_pct(&b) - 10.0).abs() < 1e-9);

@@ -38,6 +38,7 @@
 //! t_final = 0.001
 //! proposals_per_step = 8
 //! reroute_every = 25
+//! score_cache = 4096
 //!
 //! [router]
 //! congestion_weight = 0.5
@@ -132,6 +133,10 @@ pub struct RunConfig {
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
+    /// Score-cache capacity for learned/service scoring (`[anneal]
+    /// score_cache` / `--score-cache-capacity`). 0 disables the cache;
+    /// scores are bit-identical either way, a hit only skips the engine.
+    pub score_cache_capacity: usize,
     /// Compile-service admission bound (`[service] queue_depth`): requests
     /// beyond this many queued are shed at submission.
     pub service_queue_depth: usize,
@@ -154,6 +159,7 @@ impl Default for RunConfig {
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
+            score_cache_capacity: 0,
             service_queue_depth: 64,
             service_workers: 2,
         }
@@ -203,6 +209,7 @@ impl RunConfig {
         raw.take_parse("anneal.t_final", &mut cfg.anneal.t_final)?;
         raw.take_parse("anneal.proposals_per_step", &mut cfg.anneal.proposals_per_step)?;
         raw.take_parse("anneal.reroute_every", &mut cfg.anneal.reroute_every)?;
+        raw.take_parse("anneal.score_cache", &mut cfg.score_cache_capacity)?;
 
         // Router tunables feed every routing consumer: the annealer's
         // incremental engine + resyncs, compile-session measurement routes,
@@ -273,6 +280,7 @@ epochs = 5
 iterations = 77
 proposals_per_step = 8
 reroute_every = 0
+score_cache = 512
 
 [router]
 congestion_weight = 0.75
@@ -298,6 +306,7 @@ workers = 3
         assert_eq!(cfg.anneal.iterations, 77);
         assert_eq!(cfg.anneal.proposals_per_step, 8);
         assert_eq!(cfg.anneal.reroute_every, 0);
+        assert_eq!(cfg.score_cache_capacity, 512);
         assert_eq!(cfg.anneal.router.congestion_weight, 0.75);
         assert_eq!(cfg.anneal.router.refine_passes, 2);
         // The dataset generator routes with the same tunables.

@@ -28,4 +28,4 @@ pub mod work;
 
 pub use pool::generate_parallel;
 pub use scoring::{ScoringClient, ScoringService, ServiceObjective, ServiceStats};
-pub use work::{fan_out_indexed, BoundedQueue, PushError};
+pub use work::{fan_out_indexed, BoundedQueue, PopTimeout, PushError};

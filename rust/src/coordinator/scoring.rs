@@ -4,9 +4,9 @@
 //!
 //! ```text
 //!  annealer client ──┐
-//!  annealer client ──┼── mpsc ──► dispatcher ── PJRT batch exec ──► replies
-//!  annealer client ──┘            (groups by bucket, pads to B,
-//!                                  flushes on full batch or deadline)
+//!  annealer client ──┼─ BoundedQueue ─► dispatcher ── PJRT batch exec ──► replies
+//!  annealer client ──┘   (admission-    (groups by bucket, pads to B,
+//!                         controlled)    flushes on full batch or deadline)
 //! ```
 //!
 //! Requests carry encoded [`GraphTensors`]; replies are the predicted
@@ -15,23 +15,43 @@
 //! `max_wait` — the same size-or-deadline policy production inference
 //! routers use. The dispatcher drives whichever [`Engine`] backend the
 //! session holds (native pure-Rust by default, PJRT behind the feature).
+//!
+//! Admission rides the shared [`super::work::BoundedQueue`] (the same layer
+//! under the compile service's request pipeline): a full queue rejects a
+//! request immediately instead of stalling the annealer, and closing the
+//! queue is the shutdown signal — the dispatcher drains the backlog and
+//! exits.
+//!
+//! [`ServiceObjective`] handles run the same incremental-encode hot path
+//! and optional shared [`ScoreCache`] as a direct
+//! [`crate::cost::LearnedCost`]: moves refresh only invalidated tensor
+//! rows, and revisited states are answered without touching the dispatcher
+//! at all.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::work::{BoundedQueue, PopTimeout, PushError};
 use crate::arch::Fabric;
-use crate::cost::Ablation;
-use crate::dfg::Dfg;
-use crate::gnn::{self, Bucket, GraphTensors};
+use crate::cost::score_cache;
+use crate::cost::{Ablation, ScoreCache, ScoreCacheStats};
+use crate::dfg::canon;
+use crate::dfg::{Dfg, NodeId};
+use crate::gnn::{self, Bucket, EncodeDelta, EncodeState, GraphTensors};
 use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
 use crate::train::ParamStore;
+
+/// Dispatcher admission bound: far above any realistic in-flight fleet
+/// (workers × K), so hitting it means a stuck dispatcher — shedding with an
+/// explicit error beats queueing unboundedly behind a dead thread.
+const QUEUE_CAPACITY: usize = 1 << 16;
 
 /// One in-flight request. The reply carries the batch's failure message on
 /// error, so clients see *why* a batch failed instead of an opaque
@@ -68,7 +88,7 @@ impl ServiceStats {
 /// Handle used by clients; cheap to clone.
 #[derive(Clone)]
 pub struct ScoringClient {
-    tx: Sender<Request>,
+    queue: Arc<BoundedQueue<Request>>,
 }
 
 impl ScoringClient {
@@ -95,9 +115,15 @@ impl ScoringClient {
     }
 
     fn submit(&self, graph: GraphTensors, reply: Sender<Result<f64, String>>) -> Result<()> {
-        self.tx
-            .send(Request { graph, reply, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("scoring service shut down"))
+        self.queue
+            .try_push(0, Request { graph, reply, enqueued: Instant::now() })
+            .map_err(|e| match e {
+                PushError::Full(_) => anyhow::anyhow!(
+                    "scoring service queue full ({} requests)",
+                    QUEUE_CAPACITY
+                ),
+                PushError::Closed(_) => anyhow::anyhow!("scoring service shut down"),
+            })
     }
 
     fn await_reply(rx: &Receiver<Result<f64, String>>) -> Result<f64> {
@@ -109,12 +135,14 @@ impl ScoringClient {
 
 /// The service: owns the dispatcher thread.
 pub struct ScoringService {
-    tx: Option<Sender<Request>>,
+    queue: Arc<BoundedQueue<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     pub stats: Arc<ServiceStats>,
     /// Compile-cache key material captured at start (params + ablation);
     /// see [`crate::placer::ObjectiveFactory::cache_fingerprint`].
     params_fp: crate::dfg::Fingerprint,
+    /// Optional score cache shared by every [`ServiceObjective`] handle.
+    score_cache: Option<Arc<ScoreCache>>,
 }
 
 impl ScoringService {
@@ -128,7 +156,8 @@ impl ScoringService {
         max_wait: Duration,
     ) -> Result<ScoringService> {
         params.matches_specs(engine.param_specs())?;
-        let (tx, rx) = mpsc::channel::<Request>();
+        let queue = Arc::new(BoundedQueue::new(QUEUE_CAPACITY));
+        let rx = queue.clone();
         let stats = Arc::new(ServiceStats::default());
         let stats2 = stats.clone();
         let param_values: Vec<Tensor> = params.values();
@@ -146,12 +175,38 @@ impl ScoringService {
             .spawn(move || {
                 dispatcher_loop(engine, param_values, ablation, batch, max_wait, rx, stats2)
             })?;
-        Ok(ScoringService { tx: Some(tx), dispatcher: Some(dispatcher), stats, params_fp })
+        Ok(ScoringService {
+            queue,
+            dispatcher: Some(dispatcher),
+            stats,
+            params_fp,
+            score_cache: None,
+        })
     }
 
     pub fn client(&self) -> ScoringClient {
-        ScoringClient { tx: self.tx.as_ref().expect("service live").clone() }
+        ScoringClient { queue: self.queue.clone() }
     }
+
+    /// Attach a score cache bounded to `capacity` entries, shared by every
+    /// handle created afterwards; `0` detaches. Revisited states are then
+    /// answered client-side without a dispatcher round trip.
+    pub fn set_score_cache_capacity(&mut self, capacity: usize) {
+        self.score_cache =
+            if capacity == 0 { None } else { Some(Arc::new(ScoreCache::new(capacity))) };
+    }
+}
+
+/// Per-handle incremental-encode state; the service-side mirror of the
+/// `LearnedCost` cell (each handle belongs to one worker thread, so the
+/// `Mutex` exists only to score through `&self`).
+struct SvcIncr {
+    state: Option<EncodeState>,
+    last_delta: Option<EncodeDelta>,
+    /// Staged fleet snapshots, submitted by the next `score_batch`; the
+    /// first `staged_len` are valid.
+    staged: Vec<GraphTensors>,
+    staged_len: usize,
 }
 
 /// An annealer objective backed by a [`ScoringClient`]: encodes the PnR
@@ -160,12 +215,24 @@ impl ScoringService {
 /// dispatcher sees requests from *all* annealers at once and fills real
 /// batches — the production topology the service exists for.
 ///
+/// Handles keep a live [`EncodeState`] so `score_moved`/`stage_moved`
+/// refresh only the rows a move invalidated (the dispatcher still receives
+/// an owned snapshot per request), and consult the service's shared
+/// [`ScoreCache`] before submitting at all.
+///
 /// Errors (encode failures, a dead service, batch failures) map to a 0.0
 /// score and are counted in [`ServiceStats::scoring_errors`]; the
 /// dispatcher separately logs the underlying failure.
 pub struct ServiceObjective {
     client: ScoringClient,
     stats: Arc<ServiceStats>,
+    score_cache: Option<Arc<ScoreCache>>,
+    /// Score-cache namespace: the service's params fingerprint.
+    model_fp: u128,
+    /// content hash → canonical graph fingerprint memo (see
+    /// [`crate::cost::score_cache::state_key`]).
+    canon_memo: Mutex<HashMap<u128, u128>>,
+    incr: Mutex<SvcIncr>,
 }
 
 impl ServiceObjective {
@@ -178,13 +245,149 @@ impl ServiceObjective {
             }
         }
     }
+
+    fn lock_incr(&self) -> std::sync::MutexGuard<'_, SvcIncr> {
+        self.incr.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn state_key(&self, graph: &Dfg, placement: &Placement, routing: &Routing) -> Option<u128> {
+        self.score_cache.as_ref()?;
+        let content = canon::content_hash(graph);
+        let graph_fp = {
+            let mut memo = self.canon_memo.lock().unwrap_or_else(|e| e.into_inner());
+            *memo.entry(content).or_insert_with(|| canon::fingerprint(graph).0)
+        };
+        Some(score_cache::state_key(graph_fp, self.model_fp, placement, routing))
+    }
+
+    fn cache_get(&self, key: Option<u128>) -> Option<f64> {
+        self.score_cache.as_ref()?.get(key?)
+    }
+
+    fn cache_put(&self, key: Option<u128>, score: f64) {
+        if let (Some(cache), Some(key)) = (self.score_cache.as_ref(), key) {
+            cache.insert(key, score);
+        }
+    }
+
+    /// Submit one tensor snapshot and cache the reply on success.
+    fn submit_scored(&self, tensors: GraphTensors, key: Option<u128>) -> f64 {
+        match self.client.score(tensors) {
+            Ok(score) => {
+                self.cache_put(key, score);
+                score
+            }
+            Err(_) => {
+                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                0.0
+            }
+        }
+    }
 }
 
 impl Objective for ServiceObjective {
     fn score(&self, graph: &Dfg, fabric: &Fabric, placement: &Placement, routing: &Routing) -> f64 {
-        let result = gnn::encode(graph, fabric, placement, routing)
-            .and_then(|enc| self.client.score(enc));
-        self.zero_on_error(result)
+        let key = self.state_key(graph, placement, routing);
+        let mut cell = self.lock_incr();
+        cell.last_delta = None;
+        cell.staged_len = 0;
+        // Arm the live encoding even on a cache hit: subsequent score_moved
+        // deltas branch off this base.
+        let armed = match cell.state.take() {
+            Some(mut state) => state.reset(graph, fabric, placement, routing).map(|()| state),
+            None => EncodeState::new(graph, fabric, placement, routing),
+        };
+        match armed {
+            Ok(state) => cell.state = Some(state),
+            Err(_) => {
+                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                return 0.0;
+            }
+        }
+        if let Some(hit) = self.cache_get(key) {
+            return hit;
+        }
+        let tensors = cell.state.as_ref().expect("armed above").tensors().clone();
+        drop(cell);
+        self.submit_scored(tensors, key)
+    }
+
+    fn score_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> f64 {
+        let mut cell = self.lock_incr();
+        let Some(state) = cell.state.as_mut() else {
+            drop(cell);
+            return self.score(graph, fabric, placement, routing);
+        };
+        let delta = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        cell.last_delta = Some(delta);
+        // The state already advanced, so a cache hit still leaves
+        // undo_moved able to revert it.
+        let key = self.state_key(graph, placement, routing);
+        if let Some(hit) = self.cache_get(key) {
+            return hit;
+        }
+        let tensors = cell.state.as_ref().expect("advanced above").tensors().clone();
+        drop(cell);
+        self.submit_scored(tensors, key)
+    }
+
+    fn undo_moved(&self) {
+        let mut cell = self.lock_incr();
+        if let Some(delta) = cell.last_delta.take() {
+            if let Some(state) = cell.state.as_mut() {
+                state.undo(delta);
+            }
+        }
+    }
+
+    fn stage_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> bool {
+        let mut cell = self.lock_incr();
+        let Some(mut state) = cell.state.take() else {
+            return false;
+        };
+        let delta = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        let slot = cell.staged_len;
+        if slot < cell.staged.len() {
+            cell.staged[slot].copy_from(state.tensors());
+        } else {
+            cell.staged.push(state.tensors().clone());
+        }
+        cell.staged_len = slot + 1;
+        state.undo(delta);
+        cell.state = Some(state);
+        true
+    }
+
+    fn commit_move(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) {
+        let mut cell = self.lock_incr();
+        cell.last_delta = None;
+        if let Some(state) = cell.state.as_mut() {
+            let _ = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        }
     }
 
     fn score_batch(
@@ -193,20 +396,46 @@ impl Objective for ServiceObjective {
         fabric: &Fabric,
         candidates: &[(Placement, Routing)],
     ) -> Vec<f64> {
-        // Encode the whole fleet, then submit it in one `score_many` so the
-        // requests co-batch (and can co-batch with other workers' fleets).
-        let encoded: Result<Vec<GraphTensors>> = candidates
-            .iter()
-            .map(|(p, r)| gnn::encode(graph, fabric, p, r))
-            .collect();
-        let result = encoded.and_then(|fleet| self.client.score_many(fleet));
-        match result {
-            Ok(scores) => scores,
+        if candidates.is_empty() {
+            return Vec::new();
+        }
+        let n = candidates.len();
+        let keys: Vec<Option<u128>> =
+            candidates.iter().map(|(p, r)| self.state_key(graph, p, r)).collect();
+        let mut out: Vec<Option<f64>> = keys.iter().map(|&k| self.cache_get(k)).collect();
+        let miss: Vec<usize> = (0..n).filter(|&i| out[i].is_none()).collect();
+
+        let mut cell = self.lock_incr();
+        let use_staged = cell.staged_len == n;
+        cell.staged_len = 0; // snapshots are consumed by this fleet either way
+        if miss.is_empty() {
+            return out.into_iter().map(|s| s.expect("every candidate cached")).collect();
+        }
+        // Build the miss fleet, preferring the delta-updated snapshots
+        // stage_moved left; submit it in one `score_many` so the requests
+        // co-batch (and can co-batch with other workers' fleets).
+        let fleet: Result<Vec<GraphTensors>> = if use_staged {
+            Ok(miss.iter().map(|&i| cell.staged[i].clone()).collect())
+        } else {
+            miss.iter()
+                .map(|&i| {
+                    let (p, r) = &candidates[i];
+                    gnn::encode(graph, fabric, p, r)
+                })
+                .collect()
+        };
+        drop(cell);
+        match fleet.and_then(|fleet| self.client.score_many(fleet)) {
+            Ok(scores) => {
+                for (&i, &score) in miss.iter().zip(scores.iter()) {
+                    self.cache_put(keys[i], score);
+                    out[i] = Some(score);
+                }
+                out.into_iter().map(|s| s.expect("every candidate scored")).collect()
+            }
             Err(_) => {
-                self.stats
-                    .scoring_errors
-                    .fetch_add(candidates.len() as u64, Ordering::Relaxed);
-                vec![0.0; candidates.len()]
+                self.stats.scoring_errors.fetch_add(miss.len() as u64, Ordering::Relaxed);
+                out.into_iter().map(|s| s.unwrap_or(0.0)).collect()
             }
         }
     }
@@ -221,7 +450,19 @@ impl ObjectiveFactory for ScoringService {
     /// dispatcher, so a parallel compile session fills the service's
     /// batches.
     fn handle(&self) -> Box<dyn Objective + Send + '_> {
-        Box::new(ServiceObjective { client: self.client(), stats: self.stats.clone() })
+        Box::new(ServiceObjective {
+            client: self.client(),
+            stats: self.stats.clone(),
+            score_cache: self.score_cache.clone(),
+            model_fp: self.params_fp.0,
+            canon_memo: Mutex::new(HashMap::new()),
+            incr: Mutex::new(SvcIncr {
+                state: None,
+                last_delta: None,
+                staged: Vec::new(),
+                staged_len: 0,
+            }),
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -234,12 +475,16 @@ impl ObjectiveFactory for ScoringService {
     fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
         Some(self.params_fp)
     }
+
+    fn score_cache_stats(&self) -> Option<ScoreCacheStats> {
+        self.score_cache.as_ref().map(|c| c.stats())
+    }
 }
 
 impl Drop for ScoringService {
     fn drop(&mut self) {
-        // Closing the channel stops the dispatcher after it drains.
-        drop(self.tx.take());
+        // Closing the queue stops the dispatcher after it drains.
+        self.queue.close();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -252,7 +497,7 @@ fn dispatcher_loop(
     ablation: Ablation,
     batch: usize,
     max_wait: Duration,
-    rx: Receiver<Request>,
+    rx: Arc<BoundedQueue<Request>>,
     stats: Arc<ServiceStats>,
 ) {
     let mut queues: HashMap<String, (Bucket, Vec<Request>)> = HashMap::new();
@@ -264,8 +509,8 @@ fn dispatcher_loop(
             .min()
             .map(|oldest| max_wait.saturating_sub(oldest.elapsed()))
             .unwrap_or(max_wait);
-        match rx.recv_timeout(timeout) {
-            Ok(req) => {
+        match rx.pop_timeout(timeout) {
+            PopTimeout::Item(req) => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 let b = req.graph.bucket;
                 let entry = queues.entry(b.tag()).or_insert((b, Vec::new()));
@@ -275,14 +520,14 @@ fn dispatcher_loop(
                     let (bucket, q) = queues.remove(&b.tag()).unwrap();
                     execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
                 }
-                // Deadline check on *every* arrival, not only on recv
-                // timeout: under sustained sub-batch traffic `recv_timeout`
-                // keeps returning `Ok` and the timeout arm below never
+                // Deadline check on *every* arrival, not only on pop
+                // timeout: under sustained sub-batch traffic `pop_timeout`
+                // keeps returning items and the timeout arm below never
                 // runs, which used to starve a never-filling bucket past
                 // `max_wait` indefinitely.
                 flush_overdue(&mut queues, max_wait, &engine, &params, ablation, batch, &stats);
             }
-            Err(RecvTimeoutError::Timeout) => {
+            PopTimeout::TimedOut => {
                 // Flush everything past deadline (and anything else queued —
                 // latency beats occupancy once we are already flushing).
                 let keys: Vec<String> = queues.keys().cloned().collect();
@@ -294,8 +539,9 @@ fn dispatcher_loop(
                     }
                 }
             }
-            Err(RecvTimeoutError::Disconnected) => {
-                // Drain remaining queues, then exit.
+            PopTimeout::Closed => {
+                // The queue is closed and drained: answer what is still
+                // grouped, then exit.
                 for (_, (bucket, q)) in queues.drain() {
                     if !q.is_empty() {
                         execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
@@ -470,7 +716,7 @@ mod tests {
     fn sustained_arrivals_do_not_starve_subbatch_bucket() {
         // The starvation regression: a single n64-bucket request queued
         // behind a sustained flood of n32 traffic. The flood keeps
-        // `recv_timeout` returning `Ok` (the channel is never empty until
+        // `pop_timeout` returning items (the queue is never empty until
         // the backlog drains), so the timeout arm — the only place the
         // deadline flush used to live — never runs, and the lone request
         // used to wait out the entire flood instead of its 10ms deadline.
@@ -645,5 +891,84 @@ mod tests {
         let errs = client.score_many(vec![encoded(&g, 2), encoded(&g, 3)]);
         let msg = format!("{:#}", errs.unwrap_err());
         assert!(msg.contains("mock backend failure"), "unhelpful fleet error: {msg}");
+    }
+
+    #[test]
+    fn service_incremental_hooks_match_plain_scores() {
+        // A handle's score_moved (delta-updated tensors) must agree bitwise
+        // with a sibling handle's plain score (full re-encode): both travel
+        // the same dispatcher, so any difference is an encoder divergence.
+        use crate::router::{RouterParams, RoutingState};
+
+        let svc = service(8, Duration::from_millis(2));
+        let factory: &dyn ObjectiveFactory = &svc;
+        let inc = factory.handle();
+        let reference = factory.handle();
+
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(41);
+        let mut p = random_placement(&g, &f, &mut rng).unwrap();
+        let mut r = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+
+        let a = inc.score(&g, &f, &p, r.routing());
+        let b = reference.score(&g, &f, &p, r.routing());
+        assert_eq!(a.to_bits(), b.to_bits(), "base score diverged");
+
+        for step in 0..6 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![crate::dfg::NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            let got = inc.score_moved(&g, &f, &q, r.routing(), &moved, &changed);
+            let want = reference.score(&g, &f, &q, r.routing());
+            assert_eq!(got.to_bits(), want.to_bits(), "step {step} diverged");
+            if step % 2 == 0 {
+                inc.undo_moved();
+                r.undo(&g, rd);
+            } else {
+                p = q;
+            }
+        }
+        assert_eq!(svc.stats.scoring_errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn service_score_cache_short_circuits_the_dispatcher() {
+        let mut svc = service(8, Duration::from_millis(2));
+        svc.set_score_cache_capacity(64);
+        let factory: &dyn ObjectiveFactory = &svc;
+        let handle = factory.handle();
+
+        let fabric = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+        let mut rng = Rng::new(42);
+        let p = random_placement(&g, &fabric, &mut rng).unwrap();
+        let r = route_all(&fabric, &g, &p).unwrap();
+
+        let first = handle.score(&g, &fabric, &p, &r);
+        assert_eq!(svc.stats.requests.load(Ordering::Relaxed), 1);
+        let second = handle.score(&g, &fabric, &p, &r);
+        assert_eq!(second.to_bits(), first.to_bits());
+        assert_eq!(
+            svc.stats.requests.load(Ordering::Relaxed),
+            1,
+            "revisit must not reach the dispatcher"
+        );
+        // A sibling handle shares the cache.
+        let sibling = factory.handle();
+        assert_eq!(sibling.score(&g, &fabric, &p, &r).to_bits(), first.to_bits());
+        assert_eq!(svc.stats.requests.load(Ordering::Relaxed), 1);
+
+        let stats = factory.score_cache_stats().unwrap();
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.inserts, 1);
     }
 }

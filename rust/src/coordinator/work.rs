@@ -74,6 +74,17 @@ pub fn fan_out_indexed<S, T: Send>(
         .collect()
 }
 
+/// Outcome of a [`BoundedQueue::pop_timeout`].
+#[derive(Debug, PartialEq)]
+pub enum PopTimeout<T> {
+    /// An item became available within the timeout.
+    Item(T),
+    /// The timeout elapsed with the queue still empty (and open).
+    TimedOut,
+    /// The queue is closed **and** drained; no item will ever arrive.
+    Closed,
+}
+
 /// Why a [`BoundedQueue::try_push`] was refused.
 #[derive(Debug)]
 pub enum PushError<T> {
@@ -193,6 +204,35 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Block until an item is available or `timeout` elapses. Like
+    /// [`BoundedQueue::pop`], a closed queue drains its backlog before
+    /// reporting [`PopTimeout::Closed`]; an empty-but-open queue reports
+    /// [`PopTimeout::TimedOut`] once the deadline passes. This is the
+    /// batching-dispatcher primitive: a consumer holding partial batches
+    /// bounds its wait so deadline flushes fire even when no new work
+    /// arrives.
+    pub fn pop_timeout(&self, timeout: std::time::Duration) -> PopTimeout<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.lock();
+        loop {
+            if let Some(entry) = q.heap.pop() {
+                return PopTimeout::Item(entry.item);
+            }
+            if q.closed {
+                return PopTimeout::Closed;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return PopTimeout::TimedOut;
+            }
+            let (guard, _) = self
+                .available
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            q = guard;
+        }
+    }
+
     /// Stop accepting new items and wake all blocked consumers. Already
     /// queued items remain poppable.
     pub fn close(&self) {
@@ -296,6 +336,42 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_pop_timeout_times_out_drains_and_closes() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        // Empty and open: times out.
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_millis(5)),
+            PopTimeout::TimedOut
+        );
+        // An item beats the deadline.
+        q.try_push(0, 7).unwrap();
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_millis(5)),
+            PopTimeout::Item(7)
+        );
+        // Closed queues drain the backlog before reporting Closed.
+        q.try_push(0, 8).unwrap();
+        q.close();
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_millis(5)),
+            PopTimeout::Item(8)
+        );
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_millis(5)),
+            PopTimeout::Closed
+        );
+        // A push wakes a waiting pop_timeout before the deadline.
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        std::thread::scope(|scope| {
+            let consumer =
+                scope.spawn(|| q.pop_timeout(std::time::Duration::from_secs(5)));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.try_push(1, 42).unwrap();
+            assert_eq!(consumer.join().unwrap(), PopTimeout::Item(42));
+        });
     }
 
     #[test]

@@ -13,6 +13,24 @@
 //! so N concurrent subgraph annealers multiplex onto one engine without
 //! contending on each other's buffers. Evaluation/error counters are shared
 //! atomics, aggregated across all handles of one family.
+//!
+//! ## The scoring hot loop
+//!
+//! Two optimizations sit between the annealer and the engine, both on by
+//! default and both exactly score-preserving:
+//!
+//! * **Incremental encoding** — a plain [`Objective::score`] arms a live
+//!   [`EncodeState`]; every subsequent [`Objective::score_moved`] /
+//!   [`Objective::stage_moved`] refreshes only the tensor rows the move
+//!   invalidated instead of re-encoding the whole graph, with
+//!   [`Objective::undo_moved`] restoring rejected proposals bit-for-bit
+//!   (the encode analogue of the router's `RoutingState`). Disable with
+//!   [`LearnedCost::set_incremental`] (the benches' scratch baseline).
+//! * **Score caching** — an optional bounded [`ScoreCache`] shared by the
+//!   whole handle family memoizes predictions keyed on (canonical graph
+//!   fingerprint, full PnR decision including route links, model
+//!   fingerprint), so revisited states skip the GNN call entirely. Off by
+//!   default; enable with [`LearnedCost::set_score_cache_capacity`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,8 +39,10 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use anyhow::{Context, Result};
 
 use crate::arch::Fabric;
-use crate::dfg::Dfg;
-use crate::gnn::{self, Bucket, GraphTensors};
+use crate::cost::score_cache::{ScoreCache, ScoreCacheStats};
+use crate::dfg::canon::{self, FingerprintHasher};
+use crate::dfg::{Dfg, NodeId};
+use crate::gnn::{self, Bucket, EncodeDelta, EncodeState, GraphTensors};
 use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
@@ -90,6 +110,27 @@ impl Scratch {
     }
 }
 
+/// Per-handle incremental-encode state (same single-owner `Mutex` story as
+/// [`Scratch`]): the live [`EncodeState`] armed by the last plain
+/// [`Objective::score`], the delta of the last un-reverted
+/// [`Objective::score_moved`], and the fleet snapshots
+/// [`Objective::stage_moved`] accumulates for the next
+/// [`Objective::score_batch`].
+struct IncrCell {
+    state: Option<EncodeState>,
+    last_delta: Option<EncodeDelta>,
+    /// Staged fleet tensors; the first `staged_len` are valid. Slots are
+    /// reused across fleets so staging never reallocates padded buffers.
+    staged: Vec<GraphTensors>,
+    staged_len: usize,
+}
+
+impl IncrCell {
+    fn empty() -> IncrCell {
+        IncrCell { state: None, last_delta: None, staged: Vec::new(), staged_len: 0 }
+    }
+}
+
 /// The learned cost model. See module docs for the handle/factory split.
 pub struct LearnedCost {
     engine: Arc<Engine>,
@@ -105,6 +146,32 @@ pub struct LearnedCost {
     /// logged to stderr.
     scoring_errors: Arc<AtomicU64>,
     scratch: Mutex<Scratch>,
+    /// Incremental-encode hot path (on by default; benches flip it off to
+    /// measure the scratch-encode reference path).
+    incremental: bool,
+    /// Optional bounded score cache, shared by every forked handle so
+    /// concurrent workers see each other's predictions. `None` = disabled
+    /// (the default).
+    score_cache: Option<Arc<ScoreCache>>,
+    /// Memoized model fingerprint (parameters + ablation) folded into
+    /// score-cache keys — kept in sync by the constructors and
+    /// [`LearnedCost::set_ablation`] so lookups never rehash ~220 KB of
+    /// parameters.
+    model_fp: u128,
+    /// content hash → canonical graph fingerprint memo for score-cache
+    /// keys: the WL canonicalization runs once per distinct structure.
+    canon_memo: Mutex<HashMap<u128, u128>>,
+    incr: Mutex<IncrCell>,
+}
+
+/// The score-cache key namespace component derived from the model itself.
+fn model_fingerprint(params: &[Tensor], ablation: Ablation) -> u128 {
+    let mut h = FingerprintHasher::new("rdacost-learned-gnn-v1");
+    for f in ablation.flags() {
+        h.push_f32(f);
+    }
+    h.push_u128(crate::cache::tensors_fingerprint(params).0);
+    h.finish().0
 }
 
 impl LearnedCost {
@@ -126,6 +193,7 @@ impl LearnedCost {
             .context("checkpoint does not match the inference backend's parameter schema")?;
         let params = Arc::new(store.values());
         let inputs = params.as_ref().clone();
+        let model_fp = model_fingerprint(&params, ablation);
         Ok(LearnedCost {
             engine,
             params,
@@ -133,6 +201,11 @@ impl LearnedCost {
             evaluations: Arc::new(AtomicU64::new(0)),
             scoring_errors: Arc::new(AtomicU64::new(0)),
             scratch: Mutex::new(Scratch { inputs, pool: HashMap::new() }),
+            incremental: true,
+            score_cache: None,
+            model_fp,
+            canon_memo: Mutex::new(HashMap::new()),
+            incr: Mutex::new(IncrCell::empty()),
         })
     }
 
@@ -151,12 +224,38 @@ impl LearnedCost {
                 inputs: self.params.as_ref().clone(),
                 pool: HashMap::new(),
             }),
+            incremental: self.incremental,
+            score_cache: self.score_cache.clone(),
+            model_fp: self.model_fp,
+            canon_memo: Mutex::new(HashMap::new()),
+            incr: Mutex::new(IncrCell::empty()),
         }
     }
 
     /// Set the ablation for this handle (and any handle forked afterwards).
     pub fn set_ablation(&mut self, ablation: Ablation) {
         self.ablation = ablation;
+        self.model_fp = model_fingerprint(&self.params, ablation);
+    }
+
+    /// Toggle the incremental-encode hot path for this handle (and any
+    /// handle forked afterwards). Scores are bit-identical either way; off
+    /// is the benches' scratch-encode baseline.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+    }
+
+    /// Attach a score cache bounded to `capacity` entries, shared with
+    /// every handle forked afterwards; `0` detaches. Cached predictions are
+    /// returned verbatim, so results stay bit-identical — only the number
+    /// of engine calls changes.
+    pub fn set_score_cache_capacity(&mut self, capacity: usize) {
+        self.score_cache = if capacity == 0 { None } else { Some(Arc::new(ScoreCache::new(capacity))) };
+    }
+
+    /// Counters of the shared score cache, if one is attached.
+    pub fn score_cache_stats(&self) -> Option<ScoreCacheStats> {
+        self.score_cache.as_ref().map(|c| c.stats())
     }
 
     /// Scoring calls served across this handle and all its forks.
@@ -173,6 +272,65 @@ impl LearnedCost {
         // A poisoned lock means another scoring call panicked mid-infer;
         // the scratch holds no invariants beyond reusable buffers.
         self.scratch.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_incr(&self) -> MutexGuard<'_, IncrCell> {
+        // Poisoning leaves at worst a stale EncodeState; every consumer
+        // re-arms through a plain `score` before trusting it.
+        self.incr.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The score-cache key for one fully decided state, or `None` when no
+    /// cache is attached; see [`crate::cost::score_cache::state_key`] for
+    /// what the key covers. The canonical graph fingerprint is memoized on
+    /// a cheap content hash so the WL canonicalization runs once per
+    /// distinct structure, not once per lookup.
+    fn state_key(&self, graph: &Dfg, placement: &Placement, routing: &Routing) -> Option<u128> {
+        self.score_cache.as_ref()?;
+        let content = canon::content_hash(graph);
+        let graph_fp = {
+            let mut memo = self.canon_memo.lock().unwrap_or_else(|e| e.into_inner());
+            *memo.entry(content).or_insert_with(|| canon::fingerprint(graph).0)
+        };
+        Some(crate::cost::score_cache::state_key(graph_fp, self.model_fp, placement, routing))
+    }
+
+    fn cache_get(&self, key: Option<u128>) -> Option<f64> {
+        self.score_cache.as_ref()?.get(key?)
+    }
+
+    fn cache_put(&self, key: Option<u128>, score: f64) {
+        if let (Some(cache), Some(key)) = (self.score_cache.as_ref(), key) {
+            cache.insert(key, score);
+        }
+    }
+
+    /// Fleet inference with the fixed-batch fallback: try one call at
+    /// batch=K; if the backend lacks that batch size (the PJRT backend
+    /// ships fixed-batch artifacts only), record the degradation and fall
+    /// back to batch=1 per graph — the search stays correct, just
+    /// unamortized. Per-graph errors map to 0.0, counted and logged.
+    fn infer_fleet(
+        &self,
+        scratch: &mut Scratch,
+        refs: &[&GraphTensors],
+        bucket: Bucket,
+    ) -> Vec<f64> {
+        match self.infer_locked(scratch, refs, bucket, refs.len()) {
+            Ok(scores) => scores,
+            Err(e) => {
+                self.note_scoring_error(&e);
+                refs.iter()
+                    .map(|g| match self.infer_locked(scratch, &[g], bucket, 1) {
+                        Ok(v) => v[0],
+                        Err(e2) => {
+                            self.note_scoring_error(&e2);
+                            0.0
+                        }
+                    })
+                    .collect()
+            }
+        }
     }
 
     /// Run the engine over `graphs` (all in `bucket`), chunked to `batch`,
@@ -248,17 +406,105 @@ impl Objective for LearnedCost {
                 return 0.0;
             }
         };
+        let key = self.state_key(graph, placement, routing);
+        if self.incremental {
+            let mut cell = self.lock_incr();
+            cell.last_delta = None;
+            cell.staged_len = 0;
+            // Arm the live encoding even on a cache hit: subsequent
+            // score_moved deltas branch off this base.
+            let armed = match cell.state.take() {
+                Some(mut state) => {
+                    state.reset(graph, fabric, placement, routing).map(|()| state)
+                }
+                None => EncodeState::new(graph, fabric, placement, routing),
+            };
+            match armed {
+                Ok(state) => cell.state = Some(state),
+                Err(e) => {
+                    self.note_scoring_error(&e);
+                    return 0.0;
+                }
+            }
+            if let Some(hit) = self.cache_get(key) {
+                return hit;
+            }
+            let state = cell.state.as_ref().expect("armed above");
+            let mut scratch = self.lock_scratch();
+            let result =
+                self.infer_locked(&mut scratch, &[state.tensors()], bucket, 1).map(|v| v[0]);
+            match result {
+                Ok(score) => {
+                    self.cache_put(key, score);
+                    score
+                }
+                Err(e) => {
+                    self.note_scoring_error(&e);
+                    0.0
+                }
+            }
+        } else {
+            if let Some(hit) = self.cache_get(key) {
+                return hit;
+            }
+            let mut scratch = self.lock_scratch();
+            let mut slots = scratch.take(bucket, 1);
+            let result = gnn::encode_into(graph, fabric, placement, routing, &mut slots[0])
+                .and_then(|()| {
+                    self.infer_locked(&mut scratch, &[&slots[0]], bucket, 1)
+                        .map(|v| v[0])
+                });
+            scratch.put(bucket, slots);
+            match result {
+                Ok(score) => {
+                    self.cache_put(key, score);
+                    score
+                }
+                Err(e) => {
+                    self.note_scoring_error(&e);
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// The incremental hot path: refresh only the tensor rows this move
+    /// invalidated, then infer (or return a cached prediction). Falls back
+    /// to a full [`Objective::score`] when the incremental path is disabled
+    /// or no base state is armed yet.
+    fn score_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> f64 {
+        if !self.incremental {
+            return self.score(graph, fabric, placement, routing);
+        }
+        let mut cell = self.lock_incr();
+        let Some(state) = cell.state.as_mut() else {
+            drop(cell);
+            return self.score(graph, fabric, placement, routing);
+        };
+        let delta = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        cell.last_delta = Some(delta);
+        // The state already advanced, so a cache hit still leaves undo_moved
+        // able to revert it.
+        let key = self.state_key(graph, placement, routing);
+        if let Some(hit) = self.cache_get(key) {
+            return hit;
+        }
+        let state = cell.state.as_ref().expect("advanced above");
+        let bucket = state.bucket();
         let mut scratch = self.lock_scratch();
-        let mut slots = scratch.take(bucket, 1);
-        let result = gnn::encode_into(graph, fabric, placement, routing, &mut slots[0]).and_then(
-            |()| {
-                self.infer_locked(&mut scratch, &[&slots[0]], bucket, 1)
-                    .map(|v| v[0])
-            },
-        );
-        scratch.put(bucket, slots);
-        match result {
-            Ok(score) => score,
+        match self.infer_locked(&mut scratch, &[state.tensors()], bucket, 1).map(|v| v[0]) {
+            Ok(score) => {
+                self.cache_put(key, score);
+                score
+            }
             Err(e) => {
                 self.note_scoring_error(&e);
                 0.0
@@ -266,11 +512,70 @@ impl Objective for LearnedCost {
         }
     }
 
+    fn undo_moved(&self) {
+        let mut cell = self.lock_incr();
+        if let Some(delta) = cell.last_delta.take() {
+            if let Some(state) = cell.state.as_mut() {
+                state.undo(delta);
+            }
+        }
+    }
+
+    /// Stage one fleet candidate: advance the live encoding, snapshot its
+    /// tensors into a reusable slot for the upcoming
+    /// [`Objective::score_batch`], and revert to the base state.
+    fn stage_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> bool {
+        if !self.incremental {
+            return false;
+        }
+        let mut cell = self.lock_incr();
+        let Some(mut state) = cell.state.take() else {
+            return false;
+        };
+        let delta = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        let slot = cell.staged_len;
+        if slot < cell.staged.len() {
+            cell.staged[slot].copy_from(state.tensors());
+        } else {
+            cell.staged.push(state.tensors().clone());
+        }
+        cell.staged_len = slot + 1;
+        state.undo(delta);
+        cell.state = Some(state);
+        true
+    }
+
+    fn commit_move(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) {
+        let mut cell = self.lock_incr();
+        cell.last_delta = None;
+        if let Some(state) = cell.state.as_mut() {
+            let _ = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        }
+    }
+
     /// Score a whole candidate fleet with **one** `engine.infer` at
-    /// batch=K: each candidate is encoded into its own pooled scratch slot,
-    /// the slots are stacked once, and the backend runs the fleet in a
-    /// single call (the native backend spreads the batch over worker
-    /// threads). Errors map to 0.0 for every candidate, counted and logged
+    /// batch=K (the native backend spreads the batch over worker threads).
+    /// Tensor sources, in preference order: the delta-updated snapshots
+    /// [`Objective::stage_moved`] staged (the incremental path — no
+    /// re-encode), else each candidate is encoded into its own pooled
+    /// scratch slot. With a score cache attached, only cache-miss
+    /// candidates reach the engine. Errors map to 0.0, counted and logged
     /// via the same rate-limited channel as [`Objective::score`].
     fn score_batch(
         &self,
@@ -281,51 +586,54 @@ impl Objective for LearnedCost {
         if candidates.is_empty() {
             return Vec::new();
         }
+        let n = candidates.len();
         let bucket = match gnn::select_bucket(graph.num_nodes(), graph.num_edges()) {
             Ok(b) => b,
             Err(e) => {
                 self.note_scoring_error(&e);
-                return vec![0.0; candidates.len()];
+                return vec![0.0; n];
             }
         };
-        let mut scratch = self.lock_scratch();
-        let mut slots = scratch.take(bucket, candidates.len());
-        let mut encode_err = None;
-        for ((placement, routing), slot) in candidates.iter().zip(slots.iter_mut()) {
-            if let Err(e) = gnn::encode_into(graph, fabric, placement, routing, slot) {
-                encode_err = Some(e);
-                break;
+        let keys: Vec<Option<u128>> =
+            candidates.iter().map(|(p, r)| self.state_key(graph, p, r)).collect();
+        let mut out: Vec<Option<f64>> = keys.iter().map(|&k| self.cache_get(k)).collect();
+        let miss: Vec<usize> = (0..n).filter(|&i| out[i].is_none()).collect();
+
+        let mut cell = self.lock_incr();
+        let use_staged = self.incremental && cell.staged_len == n;
+        cell.staged_len = 0; // snapshots are consumed by this fleet either way
+        if !miss.is_empty() {
+            let scores = if use_staged {
+                let refs: Vec<&GraphTensors> = miss.iter().map(|&i| &cell.staged[i]).collect();
+                let mut scratch = self.lock_scratch();
+                self.infer_fleet(&mut scratch, &refs, bucket)
+            } else {
+                let mut scratch = self.lock_scratch();
+                let mut slots = scratch.take(bucket, miss.len());
+                let mut encode_err = None;
+                for (&i, slot) in miss.iter().zip(slots.iter_mut()) {
+                    let (placement, routing) = &candidates[i];
+                    if let Err(e) = gnn::encode_into(graph, fabric, placement, routing, slot) {
+                        encode_err = Some(e);
+                        break;
+                    }
+                }
+                let scores = if let Some(e) = encode_err {
+                    self.note_scoring_error(&e);
+                    vec![0.0; miss.len()]
+                } else {
+                    let refs: Vec<&GraphTensors> = slots.iter().collect();
+                    self.infer_fleet(&mut scratch, &refs, bucket)
+                };
+                scratch.put(bucket, slots);
+                scores
+            };
+            for (&i, &score) in miss.iter().zip(scores.iter()) {
+                self.cache_put(keys[i], score);
+                out[i] = Some(score);
             }
         }
-        let scores = if let Some(e) = encode_err {
-            self.note_scoring_error(&e);
-            vec![0.0; candidates.len()]
-        } else {
-            let refs: Vec<&GraphTensors> = slots.iter().collect();
-            match self.infer_locked(&mut scratch, &refs, bucket, refs.len()) {
-                Ok(scores) => scores,
-                Err(e) => {
-                    // Fleet-sized batches can be unsupported (the PJRT
-                    // backend ships fixed-batch artifacts only): record the
-                    // degradation, then fall back to batch=1 inference,
-                    // which every backend provides — the search stays
-                    // correct, just unamortized.
-                    self.note_scoring_error(&e);
-                    slots
-                        .iter()
-                        .map(|g| match self.infer_locked(&mut scratch, &[g], bucket, 1) {
-                            Ok(v) => v[0],
-                            Err(e2) => {
-                                self.note_scoring_error(&e2);
-                                0.0
-                            }
-                        })
-                        .collect()
-                }
-            }
-        };
-        scratch.put(bucket, slots);
-        scores
+        out.into_iter().map(|s| s.expect("every candidate scored")).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -344,13 +652,13 @@ impl ObjectiveFactory for LearnedCost {
 
     /// Hash of the parameter tensors + ablation flags: a retrained (or
     /// differently ablated) model keys a disjoint compile-cache namespace.
+    /// The same value namespaces score-cache keys (memoized as `model_fp`).
     fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
-        let mut h = crate::dfg::canon::FingerprintHasher::new("rdacost-learned-gnn-v1");
-        for f in self.ablation.flags() {
-            h.push_f32(f);
-        }
-        h.push_u128(crate::cache::tensors_fingerprint(&self.params).0);
-        Some(h.finish())
+        Some(crate::dfg::Fingerprint(self.model_fp))
+    }
+
+    fn score_cache_stats(&self) -> Option<ScoreCacheStats> {
+        self.score_cache.as_ref().map(|c| c.stats())
     }
 }
 
@@ -483,6 +791,143 @@ mod tests {
             assert_eq!(s.to_bits(), a.to_bits(), "concurrent handle diverged");
         }
         assert_eq!(learned.evaluations(), 5);
+    }
+
+    #[test]
+    fn incremental_path_matches_scratch_scores_bitwise() {
+        // Drive the score_moved/undo_moved protocol directly (the idiom the
+        // annealer uses) and pin every prediction against a handle with the
+        // incremental path disabled: the hot path must be exactly
+        // score-preserving, not approximately.
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::router::{RouterParams, RoutingState};
+        use crate::util::rng::Rng;
+
+        let inc = fresh_learned();
+        let mut scratch = inc.fork();
+        scratch.set_incremental(false);
+
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(12);
+        let mut p = crate::placer::random_placement(&g, &f, &mut rng).unwrap();
+        let mut r = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+
+        let a = inc.score(&g, &f, &p, r.routing());
+        let b = scratch.score(&g, &f, &p, r.routing());
+        assert_eq!(a.to_bits(), b.to_bits(), "base score diverged");
+
+        for step in 0..25 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            let got = inc.score_moved(&g, &f, &q, r.routing(), &moved, &changed);
+            let want = scratch.score(&g, &f, &q, r.routing());
+            assert_eq!(got.to_bits(), want.to_bits(), "step {step} diverged");
+            if step % 3 == 0 {
+                // Reject: both layers roll back; the next proposal branches
+                // off the old base again.
+                inc.undo_moved();
+                r.undo(&g, rd);
+            } else {
+                p = q;
+            }
+        }
+    }
+
+    #[test]
+    fn staged_fleet_matches_scratch_batch() {
+        // stage_moved snapshots feeding score_batch must agree bitwise with
+        // the encode-from-snapshots reference path.
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::router::{RouterParams, RoutingState};
+        use crate::util::rng::Rng;
+
+        let inc = fresh_learned();
+        let mut scratch = inc.fork();
+        scratch.set_incremental(false);
+
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(14);
+        let p = crate::placer::random_placement(&g, &f, &mut rng).unwrap();
+        let mut r = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+
+        inc.score(&g, &f, &p, r.routing()); // arm the base state
+        let mut candidates = Vec::new();
+        for _ in 0..4 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            assert!(inc.stage_moved(&g, &f, &q, r.routing(), &moved, &changed));
+            candidates.push((q, r.routing().clone()));
+            r.undo(&g, rd);
+        }
+        assert!(!candidates.is_empty());
+        let staged = inc.score_batch(&g, &f, &candidates);
+        let reference = scratch.score_batch(&g, &f, &candidates);
+        for (i, (a, b)) in staged.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "candidate {i} diverged");
+        }
+    }
+
+    #[test]
+    fn score_cache_skips_engine_on_revisits() {
+        use crate::arch::FabricConfig;
+        use crate::dfg::builders;
+        use crate::util::rng::Rng;
+
+        let mut learned = fresh_learned();
+        learned.set_score_cache_capacity(64);
+        let g = builders::mha(32, 128, 4);
+        let fabric = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(13);
+        let p = crate::placer::random_placement(&g, &fabric, &mut rng).unwrap();
+        let r = crate::router::route_all(&fabric, &g, &p).unwrap();
+
+        let first = learned.score(&g, &fabric, &p, &r);
+        assert_eq!(learned.evaluations(), 1);
+        let second = learned.score(&g, &fabric, &p, &r);
+        assert_eq!(second.to_bits(), first.to_bits());
+        assert_eq!(learned.evaluations(), 1, "revisit must not re-infer");
+
+        // Forks share the cache, and a batch over the same state is served
+        // without an engine call.
+        let fork = learned.fork();
+        assert_eq!(fork.score(&g, &fabric, &p, &r).to_bits(), first.to_bits());
+        assert_eq!(learned.evaluations(), 1);
+        let batch =
+            learned.score_batch(&g, &fabric, std::slice::from_ref(&(p.clone(), r.clone())));
+        assert_eq!(batch[0].to_bits(), first.to_bits());
+        assert_eq!(learned.evaluations(), 1);
+
+        let stats = learned.score_cache_stats().unwrap();
+        assert_eq!(stats.hits, 3);
+        assert_eq!(stats.inserts, 1);
+
+        // A different decision is a different key and does reach the engine.
+        let p2 = crate::placer::random_placement(&g, &fabric, &mut rng).unwrap();
+        let r2 = crate::router::route_all(&fabric, &g, &p2).unwrap();
+        learned.score(&g, &fabric, &p2, &r2);
+        assert_eq!(learned.evaluations(), 2);
     }
 
     // End-to-end scoring tests live in rust/tests/runtime_integration.rs.

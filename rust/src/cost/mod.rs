@@ -24,7 +24,9 @@
 mod heuristic;
 pub mod learned;
 mod oracle;
+pub mod score_cache;
 
 pub use heuristic::{HeuristicCost, HeuristicRules};
 pub use learned::{Ablation, LearnedCost};
 pub use oracle::OracleCost;
+pub use score_cache::{ScoreCache, ScoreCacheStats};

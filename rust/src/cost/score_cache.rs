@@ -1,0 +1,245 @@
+//! Bounded score cache: (state fingerprint → predicted score) memoization
+//! for the scoring hot loop.
+//!
+//! An annealer revisits states constantly — every rejected proposal returns
+//! to the previous placement, restarts re-walk early neighborhoods, and a
+//! repeated-block trunk scores isomorphic siblings — yet each revisit paid
+//! a full encode + GNN infer. [`ScoreCache`] memoizes the predicted score
+//! under a key the caller builds from (canonical graph fingerprint ⊕
+//! decision fingerprint ⊕ objective `cache_fingerprint`), so a model
+//! upgrade or a different ablation keys a disjoint namespace exactly like
+//! the compile-level [`crate::cache::PnrCache`].
+//!
+//! **Eviction** is two-generation segmented LRU (the classic SLRU
+//! approximation): inserts land in the *current* generation; when it
+//! reaches half capacity it becomes the *previous* generation and the old
+//! previous generation is dropped wholesale. A hit in the previous
+//! generation promotes the entry back into the current one. Total
+//! residency is bounded by `capacity`, an insert is O(1), and entries
+//! touched within the last generation-rotation survive — which is the
+//! access pattern an annealing walk actually has (recent states are the
+//! ones revisited).
+//!
+//! Thread-safe: one mutex around the two maps (uncontended in the
+//! per-handle annealer path; shared across handles so forks see each
+//! other's scores), counters are atomics readable without the lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dfg::canon::FingerprintHasher;
+use crate::placer::Placement;
+use crate::router::Routing;
+
+/// Build the cache key for one fully decided state. `graph_fp` is the
+/// canonical graph fingerprint, `model_fp` the scoring model's namespace
+/// (parameters + ablation). The decision is hashed **completely** — units,
+/// stages, and every route's links: incremental routing is path-dependent,
+/// so the same placement revisited after different history can carry
+/// different routes and must not share an entry.
+pub fn state_key(
+    graph_fp: u128,
+    model_fp: u128,
+    placement: &Placement,
+    routing: &Routing,
+) -> u128 {
+    let mut h = FingerprintHasher::new("rdacost-score-state-v1");
+    h.push_u128(graph_fp);
+    h.push_u128(model_fp);
+    for &u in &placement.unit_of {
+        h.push_u64(u.0 as u64);
+    }
+    for &s in &placement.stage_of {
+        h.push_u64(s as u64);
+    }
+    for route in &routing.routes {
+        h.push_u64(route.links.len() as u64);
+        for l in &route.links {
+            h.push_u64(l.0 as u64);
+        }
+    }
+    h.finish().0
+}
+
+/// A point-in-time copy of a [`ScoreCache`]'s counters, carried in
+/// [`crate::compiler::CompileReport`] and the serve stats line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScoreCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    /// Entries dropped by generation rotation.
+    pub evictions: u64,
+}
+
+impl ScoreCacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hit(s) / {} lookup(s), {} insert(s), {} evicted",
+            self.hits,
+            self.lookups(),
+            self.inserts,
+            self.evictions
+        )
+    }
+}
+
+struct Generations {
+    cur: HashMap<u128, f64>,
+    prev: HashMap<u128, f64>,
+}
+
+/// The bounded score cache. See module docs for the eviction contract.
+pub struct ScoreCache {
+    inner: Mutex<Generations>,
+    /// Per-generation bound; total residency ≤ 2 × this.
+    half: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ScoreCache {
+    /// `capacity` bounds total resident entries (minimum 2: one per
+    /// generation).
+    pub fn new(capacity: usize) -> ScoreCache {
+        ScoreCache {
+            inner: Mutex::new(Generations { cur: HashMap::new(), prev: HashMap::new() }),
+            half: (capacity / 2).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Generations> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.half * 2
+    }
+
+    /// Resident entries (racy snapshot, for stats/tests).
+    pub fn len(&self) -> usize {
+        let g = self.lock();
+        g.cur.len() + g.prev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a state fingerprint; a previous-generation hit is promoted.
+    pub fn get(&self, key: u128) -> Option<f64> {
+        let mut g = self.lock();
+        if let Some(&score) = g.cur.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(score);
+        }
+        if let Some(score) = g.prev.remove(&key) {
+            self.rotate_if_full(&mut g);
+            g.cur.insert(key, score);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(score);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Record a freshly computed score.
+    pub fn insert(&self, key: u128, score: f64) {
+        let mut g = self.lock();
+        self.rotate_if_full(&mut g);
+        if g.cur.insert(key, score).is_none() {
+            self.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn rotate_if_full(&self, g: &mut Generations) {
+        if g.cur.len() >= self.half {
+            let dropped = std::mem::replace(&mut g.prev, std::mem::take(&mut g.cur));
+            self.evictions.fetch_add(dropped.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> ScoreCacheStats {
+        ScoreCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_promotion() {
+        let c = ScoreCache::new(8);
+        assert_eq!(c.get(1), None);
+        c.insert(1, 0.5);
+        assert_eq!(c.get(1), Some(0.5));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn residency_stays_bounded() {
+        let c = ScoreCache::new(16);
+        for k in 0..10_000u128 {
+            c.insert(k, k as f64);
+        }
+        assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
+        assert!(c.stats().evictions > 0);
+    }
+
+    #[test]
+    fn recently_touched_entries_survive_rotation() {
+        let c = ScoreCache::new(8); // half = 4
+        c.insert(1, 1.0);
+        // Keep key 1 hot across enough inserts to rotate generations twice:
+        // without promotion it would be dropped wholesale.
+        for k in 2..12u128 {
+            c.insert(k, k as f64);
+            assert_eq!(c.get(1), Some(1.0), "hot key evicted after insert {k}");
+        }
+    }
+
+    #[test]
+    fn reinsert_of_resident_key_is_not_counted() {
+        let c = ScoreCache::new(8);
+        c.insert(7, 0.25);
+        c.insert(7, 0.25);
+        assert_eq!(c.stats().inserts, 1);
+    }
+
+    #[test]
+    fn zero_capacity_still_functions() {
+        // Degenerate capacities clamp to one entry per generation.
+        let c = ScoreCache::new(0);
+        c.insert(1, 1.0);
+        assert_eq!(c.get(1), Some(1.0));
+        assert_eq!(c.capacity(), 2);
+    }
+}

@@ -169,6 +169,26 @@ fn push_dims(dims: &[u64], out: &mut Vec<u8>) {
     }
 }
 
+/// Hash of the graph *as labelled* (original indices, no canonicalization):
+/// a cheap O(V + E) identity two calls on an unchanged graph agree on, used
+/// to memoize [`fingerprint`] so the WL canonicalization runs once per
+/// distinct structure instead of once per score-cache lookup.
+pub fn content_hash(g: &Dfg) -> u128 {
+    let mut bytes = Vec::with_capacity(16 + 16 * g.num_nodes() + 24 * g.num_edges());
+    bytes.extend_from_slice(b"RDCT");
+    bytes.extend_from_slice(&(g.num_nodes() as u32).to_le_bytes());
+    for node in g.nodes() {
+        push_kind_bytes(&node.kind, &mut bytes);
+    }
+    bytes.extend_from_slice(&(g.num_edges() as u32).to_le_bytes());
+    for e in g.edges() {
+        bytes.extend_from_slice(&e.src.0.to_le_bytes());
+        bytes.extend_from_slice(&e.dst.0.to_le_bytes());
+        bytes.extend_from_slice(&e.bytes.to_le_bytes());
+    }
+    fnv128(&bytes)
+}
+
 fn distinct_count(colors: &[u64]) -> usize {
     let mut sorted: Vec<u64> = colors.to_vec();
     sorted.sort_unstable();

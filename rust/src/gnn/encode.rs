@@ -66,6 +66,21 @@ impl GraphTensors {
         self.label = f32::NAN;
     }
 
+    /// Copy `src` into `self`, reusing the existing allocations when the
+    /// buckets match (the fleet-staging hot path clones into pooled slots).
+    pub fn copy_from(&mut self, src: &GraphTensors) {
+        self.bucket = src.bucket;
+        self.node_type.clone_from(&src.node_type);
+        self.node_stage.clone_from(&src.node_stage);
+        self.node_feat.clone_from(&src.node_feat);
+        self.node_mask.clone_from(&src.node_mask);
+        self.edge_src.clone_from(&src.edge_src);
+        self.edge_dst.clone_from(&src.edge_dst);
+        self.edge_feat.clone_from(&src.edge_feat);
+        self.edge_mask.clone_from(&src.edge_mask);
+        self.label = src.label;
+    }
+
     pub fn live_nodes(&self) -> usize {
         self.node_mask.iter().filter(|&&m| m > 0.0).count()
     }
@@ -106,68 +121,115 @@ pub fn encode_into(
     }
     out.clear();
 
-    let rows = fabric.config.rows.max(1) as f32;
-    let cols = fabric.config.cols.max(1) as f32;
-    let num_stages = placement.num_stages().max(1) as f32;
-
-    for node in graph.nodes() {
-        let i = node.id.0 as usize;
-        let unit = fabric.unit(placement.unit(node.id));
-        out.node_type[i] = node.kind.type_index() as i32;
-        out.node_stage[i] = (placement.stage(node.id) as usize).min(MAX_STAGES - 1) as i32;
-        out.node_mask[i] = 1.0;
-        let f = &mut out.node_feat[i * NODE_FEAT_DIM..(i + 1) * NODE_FEAT_DIM];
-        f[unit.kind.index()] = 1.0;
-        // Scalars: [log_flops, log_bytes, row_norm, col_norm, stage_frac,
-        //           unit_quality].
-        f[UNIT_KIND_COUNT] = (node.kind.flops() as f32).ln_1p() / LOG_SCALE;
-        f[UNIT_KIND_COUNT + 1] = (node.kind.output_bytes() as f32).ln_1p() / LOG_SCALE;
-        f[UNIT_KIND_COUNT + 2] = unit.row as f32 / rows;
-        f[UNIT_KIND_COUNT + 3] = unit.col as f32 / cols;
-        f[UNIT_KIND_COUNT + 4] = placement.stage(node.id) as f32 / num_stages;
-        f[UNIT_KIND_COUNT + 5] = unit.quality as f32;
+    let ctx = EncodeCtx::new(fabric, placement);
+    for i in 0..graph.num_nodes() {
+        write_node_row(graph, fabric, placement, &ctx, i, out);
     }
-
-    for edge in graph.edges() {
-        let i = edge.id.0 as usize;
-        let route = &routing.routes[i];
-        out.edge_src[i] = edge.src.0 as i32;
-        out.edge_dst[i] = edge.dst.0 as i32;
-        out.edge_mask[i] = 1.0;
-
-        let mut shared = 0u32;
-        let mut max_flows = 0u32;
-        let mut min_q = 1.0f32;
-        let mut sum_q = 0.0f32;
-        for l in &route.links {
-            let k = routing.link_flows[l.0 as usize];
-            if k > 1 {
-                shared += 1;
-            }
-            max_flows = max_flows.max(k);
-            let q = fabric.link(*l).quality as f32;
-            min_q = min_q.min(q);
-            sum_q += q;
-        }
-        let mean_q = if route.links.is_empty() { 1.0 } else { sum_q / route.links.len() as f32 };
-        let src_kind = fabric.unit(placement.unit(edge.src)).kind;
-        let dst_kind = fabric.unit(placement.unit(edge.dst)).kind;
-        let touches_dram =
-            src_kind == UnitKind::DramPort || dst_kind == UnitKind::DramPort;
-
-        let f = &mut out.edge_feat[i * EDGE_FEAT_DIM..(i + 1) * EDGE_FEAT_DIM];
-        f[0] = route.hops() as f32 / HOPS_SCALE;
-        f[1] = (edge.bytes as f32).ln_1p() / LOG_SCALE;
-        f[2] = if placement.stage(edge.src) == placement.stage(edge.dst) { 1.0 } else { 0.0 };
-        f[3] = shared as f32 / FLOWS_SCALE;
-        f[4] = max_flows as f32 / FLOWS_SCALE;
-        f[5] = if touches_dram { 1.0 } else { 0.0 };
-        f[6] = min_q;
-        f[7] = mean_q;
-        f[8] = (edge.bytes as f32 / min_q.max(0.01)).ln_1p() / LOG_SCALE;
+    for i in 0..graph.num_edges() {
+        write_edge_row(graph, fabric, placement, routing, i, out);
     }
 
     Ok(())
+}
+
+/// Per-encode normalizers hoisted out of the node-row loop.
+/// `num_stages` is O(N) to recompute ([`Placement::num_stages`] scans
+/// `stage_of`), so both the full encoder and the incremental
+/// [`super::EncodeState`] compute it once per (re-)encode.
+pub(crate) struct EncodeCtx {
+    rows: f32,
+    cols: f32,
+    num_stages: f32,
+}
+
+impl EncodeCtx {
+    pub(crate) fn new(fabric: &Fabric, placement: &Placement) -> EncodeCtx {
+        EncodeCtx {
+            rows: fabric.config.rows.max(1) as f32,
+            cols: fabric.config.cols.max(1) as f32,
+            num_stages: placement.num_stages().max(1) as f32,
+        }
+    }
+}
+
+/// Write node `i`'s row (type, stage, mask, features). The single
+/// definition shared by [`encode_into`] and the incremental
+/// [`super::EncodeState`], so the two paths produce bit-identical floats by
+/// construction. Zeroes the feature row first: the incremental path
+/// refreshes rows in place, where a stale one-hot bit would survive a plain
+/// overwrite.
+pub(crate) fn write_node_row(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    ctx: &EncodeCtx,
+    i: usize,
+    out: &mut GraphTensors,
+) {
+    let node = &graph.nodes()[i];
+    let unit = fabric.unit(placement.unit(node.id));
+    out.node_type[i] = node.kind.type_index() as i32;
+    out.node_stage[i] = (placement.stage(node.id) as usize).min(MAX_STAGES - 1) as i32;
+    out.node_mask[i] = 1.0;
+    let f = &mut out.node_feat[i * NODE_FEAT_DIM..(i + 1) * NODE_FEAT_DIM];
+    f.fill(0.0);
+    f[unit.kind.index()] = 1.0;
+    // Scalars: [log_flops, log_bytes, row_norm, col_norm, stage_frac,
+    //           unit_quality].
+    f[UNIT_KIND_COUNT] = (node.kind.flops() as f32).ln_1p() / LOG_SCALE;
+    f[UNIT_KIND_COUNT + 1] = (node.kind.output_bytes() as f32).ln_1p() / LOG_SCALE;
+    f[UNIT_KIND_COUNT + 2] = unit.row as f32 / ctx.rows;
+    f[UNIT_KIND_COUNT + 3] = unit.col as f32 / ctx.cols;
+    f[UNIT_KIND_COUNT + 4] = placement.stage(node.id) as f32 / ctx.num_stages;
+    f[UNIT_KIND_COUNT + 5] = unit.quality as f32;
+}
+
+/// Write edge `i`'s row (endpoints, mask, features); shared with the
+/// incremental encoder like [`write_node_row`]. Every feature slot is
+/// written unconditionally, so no pre-zeroing is needed.
+pub(crate) fn write_edge_row(
+    graph: &Dfg,
+    fabric: &Fabric,
+    placement: &Placement,
+    routing: &Routing,
+    i: usize,
+    out: &mut GraphTensors,
+) {
+    let edge = graph.edges()[i];
+    let route = &routing.routes[i];
+    out.edge_src[i] = edge.src.0 as i32;
+    out.edge_dst[i] = edge.dst.0 as i32;
+    out.edge_mask[i] = 1.0;
+
+    let mut shared = 0u32;
+    let mut max_flows = 0u32;
+    let mut min_q = 1.0f32;
+    let mut sum_q = 0.0f32;
+    for l in &route.links {
+        let k = routing.link_flows[l.0 as usize];
+        if k > 1 {
+            shared += 1;
+        }
+        max_flows = max_flows.max(k);
+        let q = fabric.link(*l).quality as f32;
+        min_q = min_q.min(q);
+        sum_q += q;
+    }
+    let mean_q = if route.links.is_empty() { 1.0 } else { sum_q / route.links.len() as f32 };
+    let src_kind = fabric.unit(placement.unit(edge.src)).kind;
+    let dst_kind = fabric.unit(placement.unit(edge.dst)).kind;
+    let touches_dram = src_kind == UnitKind::DramPort || dst_kind == UnitKind::DramPort;
+
+    let f = &mut out.edge_feat[i * EDGE_FEAT_DIM..(i + 1) * EDGE_FEAT_DIM];
+    f[0] = route.hops() as f32 / HOPS_SCALE;
+    f[1] = (edge.bytes as f32).ln_1p() / LOG_SCALE;
+    f[2] = if placement.stage(edge.src) == placement.stage(edge.dst) { 1.0 } else { 0.0 };
+    f[3] = shared as f32 / FLOWS_SCALE;
+    f[4] = max_flows as f32 / FLOWS_SCALE;
+    f[5] = if touches_dram { 1.0 } else { 0.0 };
+    f[6] = min_q;
+    f[7] = mean_q;
+    f[8] = (edge.bytes as f32 / min_q.max(0.01)).ln_1p() / LOG_SCALE;
 }
 
 #[cfg(test)]

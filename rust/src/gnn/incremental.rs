@@ -1,0 +1,427 @@
+//! Incremental PnR encoding: feature-delta maintenance for the annealer's
+//! hot path, mirroring [`crate::router::RoutingState`].
+//!
+//! An annealer move touches a handful of nodes, yet the scoring path
+//! re-ran [`super::encode_into`] over the whole subgraph per candidate.
+//! [`EncodeState`] keeps one encoded [`GraphTensors`] live and updates
+//! exactly the rows a move invalidates:
+//!
+//! * **node rows** of the moved nodes (one-hot unit kind, row/col position,
+//!   stage fraction, unit quality) — plus *every* live node's row when the
+//!   move changes the stage count, since `stage_frac` divides by it;
+//! * **edge rows** of (a) the edges the router re-routed, (b) edges
+//!   incident to a touched node (`same_stage` flips under a stage shift
+//!   that re-routes nothing), and (c) edges *sharing a link* with any
+//!   re-routed edge — their `shared`/`max_flows` congestion features read
+//!   `link_flows`, which rip-up/install changed under them. The state keeps
+//!   a link → edges index plus a per-edge mirror of the route links to find
+//!   group (c) in O(affected) time.
+//!
+//! Rows are rewritten by the same [`super::encode`] row writers the full
+//! encoder uses, so an incrementally maintained tensor is bit-identical to
+//! a scratch re-encode *by construction*; the equivalence is pinned over
+//! random move/undo sequences by `rust/tests/encode_equivalence.rs`.
+//! [`EncodeState::apply_move`] returns an [`EncodeDelta`] holding the
+//! previous row contents; [`EncodeState::undo`] copies them back, restoring
+//! the tensors bit-for-bit on a rejected proposal.
+
+use anyhow::{bail, Result};
+
+use crate::arch::{Fabric, LinkId};
+use crate::dfg::{Dfg, NodeId};
+use crate::placer::Placement;
+use crate::router::Routing;
+
+use super::bucket;
+use super::encode::{self, EncodeCtx, GraphTensors};
+use super::schema::{EDGE_FEAT_DIM, NODE_FEAT_DIM};
+
+/// The inverse of one [`EncodeState::apply_move`]: the previous contents of
+/// every row the move refreshed, plus the link-index entries of the
+/// re-routed edges.
+#[derive(Debug, Clone)]
+pub struct EncodeDelta {
+    /// `(node, old type, old stage, old feature row)`.
+    nodes: Vec<(usize, i32, i32, [f32; NODE_FEAT_DIM])>,
+    /// `(edge, old feature row)`.
+    edges: Vec<(usize, [f32; EDGE_FEAT_DIM])>,
+    /// `(edge, old route links)` — re-routed edges only.
+    links: Vec<(usize, Vec<LinkId>)>,
+    /// Stage count before the move.
+    num_stages: u32,
+}
+
+impl EncodeDelta {
+    /// Rows this move refreshed (nodes + edges), for stats/tests.
+    pub fn len(&self) -> usize {
+        self.nodes.len() + self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty() && self.edges.is_empty()
+    }
+}
+
+/// Stateful incremental encoder: one live [`GraphTensors`] under
+/// apply/undo edits. See the module docs for the refresh-set contract.
+pub struct EncodeState {
+    tensors: GraphTensors,
+    /// link → ids of edges whose current route crosses it (membership
+    /// matters, order does not).
+    link_edges: Vec<Vec<u32>>,
+    /// Per-edge mirror of `routing.routes[e].links` as of the last
+    /// apply/reset, so a re-route's *old* links are known without keeping
+    /// the old `Routing` alive.
+    edge_links: Vec<Vec<LinkId>>,
+    num_stages: u32,
+}
+
+impl EncodeState {
+    /// Encode `(graph, placement, routing)` from scratch and index the
+    /// routes for incremental maintenance.
+    pub fn new(
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+    ) -> Result<EncodeState> {
+        let b = bucket::select(graph.num_nodes(), graph.num_edges())?;
+        let mut state = EncodeState {
+            tensors: GraphTensors::zeroed(b),
+            link_edges: Vec::new(),
+            edge_links: Vec::new(),
+            num_stages: 0,
+        };
+        state.reset(graph, fabric, placement, routing)?;
+        Ok(state)
+    }
+
+    /// Full re-encode + re-index, reusing the allocations (the resync after
+    /// a router rebuild, and the cheap way to re-arm a pooled state).
+    pub fn reset(
+        &mut self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+    ) -> Result<()> {
+        let b = bucket::select(graph.num_nodes(), graph.num_edges())?;
+        if b != self.tensors.bucket {
+            self.tensors = GraphTensors::zeroed(b);
+        }
+        encode::encode_into(graph, fabric, placement, routing, &mut self.tensors)?;
+        self.num_stages = placement.num_stages();
+        self.link_edges.resize(routing.link_flows.len(), Vec::new());
+        for v in &mut self.link_edges {
+            v.clear();
+        }
+        self.edge_links.resize(graph.num_edges(), Vec::new());
+        self.edge_links.truncate(graph.num_edges());
+        for (ei, route) in routing.routes.iter().enumerate() {
+            self.edge_links[ei].clear();
+            self.edge_links[ei].extend_from_slice(&route.links);
+            for l in &route.links {
+                self.link_edges[l.0 as usize].push(ei as u32);
+            }
+        }
+        Ok(())
+    }
+
+    /// The maintained tensors (always ≡ a scratch encode of the state they
+    /// were last applied/reset to).
+    pub fn tensors(&self) -> &GraphTensors {
+        &self.tensors
+    }
+
+    pub fn bucket(&self) -> super::Bucket {
+        self.tensors.bucket
+    }
+
+    /// Refresh the rows invalidated by one move. `placement` and `routing`
+    /// must already reflect the move (the annealer applies the placement
+    /// edit and `RoutingState::apply_move` first); `touched` is the moved
+    /// node set **including** a stage-shifted node (whose router move-set
+    /// is empty), `changed_edges` the router delta's re-routed edges
+    /// (deduplicated). Returns the delta [`EncodeState::undo`] reverses.
+    pub fn apply_move(
+        &mut self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> EncodeDelta {
+        let new_stages = placement.num_stages();
+
+        // Node refresh set: the touched nodes — or every live node when the
+        // stage count moved, since stage_frac = stage / num_stages.
+        let mut nodes: Vec<usize> = if new_stages != self.num_stages {
+            (0..graph.num_nodes()).collect()
+        } else {
+            touched.iter().map(|n| n.0 as usize).collect()
+        };
+        nodes.sort_unstable();
+        nodes.dedup();
+
+        // Edge refresh set: re-routed ∪ link-sharing ∪ incident-to-touched.
+        let mut edges: Vec<usize> = changed_edges.to_vec();
+        for &ei in changed_edges {
+            for l in &self.edge_links[ei] {
+                edges.extend(self.link_edges[l.0 as usize].iter().map(|&e| e as usize));
+            }
+            for l in &routing.routes[ei].links {
+                edges.extend(self.link_edges[l.0 as usize].iter().map(|&e| e as usize));
+            }
+        }
+        for n in touched {
+            edges.extend(graph.incoming(*n).map(|e| e.id.0 as usize));
+            edges.extend(graph.outgoing(*n).map(|e| e.id.0 as usize));
+        }
+        edges.sort_unstable();
+        edges.dedup();
+
+        // Save the rows being rewritten, then repoint the link index at the
+        // new routes and rewrite through the shared row writers.
+        let mut delta = EncodeDelta {
+            nodes: Vec::with_capacity(nodes.len()),
+            edges: Vec::with_capacity(edges.len()),
+            links: Vec::with_capacity(changed_edges.len()),
+            num_stages: self.num_stages,
+        };
+        for &i in &nodes {
+            let mut feat = [0.0f32; NODE_FEAT_DIM];
+            feat.copy_from_slice(&self.tensors.node_feat[i * NODE_FEAT_DIM..(i + 1) * NODE_FEAT_DIM]);
+            delta.nodes.push((i, self.tensors.node_type[i], self.tensors.node_stage[i], feat));
+        }
+        for &ei in &edges {
+            let mut feat = [0.0f32; EDGE_FEAT_DIM];
+            feat.copy_from_slice(
+                &self.tensors.edge_feat[ei * EDGE_FEAT_DIM..(ei + 1) * EDGE_FEAT_DIM],
+            );
+            delta.edges.push((ei, feat));
+        }
+        for &ei in changed_edges {
+            let old = std::mem::replace(&mut self.edge_links[ei], routing.routes[ei].links.clone());
+            for l in &old {
+                unindex_edge(&mut self.link_edges[l.0 as usize], ei);
+            }
+            for l in &self.edge_links[ei] {
+                self.link_edges[l.0 as usize].push(ei as u32);
+            }
+            delta.links.push((ei, old));
+        }
+
+        self.num_stages = new_stages;
+        let ctx = EncodeCtx::new(fabric, placement);
+        for &i in &nodes {
+            encode::write_node_row(graph, fabric, placement, &ctx, i, &mut self.tensors);
+        }
+        for &ei in &edges {
+            encode::write_edge_row(graph, fabric, placement, routing, ei, &mut self.tensors);
+        }
+        delta
+    }
+
+    /// Reverse one [`EncodeState::apply_move`] (rejected proposal):
+    /// restores the tensors bit-for-bit and repairs the link index.
+    pub fn undo(&mut self, delta: EncodeDelta) {
+        self.num_stages = delta.num_stages;
+        for (ei, old) in delta.links {
+            let new = std::mem::replace(&mut self.edge_links[ei], old);
+            for l in &new {
+                unindex_edge(&mut self.link_edges[l.0 as usize], ei);
+            }
+            for l in &self.edge_links[ei] {
+                self.link_edges[l.0 as usize].push(ei as u32);
+            }
+        }
+        for (i, ty, stage, feat) in delta.nodes {
+            self.tensors.node_type[i] = ty;
+            self.tensors.node_stage[i] = stage;
+            self.tensors.node_feat[i * NODE_FEAT_DIM..(i + 1) * NODE_FEAT_DIM]
+                .copy_from_slice(&feat);
+        }
+        for (ei, feat) in delta.edges {
+            self.tensors.edge_feat[ei * EDGE_FEAT_DIM..(ei + 1) * EDGE_FEAT_DIM]
+                .copy_from_slice(&feat);
+        }
+    }
+
+    /// Full consistency check (tests/debug): the maintained tensors must be
+    /// bit-identical to a scratch encode of `(placement, routing)`, and the
+    /// link index must mirror the routes exactly.
+    pub fn verify(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+    ) -> Result<()> {
+        let fresh = encode::encode(graph, fabric, placement, routing)?;
+        tensors_bit_eq(&self.tensors, &fresh)?;
+        for (ei, route) in routing.routes.iter().enumerate() {
+            if self.edge_links[ei] != route.links {
+                bail!("edge {ei}: link mirror diverged from the routes");
+            }
+            for l in &route.links {
+                if !self.link_edges[l.0 as usize].contains(&(ei as u32)) {
+                    bail!("edge {ei} missing from link {} index", l.0);
+                }
+            }
+        }
+        let indexed: usize = self.link_edges.iter().map(Vec::len).sum();
+        let expected: usize = routing.routes.iter().map(|r| r.links.len()).sum();
+        if indexed != expected {
+            bail!("link index holds {indexed} entries, routes have {expected}");
+        }
+        if self.num_stages != placement.num_stages() {
+            bail!("cached stage count diverged");
+        }
+        Ok(())
+    }
+}
+
+/// Drop `ei` from one link's edge list (order-insensitive).
+fn unindex_edge(list: &mut Vec<u32>, ei: usize) {
+    let pos = list
+        .iter()
+        .position(|&x| x == ei as u32)
+        .expect("encode link index out of sync with the routes");
+    list.swap_remove(pos);
+}
+
+/// Bitwise tensor equality (`PartialEq` would reject the NaN label slot).
+fn tensors_bit_eq(a: &GraphTensors, b: &GraphTensors) -> Result<()> {
+    let f32s_eq = |x: &[f32], y: &[f32]| {
+        x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+    };
+    if a.bucket != b.bucket
+        || a.node_type != b.node_type
+        || a.node_stage != b.node_stage
+        || a.edge_src != b.edge_src
+        || a.edge_dst != b.edge_dst
+        || !f32s_eq(&a.node_feat, &b.node_feat)
+        || !f32s_eq(&a.node_mask, &b.node_mask)
+        || !f32s_eq(&a.edge_feat, &b.edge_feat)
+        || !f32s_eq(&a.edge_mask, &b.edge_mask)
+    {
+        bail!("incrementally maintained tensors diverged from a scratch encode");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FabricConfig;
+    use crate::dfg::builders;
+    use crate::placer::random_placement;
+    use crate::router::{RouterParams, RoutingState};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Fabric, Dfg, Placement, RoutingState, EncodeState) {
+        let g = builders::mha(32, 128, 4);
+        let f = Fabric::new(FabricConfig::default());
+        let mut rng = Rng::new(seed);
+        let p = random_placement(&g, &f, &mut rng).unwrap();
+        let r = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+        let e = EncodeState::new(&g, &f, &p, r.routing()).unwrap();
+        (f, g, p, r, e)
+    }
+
+    #[test]
+    fn new_state_matches_scratch_encode() {
+        let (f, g, p, r, e) = setup(1);
+        e.verify(&g, &f, &p, r.routing()).unwrap();
+    }
+
+    #[test]
+    fn relocate_apply_and_undo_round_trip() {
+        let (f, g, p, mut r, mut e) = setup(2);
+        let before = e.tensors().clone();
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            let ed = e.apply_move(&g, &f, &q, r.routing(), &moved, &changed);
+            assert!(!ed.is_empty());
+            e.verify(&g, &f, &q, r.routing()).unwrap();
+            e.undo(ed);
+            r.undo(&g, rd);
+            e.verify(&g, &f, &p, r.routing()).unwrap();
+            assert_eq!(e.tensors().node_feat, before.node_feat);
+            assert_eq!(e.tensors().edge_feat, before.edge_feat);
+        }
+    }
+
+    #[test]
+    fn stage_shift_refreshes_without_reroute() {
+        // A stage shift re-routes nothing (empty router move-set) but still
+        // changes the node's stage features and incident same_stage bits —
+        // and, when it moves the stage count, every node's stage_frac.
+        let (f, g, p, r, mut e) = setup(3);
+        let mut q = p.clone();
+        let node = 0usize;
+        q.stage_of[node] += 1;
+        let ed = e.apply_move(&g, &f, &q, r.routing(), &[NodeId(node as u32)], &[]);
+        e.verify(&g, &f, &q, r.routing()).unwrap();
+        e.undo(ed);
+        e.verify(&g, &f, &p, r.routing()).unwrap();
+    }
+
+    #[test]
+    fn accepted_moves_keep_state_consistent() {
+        let (f, g, mut p, mut r, mut e) = setup(4);
+        let mut rng = Rng::new(9);
+        for _ in 0..30 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            e.apply_move(&g, &f, &q, r.routing(), &moved, &changed);
+            p = q;
+        }
+        e.verify(&g, &f, &p, r.routing()).unwrap();
+    }
+
+    #[test]
+    fn reset_rearms_after_rebuild() {
+        let (f, g, mut p, mut r, mut e) = setup(6);
+        let mut rng = Rng::new(11);
+        for _ in 0..10 {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(&f, kind);
+            if free.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.unit_of[node] = *rng.pick(&free);
+            let moved = vec![NodeId(node as u32)];
+            let rd = r.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            e.apply_move(&g, &f, &q, r.routing(), &moved, &changed);
+            p = q;
+        }
+        r.rebuild(&f, &g, &p).unwrap();
+        e.reset(&g, &f, &p, r.routing()).unwrap();
+        e.verify(&g, &f, &p, r.routing()).unwrap();
+    }
+}

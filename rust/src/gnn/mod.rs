@@ -13,8 +13,10 @@
 pub mod batch;
 mod bucket;
 mod encode;
+mod incremental;
 pub mod schema;
 
 pub use batch::{flags_tensor, stack_batch, stack_labels};
 pub use bucket::{select as select_bucket, Bucket, BUCKETS};
 pub use encode::{encode, encode_into, GraphTensors};
+pub use incremental::{EncodeDelta, EncodeState};

@@ -86,6 +86,12 @@ Common options:
                     reference path; default 25)
   --congestion-weight W   router congestion penalty per existing flow
                     ([router] congestion_weight, default 0.5)
+  --score-cache-capacity N  bounded score cache for learned scoring
+                    ([anneal] score_cache): memoize predicted scores per
+                    (graph ⊕ model ⊕ placement/routing) state so revisits
+                    skip encode + inference; 0 disables (default). Scores
+                    are bit-identical either way (see README \"Scoring hot
+                    loop\")
   --refine-passes N router rip-up-and-reroute refinement passes
                     ([router] refine_passes, default 1)
   --workers N       worker threads: gen-data shards and compile-session
@@ -182,6 +188,9 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
         args.get_usize("proposals", cfg.anneal.proposals_per_step).max(1);
     // Incremental-routing resync cadence (0 = never, 1 = full re-route).
     cfg.anneal.reroute_every = args.get_usize("reroute-every", cfg.anneal.reroute_every);
+    // Score-cache capacity for learned scoring (0 = off).
+    cfg.score_cache_capacity =
+        args.get_usize("score-cache-capacity", cfg.score_cache_capacity);
     // Router tunables, mirrored into the dataset generator's label routes.
     cfg.anneal.router.congestion_weight =
         args.get_f64("congestion-weight", cfg.anneal.router.congestion_weight);
@@ -334,7 +343,8 @@ fn cmd_compile(args: &Args) -> Result<()> {
         "learned" => {
             let engine = runtime::engine(&cfg.artifacts_dir)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
-            let obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
+            let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
+            obj.set_score_cache_capacity(cfg.score_cache_capacity);
             compiler::compile(&graph, &fabric, &obj, &compile_cfg)?
         }
         other => bail!("unknown --cost {other:?}"),
@@ -365,6 +375,9 @@ fn cmd_compile(args: &Args) -> Result<()> {
             Some(p) => println!("  cache [{p}]: {}", report.cache.summary()),
             None => println!("  cache [in-session]: {}", report.cache.summary()),
         }
+    }
+    if let Some(sc) = &report.score_cache {
+        println!("  score cache: {}", sc.summary());
     }
     Ok(())
 }
@@ -408,7 +421,9 @@ fn serve_objective(
         "learned" => {
             let engine = runtime::engine(&cfg.artifacts_dir)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
-            std::sync::Arc::new(cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?)
+            let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
+            obj.set_score_cache_capacity(cfg.score_cache_capacity);
+            std::sync::Arc::new(obj)
         }
         other => bail!("unknown --cost {other:?}"),
     })

@@ -66,6 +66,75 @@ pub trait Objective {
     fn name(&self) -> &'static str {
         "objective"
     }
+
+    // --- Incremental-scoring hooks -------------------------------------
+    //
+    // The incremental annealer narrates its moves through these so an
+    // objective can maintain per-state derived data (the learned model's
+    // [`crate::gnn::EncodeState`]) instead of recomputing it per candidate.
+    // All are defaulted to the plain-scoring behavior, so objectives
+    // without incremental state (heuristic, oracle, test doubles) ignore
+    // them entirely.
+
+    /// Score the state reached by applying one move to the **previously
+    /// scored** state. `touched` lists the nodes whose placement features
+    /// changed (including a stage-shifted node); `changed_edges` the edges
+    /// the router re-routed. A stateful objective updates its encoding by
+    /// delta; the default just delegates to [`Objective::score`].
+    ///
+    /// Contract: the caller must follow a rejected `score_moved` with
+    /// [`Objective::undo_moved`] before the next scoring call, and any
+    /// out-of-band state change (a router rebuild) with a plain
+    /// [`Objective::score`], which re-anchors stateful implementations.
+    fn score_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> f64 {
+        let _ = (touched, changed_edges);
+        self.score(graph, fabric, placement, routing)
+    }
+
+    /// Revert the last [`Objective::score_moved`] (rejected proposal).
+    fn undo_moved(&self) {}
+
+    /// Stage one fleet candidate reached by applying a move to the
+    /// previously scored state (the K-fleet analogue of
+    /// [`Objective::score_moved`]): a stateful objective snapshots its
+    /// delta-updated encoding for the upcoming [`Objective::score_batch`]
+    /// and reverts to the base state before returning. Returns whether the
+    /// candidate was staged; `false` (the default) means the objective will
+    /// encode the candidate from the snapshots `score_batch` receives.
+    fn stage_moved(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) -> bool {
+        let _ = (graph, fabric, placement, routing, touched, changed_edges);
+        false
+    }
+
+    /// Advance the previously scored state by one accepted fleet move (the
+    /// caller re-applied the winning candidate after `score_batch`).
+    fn commit_move(
+        &self,
+        graph: &Dfg,
+        fabric: &Fabric,
+        placement: &Placement,
+        routing: &Routing,
+        touched: &[NodeId],
+        changed_edges: &[usize],
+    ) {
+        let _ = (graph, fabric, placement, routing, touched, changed_edges);
+    }
 }
 
 /// A shareable source of per-thread scoring handles.
@@ -100,6 +169,14 @@ pub trait ObjectiveFactory: Sync {
     /// single compile (always safe — one factory per compile call) and
     /// refuses to persist entries to disk.
     fn cache_fingerprint(&self) -> Option<crate::dfg::Fingerprint> {
+        None
+    }
+
+    /// Counters of this factory's score cache, if it runs one
+    /// ([`crate::cost::ScoreCache`] memoizes revisited-state scores across
+    /// every handle of the family). `None` (the default) means "no score
+    /// cache"; reports omit the line.
+    fn score_cache_stats(&self) -> Option<crate::cost::ScoreCacheStats> {
         None
     }
 }
@@ -283,7 +360,15 @@ fn anneal_incremental(
                     return Err(e);
                 }
             };
-            let score = objective.score(graph, fabric, &current, engine.routing());
+            let changed: Vec<usize> = delta.edges().collect();
+            let score = objective.score_moved(
+                graph,
+                fabric,
+                &current,
+                engine.routing(),
+                &touched_nodes(&mv),
+                &changed,
+            );
             log.evaluations += 1;
             log.score_batches += 1;
 
@@ -309,6 +394,7 @@ fn anneal_incremental(
                 current_score = score;
                 accepted_now = true;
             } else {
+                objective.undo_moved();
                 engine.undo(graph, delta);
                 apply(&mut current, &inverse);
             }
@@ -333,6 +419,15 @@ fn anneal_incremental(
                         return Err(e);
                     }
                 };
+                let changed: Vec<usize> = delta.edges().collect();
+                objective.stage_moved(
+                    graph,
+                    fabric,
+                    &current,
+                    engine.routing(),
+                    &touched_nodes(mv),
+                    &changed,
+                );
                 candidates.push((current.clone(), engine.routing().clone()));
                 engine.undo(graph, delta);
                 apply(&mut current, &inverse);
@@ -381,8 +476,18 @@ fn anneal_incremental(
                     // same state reproduces exactly the routes that were
                     // scored.
                     apply(&mut current, &moves[chosen]);
-                    engine.apply_move(fabric, graph, &current, &moved_nodes(&moves[chosen]))?;
+                    let delta =
+                        engine.apply_move(fabric, graph, &current, &moved_nodes(&moves[chosen]))?;
                     debug_assert_eq!(engine.routing().routes, candidates[chosen].1.routes);
+                    let changed: Vec<usize> = delta.edges().collect();
+                    objective.commit_move(
+                        graph,
+                        fabric,
+                        &current,
+                        engine.routing(),
+                        &touched_nodes(&moves[chosen]),
+                        &changed,
+                    );
                     current_score = scores[chosen];
                     accepted_now = true;
                 }
@@ -781,6 +886,18 @@ fn moved_nodes(mv: &Move) -> Vec<NodeId> {
         Move::Relocate { node, .. } => vec![NodeId(node as u32)],
         Move::Swap { a, b } => vec![NodeId(a as u32), NodeId(b as u32)],
         Move::StageShift { .. } => Vec::new(),
+    }
+}
+
+/// The nodes whose *encoded features* change under `mv` — the moved nodes,
+/// plus a stage-shifted node (its unit is untouched, so the router move-set
+/// is empty, but its stage features and incident `same_stage` bits move).
+/// This is what the incremental encoder needs, vs [`moved_nodes`] for the
+/// router.
+fn touched_nodes(mv: &Move) -> Vec<NodeId> {
+    match *mv {
+        Move::StageShift { node, .. } => vec![NodeId(node as u32)],
+        _ => moved_nodes(mv),
     }
 }
 
@@ -1252,6 +1369,163 @@ mod tests {
             assert!(log.accepted > 0, "K={k}: flaky objective stalled the walk");
             assert!(log.best_score.is_finite(), "K={k}: non-finite best: {log:?}");
         }
+    }
+
+    /// Objective that mirrors the scored state through the incremental
+    /// hooks and asserts the call protocol: every `score_moved` /
+    /// `stage_moved` / `commit_move` presents a placement one move away
+    /// from the previously scored state (differing only at the touched
+    /// nodes, re-routing only edges incident to them), every rejection is
+    /// followed by `undo_moved`, and a plain `score` re-anchors.
+    struct HookMirror {
+        inner: Oracle,
+        state: std::cell::RefCell<Option<Placement>>,
+        prev: std::cell::RefCell<Option<Placement>>,
+        moved_scores: std::cell::Cell<usize>,
+        undos: std::cell::Cell<usize>,
+        staged: std::cell::Cell<usize>,
+        commits: std::cell::Cell<usize>,
+    }
+
+    impl HookMirror {
+        fn new() -> HookMirror {
+            HookMirror {
+                inner: Oracle { era: Era::Past },
+                state: std::cell::RefCell::new(None),
+                prev: std::cell::RefCell::new(None),
+                moved_scores: std::cell::Cell::new(0),
+                undos: std::cell::Cell::new(0),
+                staged: std::cell::Cell::new(0),
+                commits: std::cell::Cell::new(0),
+            }
+        }
+
+        fn check_one_move_away(
+            &self,
+            graph: &Dfg,
+            placement: &Placement,
+            touched: &[NodeId],
+            changed_edges: &[usize],
+        ) {
+            let state = self.state.borrow();
+            let base = state.as_ref().expect("incremental hook before any plain score");
+            for i in 0..placement.unit_of.len() {
+                if touched.iter().any(|n| n.0 as usize == i) {
+                    continue;
+                }
+                assert_eq!(placement.unit_of[i], base.unit_of[i], "untouched node {i} moved");
+                assert_eq!(placement.stage_of[i], base.stage_of[i], "untouched node {i} restaged");
+            }
+            for &ei in changed_edges {
+                let e = graph.edges()[ei];
+                assert!(
+                    touched.contains(&e.src) || touched.contains(&e.dst),
+                    "edge {ei} re-routed but not incident to a touched node"
+                );
+            }
+        }
+    }
+
+    impl Objective for HookMirror {
+        fn score(&self, g: &Dfg, f: &Fabric, p: &Placement, r: &Routing) -> f64 {
+            *self.state.borrow_mut() = Some(p.clone());
+            *self.prev.borrow_mut() = None;
+            self.inner.score(g, f, p, r)
+        }
+
+        fn score_moved(
+            &self,
+            g: &Dfg,
+            f: &Fabric,
+            p: &Placement,
+            r: &Routing,
+            touched: &[NodeId],
+            changed_edges: &[usize],
+        ) -> f64 {
+            self.check_one_move_away(g, p, touched, changed_edges);
+            *self.prev.borrow_mut() = self.state.borrow_mut().replace(p.clone());
+            self.moved_scores.set(self.moved_scores.get() + 1);
+            self.inner.score(g, f, p, r)
+        }
+
+        fn undo_moved(&self) {
+            let prev = self.prev.borrow_mut().take().expect("undo_moved without a prior move");
+            *self.state.borrow_mut() = Some(prev);
+            self.undos.set(self.undos.get() + 1);
+        }
+
+        fn stage_moved(
+            &self,
+            g: &Dfg,
+            _f: &Fabric,
+            p: &Placement,
+            _r: &Routing,
+            touched: &[NodeId],
+            changed_edges: &[usize],
+        ) -> bool {
+            // Fleet candidates branch off the base state; the base itself
+            // must not advance until commit_move.
+            self.check_one_move_away(g, p, touched, changed_edges);
+            self.staged.set(self.staged.get() + 1);
+            false
+        }
+
+        fn commit_move(
+            &self,
+            g: &Dfg,
+            _f: &Fabric,
+            p: &Placement,
+            _r: &Routing,
+            touched: &[NodeId],
+            changed_edges: &[usize],
+        ) {
+            self.check_one_move_away(g, p, touched, changed_edges);
+            *self.state.borrow_mut() = Some(p.clone());
+            *self.prev.borrow_mut() = None;
+            self.commits.set(self.commits.get() + 1);
+        }
+
+        fn name(&self) -> &'static str {
+            "hook-mirror"
+        }
+    }
+
+    #[test]
+    fn incremental_hooks_follow_the_apply_undo_protocol() {
+        let f = Fabric::new(FabricConfig::default());
+        let g = builders::mha(32, 128, 4);
+
+        // K=1: every step is a score_moved; rejections undo.
+        let params = AnnealParams { iterations: 150, ..AnnealParams::default() };
+        let mirror = HookMirror::new();
+        let mut rng = Rng::new(71);
+        let (best, _, log) = anneal(&g, &f, &mirror, &params, &mut rng).unwrap();
+        best.validate(&g, &f).unwrap();
+        assert!(mirror.moved_scores.get() > 100, "K=1 path bypassed score_moved");
+        assert_eq!(mirror.staged.get(), 0);
+        assert!(log.accepted > 0);
+        // Every non-accepted score_moved was undone.
+        assert_eq!(mirror.moved_scores.get() - mirror.undos.get(), log.accepted);
+
+        // K=4: candidates are staged, accepted winners committed.
+        let params = AnnealParams {
+            iterations: 60,
+            proposals_per_step: 4,
+            ..AnnealParams::default()
+        };
+        let mirror = HookMirror::new();
+        let mut rng = Rng::new(72);
+        let (best, _, log) = anneal(&g, &f, &mirror, &params, &mut rng).unwrap();
+        best.validate(&g, &f).unwrap();
+        // (A step whose proposal batch deduplicates down to one move takes
+        // the K=1 branch instead, so accepts split between commit_move and
+        // accepted score_moved calls.)
+        assert!(mirror.staged.get() > 100, "fleet path bypassed stage_moved");
+        assert!(mirror.commits.get() > 0, "no accepted fleet move was committed");
+        assert_eq!(
+            mirror.commits.get() + mirror.moved_scores.get() - mirror.undos.get(),
+            log.accepted
+        );
     }
 
     #[test]

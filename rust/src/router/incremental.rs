@@ -65,6 +65,13 @@ impl RouteDelta {
     pub fn is_empty(&self) -> bool {
         self.changed.is_empty()
     }
+
+    /// The edge indices this move re-routed, in rip-up order. Consumers
+    /// that maintain per-edge derived state (the incremental encoder) use
+    /// this to refresh exactly the rows a move invalidated.
+    pub fn edges(&self) -> impl Iterator<Item = usize> + '_ {
+        self.changed.iter().map(|&(ei, _)| ei)
+    }
 }
 
 /// Stateful incremental router: routes + exact aggregates under

@@ -21,10 +21,31 @@
 //!
 //! Zero-masked rows (bucket padding) are skipped entirely, which is exact —
 //! their activations are zero by construction — so the *compute* per
-//! scoring call is proportional to live graph size. (The tape buffers are
-//! still allocated at bucket size; inference currently reuses the training
-//! forward and so pays for tape storage it does not read — an acceptable
-//! few-percent overhead at these sizes, and a known optimization site.)
+//! scoring call is proportional to live graph size.
+//!
+//! ## Inference vs training kernels
+//!
+//! Training goes through [`forward`], which records a full [`Tape`] (per-layer
+//! messages, max-scatter winners, activations) for the hand-written backward.
+//! Inference goes through [`forward_infer`]: the same arithmetic in the same
+//! order, but **tape-free and fused**. All activations live in flat
+//! structure-of-arrays rows (`[n × H]`, `[e × H]`) inside a reusable
+//! [`InferScratch`], each per-edge message is max-scattered into its endpoint
+//! the moment it is computed (no `[2E × H]` message buffer, no winner index),
+//! and the edge-embedding half of the message matmul — identical for the
+//! forward and backward direction of one edge — is computed once per edge and
+//! shared. The inner loops run over contiguous length-`H` rows with no
+//! index arithmetic in the body, which the compiler autovectorizes. Scratch
+//! buffers are thread-local on the K=1 annealer path and per-worker in the
+//! batched path, so the hot loop performs no heap allocation at all.
+//!
+//! `forward_infer` is bitwise-identical to `forward` (pinned by the
+//! `infer_matches_tape_forward` test): the shared directional partial sum
+//! repeats the exact add sequence of the tape kernel, and elementwise-max is
+//! order-insensitive in its result value (only the winner *index* depends on
+//! scatter order, and inference does not need winners).
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
@@ -128,7 +149,11 @@ impl InferenceBackend for NativeEngine {
         let mut preds = vec![0f32; batch];
         if batch == 1 {
             let g = GraphView::slice(t8, bucket, 0)?;
-            preds[0] = forward(&p, &g, flags).pred;
+            // The annealer's K=1 hot path: tape-free kernel, thread-local
+            // scratch, zero allocation per call.
+            INFER_SCRATCH.with(|cell| {
+                preds[0] = forward_infer(&p, &g, flags, &mut cell.borrow_mut());
+            });
         } else if batch > 1 {
             let workers = std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -140,9 +165,12 @@ impl InferenceBackend for NativeEngine {
                 let mut handles = Vec::with_capacity(workers);
                 for (wi, slot) in preds.chunks_mut(chunk).enumerate() {
                     handles.push(scope.spawn(move || -> Result<()> {
+                        // One scratch per worker, reused across its whole
+                        // chunk of the batch.
+                        let mut scratch = InferScratch::new();
                         for (j, out) in slot.iter_mut().enumerate() {
                             let g = GraphView::slice(t8, bucket, wi * chunk + j)?;
-                            *out = forward(p_ref, &g, flags).pred;
+                            *out = forward_infer(p_ref, &g, flags, &mut scratch);
                         }
                         Ok(())
                     }));
@@ -529,6 +557,257 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
     let pred = 1.0 / (1.0 + (-o).exp());
 
     Tape { live_nodes, live_edges, xv, h_e, hs, msgs, ss, winners, denom, hg, z1, z2, pred }
+}
+
+// ---- tape-free inference ----------------------------------------------------
+
+/// Reusable SoA activation buffers for [`forward_infer`]. All rows are flat
+/// `[count × H]` f32 slabs; `reset` re-zeroes everything so padded (dead)
+/// rows read as exact zeros without being touched in the loops.
+struct InferScratch {
+    /// `[E, H]` static edge embeddings.
+    h_e: Vec<f32>,
+    /// `[N, H]` current node state (layer input).
+    h: Vec<f32>,
+    /// `[N, H]` next node state (layer output); swapped with `h` per layer.
+    hn: Vec<f32>,
+    /// `[N, H]` max-aggregated neighborhoods for the current layer.
+    s: Vec<f32>,
+    /// `[H]` shared per-edge message partial sum (`web + h_e @ We[0..H]`).
+    base: Vec<f32>,
+    /// `[H]` forward-direction message row.
+    m_fwd: Vec<f32>,
+    /// `[H]` backward-direction message row.
+    m_bwd: Vec<f32>,
+    /// `[H]` pooled graph embedding.
+    hg: Vec<f32>,
+    z1: Vec<f32>,
+    z2: Vec<f32>,
+}
+
+impl InferScratch {
+    fn new() -> InferScratch {
+        InferScratch {
+            h_e: Vec::new(),
+            h: Vec::new(),
+            hn: Vec::new(),
+            s: Vec::new(),
+            base: vec![0.0; H],
+            m_fwd: vec![0.0; H],
+            m_bwd: vec![0.0; H],
+            hg: vec![0.0; H],
+            z1: vec![0.0; HH],
+            z2: vec![0.0; HH],
+        }
+    }
+
+    /// Size for an `(n, e)` bucket and zero every slab. Dead rows are never
+    /// written afterwards, so the zero fill is what makes mask-skipping
+    /// exact.
+    fn reset(&mut self, n: usize, e: usize) {
+        self.h_e.resize(e * H, 0.0);
+        self.h_e.fill(0.0);
+        for buf in [&mut self.h, &mut self.hn, &mut self.s] {
+            buf.resize(n * H, 0.0);
+            buf.fill(0.0);
+        }
+        self.hg.fill(0.0);
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch for the unbatched (K=1) inference path.
+    static INFER_SCRATCH: RefCell<InferScratch> = RefCell::new(InferScratch::new());
+}
+
+/// Tape-free forward pass: same arithmetic as [`forward`], in the same
+/// order, but fused and allocation-free. Bitwise parity with the tape
+/// kernel is a hard contract (see module docs and the
+/// `infer_matches_tape_forward` test); when editing one kernel, mirror the
+/// change — including operation *order* — in the other.
+fn forward_infer(
+    p: &[&[f32]],
+    g: &GraphView<'_>,
+    flags: [f32; ABLATION_FLAGS],
+    scratch: &mut InferScratch,
+) -> f32 {
+    let (use_node, use_edge, use_annot) = (flags[0], flags[1], flags[2]);
+    let (n, e) = (g.n, g.e);
+    scratch.reset(n, e);
+
+    // Node embedding + projection, fused: the gated input vector x_v is
+    // never materialized — each coordinate feeds its axpy row directly, in
+    // the same i = 0..XV order as the tape kernel.
+    for v in 0..n {
+        let m = g.node_mask[v];
+        if m == 0.0 {
+            continue;
+        }
+        let out = &mut scratch.h[v * H..(v + 1) * H];
+        out.copy_from_slice(p[P_NODE_B]);
+        for d in 0..NODE_FEAT_DIM {
+            let mut f = g.node_feat[v * NODE_FEAT_DIM + d];
+            if (ANNOT_LO..ANNOT_HI).contains(&d) {
+                f *= use_annot;
+            }
+            axpy_row(out, f, p[P_NODE_W], d);
+        }
+        let (t, s) = (g.op_type(v), g.stage(v));
+        for d in 0..OP_EMB_DIM {
+            axpy_row(out, p[P_OP_EMB][t * OP_EMB_DIM + d] * use_node, p[P_NODE_W], NODE_FEAT_DIM + d);
+        }
+        for d in 0..STAGE_EMB_DIM {
+            axpy_row(
+                out,
+                p[P_STAGE_EMB][s * STAGE_EMB_DIM + d] * use_node,
+                p[P_NODE_W],
+                NODE_FEAT_DIM + OP_EMB_DIM + d,
+            );
+        }
+        for c in 0..H {
+            out[c] = out[c].max(0.0) * m;
+        }
+    }
+
+    // Edge embedding (static across layers).
+    for ei in 0..e {
+        let m = g.edge_mask[ei];
+        if m == 0.0 {
+            continue;
+        }
+        let out = &mut scratch.h_e[ei * H..(ei + 1) * H];
+        out.copy_from_slice(p[P_EDGE_B]);
+        for i in 0..EDGE_FEAT_DIM {
+            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
+        }
+        for c in 0..H {
+            out[c] = out[c].max(0.0) * m;
+        }
+    }
+
+    // Message-passing layers: messages are scattered as they are computed.
+    // Elementwise max is order-insensitive in its *value*, so fusing the
+    // tape kernel's two edge loops into one preserves bit-exactness.
+    for k in 0..NUM_LAYERS {
+        let we = p[P_LAYER0 + 4 * k];
+        let web = p[P_LAYER0 + 4 * k + 1];
+        let wv = p[P_LAYER0 + 4 * k + 2];
+        let wvb = p[P_LAYER0 + 4 * k + 3];
+
+        scratch.s.fill(0.0);
+        for ei in 0..e {
+            let em = g.edge_mask[ei];
+            if em == 0.0 {
+                continue;
+            }
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            // The h_e half of cat(h_e, h_nb) @ We is identical for both
+            // directions of one edge: compute it once, copy per direction.
+            // The per-element add sequence matches the tape kernel exactly.
+            scratch.base.copy_from_slice(web);
+            for i in 0..H {
+                axpy_row(&mut scratch.base, scratch.h_e[ei * H + i], we, i);
+            }
+            scratch.m_fwd.copy_from_slice(&scratch.base);
+            for i in 0..H {
+                axpy_row(&mut scratch.m_fwd, scratch.h[src * H + i], we, H + i);
+            }
+            scratch.m_bwd.copy_from_slice(&scratch.base);
+            for i in 0..H {
+                axpy_row(&mut scratch.m_bwd, scratch.h[dst * H + i], we, H + i);
+            }
+            let s_dst = &mut scratch.s[dst * H..(dst + 1) * H];
+            for c in 0..H {
+                let mf = scratch.m_fwd[c].max(0.0) * em;
+                if mf > s_dst[c] {
+                    s_dst[c] = mf;
+                }
+            }
+            let s_src = &mut scratch.s[src * H..(src + 1) * H];
+            for c in 0..H {
+                let mb = scratch.m_bwd[c].max(0.0) * em;
+                if mb > s_src[c] {
+                    s_src[c] = mb;
+                }
+            }
+        }
+
+        // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
+        for v in 0..n {
+            let m = g.node_mask[v];
+            if m == 0.0 {
+                continue;
+            }
+            let out = &mut scratch.hn[v * H..(v + 1) * H];
+            out.copy_from_slice(wvb);
+            for i in 0..H {
+                axpy_row(out, scratch.h[v * H + i], wv, i);
+            }
+            for i in 0..H {
+                axpy_row(out, scratch.s[v * H + i], wv, H + i);
+            }
+            for c in 0..H {
+                out[c] = out[c].max(0.0) * m;
+            }
+        }
+        std::mem::swap(&mut scratch.h, &mut scratch.hn);
+    }
+
+    // Masked mean pool.
+    let mut mask_sum = 0.0f32;
+    for v in 0..n {
+        if g.node_mask[v] != 0.0 {
+            mask_sum += g.node_mask[v];
+        }
+    }
+    let denom = mask_sum.max(1.0);
+    for v in 0..n {
+        let m = g.node_mask[v];
+        if m == 0.0 {
+            continue;
+        }
+        let row = &scratch.h[v * H..(v + 1) * H];
+        for c in 0..H {
+            scratch.hg[c] += row[c] * m;
+        }
+    }
+    for c in 0..H {
+        scratch.hg[c] /= denom;
+    }
+
+    // Regressor head.
+    scratch.z1.copy_from_slice(p[P_HEAD_B1]);
+    for i in 0..H {
+        let x = scratch.hg[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                scratch.z1[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        scratch.z1[c] = scratch.z1[c].max(0.0);
+    }
+    scratch.z2.copy_from_slice(p[P_HEAD_B2]);
+    for i in 0..HH {
+        let x = scratch.z1[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                scratch.z2[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        scratch.z2[c] = scratch.z2[c].max(0.0);
+    }
+    let mut o = p[P_HEAD_B3][0];
+    for i in 0..HH {
+        o += scratch.z2[i] * p[P_HEAD_W3][i];
+    }
+    1.0 / (1.0 + (-o).exp())
 }
 
 // ---- backward ---------------------------------------------------------------
@@ -933,6 +1212,38 @@ mod tests {
         let bp = batched[0].as_f32().unwrap();
         assert_eq!(bp[0], single_a[0].as_f32().unwrap()[0]);
         assert_eq!(bp[1], single_b[0].as_f32().unwrap()[0]);
+    }
+
+    #[test]
+    fn infer_matches_tape_forward() {
+        // The tape-free kernel must be bitwise identical to the training
+        // forward, across graphs, ablation settings, and scratch reuse
+        // (stale state from a previous call must not leak).
+        let params = init_params(23);
+        let p: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
+        let mut rng = Rng::new(9);
+        let graphs: Vec<GraphTensors> = (0..4).map(|_| toy_graph(&mut rng, 0.5)).collect();
+        let flag_sets =
+            [[1.0f32, 1.0, 1.0], [0.0, 1.0, 1.0], [1.0, 0.0, 1.0], [1.0, 1.0, 0.0], [0.0, 0.0, 0.0]];
+        let mut scratch = InferScratch::new();
+        for gt in &graphs {
+            let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
+            let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+            for flags in flag_sets {
+                let tape = forward(&p, &g, flags).pred;
+                let fused = forward_infer(&p, &g, flags, &mut scratch);
+                assert_eq!(tape.to_bits(), fused.to_bits(), "flags {flags:?}");
+            }
+        }
+        // Fully padded graph (no live rows): both kernels fall through to
+        // the head biases.
+        let empty = GraphTensors::zeroed(BUCKETS[0]);
+        let stacked = stack_batch(&[&empty], BUCKETS[0], 1).unwrap();
+        let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+        let flags = [1.0f32, 1.0, 1.0];
+        let tape = forward(&p, &g, flags).pred;
+        let fused = forward_infer(&p, &g, flags, &mut scratch);
+        assert_eq!(tape.to_bits(), fused.to_bits());
     }
 
     #[test]

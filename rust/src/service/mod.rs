@@ -39,6 +39,7 @@ use anyhow::{anyhow, Result};
 
 use crate::arch::Fabric;
 use crate::cache::{CacheStatsSnapshot, PnrCache};
+use crate::cost::ScoreCacheStats;
 use crate::compiler::{CompileConfig, CompileReport, CompileSession};
 use crate::coordinator::{BoundedQueue, PushError};
 use crate::dfg::Dfg;
@@ -347,6 +348,7 @@ impl CompileService {
             latency,
             queue_wait,
             cache: self.cache_snapshot(),
+            score_cache: self.shared.objective.score_cache_stats(),
         }
     }
 
@@ -442,8 +444,13 @@ fn reporter_loop(shared: &Shared, stop: &(Mutex<bool>, Condvar), every: Duration
             .as_ref()
             .map(|c| format!(" cache_hit_rate={:.2}", c.snapshot().hit_rate()))
             .unwrap_or_default();
+        let score_line = shared
+            .objective
+            .score_cache_stats()
+            .map(|s| format!(" score_cache_hit_rate={:.2}", s.hit_rate()))
+            .unwrap_or_default();
         eprintln!(
-            "serve: queued={} completed={} shed={} expired={} p50={:.1}ms p99={:.1}ms{}",
+            "serve: queued={} completed={} shed={} expired={} p50={:.1}ms p99={:.1}ms{}{}",
             shared.queue.len(),
             stats.completed.load(Ordering::Relaxed),
             stats.shed.load(Ordering::Relaxed),
@@ -451,6 +458,7 @@ fn reporter_loop(shared: &Shared, stop: &(Mutex<bool>, Condvar), every: Duration
             latency.p50_ms(),
             latency.p99_ms(),
             cache_line,
+            score_line,
         );
     }
 }
@@ -471,6 +479,9 @@ pub struct ServeSummary {
     /// Queue wait of every dequeued request (including expired ones).
     pub queue_wait: HistogramSummary,
     pub cache: Option<CacheStatsSnapshot>,
+    /// Score-cache counters from the objective's scoring hot loop (`None`
+    /// unless the objective carries a score cache).
+    pub score_cache: Option<ScoreCacheStats>,
 }
 
 impl ServeSummary {
@@ -511,6 +522,17 @@ impl ServeSummary {
                     .set("inserts", c.inserts),
             );
         }
+        if let Some(s) = &self.score_cache {
+            j = j.set(
+                "score_cache",
+                Json::obj()
+                    .set("lookups", s.lookups())
+                    .set("hits", s.hits)
+                    .set("hit_rate", s.hit_rate())
+                    .set("inserts", s.inserts)
+                    .set("evictions", s.evictions),
+            );
+        }
         j
     }
 
@@ -520,9 +542,13 @@ impl ServeSummary {
             .cache
             .map(|c| format!(", cache hit rate {:.1}%", 100.0 * c.hit_rate()))
             .unwrap_or_default();
+        let score_line = self
+            .score_cache
+            .map(|s| format!(", score cache {}", s.summary()))
+            .unwrap_or_default();
         format!(
             "{} completed / {} submitted ({} shed, {} expired, {} failed) in {:.1}s — \
-             {:.1} req/s, p50 {:.1}ms, p95 {:.1}ms, p99 {:.1}ms{}",
+             {:.1} req/s, p50 {:.1}ms, p95 {:.1}ms, p99 {:.1}ms{}{}",
             self.completed,
             self.submitted,
             self.shed,
@@ -534,6 +560,7 @@ impl ServeSummary {
             self.latency.p95_ms(),
             self.latency.p99_ms(),
             cache_line,
+            score_line,
         )
     }
 }

@@ -1,0 +1,198 @@
+//! Equivalence pins for the incremental encoder (`gnn::EncodeState`) and
+//! the scoring hot path built on it:
+//!
+//! * **tensor equivalence (incremental)** — over ≥100 random accepted /
+//!   rejected move sequences, the incrementally-maintained `GraphTensors`
+//!   stay bit-identical to a from-scratch `gnn::encode` of the current
+//!   (placement, routing) after every `apply_move`, every `undo` restores
+//!   the previous tensors bit-for-bit, and unwinding the full accepted
+//!   history lands back on the initial encoding exactly;
+//! * **compile-level bit-identity** — a `CompileSession` run under the
+//!   learned objective with the full hot path ON (incremental encoding +
+//!   score cache) reports bit-identically to one with incremental encoding
+//!   and the score cache disabled: the hot path changes how much work
+//!   scoring does, never what it returns.
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::dfg::{builders, Dfg, NodeId};
+use rdacost::gnn::{self, EncodeDelta, EncodeState, GraphTensors};
+use rdacost::placer::{random_placement, AnnealParams, Placement};
+use rdacost::router::{RouteDelta, RouterParams, RoutingState};
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::prop;
+use rdacost::util::rng::Rng;
+
+fn test_graph(rng: &mut Rng) -> Dfg {
+    match rng.below(3) {
+        0 => builders::mha(32, 128, 4),
+        1 => builders::ffn(32, 128, 512),
+        _ => builders::mlp(16, &[64, 128, 64]),
+    }
+}
+
+/// Bitwise tensor comparison: the label is NaN for unscored states and the
+/// feature rows must match to the bit, so derived `PartialEq` is not enough.
+fn assert_tensors_bit_eq(a: &GraphTensors, b: &GraphTensors, what: &str) {
+    assert_eq!(a.bucket, b.bucket, "{what}: bucket");
+    assert_eq!(a.node_type, b.node_type, "{what}: node_type");
+    assert_eq!(a.node_stage, b.node_stage, "{what}: node_stage");
+    assert_eq!(a.node_mask, b.node_mask, "{what}: node_mask");
+    assert_eq!(a.edge_src, b.edge_src, "{what}: edge_src");
+    assert_eq!(a.edge_dst, b.edge_dst, "{what}: edge_dst");
+    assert_eq!(a.edge_mask, b.edge_mask, "{what}: edge_mask");
+    assert_eq!(a.node_feat.len(), b.node_feat.len(), "{what}: node_feat len");
+    for (i, (x, y)) in a.node_feat.iter().zip(&b.node_feat).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: node_feat[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.edge_feat.len(), b.edge_feat.len(), "{what}: edge_feat len");
+    for (i, (x, y)) in a.edge_feat.iter().zip(&b.edge_feat).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: edge_feat[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.label.to_bits(), b.label.to_bits(), "{what}: label");
+}
+
+/// One random valid move. Returns the post-move placement, the router's
+/// moved-node set (empty for a stage shift, per the routing contract), and
+/// the encoder's touched-node set (which *includes* a stage-shifted node).
+fn random_move(
+    g: &Dfg,
+    f: &Fabric,
+    p: &Placement,
+    rng: &mut Rng,
+) -> Option<(Placement, Vec<NodeId>, Vec<NodeId>)> {
+    let mut out = p.clone();
+    match rng.below(3) {
+        0 => {
+            let node = rng.below(g.num_nodes());
+            let kind = g.nodes()[node].kind.unit_kind();
+            let free = p.free_units(f, kind);
+            if free.is_empty() {
+                return None;
+            }
+            out.unit_of[node] = *rng.pick(&free);
+            let touched = vec![NodeId(node as u32)];
+            Some((out, touched.clone(), touched))
+        }
+        1 => {
+            let a = rng.below(g.num_nodes());
+            let kind = g.nodes()[a].kind.unit_kind();
+            let peers: Vec<usize> = (0..g.num_nodes())
+                .filter(|&i| i != a && g.nodes()[i].kind.unit_kind() == kind)
+                .collect();
+            if peers.is_empty() {
+                return None;
+            }
+            let b = *rng.pick(&peers);
+            out.unit_of.swap(a, b);
+            let touched = vec![NodeId(a as u32), NodeId(b as u32)];
+            Some((out, touched.clone(), touched))
+        }
+        _ => {
+            let node = rng.below(g.num_nodes());
+            let nid = NodeId(node as u32);
+            let s = p.stage_of[node];
+            let min_pred = g.incoming(nid).map(|e| p.stage(e.src)).max().unwrap_or(0);
+            let max_succ = g.outgoing(nid).map(|e| p.stage(e.dst)).min().unwrap_or(u32::MAX);
+            let mut opts = Vec::new();
+            if s > 0 && s - 1 >= min_pred {
+                opts.push(s - 1);
+            }
+            if s + 1 <= max_succ {
+                opts.push(s + 1);
+            }
+            if opts.is_empty() {
+                return None;
+            }
+            out.stage_of[node] = *rng.pick(&opts);
+            Some((out, Vec::new(), vec![nid]))
+        }
+    }
+}
+
+#[test]
+fn incremental_tensors_match_scratch_encode_over_move_sequences() {
+    prop::check("encode-equivalence", 100, |rng| {
+        let f = Fabric::new(FabricConfig::default());
+        let g = test_graph(rng);
+        let mut p = random_placement(&g, &f, rng).unwrap();
+        let mut router = RoutingState::new(&f, &g, &p, RouterParams::default()).unwrap();
+        let mut enc = EncodeState::new(&g, &f, &p, router.routing()).unwrap();
+        let initial = enc.tensors().clone();
+        let initial_placement = p.clone();
+
+        let mut stack: Vec<(RouteDelta, EncodeDelta)> = Vec::new();
+        let mut placements: Vec<Placement> = Vec::new();
+        let steps = rng.range_inclusive(10, 40);
+        for step in 0..steps {
+            let Some((q, moved, touched)) = random_move(&g, &f, &p, rng) else { continue };
+            let before = enc.tensors().clone();
+            let rd = router.apply_move(&f, &g, &q, &moved).unwrap();
+            let changed: Vec<usize> = rd.edges().collect();
+            let ed = enc.apply_move(&g, &f, &q, router.routing(), &touched, &changed);
+
+            // Incrementally maintained tensors ≡ a from-scratch encode of
+            // the post-move state, to the bit.
+            let scratch = gnn::encode(&g, &f, &q, router.routing()).unwrap();
+            assert_tensors_bit_eq(enc.tensors(), &scratch, &format!("step {step} apply"));
+
+            if rng.chance(0.4) {
+                // Rejected proposal: both undos must restore exactly.
+                enc.undo(ed);
+                router.undo(&g, rd);
+                assert_tensors_bit_eq(enc.tensors(), &before, &format!("step {step} undo"));
+            } else {
+                placements.push(std::mem::replace(&mut p, q));
+                stack.push((rd, ed));
+            }
+        }
+
+        // Unwind the whole accepted history; the encoder must land back on
+        // the initial tensors exactly.
+        while let Some((rd, ed)) = stack.pop() {
+            enc.undo(ed);
+            router.undo(&g, rd);
+            p = placements.pop().unwrap();
+        }
+        assert_eq!(p, initial_placement);
+        assert_tensors_bit_eq(enc.tensors(), &initial, "full unwind");
+    });
+}
+
+#[test]
+fn learned_compile_bit_identical_with_hot_path_on_and_off() {
+    // The whole scoring hot path — incremental encoding feeding the
+    // annealer's move hooks plus the score cache — must not change a single
+    // bit of a CompileSession report vs the scratch configuration
+    // (re-encode every candidate, no memoization).
+    let engine = rdacost::runtime::engine("artifacts").expect("backend");
+    let trainer = Trainer::new(engine.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+
+    let mut hot = LearnedCost::from_store(engine.clone(), &store, Ablation::default()).unwrap();
+    hot.set_score_cache_capacity(256);
+    let mut cold = LearnedCost::from_store(engine, &store, Ablation::default()).unwrap();
+    cold.set_incremental(false);
+
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = builders::mha(32, 128, 4);
+    let cfg = CompileConfig {
+        anneal: AnnealParams { iterations: 40, ..AnnealParams::default() },
+        ..CompileConfig::default()
+    };
+    let a = compile(&graph, &fabric, &hot, &cfg).unwrap();
+    let b = compile(&graph, &fabric, &cold, &cfg).unwrap();
+
+    assert_eq!(a.subgraphs.len(), b.subgraphs.len());
+    for (sa, sb) in a.subgraphs.iter().zip(&b.subgraphs) {
+        assert_eq!(sa, sb, "hot path changed subgraph {}", sa.name);
+        assert_eq!(sa.ii_cycles.to_bits(), sb.ii_cycles.to_bits(), "{}: II bits", sa.name);
+    }
+    assert_eq!(a.total_ii.to_bits(), b.total_ii.to_bits(), "total II diverged");
+
+    // The hot report carries score-cache counters; the cold one has none.
+    let stats = a.score_cache.expect("hot compile reports score-cache stats");
+    assert!(stats.lookups() > 0, "score cache never consulted: {stats:?}");
+    assert!(b.score_cache.is_none(), "cold objective must not report a score cache");
+}
