@@ -1,0 +1,192 @@
+//! Training-throughput benchmark: the gate for the data-parallel +
+//! fused-backward + zero-churn-optimizer overhaul.
+//!
+//! Trains the same model on the same generated corpus three ways — tape
+//! kernels sequential (the reference path), fused kernels sequential, and
+//! fused kernels across 4 worker threads — and reports samples/sec for
+//! each plus the speedup ratios. Because the sharded accumulation order is
+//! canonical (a pure function of the batch), all three fits must be
+//! **bit-identical**: final params, Adam moments, step counter and the full
+//! loss curve are asserted equal down to the bits before any throughput
+//! number is trusted. Also reports the predict-padding ledger: wasted
+//! padding slots on the final short chunk under the dynamic-batch backend
+//! vs what fixed-batch stacking would have burned. Emits `BENCH_train.json`
+//! (CI uploads it as the BENCH_train artifact).
+//!
+//! `RDACOST_BENCH_QUICK=1` shrinks the corpus/epochs to CI scale and
+//! relaxes the perf floors (bit-identity is asserted in both modes).
+
+use std::time::Instant;
+
+use rdacost::data::{generate, Dataset, GenConfig};
+use rdacost::train::{TrainConfig, TrainReport, Trainer};
+use rdacost::util::json::Json;
+use rdacost::util::rng::Rng;
+
+fn fit_variant(
+    engine: &std::sync::Arc<rdacost::runtime::Engine>,
+    ds: &Dataset,
+    base: &TrainConfig,
+    fused: bool,
+    workers: usize,
+) -> (Trainer, TrainReport, f64) {
+    let cfg = TrainConfig { fused, workers, ..base.clone() };
+    let mut trainer = Trainer::new(engine.clone(), cfg).unwrap();
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let t0 = Instant::now();
+    let rep = trainer.fit(ds, &all).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    (trainer, rep, secs)
+}
+
+fn assert_bit_identical(name: &str, a: &Trainer, b: &Trainer) {
+    let (sa, sb) = (a.state(), b.state());
+    assert_eq!(sa.params, sb.params, "{name}: params diverged");
+    assert_eq!(sa.adam_m, sb.adam_m, "{name}: Adam m diverged");
+    assert_eq!(sa.adam_v, sb.adam_v, "{name}: Adam v diverged");
+    assert_eq!(sa.step.to_bits(), sb.step.to_bits(), "{name}: step diverged");
+}
+
+fn main() {
+    let quick = std::env::var("RDACOST_BENCH_QUICK").is_ok();
+    let total = if quick { 32 } else { 128 };
+    let epochs = if quick { 4 } else { 20 };
+
+    let engine = rdacost::runtime::engine("artifacts").expect("initializing backend");
+    let fabric = rdacost::arch::Fabric::new(rdacost::arch::FabricConfig::default());
+    let mut rng = Rng::new(42);
+    let gen_cfg = GenConfig { total, ..GenConfig::default() };
+    let ds = generate(&fabric, &gen_cfg, &mut rng).expect("generating corpus");
+
+    let base = TrainConfig { epochs, batch: 8, log_every: 0, ..TrainConfig::default() };
+    let steps_per_epoch: usize = ds
+        .by_bucket()
+        .iter()
+        .map(|(_, idxs)| idxs.len().div_ceil(base.batch))
+        .sum();
+    println!(
+        "bench train: {} samples, {} epochs x {} steps (batch {})",
+        ds.len(),
+        epochs,
+        steps_per_epoch,
+        base.batch
+    );
+
+    let (tape_t, tape_rep, tape_secs) = fit_variant(&engine, &ds, &base, false, 1);
+    let (f1_t, f1_rep, f1_secs) = fit_variant(&engine, &ds, &base, true, 1);
+    let (f4_t, f4_rep, f4_secs) = fit_variant(&engine, &ds, &base, true, 4);
+
+    // Bit-identity first: a throughput number for a *different* fit is
+    // meaningless. Fused vs tape and 1 vs 4 workers must agree exactly.
+    assert_bit_identical("fused_w1 vs tape_w1", &f1_t, &tape_t);
+    assert_bit_identical("fused_w4 vs tape_w1", &f4_t, &tape_t);
+    for (name, rep) in [("fused_w1", &f1_rep), ("fused_w4", &f4_rep)] {
+        assert_eq!(
+            rep.loss_curve.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            tape_rep.loss_curve.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "{name}: loss curve diverged from tape_w1"
+        );
+    }
+
+    let samples_per_epoch = ds.len() as f64;
+    let sps = |secs: f64| epochs as f64 * samples_per_epoch / secs;
+    let (tape_sps, f1_sps, f4_sps) = (sps(tape_secs), sps(f1_secs), sps(f4_secs));
+    let fused_ratio = f1_sps / tape_sps;
+    let parallel_ratio = f4_sps / tape_sps;
+    println!(
+        "bench train/tape_w1:  {tape_sps:.0} samples/s ({tape_secs:.2}s, loss bits {:016x})",
+        tape_rep.final_train_loss.to_bits()
+    );
+    println!("bench train/fused_w1: {f1_sps:.0} samples/s — {fused_ratio:.2}x vs tape");
+    println!("bench train/fused_w4: {f4_sps:.0} samples/s — {parallel_ratio:.2}x vs tape");
+
+    // Predict-padding ledger: score one bucket's samples with a deliberately
+    // short final chunk. The native backend stacks that chunk tight
+    // (supports_dynamic_batch), so its wasted-slot counter stays at zero;
+    // fixed-batch stacking would have padded batch-minus-remainder slots.
+    let (pad_padded, pad_fixed_waste) = {
+        let store = tape_t.param_store();
+        let learned = rdacost::cost::LearnedCost::from_store(
+            engine.clone(),
+            &store,
+            rdacost::cost::Ablation::default(),
+        )
+        .unwrap();
+        let by_bucket = ds.by_bucket();
+        let (_, idxs) = by_bucket
+            .iter()
+            .max_by_key(|(_, idxs)| idxs.len())
+            .expect("non-empty corpus");
+        // Force a remainder of 3 on the final chunk.
+        let n = (base.batch + 3).min(idxs.len());
+        let graphs: Vec<&rdacost::gnn::GraphTensors> =
+            idxs[..n].iter().map(|&i| &ds.samples[i].tensors).collect();
+        learned.predict_batch(&graphs, base.batch).unwrap();
+        let fixed_waste = (base.batch - n % base.batch) % base.batch;
+        (learned.padded_slots(), fixed_waste as u64)
+    };
+    println!(
+        "bench train/padding: {pad_padded} slots padded (fixed-batch stacking \
+         would have padded {pad_fixed_waste})"
+    );
+    if engine.supports_dynamic_batch() {
+        assert_eq!(pad_padded, 0, "dynamic-batch backend still padded the short chunk");
+    }
+
+    let results = Json::obj()
+        .set("bench", "train_throughput")
+        .set("backend", engine.platform())
+        .set("measured", true)
+        .set("quick_mode", quick)
+        .set("corpus_samples", ds.len() as f64)
+        .set("epochs", epochs as f64)
+        .set("batch", base.batch as f64)
+        .set("steps_per_epoch", steps_per_epoch as f64)
+        .set(
+            "tape_w1",
+            Json::obj().set("samples_per_sec", tape_sps).set("wall_seconds", tape_secs),
+        )
+        .set(
+            "fused_w1",
+            Json::obj()
+                .set("samples_per_sec", f1_sps)
+                .set("wall_seconds", f1_secs)
+                .set("speedup_vs_tape_w1", fused_ratio),
+        )
+        .set(
+            "fused_w4",
+            Json::obj()
+                .set("samples_per_sec", f4_sps)
+                .set("wall_seconds", f4_secs)
+                .set("speedup_vs_tape_w1", parallel_ratio),
+        )
+        .set("bit_identical", true)
+        .set("final_loss_bits", format!("{:016x}", tape_rep.final_train_loss.to_bits()))
+        .set(
+            "predict_padding",
+            Json::obj()
+                .set("padded_slots", pad_padded as f64)
+                .set("fixed_batch_would_pad", pad_fixed_waste as f64),
+        );
+    std::fs::write("BENCH_train.json", results.to_pretty()).unwrap();
+    println!("wrote BENCH_train.json");
+
+    // Perf floors. Full mode enforces the PR's acceptance bars; quick mode
+    // (tiny corpus on a noisy shared runner) only sanity-checks that the
+    // parallel path is not catastrophically slower.
+    if quick {
+        assert!(
+            parallel_ratio >= 0.70,
+            "fused 4-worker path collapsed vs tape-sequential: {parallel_ratio:.2}x"
+        );
+    } else {
+        assert!(
+            parallel_ratio >= 1.5,
+            "fused 4-worker path below the 1.5x floor: {parallel_ratio:.2}x"
+        );
+        assert!(
+            fused_ratio >= 0.95,
+            "fused kernels lost to the tape at 1 worker: {fused_ratio:.2}x"
+        );
+    }
+}

@@ -31,6 +31,8 @@
 //! epochs = 60
 //! batch = 32
 //! learning_rate = 0.003
+//! workers = 1
+//! fused = true
 //!
 //! [anneal]
 //! iterations = 2000
@@ -203,6 +205,8 @@ impl RunConfig {
         raw.take_parse("train.epochs", &mut cfg.train.epochs)?;
         raw.take_parse("train.batch", &mut cfg.train.batch)?;
         raw.take_parse("train.learning_rate", &mut cfg.train.learning_rate)?;
+        raw.take_parse("train.workers", &mut cfg.train.workers)?;
+        raw.take_parse("train.fused", &mut cfg.train.fused)?;
 
         raw.take_parse("anneal.iterations", &mut cfg.anneal.iterations)?;
         raw.take_parse("anneal.t_initial", &mut cfg.anneal.t_initial)?;
@@ -275,6 +279,8 @@ total = 100
 
 [train]
 epochs = 5
+workers = 3
+fused = false
 
 [anneal]
 iterations = 77
@@ -303,6 +309,8 @@ workers = 3
         assert_eq!(cfg.dataset.total, 100);
         assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);
+        assert_eq!(cfg.train.workers, 3);
+        assert!(!cfg.train.fused);
         assert_eq!(cfg.anneal.iterations, 77);
         assert_eq!(cfg.anneal.proposals_per_step, 8);
         assert_eq!(cfg.anneal.reroute_every, 0);

@@ -145,6 +145,12 @@ pub struct LearnedCost {
     /// placement is bad; the first failure (and every 1000th after) is
     /// logged to stderr.
     scoring_errors: Arc<AtomicU64>,
+    /// Batch slots wasted on padding by [`LearnedCost::infer_locked`],
+    /// aggregated over this handle family. Dynamic-batch backends (native)
+    /// stack short final chunks tight, so this stays 0 there; fixed-batch
+    /// backends surface their padding overhead here (reported by the
+    /// benches).
+    padded_slots: Arc<AtomicU64>,
     scratch: Mutex<Scratch>,
     /// Incremental-encode hot path (on by default; benches flip it off to
     /// measure the scratch-encode reference path).
@@ -200,6 +206,7 @@ impl LearnedCost {
             ablation,
             evaluations: Arc::new(AtomicU64::new(0)),
             scoring_errors: Arc::new(AtomicU64::new(0)),
+            padded_slots: Arc::new(AtomicU64::new(0)),
             scratch: Mutex::new(Scratch { inputs, pool: HashMap::new() }),
             incremental: true,
             score_cache: None,
@@ -220,6 +227,7 @@ impl LearnedCost {
             ablation: self.ablation,
             evaluations: self.evaluations.clone(),
             scoring_errors: self.scoring_errors.clone(),
+            padded_slots: self.padded_slots.clone(),
             scratch: Mutex::new(Scratch {
                 inputs: self.params.as_ref().clone(),
                 pool: HashMap::new(),
@@ -266,6 +274,12 @@ impl LearnedCost {
     /// Scoring failures across this handle and all its forks.
     pub fn scoring_errors(&self) -> u64 {
         self.scoring_errors.load(Ordering::Relaxed)
+    }
+
+    /// Batch slots wasted on padding across this handle and all its forks
+    /// (0 on dynamic-batch backends, which stack short chunks tight).
+    pub fn padded_slots(&self) -> u64 {
+        self.padded_slots.load(Ordering::Relaxed)
     }
 
     fn lock_scratch(&self) -> MutexGuard<'_, Scratch> {
@@ -343,13 +357,20 @@ impl LearnedCost {
         batch: usize,
     ) -> Result<Vec<f64>> {
         let n_params = self.params.len();
+        let dynamic = self.engine.supports_dynamic_batch();
         let mut preds = Vec::with_capacity(graphs.len());
         for chunk in graphs.chunks(batch) {
+            // Short final chunk: stack it tight when the backend accepts
+            // arbitrary batch sizes (predictions are per-row pure functions,
+            // so this is bit-identical to the padded call); fixed-batch
+            // backends pad and the wasted slots are counted.
+            let eff = if dynamic { chunk.len() } else { batch };
+            self.padded_slots.fetch_add((eff - chunk.len()) as u64, Ordering::Relaxed);
             scratch.inputs.truncate(n_params);
-            let batch_tensors = gnn::stack_batch(chunk, bucket, batch)?;
+            let batch_tensors = gnn::stack_batch(chunk, bucket, eff)?;
             scratch.inputs.extend(batch_tensors);
             scratch.inputs.push(gnn::flags_tensor(self.ablation.flags()));
-            let out = self.engine.infer(bucket, batch, &scratch.inputs)?;
+            let out = self.engine.infer(bucket, eff, &scratch.inputs)?;
             self.evaluations.fetch_add(1, Ordering::Relaxed);
             preds.extend(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64));
         }

@@ -87,6 +87,14 @@ pub fn cross_validate(
     ablation: Ablation,
 ) -> Result<CvResult> {
     let splits = metrics::kfold(ds.len(), folds, ctx.cfg.seed ^ 0xF01D);
+    let tcfg = &ctx.cfg.train;
+    eprintln!(
+        "  training {folds} folds x {} epochs (batch {}, {} kernels, {} worker(s))",
+        tcfg.epochs,
+        tcfg.batch,
+        if tcfg.fused { "fused" } else { "tape" },
+        if tcfg.workers == 0 { "auto".to_string() } else { tcfg.workers.to_string() }
+    );
     let mut fold_preds = Vec::with_capacity(folds);
     let mut train_seconds = 0.0;
     for (fi, (train_idx, test_idx)) in splits.into_iter().enumerate() {

@@ -60,6 +60,7 @@ USAGE: rdacost <subcommand> [options]
   gen-data   [--total N] [--era past|present] [--out FILE] [--workers N]
              [--proposals K]
   train      [--dataset FILE] [--epochs N] [--ckpt FILE] [--era E]
+             [--train-workers N] [--train-kernel fused|tape]
   eval       [--dataset FILE] [--ckpt FILE]        held-out RE/Spearman
   compile    --model gemm|mlp|ffn|mha|bert|gpt [--cost heuristic|learned|oracle]
              [--seq N] [--blocks N] [--ckpt FILE] [--proposals K]
@@ -109,6 +110,14 @@ Common options:
                     ([run] cache = false)
   --out FILE        gen-data: output dataset path (default results/dataset.bin)
   --dataset FILE    train/eval: input dataset path (default results/dataset.bin)
+  --train-workers N worker threads for the data-parallel gradient shards
+                    ([train] workers; 0 = one per core, default 1). The fit
+                    is bit-identical for every worker count (see README
+                    \"Training throughput\")
+  --train-kernel K  training backward kernels: \"fused\" (tape-free scratch
+                    slabs, the default) or \"tape\" (the reference pair);
+                    bitwise-equal, so this is an A/B perf lever ([train]
+                    fused)
   --quick           CI-speed profile: small corpus, few epochs, short anneals
 
 Serve options (compile-as-a-service; see README \"Compile service\"):
@@ -182,6 +191,14 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
     }
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
+    cfg.train.workers = args.get_usize("train-workers", cfg.train.workers);
+    if let Some(kernel) = args.get("train-kernel") {
+        cfg.train.fused = match kernel {
+            "fused" => true,
+            "tape" => false,
+            other => bail!("--train-kernel must be fused|tape, got {other:?}"),
+        };
+    }
     cfg.anneal.iterations = args.get_usize("iters", cfg.anneal.iterations);
     // Batched-proposal fleet size (K) for every annealing consumer.
     cfg.anneal.proposals_per_step =
@@ -255,16 +272,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine = runtime::engine(&cfg.artifacts_dir)?;
     let mut tc = cfg.train.clone();
     tc.log_every = 5;
+    let kernel = if tc.fused { "fused" } else { "tape" };
+    let workers =
+        if tc.workers == 0 { "auto".to_string() } else { tc.workers.to_string() };
     let mut trainer = train::Trainer::new(engine, tc)?;
     let all: Vec<usize> = (0..ds.len()).collect();
     let rep = trainer.fit(&ds, &all)?;
     trainer.param_store().save(&ckpt)?;
+    // `loss bits` prints the exact f64 so bit-identity across worker counts
+    // and kernels is assertable from the CLI (the CI train smoke greps it).
     println!(
-        "trained {} epochs on {} samples in {:.1}s (final mse {:.5}) -> {ckpt}",
+        "trained {} epochs on {} samples in {:.1}s ({kernel} kernels, {workers} worker(s), final mse {:.5}, loss bits {:016x}) -> {ckpt}",
         rep.epochs_run,
         ds.len(),
         rep.wall_seconds,
-        rep.final_train_loss
+        rep.final_train_loss,
+        rep.final_train_loss.to_bits()
     );
     Ok(())
 }

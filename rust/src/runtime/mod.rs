@@ -28,7 +28,7 @@ mod tensor;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::gnn::Bucket;
 
@@ -37,6 +37,50 @@ pub use native::NativeEngine;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 pub use tensor::{Dtype, Tensor};
+
+/// Mutable training state: the parameter tensors plus the Adam optimizer
+/// moments (parameter-shaped) and the step counter. Owned by the trainer
+/// and updated in place by [`InferenceBackend::train_step_inplace`] — the
+/// zero-churn alternative to threading three full tensor sets through the
+/// functional [`InferenceBackend::train_step`] every batch.
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+    pub step: f32,
+}
+
+/// One pre-stacked training batch: the 8 stacked graph tensors
+/// ([`crate::gnn::stack_batch`] order) plus labels, sample weights and the
+/// ablation-flags tensor. Stacking is a pure function of the chunk, so the
+/// trainer builds each batch once and replays it across epochs.
+pub struct TrainBatch {
+    /// The 8 stacked batch tensors.
+    pub tensors: Vec<Tensor>,
+    pub labels: Tensor,
+    pub weights: Tensor,
+    pub flags: Tensor,
+}
+
+/// Knobs of the in-place train step. Results are bit-identical for every
+/// setting (see `runtime/native.rs` module docs); the options trade wall
+/// time only.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOptions {
+    /// Worker threads for the data-parallel gradient shards (0 = one per
+    /// core). Gradients reduce in a fixed tree whose shape depends only on
+    /// the batch size, so `workers = 1 ≡ N` bit-for-bit.
+    pub workers: usize,
+    /// Fused tape-free backward kernels (reusable scratch slabs) instead of
+    /// the tape reference path; bitwise-equal by construction.
+    pub fused: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { workers: 1, fused: true }
+    }
+}
 
 /// A backend that can run the GNN's two entry points. Implementations must
 /// be shareable across threads (the scoring service's dispatcher and the
@@ -61,6 +105,57 @@ pub trait InferenceBackend: Send + Sync {
     /// parameters, new m, new v, new step, loss — the same layout as
     /// python's `train_step_flat`.
     fn train_step(&self, bucket: Bucket, batch: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// One fused train step updating `state` in place; returns the batch
+    /// loss. The default implementation clones through [`Self::train_step`]
+    /// (the functional contract every backend already satisfies), so only
+    /// backends with a real in-place path — the native engine's sharded,
+    /// allocation-free kernels — need to override it. Overrides must be
+    /// bit-identical to the default for `TrainOptions::default()`-shaped
+    /// work and across every `workers` setting.
+    fn train_step_inplace(
+        &self,
+        bucket: Bucket,
+        batch: usize,
+        state: &mut TrainState,
+        data: &TrainBatch,
+        learning_rate: f32,
+        opts: &TrainOptions,
+    ) -> Result<f32> {
+        // Fallback: assemble the flat functional call and copy the outputs
+        // back into `state`. Ignores `opts` — a backend without a
+        // data-parallel path has nothing to fan out.
+        let _ = opts;
+        let n = state.params.len();
+        let mut inputs = Vec::with_capacity(3 * n + 13);
+        inputs.extend(state.params.iter().cloned());
+        inputs.extend(state.adam_m.iter().cloned());
+        inputs.extend(state.adam_v.iter().cloned());
+        inputs.push(Tensor::f32(&[], vec![state.step]));
+        inputs.extend(data.tensors.iter().cloned());
+        inputs.push(data.labels.clone());
+        inputs.push(data.weights.clone());
+        inputs.push(data.flags.clone());
+        inputs.push(Tensor::f32(&[], vec![learning_rate]));
+        let out = self.train_step(bucket, batch, &inputs)?;
+        if out.len() != 3 * n + 2 {
+            bail!("train step returned {} outputs, expected {}", out.len(), 3 * n + 2);
+        }
+        let mut out = out.into_iter();
+        state.params = out.by_ref().take(n).collect();
+        state.adam_m = out.by_ref().take(n).collect();
+        state.adam_v = out.by_ref().take(n).collect();
+        state.step = out.next().expect("length checked").as_f32()?[0];
+        Ok(out.next().expect("length checked").as_f32()?[0])
+    }
+
+    /// Whether [`Self::infer`] accepts arbitrary batch sizes. Fixed-batch
+    /// backends (the PJRT engine ships per-batch AOT artifacts) return
+    /// `false` and callers must pad short chunks; the native engine accepts
+    /// any batch, so short final chunks can be stacked tight.
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
 }
 
 /// The engine type consumers hold: a shared trait object.

@@ -44,8 +44,35 @@
 //! repeats the exact add sequence of the tape kernel, and elementwise-max is
 //! order-insensitive in its result value (only the winner *index* depends on
 //! scatter order, and inference does not need winners).
+//!
+//! ## Tape backward vs fused backward
+//!
+//! The training backward has the same split. The *tape* path
+//! ([`forward`] + [`backward`]) allocates a fresh [`Tape`] per sample — the
+//! readable reference. The *fused* path ([`forward_train`] +
+//! [`backward_fused`]) records the identical quantities (per-layer
+//! messages, max-scatter winners, activations — the backward genuinely
+//! needs them, so unlike inference they cannot be dropped) into a reusable
+//! per-worker [`TrainScratch`], shares the per-edge directional partial sum
+//! like `forward_infer`, and runs the backward out of preallocated
+//! temporaries — zero heap allocation per step after warmup. Both paths
+//! execute the same FP ops in the same order, so they are bitwise-identical
+//! (pinned by the `backward_matches_tape` test); when editing one kernel,
+//! mirror the change — including operation *order* — in the other.
+//!
+//! Gradient accumulation over a batch follows one **canonical order**,
+//! independent of thread count: rows accumulate sequentially within fixed
+//! [`TRAIN_SHARD_ROWS`]-row shards, and shard partials combine in a fixed
+//! stride-doubling tree ([`tree_reduce`]). The shard layout is a function
+//! of the batch size alone, so spreading shards across worker threads
+//! ([`TrainOptions::workers`]) cannot change a single bit of the result:
+//! `workers = 1 ≡ N` exactly, for both kernels. One Adam update
+//! ([`adam_elem`], shared by the functional and in-place entry points)
+//! applies after the reduce.
 
 use std::cell::RefCell;
+use std::ops::Range;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -57,7 +84,7 @@ use crate::gnn::schema::{
 use crate::gnn::Bucket;
 
 use super::tensor::{Dtype, Tensor};
-use super::{InferenceBackend, TensorSpec};
+use super::{InferenceBackend, TensorSpec, TrainBatch, TrainOptions, TrainState};
 
 const H: usize = HIDDEN_DIM;
 const HH: usize = HEAD_HIDDEN;
@@ -79,10 +106,20 @@ const P_HEAD_W3: usize = P_HEAD_W1 + 4;
 const P_HEAD_B3: usize = P_HEAD_W1 + 5;
 const NUM_PARAMS: usize = P_HEAD_B3 + 1;
 
-/// The pure-Rust backend. Stateless besides the parameter layout; safe to
-/// share across threads.
+/// The pure-Rust backend. Stateless besides the parameter layout and a pool
+/// of reusable training buffers; safe to share across threads.
 pub struct NativeEngine {
     specs: Vec<TensorSpec>,
+    /// Reusable training buffers — fused-kernel scratch slabs and shard
+    /// gradient accumulators — pooled across train steps so the hot loop
+    /// performs no per-step slab allocation.
+    train_pool: Mutex<TrainPool>,
+}
+
+#[derive(Default)]
+struct TrainPool {
+    scratches: Vec<TrainScratch>,
+    shards: Vec<ShardGrads>,
 }
 
 impl NativeEngine {
@@ -91,7 +128,7 @@ impl NativeEngine {
             .into_iter()
             .map(|(name, shape)| TensorSpec { name, dtype: Dtype::F32, shape })
             .collect();
-        NativeEngine { specs }
+        NativeEngine { specs, train_pool: Mutex::new(TrainPool::default()) }
     }
 
     fn check_params<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
@@ -217,7 +254,12 @@ impl InferenceBackend for NativeEngine {
         let flags = read_flags(&inputs[3 * NUM_PARAMS + 11])?;
         let lr = scalar(&inputs[3 * NUM_PARAMS + 12], "lr")?;
 
-        let (loss, grads) = loss_and_grads(&p, bucket, batch, t8, labels, weights, flags)?;
+        // The functional entry point stays on the tape kernels (the readable
+        // reference), sequential; the gradients come out in the canonical
+        // shard/tree order, so this is bit-identical to the fused, parallel
+        // in-place path.
+        let acc =
+            self.sharded_loss_and_grads(&p, bucket, batch, t8, labels, weights, flags, 1, false)?;
 
         // Adam, exactly as python's train_step: bias correction uses the
         // incremented step count.
@@ -229,33 +271,97 @@ impl InferenceBackend for NativeEngine {
         let mut new_v = Vec::with_capacity(NUM_PARAMS);
         for i in 0..NUM_PARAMS {
             let pv = p[i];
-            let mv = adam_m[i].as_f32()?;
-            let vv = adam_v[i].as_f32()?;
-            let gv = &grads[i];
+            let gv = &acc.grads[i];
             let mut pn = Vec::with_capacity(pv.len());
-            let mut mn = Vec::with_capacity(pv.len());
-            let mut vn = Vec::with_capacity(pv.len());
+            let mut mn = adam_m[i].as_f32()?.to_vec();
+            let mut vn = adam_v[i].as_f32()?.to_vec();
             for j in 0..pv.len() {
-                let g = gv[j];
-                let m = ADAM_B1 * mv[j] + (1.0 - ADAM_B1) * g;
-                let v = ADAM_B2 * vv[j] + (1.0 - ADAM_B2) * g * g;
-                let m_hat = m / b1c;
-                let v_hat = v / b2c;
-                pn.push(pv[j] - lr * m_hat / (v_hat.sqrt() + ADAM_EPS));
-                mn.push(m);
-                vn.push(v);
+                pn.push(adam_elem(pv[j], &mut mn[j], &mut vn[j], gv[j], lr, b1c, b2c));
             }
             let shape = &self.specs[i].shape;
             new_params.push(Tensor::f32(shape, pn));
             new_m.push(Tensor::f32(shape, mn));
             new_v.push(Tensor::f32(shape, vn));
         }
+        let loss = acc.loss;
+        self.recycle_grads(acc);
         let mut out = new_params;
         out.extend(new_m);
         out.extend(new_v);
         out.push(Tensor::f32(&[], vec![new_step]));
         out.push(Tensor::f32(&[], vec![loss]));
         Ok(out)
+    }
+
+    fn train_step_inplace(
+        &self,
+        bucket: Bucket,
+        batch: usize,
+        state: &mut TrainState,
+        data: &TrainBatch,
+        learning_rate: f32,
+        opts: &TrainOptions,
+    ) -> Result<f32> {
+        if data.tensors.len() != 8 {
+            bail!("native train step: expected 8 batch tensors, got {}", data.tensors.len());
+        }
+        check_batch_tensors(bucket, batch, &data.tensors)?;
+        let labels = data.labels.as_f32()?;
+        let weights = data.weights.as_f32()?;
+        if labels.len() != batch || weights.len() != batch {
+            bail!("native train step: labels/weights must have length {batch}");
+        }
+        let flags = read_flags(&data.flags)?;
+        // Optimizer state must be parameter-shaped (same contract as the
+        // functional train_step).
+        for (what, group) in [("adam m", &state.adam_m), ("adam v", &state.adam_v)] {
+            for (spec, t) in self.specs.iter().zip(group.iter()) {
+                if t.dtype() != Dtype::F32 || t.shape() != spec.shape.as_slice() {
+                    bail!(
+                        "native train step: {what} tensor {} expects shape {:?}, got {:?}",
+                        spec.name,
+                        spec.shape,
+                        t.shape()
+                    );
+                }
+            }
+        }
+        let acc = {
+            let p = self.check_params(&state.params)?;
+            self.sharded_loss_and_grads(
+                &p,
+                bucket,
+                batch,
+                &data.tensors,
+                labels,
+                weights,
+                flags,
+                opts.workers,
+                opts.fused,
+            )?
+        };
+        // Zero-churn Adam: the same element update as the functional path,
+        // applied directly into the owned state buffers — no tensor clones.
+        let new_step = state.step + 1.0;
+        let b1c = 1.0 - ADAM_B1.powf(new_step);
+        let b2c = 1.0 - ADAM_B2.powf(new_step);
+        for i in 0..NUM_PARAMS {
+            let gv = &acc.grads[i];
+            let pv = state.params[i].as_f32_mut()?;
+            let mv = state.adam_m[i].as_f32_mut()?;
+            let vv = state.adam_v[i].as_f32_mut()?;
+            for j in 0..pv.len() {
+                pv[j] = adam_elem(pv[j], &mut mv[j], &mut vv[j], gv[j], learning_rate, b1c, b2c);
+            }
+        }
+        state.step = new_step;
+        let loss = acc.loss;
+        self.recycle_grads(acc);
+        Ok(loss)
+    }
+
+    fn supports_dynamic_batch(&self) -> bool {
+        true
     }
 }
 
@@ -1083,9 +1189,717 @@ fn backward(
     }
 }
 
-/// Weighted-MSE loss + parameter gradients over one stacked batch, mirroring
-/// python's `loss_fn`: `w = weights / max(sum(weights), 1)`,
-/// `loss = sum(w * (pred - label)^2)`.
+// ---- fused training kernels -------------------------------------------------
+
+/// Reusable per-worker slabs for the fused training kernels: everything the
+/// [`Tape`] records (the backward genuinely needs the per-layer messages,
+/// winners, and activations) plus every backward temporary, so one
+/// warmed-up scratch makes a full forward/backward pass allocation-free.
+struct TrainScratch {
+    live_nodes: Vec<usize>,
+    live_edges: Vec<usize>,
+    /// `[N, XV]` node embedding inputs (annotation/embedding gating applied).
+    xv: Vec<f32>,
+    /// `[E, H]` static edge embeddings (post-ReLU, post-mask).
+    h_e: Vec<f32>,
+    /// `NUM_LAYERS + 1` node states `[N, H]`.
+    hs: Vec<Vec<f32>>,
+    /// Per layer: `[2E, H]` messages (fwd at `2e`, bwd at `2e+1`).
+    msgs: Vec<Vec<f32>>,
+    /// Per layer: `[N, H]` max-aggregated neighborhoods.
+    ss: Vec<Vec<f32>>,
+    /// Per layer: `[N, H]` winning message index (`-1` = zero baseline won).
+    winners: Vec<Vec<i32>>,
+    /// Masked-mean-pool denominator.
+    denom: f32,
+    hg: Vec<f32>,
+    z1: Vec<f32>,
+    z2: Vec<f32>,
+    pred: f32,
+    /// `[H]` shared per-edge message partial sum (`web + h_e @ We[0..H]`).
+    base: Vec<f32>,
+    // Backward temporaries; zero-filled by `backward_fused` exactly where
+    // the tape path fresh-allocates a zeroed buffer.
+    dh: Vec<f32>,
+    dh_in: Vec<f32>,
+    ds: Vec<f32>,
+    dmsg: Vec<f32>,
+    dhe: Vec<f32>,
+    da: Vec<f32>,
+    dz1: Vec<f32>,
+    dz2: Vec<f32>,
+    dhg: Vec<f32>,
+}
+
+impl TrainScratch {
+    fn new() -> TrainScratch {
+        TrainScratch {
+            live_nodes: Vec::new(),
+            live_edges: Vec::new(),
+            xv: Vec::new(),
+            h_e: Vec::new(),
+            hs: (0..=NUM_LAYERS).map(|_| Vec::new()).collect(),
+            msgs: (0..NUM_LAYERS).map(|_| Vec::new()).collect(),
+            ss: (0..NUM_LAYERS).map(|_| Vec::new()).collect(),
+            winners: (0..NUM_LAYERS).map(|_| Vec::new()).collect(),
+            denom: 1.0,
+            hg: vec![0.0; H],
+            z1: vec![0.0; HH],
+            z2: vec![0.0; HH],
+            pred: 0.0,
+            base: vec![0.0; H],
+            dh: Vec::new(),
+            dh_in: Vec::new(),
+            ds: Vec::new(),
+            dmsg: Vec::new(),
+            dhe: Vec::new(),
+            da: vec![0.0; H],
+            dz1: vec![0.0; HH],
+            dz2: vec![0.0; HH],
+            dhg: vec![0.0; H],
+        }
+    }
+
+    /// Size every slab for an `(n, e)` bucket and zero the forward records.
+    /// Dead rows are never written afterwards, so the zero fill is what
+    /// makes mask-skipping exact (same contract as [`InferScratch::reset`]).
+    fn reset(&mut self, n: usize, e: usize) {
+        self.live_nodes.clear();
+        self.live_edges.clear();
+        self.xv.resize(n * XV, 0.0);
+        self.xv.fill(0.0);
+        self.h_e.resize(e * H, 0.0);
+        self.h_e.fill(0.0);
+        for h in &mut self.hs {
+            h.resize(n * H, 0.0);
+            h.fill(0.0);
+        }
+        for m in &mut self.msgs {
+            m.resize(2 * e * H, 0.0);
+            m.fill(0.0);
+        }
+        for s in &mut self.ss {
+            s.resize(n * H, 0.0);
+            s.fill(0.0);
+        }
+        for w in &mut self.winners {
+            w.resize(n * H, -1);
+            w.fill(-1);
+        }
+        self.hg.fill(0.0);
+        // Backward temporaries are only sized here; `backward_fused` fills
+        // them at the lifetimes the tape path allocates them.
+        self.dh.resize(n * H, 0.0);
+        self.dh_in.resize(n * H, 0.0);
+        self.ds.resize(n * H, 0.0);
+        self.dmsg.resize(2 * e * H, 0.0);
+        self.dhe.resize(e * H, 0.0);
+    }
+}
+
+/// Fused training forward: identical arithmetic and op order to [`forward`],
+/// recording into a reusable [`TrainScratch`] instead of a fresh [`Tape`],
+/// with the per-edge directional partial shared like [`forward_infer`] and
+/// each message max-scattered the moment its row is complete. The scatter
+/// runs in the tape kernel's exact compare order (edges ascending, fwd then
+/// bwd per channel), so the winner indices — not just the max values — match
+/// bit-for-bit. Parity with the tape pair is pinned by the
+/// `backward_matches_tape` test.
+fn forward_train(
+    p: &[&[f32]],
+    g: &GraphView<'_>,
+    flags: [f32; ABLATION_FLAGS],
+    scratch: &mut TrainScratch,
+) {
+    let (use_node, use_edge, use_annot) = (flags[0], flags[1], flags[2]);
+    let (n, e) = (g.n, g.e);
+    scratch.reset(n, e);
+    let TrainScratch {
+        live_nodes, live_edges, xv, h_e, hs, msgs, ss, winners, denom, hg, z1, z2, pred, base, ..
+    } = scratch;
+
+    live_nodes.extend((0..n).filter(|&v| g.node_mask[v] != 0.0));
+    live_edges.extend((0..e).filter(|&ei| g.edge_mask[ei] != 0.0));
+
+    // Node embedding + projection: h0 = relu(x_v @ W + b) * mask. Unlike
+    // forward_infer, the gated input vector is materialized into `xv` — the
+    // backward needs it.
+    {
+        let h0 = &mut hs[0];
+        for &v in live_nodes.iter() {
+            let x = &mut xv[v * XV..(v + 1) * XV];
+            for d in 0..NODE_FEAT_DIM {
+                let mut f = g.node_feat[v * NODE_FEAT_DIM + d];
+                if (ANNOT_LO..ANNOT_HI).contains(&d) {
+                    f *= use_annot;
+                }
+                x[d] = f;
+            }
+            let (t, s) = (g.op_type(v), g.stage(v));
+            for d in 0..OP_EMB_DIM {
+                x[NODE_FEAT_DIM + d] = p[P_OP_EMB][t * OP_EMB_DIM + d] * use_node;
+            }
+            for d in 0..STAGE_EMB_DIM {
+                x[NODE_FEAT_DIM + OP_EMB_DIM + d] =
+                    p[P_STAGE_EMB][s * STAGE_EMB_DIM + d] * use_node;
+            }
+            let out = &mut h0[v * H..(v + 1) * H];
+            out.copy_from_slice(p[P_NODE_B]);
+            for i in 0..XV {
+                axpy_row(out, x[i], p[P_NODE_W], i);
+            }
+            let m = g.node_mask[v];
+            for c in 0..H {
+                out[c] = out[c].max(0.0) * m;
+            }
+        }
+    }
+
+    // Edge embedding: h_e = relu((edge_feat * use_edge) @ W + b) * mask.
+    for &ei in live_edges.iter() {
+        let out = &mut h_e[ei * H..(ei + 1) * H];
+        out.copy_from_slice(p[P_EDGE_B]);
+        for i in 0..EDGE_FEAT_DIM {
+            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
+        }
+        let m = g.edge_mask[ei];
+        for c in 0..H {
+            out[c] = out[c].max(0.0) * m;
+        }
+    }
+
+    // Message-passing layers.
+    for k in 0..NUM_LAYERS {
+        let we = p[P_LAYER0 + 4 * k];
+        let web = p[P_LAYER0 + 4 * k + 1];
+        let wv = p[P_LAYER0 + 4 * k + 2];
+        let wvb = p[P_LAYER0 + 4 * k + 3];
+        let (h_prev, h_next) = hs.split_at_mut(k + 1);
+        let h = &h_prev[k];
+        let hn = &mut h_next[0];
+        let msg = &mut msgs[k];
+        let s = &mut ss[k];
+        let win = &mut winners[k];
+
+        for &ei in live_edges.iter() {
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            let em = g.edge_mask[ei];
+            // The h_e half of cat(h_e, h_nb) @ We is direction-invariant:
+            // compute it once, copy per direction. The per-element add
+            // sequence matches the tape kernel exactly.
+            base.copy_from_slice(web);
+            for i in 0..H {
+                axpy_row(base, h_e[ei * H + i], we, i);
+            }
+            for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
+                let out = &mut msg[slot * H..(slot + 1) * H];
+                out.copy_from_slice(base);
+                for i in 0..H {
+                    axpy_row(out, h[nb * H + i], we, H + i);
+                }
+                for c in 0..H {
+                    out[c] = out[c].max(0.0) * em;
+                }
+            }
+            // Scatter both directions now; per s-slot the compare sequence
+            // is edge-ascending either way, identical to the tape kernel's
+            // separate scatter loop.
+            for c in 0..H {
+                let mf = msg[(2 * ei) * H + c];
+                if mf > s[dst * H + c] {
+                    s[dst * H + c] = mf;
+                    win[dst * H + c] = (2 * ei) as i32;
+                }
+                let mb = msg[(2 * ei + 1) * H + c];
+                if mb > s[src * H + c] {
+                    s[src * H + c] = mb;
+                    win[src * H + c] = (2 * ei + 1) as i32;
+                }
+            }
+        }
+
+        // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
+        for &v in live_nodes.iter() {
+            let out = &mut hn[v * H..(v + 1) * H];
+            out.copy_from_slice(wvb);
+            for i in 0..H {
+                axpy_row(out, h[v * H + i], wv, i);
+            }
+            for i in 0..H {
+                axpy_row(out, s[v * H + i], wv, H + i);
+            }
+            let m = g.node_mask[v];
+            for c in 0..H {
+                out[c] = out[c].max(0.0) * m;
+            }
+        }
+    }
+
+    // Masked mean pool.
+    let mask_sum: f32 = live_nodes.iter().map(|&v| g.node_mask[v]).sum();
+    *denom = mask_sum.max(1.0);
+    let h_last = &hs[NUM_LAYERS];
+    for &v in live_nodes.iter() {
+        let m = g.node_mask[v];
+        for c in 0..H {
+            hg[c] += h_last[v * H + c] * m;
+        }
+    }
+    for c in 0..H {
+        hg[c] /= *denom;
+    }
+
+    // Regressor head.
+    z1.copy_from_slice(p[P_HEAD_B1]);
+    for i in 0..H {
+        let x = hg[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                z1[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        z1[c] = z1[c].max(0.0);
+    }
+    z2.copy_from_slice(p[P_HEAD_B2]);
+    for i in 0..HH {
+        let x = z1[i];
+        if x != 0.0 {
+            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
+            for c in 0..HH {
+                z2[c] += x * r[c];
+            }
+        }
+    }
+    for c in 0..HH {
+        z2[c] = z2[c].max(0.0);
+    }
+    let mut o = p[P_HEAD_B3][0];
+    for i in 0..HH {
+        o += z2[i] * p[P_HEAD_W3][i];
+    }
+    *pred = 1.0 / (1.0 + (-o).exp());
+}
+
+/// Fused backward: identical arithmetic and op order to [`backward`], but
+/// reading the forward records from `scratch` (written by [`forward_train`])
+/// and running out of its preallocated temporaries. Each temporary is
+/// zero-filled exactly where the tape path fresh-allocates a zeroed buffer
+/// (per sample: `dz1`, `dhg`, `dh`, `dhe`; per layer: `dh_in`, `ds`,
+/// `dmsg`; `dz2` and `da` are fully assigned before every read), so slab
+/// reuse can never leak state between samples or layers.
+fn backward_fused(
+    p: &[&[f32]],
+    g: &GraphView<'_>,
+    flags: [f32; ABLATION_FLAGS],
+    scratch: &mut TrainScratch,
+    dpred: f32,
+    grads: &mut [Vec<f32>],
+) {
+    let (use_node, use_edge, _) = (flags[0], flags[1], flags[2]);
+    let n = g.n;
+    let TrainScratch {
+        live_nodes,
+        live_edges,
+        xv,
+        h_e,
+        hs,
+        msgs,
+        ss,
+        winners,
+        denom,
+        hg,
+        z1,
+        z2,
+        pred,
+        dh,
+        dh_in,
+        ds,
+        dmsg,
+        dhe,
+        da,
+        dz1,
+        dz2,
+        dhg,
+        ..
+    } = scratch;
+
+    // Sigmoid.
+    let dout = dpred * *pred * (1.0 - *pred);
+
+    // Head layer 3: o = z2 @ w3 + b3.
+    grads[P_HEAD_B3][0] += dout;
+    for i in 0..HH {
+        grads[P_HEAD_W3][i] += z2[i] * dout;
+        dz2[i] = p[P_HEAD_W3][i] * dout;
+    }
+    // Head layer 2 (ReLU).
+    dz1.fill(0.0);
+    for j in 0..HH {
+        let d = if z2[j] > 0.0 { dz2[j] } else { 0.0 };
+        if d == 0.0 {
+            continue;
+        }
+        grads[P_HEAD_B2][j] += d;
+        for i in 0..HH {
+            grads[P_HEAD_W2][i * HH + j] += z1[i] * d;
+            dz1[i] += p[P_HEAD_W2][i * HH + j] * d;
+        }
+    }
+    // Head layer 1 (ReLU).
+    dhg.fill(0.0);
+    for j in 0..HH {
+        let d = if z1[j] > 0.0 { dz1[j] } else { 0.0 };
+        if d == 0.0 {
+            continue;
+        }
+        grads[P_HEAD_B1][j] += d;
+        for i in 0..H {
+            grads[P_HEAD_W1][i * HH + j] += hg[i] * d;
+            dhg[i] += p[P_HEAD_W1][i * HH + j] * d;
+        }
+    }
+
+    // Pool: h_g = sum(h * mask) / denom.
+    dh.fill(0.0);
+    for &v in live_nodes.iter() {
+        let m = g.node_mask[v] / *denom;
+        for c in 0..H {
+            dh[v * H + c] = dhg[c] * m;
+        }
+    }
+
+    // Layers, last to first. Edge-embedding grads accumulate across layers.
+    dhe.fill(0.0);
+    for k in (0..NUM_LAYERS).rev() {
+        let we = p[P_LAYER0 + 4 * k];
+        let wv = p[P_LAYER0 + 4 * k + 2];
+        let h_in = &hs[k];
+        let h_out = &hs[k + 1];
+        let s = &ss[k];
+        let win = &winners[k];
+        let msg = &msgs[k];
+
+        dh_in.fill(0.0);
+        ds.fill(0.0);
+        for &v in live_nodes.iter() {
+            let mut any = false;
+            for c in 0..H {
+                // h_out = relu(a) * mask, so h_out > 0 gates both.
+                da[c] = if h_out[v * H + c] > 0.0 { dh[v * H + c] } else { 0.0 };
+                any |= da[c] != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            {
+                let gb = &mut grads[P_LAYER0 + 4 * k + 3];
+                for c in 0..H {
+                    gb[c] += da[c];
+                }
+            }
+            for i in 0..H {
+                let x1 = h_in[v * H + i];
+                if x1 != 0.0 {
+                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                    let row = &mut gw[i * H..(i + 1) * H];
+                    for c in 0..H {
+                        row[c] += x1 * da[c];
+                    }
+                }
+                let x2 = s[v * H + i];
+                if x2 != 0.0 {
+                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                    let row = &mut gw[(H + i) * H..(H + i + 1) * H];
+                    for c in 0..H {
+                        row[c] += x2 * da[c];
+                    }
+                }
+            }
+            for i in 0..H {
+                let r1 = &wv[i * H..(i + 1) * H];
+                let r2 = &wv[(H + i) * H..(H + i + 1) * H];
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                for c in 0..H {
+                    acc1 += r1[c] * da[c];
+                    acc2 += r2[c] * da[c];
+                }
+                dh_in[v * H + i] += acc1;
+                ds[v * H + i] = acc2;
+            }
+        }
+
+        // Max-scatter backward: the gradient of each (node, channel) slot
+        // goes to its winning message (none if the zero baseline won).
+        dmsg.fill(0.0);
+        for &v in live_nodes.iter() {
+            for c in 0..H {
+                let w = win[v * H + c];
+                if w >= 0 {
+                    dmsg[w as usize * H + c] += ds[v * H + c];
+                }
+            }
+        }
+
+        // Message backward: msg = relu(cat(h_e, h_nb) @ We + b) * em.
+        for &ei in live_edges.iter() {
+            let src = g.edge_src[ei].max(0) as usize % n;
+            let dst = g.edge_dst[ei].max(0) as usize % n;
+            for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
+                let drow = &dmsg[slot * H..(slot + 1) * H];
+                let mrow = &msg[slot * H..(slot + 1) * H];
+                let mut any = false;
+                for c in 0..H {
+                    da[c] = if mrow[c] > 0.0 { drow[c] } else { 0.0 };
+                    any |= da[c] != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                {
+                    let gb = &mut grads[P_LAYER0 + 4 * k + 1];
+                    for c in 0..H {
+                        gb[c] += da[c];
+                    }
+                }
+                for i in 0..H {
+                    let x1 = h_e[ei * H + i];
+                    if x1 != 0.0 {
+                        let gw = &mut grads[P_LAYER0 + 4 * k];
+                        let row = &mut gw[i * H..(i + 1) * H];
+                        for c in 0..H {
+                            row[c] += x1 * da[c];
+                        }
+                    }
+                    let x2 = h_in[nb * H + i];
+                    if x2 != 0.0 {
+                        let gw = &mut grads[P_LAYER0 + 4 * k];
+                        let row = &mut gw[(H + i) * H..(H + i + 1) * H];
+                        for c in 0..H {
+                            row[c] += x2 * da[c];
+                        }
+                    }
+                }
+                for i in 0..H {
+                    let r1 = &we[i * H..(i + 1) * H];
+                    let r2 = &we[(H + i) * H..(H + i + 1) * H];
+                    let mut acc1 = 0.0f32;
+                    let mut acc2 = 0.0f32;
+                    for c in 0..H {
+                        acc1 += r1[c] * da[c];
+                        acc2 += r2[c] * da[c];
+                    }
+                    dhe[ei * H + i] += acc1;
+                    dh_in[nb * H + i] += acc2;
+                }
+            }
+        }
+
+        std::mem::swap(dh, dh_in);
+    }
+
+    // Node embedding backward: h0 = relu(x_v @ W + b) * mask.
+    for &v in live_nodes.iter() {
+        let h0 = &hs[0][v * H..(v + 1) * H];
+        let mut any = false;
+        for c in 0..H {
+            da[c] = if h0[c] > 0.0 { dh[v * H + c] } else { 0.0 };
+            any |= da[c] != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        {
+            let gb = &mut grads[P_NODE_B];
+            for c in 0..H {
+                gb[c] += da[c];
+            }
+        }
+        for i in 0..XV {
+            let x = xv[v * XV + i];
+            if x != 0.0 {
+                let gw = &mut grads[P_NODE_W];
+                let row = &mut gw[i * H..(i + 1) * H];
+                for c in 0..H {
+                    row[c] += x * da[c];
+                }
+            }
+        }
+        if use_node != 0.0 {
+            let (t, st) = (g.op_type(v), g.stage(v));
+            for d in 0..OP_EMB_DIM {
+                let i = NODE_FEAT_DIM + d;
+                let r = &p[P_NODE_W][i * H..(i + 1) * H];
+                let mut acc = 0.0f32;
+                for c in 0..H {
+                    acc += r[c] * da[c];
+                }
+                grads[P_OP_EMB][t * OP_EMB_DIM + d] += acc * use_node;
+            }
+            for d in 0..STAGE_EMB_DIM {
+                let i = NODE_FEAT_DIM + OP_EMB_DIM + d;
+                let r = &p[P_NODE_W][i * H..(i + 1) * H];
+                let mut acc = 0.0f32;
+                for c in 0..H {
+                    acc += r[c] * da[c];
+                }
+                grads[P_STAGE_EMB][st * STAGE_EMB_DIM + d] += acc * use_node;
+            }
+        }
+    }
+
+    // Edge embedding backward: h_e = relu(ef @ W + b) * em.
+    for &ei in live_edges.iter() {
+        let he = &h_e[ei * H..(ei + 1) * H];
+        let mut any = false;
+        for c in 0..H {
+            da[c] = if he[c] > 0.0 { dhe[ei * H + c] } else { 0.0 };
+            any |= da[c] != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        {
+            let gb = &mut grads[P_EDGE_B];
+            for c in 0..H {
+                gb[c] += da[c];
+            }
+        }
+        for i in 0..EDGE_FEAT_DIM {
+            let x = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
+            if x != 0.0 {
+                let gw = &mut grads[P_EDGE_W];
+                let row = &mut gw[i * H..(i + 1) * H];
+                for c in 0..H {
+                    row[c] += x * da[c];
+                }
+            }
+        }
+    }
+}
+
+// ---- sharded gradient accumulation ------------------------------------------
+
+/// Rows per gradient shard: the unit of the canonical accumulation order.
+/// Every batch splits into `ceil(batch / TRAIN_SHARD_ROWS)` shards — a
+/// function of the batch size alone, never of the worker count — so the
+/// reduced gradient is bitwise identical for any `workers` setting.
+const TRAIN_SHARD_ROWS: usize = 4;
+
+/// Per-shard accumulator: batch-loss partial + one flat gradient buffer per
+/// parameter. Pooled by the engine and reused across steps.
+struct ShardGrads {
+    loss: f32,
+    grads: Vec<Vec<f32>>,
+}
+
+impl ShardGrads {
+    fn new(p: &[&[f32]]) -> ShardGrads {
+        ShardGrads { loss: 0.0, grads: p.iter().map(|pv| vec![0.0f32; pv.len()]).collect() }
+    }
+
+    /// Re-zero for reuse (all shapes are fixed by the schema, so a pooled
+    /// accumulator always fits).
+    fn reset(&mut self) {
+        self.loss = 0.0;
+        for g in &mut self.grads {
+            g.fill(0.0);
+        }
+    }
+
+    /// Fold `other` into `self`, elementwise in parameter order.
+    fn absorb(&mut self, other: &ShardGrads) {
+        self.loss += other.loss;
+        for (a, b) in self.grads.iter_mut().zip(&other.grads) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+    }
+}
+
+/// Combine shard partials in a fixed stride-doubling tree: pass one folds
+/// shard `i+1` into `i` for even `i`, pass two folds `i+2` into `i` for
+/// `i ≡ 0 (mod 4)`, and so on until everything lands in shard 0. The tree
+/// shape depends only on the shard count, never on which thread produced
+/// which shard.
+fn tree_reduce(shards: &mut [ShardGrads]) {
+    let len = shards.len();
+    let mut stride = 1;
+    while stride < len {
+        let mut i = 0;
+        while i + stride < len {
+            let (a, b) = shards.split_at_mut(i + stride);
+            a[i].absorb(&b[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+}
+
+/// Accumulate the loss/grad contributions of one shard's `rows` into `acc`,
+/// rows ascending. `fused` picks the kernel pair; both are bitwise
+/// identical (see module docs).
+#[allow(clippy::too_many_arguments)]
+fn accumulate_shard(
+    p: &[&[f32]],
+    bucket: Bucket,
+    t8: &[Tensor],
+    labels: &[f32],
+    weights: &[f32],
+    flags: [f32; ABLATION_FLAGS],
+    norm: f32,
+    rows: Range<usize>,
+    fused: bool,
+    scratch: &mut TrainScratch,
+    acc: &mut ShardGrads,
+) -> Result<()> {
+    acc.reset();
+    for b in rows {
+        if weights[b] == 0.0 {
+            continue;
+        }
+        let g = GraphView::slice(t8, bucket, b)?;
+        let w = weights[b] / norm;
+        if fused {
+            forward_train(p, &g, flags, scratch);
+            let diff = scratch.pred - labels[b];
+            acc.loss += w * diff * diff;
+            backward_fused(p, &g, flags, scratch, 2.0 * w * diff, &mut acc.grads);
+        } else {
+            let tape = forward(p, &g, flags);
+            let diff = tape.pred - labels[b];
+            acc.loss += w * diff * diff;
+            backward(p, &g, flags, &tape, 2.0 * w * diff, &mut acc.grads);
+        }
+    }
+    Ok(())
+}
+
+/// One Adam element update, shared by the functional and in-place train
+/// steps so both produce the identical FP sequence. Updates the moments in
+/// place and returns the new parameter value.
+#[inline]
+fn adam_elem(pv: f32, m: &mut f32, v: &mut f32, g: f32, lr: f32, b1c: f32, b2c: f32) -> f32 {
+    *m = ADAM_B1 * *m + (1.0 - ADAM_B1) * g;
+    *v = ADAM_B2 * *v + (1.0 - ADAM_B2) * g * g;
+    let m_hat = *m / b1c;
+    let v_hat = *v / b2c;
+    pv - lr * m_hat / (v_hat.sqrt() + ADAM_EPS)
+}
+
+/// Weighted-MSE loss + parameter gradients over one stacked batch in the
+/// canonical shard/tree order, mirroring python's `loss_fn`:
+/// `w = weights / max(sum(weights), 1)`, `loss = sum(w * (pred - label)^2)`.
+/// Allocates fresh buffers — the reference entry point (used by the
+/// finite-difference test); the pooled, threaded
+/// `NativeEngine::sharded_loss_and_grads` is the hot path and returns the
+/// same bits.
+#[allow(clippy::too_many_arguments)]
 fn loss_and_grads(
     p: &[&[f32]],
     bucket: Bucket,
@@ -1094,22 +1908,110 @@ fn loss_and_grads(
     labels: &[f32],
     weights: &[f32],
     flags: [f32; ABLATION_FLAGS],
+    fused: bool,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let norm = weights.iter().sum::<f32>().max(1.0);
-    let mut grads: Vec<Vec<f32>> = (0..NUM_PARAMS).map(|i| vec![0.0f32; p[i].len()]).collect();
-    let mut loss = 0.0f32;
-    for b in 0..batch {
-        if weights[b] == 0.0 {
-            continue;
-        }
-        let g = GraphView::slice(t8, bucket, b)?;
-        let tape = forward(p, &g, flags);
-        let w = weights[b] / norm;
-        let diff = tape.pred - labels[b];
-        loss += w * diff * diff;
-        backward(p, &g, flags, &tape, 2.0 * w * diff, &mut grads);
+    let num_shards = batch.div_ceil(TRAIN_SHARD_ROWS).max(1);
+    let mut shards: Vec<ShardGrads> = (0..num_shards).map(|_| ShardGrads::new(p)).collect();
+    let mut scratch = TrainScratch::new();
+    for (si, acc) in shards.iter_mut().enumerate() {
+        let rows = si * TRAIN_SHARD_ROWS..((si + 1) * TRAIN_SHARD_ROWS).min(batch);
+        accumulate_shard(
+            p, bucket, t8, labels, weights, flags, norm, rows, fused, &mut scratch, acc,
+        )?;
     }
-    Ok((loss, grads))
+    tree_reduce(&mut shards);
+    let acc = shards.swap_remove(0);
+    Ok((acc.loss, acc.grads))
+}
+
+impl NativeEngine {
+    /// Batch loss + gradients in the canonical shard/tree order, spread over
+    /// `workers` threads (`0` = one per core), with all scratch slabs and
+    /// shard accumulators drawn from the engine pool. Callers apply the
+    /// optimizer update from the returned accumulator and hand it back via
+    /// [`Self::recycle_grads`].
+    #[allow(clippy::too_many_arguments)]
+    fn sharded_loss_and_grads(
+        &self,
+        p: &[&[f32]],
+        bucket: Bucket,
+        batch: usize,
+        t8: &[Tensor],
+        labels: &[f32],
+        weights: &[f32],
+        flags: [f32; ABLATION_FLAGS],
+        workers: usize,
+        fused: bool,
+    ) -> Result<ShardGrads> {
+        let norm = weights.iter().sum::<f32>().max(1.0);
+        let num_shards = batch.div_ceil(TRAIN_SHARD_ROWS).max(1);
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        }
+        .clamp(1, num_shards);
+
+        let (mut shards, mut scratches) = {
+            let mut pool = self.train_pool.lock().expect("train pool poisoned");
+            let mut shards = Vec::with_capacity(num_shards);
+            for _ in 0..num_shards {
+                let mut s = pool.shards.pop().unwrap_or_else(|| ShardGrads::new(p));
+                s.reset();
+                shards.push(s);
+            }
+            let mut scratches = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                scratches.push(pool.scratches.pop().unwrap_or_else(TrainScratch::new));
+            }
+            (shards, scratches)
+        };
+
+        // Contiguous shard ranges per worker; the assignment affects only
+        // which thread fills which accumulator, never the reduce order.
+        let shards_per = num_shards.div_ceil(workers);
+        let run = |wi: usize, chunk: &mut [ShardGrads], scratch: &mut TrainScratch| -> Result<()> {
+            for (j, acc) in chunk.iter_mut().enumerate() {
+                let si = wi * shards_per + j;
+                let rows = si * TRAIN_SHARD_ROWS..((si + 1) * TRAIN_SHARD_ROWS).min(batch);
+                accumulate_shard(
+                    p, bucket, t8, labels, weights, flags, norm, rows, fused, scratch, acc,
+                )?;
+            }
+            Ok(())
+        };
+        if workers == 1 {
+            run(0, &mut shards, &mut scratches[0])?;
+        } else {
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::with_capacity(workers);
+                for (wi, (chunk, scratch)) in
+                    shards.chunks_mut(shards_per).zip(scratches.iter_mut()).enumerate()
+                {
+                    let run = &run;
+                    handles.push(scope.spawn(move || run(wi, chunk, scratch)));
+                }
+                for h in handles {
+                    h.join().expect("native train worker panicked")?;
+                }
+                Ok(())
+            })?;
+        }
+
+        tree_reduce(&mut shards);
+        let acc = shards.swap_remove(0);
+        let mut pool = self.train_pool.lock().expect("train pool poisoned");
+        pool.shards.append(&mut shards);
+        pool.scratches.append(&mut scratches);
+        Ok(acc)
+    }
+
+    /// Return a reduced accumulator to the pool once its gradients have been
+    /// consumed.
+    fn recycle_grads(&self, acc: ShardGrads) {
+        self.train_pool.lock().expect("train pool poisoned").shards.push(acc);
+    }
 }
 
 #[cfg(test)]
@@ -1247,6 +2149,126 @@ mod tests {
     }
 
     #[test]
+    fn backward_matches_tape() {
+        // The fused forward/backward pair must reproduce the tape pair
+        // bit-for-bit: same prediction, same winner routing, same gradient
+        // for every parameter element — across graphs, ablation settings,
+        // and scratch reuse (stale slab state must not leak between calls).
+        let params = init_params(29);
+        let p: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
+        let mut rng = Rng::new(31);
+        let graphs: Vec<GraphTensors> =
+            (0..4).map(|i| toy_graph(&mut rng, 0.2 + 0.15 * i as f32)).collect();
+        let flag_sets =
+            [[1.0f32, 1.0, 1.0], [0.0, 1.0, 1.0], [1.0, 0.0, 1.0], [1.0, 1.0, 0.0], [0.0, 0.0, 0.0]];
+        let mut scratch = TrainScratch::new();
+        for gt in &graphs {
+            let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
+            let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+            for flags in flag_sets {
+                let dpred = 0.37f32;
+                let tape = forward(&p, &g, flags);
+                let mut g_tape: Vec<Vec<f32>> =
+                    p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
+                backward(&p, &g, flags, &tape, dpred, &mut g_tape);
+                forward_train(&p, &g, flags, &mut scratch);
+                assert_eq!(tape.pred.to_bits(), scratch.pred.to_bits(), "pred, flags {flags:?}");
+                for k in 0..NUM_LAYERS {
+                    assert_eq!(tape.winners[k], scratch.winners[k], "winners, layer {k}");
+                }
+                let mut g_fused: Vec<Vec<f32>> =
+                    p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
+                backward_fused(&p, &g, flags, &mut scratch, dpred, &mut g_fused);
+                for (i, (a, b)) in g_tape.iter().zip(&g_fused).enumerate() {
+                    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "grad param {i} elem {j}, flags {flags:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_inplace_matches_functional_across_workers() {
+        // The in-place path must reproduce the functional trajectory
+        // bit-for-bit for every (workers, fused) combination — including
+        // workers=0 (auto) and across pooled-buffer reuse (3 consecutive
+        // steps on a 6-row batch = 2 shards).
+        let eng = NativeEngine::new();
+        let params = init_params(37);
+        let mut rng = Rng::new(41);
+        let graphs: Vec<GraphTensors> =
+            (0..6).map(|i| toy_graph(&mut rng, 0.1 + 0.12 * i as f32)).collect();
+        let refs: Vec<&GraphTensors> = graphs.iter().collect();
+        let batch = 6;
+        let lr = 2e-3;
+
+        // Reference: three functional steps (tape kernels, sequential).
+        let mut f_params = params.clone();
+        let mut f_m = zeros_like(&params);
+        let mut f_v = zeros_like(&params);
+        let mut f_step = 0.0f32;
+        let mut f_losses = Vec::new();
+        for _ in 0..3 {
+            let inputs = train_inputs(&f_params, &f_m, &f_v, f_step, &refs, batch, lr);
+            let out = eng.train_step(BUCKETS[0], batch, &inputs).unwrap();
+            f_params = out[..NUM_PARAMS].to_vec();
+            f_m = out[NUM_PARAMS..2 * NUM_PARAMS].to_vec();
+            f_v = out[2 * NUM_PARAMS..3 * NUM_PARAMS].to_vec();
+            f_step = out[3 * NUM_PARAMS].as_f32().unwrap()[0];
+            f_losses.push(out[3 * NUM_PARAMS + 1].as_f32().unwrap()[0]);
+        }
+        assert_eq!(f_step, 3.0);
+
+        let labels: Vec<f32> = graphs.iter().map(|g| g.label).collect();
+        let data = TrainBatch {
+            tensors: stack_batch(&refs, BUCKETS[0], batch).unwrap(),
+            labels: Tensor::f32(&[batch], labels),
+            weights: Tensor::f32(&[batch], vec![1.0; batch]),
+            flags: flags_tensor([1.0, 1.0, 1.0]),
+        };
+        for (workers, fused) in
+            [(1usize, false), (1, true), (2, true), (4, true), (3, false), (0, true)]
+        {
+            let mut state = TrainState {
+                params: params.clone(),
+                adam_m: zeros_like(&params),
+                adam_v: zeros_like(&params),
+                step: 0.0,
+            };
+            let opts = TrainOptions { workers, fused };
+            for (si, want) in f_losses.iter().enumerate() {
+                let loss = eng
+                    .train_step_inplace(BUCKETS[0], batch, &mut state, &data, lr, &opts)
+                    .unwrap();
+                assert_eq!(
+                    loss.to_bits(),
+                    want.to_bits(),
+                    "loss step {si}, workers {workers} fused {fused}"
+                );
+            }
+            assert_eq!(state.step, 3.0);
+            for i in 0..NUM_PARAMS {
+                let tag = format!("param {i}, workers {workers} fused {fused}");
+                for (which, got, want) in [
+                    ("p", &state.params[i], &f_params[i]),
+                    ("m", &state.adam_m[i], &f_m[i]),
+                    ("v", &state.adam_v[i], &f_v[i]),
+                ] {
+                    let (a, b) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{which} {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn wrong_arity_is_rejected() {
         let eng = NativeEngine::new();
         let params = init_params(7);
@@ -1320,12 +2342,15 @@ mod tests {
 
         let loss_of = |ps: &[Tensor]| -> f32 {
             let views: Vec<&[f32]> = ps.iter().map(|t| t.as_f32().unwrap()).collect();
-            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags).unwrap().0
+            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
+                .unwrap()
+                .0
         };
 
         let views: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
         let (_, grads) =
-            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags).unwrap();
+            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
+                .unwrap();
 
         // Random unit-ish direction over all parameters.
         let mut dir: Vec<Vec<f32>> = Vec::new();

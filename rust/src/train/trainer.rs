@@ -1,13 +1,20 @@
 //! The training loop.
 //!
 //! The *fused train step* — forward, weighted-MSE loss, backward, Adam —
-//! is a single [`crate::runtime::InferenceBackend::train_step`] call, so
-//! the loop here is backend-agnostic: the native backend executes the step
-//! in pure Rust, the PJRT backend dispatches the AOT-lowered HLO. This
-//! module owns everything around it: parameter initialization from the
-//! backend's schema, epoch/batch scheduling per bucket, evaluation, and
-//! checkpointing. The paper's "retraining within hours" claim corresponds
-//! to `Trainer::fit`, which on this corpus takes seconds.
+//! is a single [`crate::runtime::InferenceBackend::train_step_inplace`]
+//! call, so the loop here is backend-agnostic: the native backend executes
+//! the step in pure Rust (sharded across `TrainConfig::workers` threads,
+//! bit-identically for any worker count), other backends fall back to the
+//! functional `train_step` contract. This module owns everything around it:
+//! parameter initialization from the backend's schema, epoch/batch
+//! scheduling per bucket, evaluation, and checkpointing.
+//!
+//! `fit` is zero-churn: the parameter/Adam tensors live in one
+//! [`TrainState`] updated in place (no per-batch clones of the full model),
+//! and each chunk's stacked batch tensors are built once and replayed
+//! across epochs — epochs reshuffle the chunk *visit order*, not chunk
+//! membership. The paper's "retraining within hours" claim corresponds to
+//! `Trainer::fit`, which on this corpus takes seconds.
 
 use std::sync::Arc;
 
@@ -17,7 +24,7 @@ use crate::cost::learned::Ablation;
 use crate::data::Dataset;
 use crate::gnn::{self, Bucket};
 use crate::metrics;
-use crate::runtime::{Engine, Tensor, TensorSpec};
+use crate::runtime::{Engine, Tensor, TensorSpec, TrainBatch, TrainOptions, TrainState};
 use crate::util::rng::Rng;
 
 use super::checkpoint::ParamStore;
@@ -36,6 +43,13 @@ pub struct TrainConfig {
     pub ablation: Ablation,
     /// Print a progress line every N epochs (0 = silent).
     pub log_every: usize,
+    /// Worker threads for the data-parallel gradient shards (0 = one per
+    /// core). The fit result is bit-identical for every setting.
+    pub workers: usize,
+    /// Fused tape-free backward kernels instead of the tape reference path;
+    /// bitwise-equal, so this is a perf knob (and an A/B lever for
+    /// `train_bench`).
+    pub fused: bool,
 }
 
 impl Default for TrainConfig {
@@ -47,6 +61,8 @@ impl Default for TrainConfig {
             seed: 0x5EED,
             ablation: Ablation::default(),
             log_every: 0,
+            workers: 1,
+            fused: true,
         }
     }
 }
@@ -68,14 +84,12 @@ pub struct EvalReport {
     pub count: usize,
 }
 
-/// Owns parameters + Adam state and drives the backend's fused train step.
+/// Owns the training state (params + Adam moments + step counter) and
+/// drives the backend's in-place fused train step.
 pub struct Trainer {
     engine: Arc<Engine>,
     pub config: TrainConfig,
-    params: Vec<Tensor>,
-    adam_m: Vec<Tensor>,
-    adam_v: Vec<Tensor>,
-    step: f32,
+    state: TrainState,
     param_specs: Vec<TensorSpec>,
 }
 
@@ -117,14 +131,19 @@ impl Trainer {
             .collect::<Vec<_>>();
         let adam_v = adam_m.clone();
 
-        Ok(Trainer { engine, config, params, adam_m, adam_v, step: 0.0, param_specs })
+        Ok(Trainer {
+            engine,
+            config,
+            state: TrainState { params, adam_m, adam_v, step: 0.0 },
+            param_specs,
+        })
     }
 
     /// Resume from a checkpoint (adaptivity experiments retrain from scratch,
     /// but warm starts are supported).
     pub fn with_params(mut self, store: &ParamStore) -> Result<Trainer> {
         store.matches_specs(&self.param_specs)?;
-        self.params = store.values();
+        self.state.params = store.values();
         Ok(self)
     }
 
@@ -134,15 +153,26 @@ impl Trainer {
             tensors: self
                 .param_specs
                 .iter()
-                .zip(&self.params)
+                .zip(&self.state.params)
                 .map(|(s, t)| (s.name.clone(), t.clone()))
                 .collect(),
         }
     }
 
-    /// Train on the samples at `indices` of `dataset`.
+    /// The live training state — for bit-identity assertions in tests and
+    /// benches (params, Adam moments, and the step counter).
+    pub fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    /// Train on the samples at `indices` of `dataset`. Errors on an empty
+    /// index set — silently "fitting" nothing used to report a flat 0.0
+    /// loss curve, which reads as a perfectly trained model.
     pub fn fit(&mut self, dataset: &Dataset, indices: &[usize]) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
+        if indices.is_empty() {
+            bail!("Trainer::fit: no training samples (empty index set)");
+        }
         let mut rng = Rng::new(self.config.seed ^ 0xF17);
         let mut loss_curve = Vec::with_capacity(self.config.epochs);
 
@@ -154,42 +184,51 @@ impl Trainer {
             by_bucket.entry(b.tag()).or_insert((b, Vec::new())).1.push(i);
         }
 
-        for epoch in 0..self.config.epochs {
-            let mut epoch_loss = 0.0;
-            let mut batches = 0usize;
-            for (_tag, (bucket, idxs)) in &mut by_bucket {
-                rng.shuffle(idxs);
-                for chunk in idxs.chunks(self.config.batch) {
-                    let graphs: Vec<&gnn::GraphTensors> =
-                        chunk.iter().map(|&i| &dataset.samples[i].tensors).collect();
-                    let (labels, weights) = gnn::stack_labels(&graphs, self.config.batch)?;
-                    let mut inputs = Vec::with_capacity(3 * self.params.len() + 13);
-                    inputs.extend(self.params.iter().cloned());
-                    inputs.extend(self.adam_m.iter().cloned());
-                    inputs.extend(self.adam_v.iter().cloned());
-                    inputs.push(Tensor::f32(&[], vec![self.step]));
-                    inputs.extend(gnn::stack_batch(&graphs, *bucket, self.config.batch)?);
-                    inputs.push(labels);
-                    inputs.push(weights);
-                    inputs.push(gnn::flags_tensor(self.config.ablation.flags()));
-                    inputs.push(Tensor::f32(&[], vec![self.config.learning_rate]));
-
-                    let out = self.engine.train_step(*bucket, self.config.batch, &inputs)?;
-                    // Outputs: params, m, v, step, loss.
-                    let p = self.params.len();
-                    if out.len() != 3 * p + 2 {
-                        bail!("train step returned {} outputs, expected {}", out.len(), 3 * p + 2);
-                    }
-                    self.params = out[..p].to_vec();
-                    self.adam_m = out[p..2 * p].to_vec();
-                    self.adam_v = out[2 * p..3 * p].to_vec();
-                    self.step = out[3 * p].as_f32()?[0];
-                    let loss = out[3 * p + 1].as_f32()?[0] as f64;
-                    epoch_loss += loss;
-                    batches += 1;
-                }
+        // Stack every chunk once up front: the batch tensors are a pure
+        // function of chunk membership, so re-stacking them every epoch
+        // was pure churn. Membership is fixed here; epochs reshuffle the
+        // chunk *visit order* below.
+        struct Chunk {
+            bucket: Bucket,
+            data: TrainBatch,
+        }
+        let flags = gnn::flags_tensor(self.config.ablation.flags());
+        let mut chunks: Vec<Chunk> = Vec::new();
+        for (_tag, (bucket, idxs)) in &by_bucket {
+            for chunk in idxs.chunks(self.config.batch) {
+                let graphs: Vec<&gnn::GraphTensors> =
+                    chunk.iter().map(|&i| &dataset.samples[i].tensors).collect();
+                let (labels, weights) = gnn::stack_labels(&graphs, self.config.batch)?;
+                chunks.push(Chunk {
+                    bucket: *bucket,
+                    data: TrainBatch {
+                        tensors: gnn::stack_batch(&graphs, *bucket, self.config.batch)?,
+                        labels,
+                        weights,
+                        flags: flags.clone(),
+                    },
+                });
             }
-            let mean_loss = epoch_loss / batches.max(1) as f64;
+        }
+
+        let opts = TrainOptions { workers: self.config.workers, fused: self.config.fused };
+        let mut order: Vec<usize> = (0..chunks.len()).collect();
+        for epoch in 0..self.config.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f64;
+            for &ci in &order {
+                let c = &chunks[ci];
+                let loss = self.engine.train_step_inplace(
+                    c.bucket,
+                    self.config.batch,
+                    &mut self.state,
+                    &c.data,
+                    self.config.learning_rate,
+                    &opts,
+                )?;
+                epoch_loss += loss as f64;
+            }
+            let mean_loss = epoch_loss / chunks.len() as f64;
             loss_curve.push(mean_loss);
             if self.config.log_every > 0 && (epoch + 1) % self.config.log_every == 0 {
                 eprintln!("epoch {:>3}: train mse {:.5}", epoch + 1, mean_loss);
@@ -197,7 +236,7 @@ impl Trainer {
         }
 
         Ok(TrainReport {
-            epochs_run: self.config.epochs,
+            epochs_run: loss_curve.len(),
             final_train_loss: loss_curve.last().copied().unwrap_or(f64::NAN),
             loss_curve,
             wall_seconds: t0.elapsed().as_secs_f64(),
@@ -275,5 +314,41 @@ mod tests {
         assert_eq!(b.param_store(), store);
     }
 
-    // Full training integration tests live in rust/tests/runtime_integration.rs.
+    #[test]
+    fn fit_on_empty_indices_errors() {
+        // An empty index set must be a hard error, not a flat 0.0 loss
+        // curve that reads as a perfectly trained model.
+        let ds = crate::data::Dataset { samples: Vec::new() };
+        let mut t = Trainer::new(native_engine(), TrainConfig::default()).unwrap();
+        let err = t.fit(&ds, &[]).unwrap_err();
+        assert!(err.to_string().contains("no training samples"), "{err}");
+    }
+
+    #[test]
+    fn epochs_run_reflects_executed_epochs() {
+        let mut t = crate::gnn::GraphTensors::zeroed(crate::gnn::BUCKETS[0]);
+        t.node_mask[0] = 1.0;
+        t.edge_mask[0] = 1.0;
+        t.label = 0.4;
+        let ds = crate::data::Dataset {
+            samples: vec![crate::data::Sample {
+                family: "toy".into(),
+                heuristic_pred: 0.4,
+                tensors: t,
+            }],
+        };
+        for epochs in [0usize, 3] {
+            let mut tr = Trainer::new(
+                native_engine(),
+                TrainConfig { epochs, batch: 2, ..TrainConfig::default() },
+            )
+            .unwrap();
+            let rep = tr.fit(&ds, &[0]).unwrap();
+            assert_eq!(rep.epochs_run, epochs);
+            assert_eq!(rep.loss_curve.len(), epochs);
+        }
+    }
+
+    // Full training integration tests live in rust/tests/runtime_integration.rs
+    // and rust/tests/train_throughput.rs.
 }

@@ -1,0 +1,139 @@
+//! Integration: the training-throughput overhaul — data-parallel gradient
+//! shards, fused tape-free backward kernels, and the zero-churn in-place
+//! optimizer — against the native backend.
+//!
+//! The load-bearing property is **bit-identity**: the canonical shard
+//! accumulation order is a pure function of the batch, so a multi-epoch,
+//! multi-bucket fit must produce the same params, Adam moments, step
+//! counter and loss curve down to the bits for every worker count and for
+//! both kernel paths (fused and tape). Checkpoint/warm-start must compose
+//! with the parallel path, and `Trainer::predict` must stack a short final
+//! chunk tight (zero padded slots) on the dynamic-batch native backend.
+
+use std::sync::Arc;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::data::{generate_family, Dataset, GenConfig};
+use rdacost::dfg::WorkloadFamily;
+use rdacost::gnn;
+use rdacost::runtime::{native_engine, Engine};
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::rng::Rng;
+
+fn engine() -> Arc<Engine> {
+    native_engine()
+}
+
+/// Small two-family corpus (different graph sizes, so the fit exercises
+/// multiple buckets and multiple chunks per epoch at batch 4).
+fn toy_dataset() -> Dataset {
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(17);
+    let cfg = GenConfig { total: 0, ..GenConfig::default() };
+    let mut samples =
+        generate_family(WorkloadFamily::Gemm, 10, &fabric, &cfg, &mut rng).unwrap();
+    samples.extend(generate_family(WorkloadFamily::Ffn, 10, &fabric, &cfg, &mut rng).unwrap());
+    Dataset { samples }
+}
+
+fn fit_with(ds: &Dataset, fused: bool, workers: usize) -> (Trainer, Vec<u64>) {
+    let cfg = TrainConfig { epochs: 5, batch: 4, fused, workers, ..TrainConfig::default() };
+    let mut t = Trainer::new(engine(), cfg).unwrap();
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let rep = t.fit(ds, &idx).unwrap();
+    assert_eq!(rep.epochs_run, 5);
+    (t, rep.loss_curve.iter().map(|l| l.to_bits()).collect())
+}
+
+#[test]
+fn multi_epoch_fit_is_bit_identical_across_workers_and_kernels() {
+    let ds = toy_dataset();
+    let (reference, ref_bits) = fit_with(&ds, false, 1); // tape, sequential
+    for (fused, workers) in [(true, 1), (true, 2), (true, 4), (false, 2), (true, 0)] {
+        let (t, bits) = fit_with(&ds, fused, workers);
+        assert_eq!(
+            bits, ref_bits,
+            "loss curve diverged from tape-sequential (fused={fused}, workers={workers})"
+        );
+        let (a, b) = (t.state(), reference.state());
+        assert_eq!(a.params, b.params, "params (fused={fused}, workers={workers})");
+        assert_eq!(a.adam_m, b.adam_m, "Adam m (fused={fused}, workers={workers})");
+        assert_eq!(a.adam_v, b.adam_v, "Adam v (fused={fused}, workers={workers})");
+        assert_eq!(a.step.to_bits(), b.step.to_bits());
+        assert_eq!(t.param_store(), reference.param_store());
+    }
+}
+
+#[test]
+fn checkpoint_warm_start_composes_with_parallel_path() {
+    let ds = toy_dataset();
+    let idx: Vec<usize> = (0..ds.len()).collect();
+
+    // Train on the fused 4-worker path, checkpoint to disk.
+    let cfg = TrainConfig {
+        epochs: 3,
+        batch: 4,
+        fused: true,
+        workers: 4,
+        ..TrainConfig::default()
+    };
+    let mut first = Trainer::new(engine(), cfg.clone()).unwrap();
+    first.fit(&ds, &idx).unwrap();
+    let store = first.param_store();
+    let path = std::env::temp_dir().join("rdacost_train_throughput_ckpt.bin");
+    store.save(&path).unwrap();
+    let loaded = rdacost::train::ParamStore::load(&path).unwrap();
+    assert_eq!(loaded, store, "checkpoint roundtrip changed tensors");
+
+    // Warm-start two continuations from the checkpoint; only the worker
+    // count differs, so they must stay bit-identical to each other.
+    let mut seq = Trainer::new(engine(), TrainConfig { workers: 1, ..cfg.clone() })
+        .unwrap()
+        .with_params(&loaded)
+        .unwrap();
+    let mut par = Trainer::new(engine(), TrainConfig { workers: 4, ..cfg })
+        .unwrap()
+        .with_params(&loaded)
+        .unwrap();
+    let rs = seq.fit(&ds, &idx).unwrap();
+    let rp = par.fit(&ds, &idx).unwrap();
+    assert_eq!(
+        rs.loss_curve.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        rp.loss_curve.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(seq.param_store(), par.param_store());
+    assert_eq!(seq.state().adam_m, par.state().adam_m);
+    assert_eq!(seq.state().adam_v, par.state().adam_v);
+}
+
+#[test]
+fn predict_stacks_short_final_chunk_tight_on_native() {
+    let ds = toy_dataset();
+    let eng = engine();
+    assert!(eng.supports_dynamic_batch());
+    let trainer = Trainer::new(eng.clone(), TrainConfig::default()).unwrap();
+    let learned =
+        LearnedCost::from_store(eng, &trainer.param_store(), Ablation::default()).unwrap();
+
+    let by_bucket = ds.by_bucket();
+    let (_, idxs) = by_bucket.iter().max_by_key(|(_, v)| v.len()).unwrap();
+    let n = idxs.len().min(5); // batch 4 → one full chunk + a short one
+    let graphs: Vec<&gnn::GraphTensors> =
+        idxs[..n].iter().map(|&i| &ds.samples[i].tensors).collect();
+
+    let chunked = learned.predict_batch(&graphs, 4).unwrap();
+    assert_eq!(chunked.len(), n);
+    assert_eq!(
+        learned.padded_slots(),
+        0,
+        "dynamic-batch backend padded the short final chunk"
+    );
+
+    // Per-sample inference is independent of chunking: one tight batch of
+    // n must agree bitwise with the 4+remainder chunking.
+    let whole = learned.predict_batch(&graphs, n).unwrap();
+    for (i, (a, b)) in chunked.iter().zip(&whole).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {i}: chunked {a} vs whole {b}");
+    }
+}
