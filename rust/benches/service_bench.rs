@@ -7,6 +7,8 @@
 //! requests replay from the shared PnR cache — higher cache-hit rate and
 //! lower p50 than the unique-graph baseline at the same arrival rate. The
 //! bench asserts both orderings rather than just printing them.
+//! `--baseline FILE` prints per-metric deltas vs a checked-in or
+//! previously measured report.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,6 +19,7 @@ use rdacost::cost::HeuristicCost;
 use rdacost::placer::AnnealParams;
 use rdacost::service::traffic::{run_traffic, TrafficConfig};
 use rdacost::service::{CompileService, ServeConfig, ServeSummary};
+use rdacost::util::bench::{baseline_arg, compare_to_baseline};
 use rdacost::util::json::Json;
 
 struct Scenario {
@@ -99,7 +102,11 @@ fn main() {
                 .set("p95_ms", s.latency.p95_ms())
                 .set("p99_ms", s.latency.p99_ms())
                 .set("queue_wait_p50_ms", s.queue_wait.p50_ms())
-                .set("cache_hit_rate", hit_rate),
+                .set("cache_hit_rate", hit_rate)
+                // Dispatched compute-kernel variant behind the objective's
+                // scores; null for analytic objectives like the heuristic
+                // this bench drives.
+                .set("kernel", s.kernel.map_or(Json::Null, Json::from)),
         );
         results.push((sc.name, s, hit_rate));
     }
@@ -123,6 +130,7 @@ fn main() {
 
     let report = Json::obj()
         .set("bench", "service")
+        .set("measured", true)
         .set("quick", quick)
         .set("catalog", 32u64)
         .set("service_workers", 4u64)
@@ -131,4 +139,8 @@ fn main() {
         .set("scenarios", rows);
     std::fs::write("BENCH_service.json", report.to_pretty()).unwrap();
     println!("wrote BENCH_service.json");
+
+    if let Some(base) = baseline_arg() {
+        compare_to_baseline(&report, &base);
+    }
 }

@@ -120,6 +120,11 @@ pub struct CompileReport {
     /// Like `cache`, a shared score cache reports cumulative counters; a
     /// hit never changes a score, only whether the engine ran.
     pub score_cache: Option<ScoreCacheStats>,
+    /// The dispatched compute-kernel variant behind the objective's scores
+    /// (`"scalar"` / `"avx2"` / `"portable-unrolled"`), `None` for analytic
+    /// objectives. Provenance only: results are bit-identical across
+    /// variants.
+    pub kernel: Option<&'static str>,
 }
 
 /// Compile settings.
@@ -328,6 +333,7 @@ impl<'a> CompileSession<'a> {
             wall_seconds: t0.elapsed().as_secs_f64(),
             cache: cache_stats,
             score_cache: objective.score_cache_stats(),
+            kernel: objective.kernel_variant(),
         })
     }
 
@@ -599,6 +605,7 @@ mod tests {
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
+            kernel: None,
         };
         assert_eq!(empty.throughput, 0.0);
         assert!(empty.throughput.is_finite());
@@ -684,6 +691,7 @@ mod tests {
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
+            kernel: None,
         };
         let b = CompileReport {
             model: "x".into(),
@@ -695,6 +703,7 @@ mod tests {
             wall_seconds: 0.0,
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
+            kernel: None,
         };
         assert!((a.throughput_gain_pct(&b) - 11.111).abs() < 0.01);
         assert!((a.latency_reduction_pct(&b) - 10.0).abs() < 1e-9);

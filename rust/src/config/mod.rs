@@ -21,6 +21,7 @@
 //! restarts = 1
 //! cache = true
 //! cache_path = "results/pnr.cache"
+//! kernel = "auto"
 //!
 //! [dataset]
 //! total = 5878
@@ -58,6 +59,7 @@ use anyhow::{bail, Context, Result};
 use crate::arch::{Era, FabricConfig};
 use crate::data::GenConfig;
 use crate::placer::AnnealParams;
+use crate::runtime::KernelKind;
 use crate::train::TrainConfig;
 
 /// Parsed `section.key -> raw string value` map.
@@ -132,6 +134,12 @@ pub struct RunConfig {
     /// Persistent compile-cache file (`--cache FILE` / `[run] cache_path`);
     /// `None` keeps memoization within a session.
     pub cache_path: Option<String>,
+    /// Native-backend compute kernels (`[run] kernel` / `--kernel`):
+    /// `auto` (default), `scalar`, `simd`, or `portable`. Every setting is
+    /// bit-identical — the canonical lane-order accumulation contract in
+    /// `runtime::kernels` — so this trades wall time only. Defaults from
+    /// `RDACOST_KERNEL` when set.
+    pub kernel: KernelKind,
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
@@ -158,6 +166,7 @@ impl Default for RunConfig {
             restarts: 1,
             cache: true,
             cache_path: None,
+            kernel: KernelKind::from_env(),
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
@@ -195,6 +204,11 @@ impl RunConfig {
         raw.take_parse("run.cache", &mut cfg.cache)?;
         if let Some(p) = raw.values.remove("run.cache_path") {
             cfg.cache_path = Some(p);
+        }
+        if let Some(k) = raw.values.remove("run.kernel") {
+            cfg.kernel = KernelKind::parse(&k).ok_or_else(|| {
+                anyhow::anyhow!("config run.kernel = {k:?}: want auto|scalar|simd|portable")
+            })?;
         }
 
         raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
@@ -273,6 +287,7 @@ seed = 123
 restarts = 3
 cache = false
 cache_path = "results/pnr.cache"
+kernel = "simd"
 
 [dataset]
 total = 100
@@ -306,6 +321,7 @@ workers = 3
         assert_eq!(cfg.restarts, 3);
         assert!(!cfg.cache);
         assert_eq!(cfg.cache_path.as_deref(), Some("results/pnr.cache"));
+        assert_eq!(cfg.kernel, KernelKind::Simd);
         assert_eq!(cfg.dataset.total, 100);
         assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);
@@ -341,6 +357,15 @@ workers = 3
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("badval.toml");
         std::fs::write(&path, "[fabric]\nrows = banana\n").unwrap();
+        assert!(RunConfig::from_file(Some(path.to_str().unwrap())).is_err());
+    }
+
+    #[test]
+    fn bad_kernel_fails() {
+        let dir = std::env::temp_dir().join("rdacost_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badkernel.toml");
+        std::fs::write(&path, "[run]\nkernel = \"avx512\"\n").unwrap();
         assert!(RunConfig::from_file(Some(path.to_str().unwrap())).is_err());
     }
 

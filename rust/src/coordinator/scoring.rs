@@ -143,6 +143,9 @@ pub struct ScoringService {
     params_fp: crate::dfg::Fingerprint,
     /// Optional score cache shared by every [`ServiceObjective`] handle.
     score_cache: Option<Arc<ScoreCache>>,
+    /// The engine's dispatched compute-kernel variant, captured at start;
+    /// see [`crate::placer::ObjectiveFactory::kernel_variant`].
+    kernel: Option<&'static str>,
 }
 
 impl ScoringService {
@@ -161,6 +164,7 @@ impl ScoringService {
         let stats = Arc::new(ServiceStats::default());
         let stats2 = stats.clone();
         let param_values: Vec<Tensor> = params.values();
+        let kernel = engine.kernel_variant();
         let params_fp = {
             let mut h =
                 crate::dfg::canon::FingerprintHasher::new("rdacost-learned-gnn-service-v1");
@@ -181,6 +185,7 @@ impl ScoringService {
             stats,
             params_fp,
             score_cache: None,
+            kernel,
         })
     }
 
@@ -478,6 +483,10 @@ impl ObjectiveFactory for ScoringService {
 
     fn score_cache_stats(&self) -> Option<ScoreCacheStats> {
         self.score_cache.as_ref().map(|c| c.stats())
+    }
+
+    fn kernel_variant(&self) -> Option<&'static str> {
+        self.kernel
     }
 }
 

@@ -681,6 +681,10 @@ impl ObjectiveFactory for LearnedCost {
     fn score_cache_stats(&self) -> Option<ScoreCacheStats> {
         self.score_cache.as_ref().map(|c| c.stats())
     }
+
+    fn kernel_variant(&self) -> Option<&'static str> {
+        self.engine.kernel_variant()
+    }
 }
 
 #[cfg(test)]

@@ -21,7 +21,7 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(cfg: RunConfig) -> Result<Ctx> {
-        let engine = crate::runtime::engine(&cfg.artifacts_dir)
+        let engine = crate::runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)
             .context("initializing the inference backend")?;
         let results_dir = std::path::PathBuf::from("results");
         std::fs::create_dir_all(&results_dir)?;

@@ -98,6 +98,13 @@ Common options:
   --workers N       worker threads: gen-data shards and compile-session
                     subgraph fan-out (default: all cores; results are
                     bit-identical for every worker count)
+  --kernel K        native-backend compute kernels ([run] kernel, or the
+                    RDACOST_KERNEL env var): \"auto\" (default; AVX2 when the
+                    CPU has it), \"simd\", \"portable\" (the unrolled
+                    fallback), or \"scalar\" (the restructured reference).
+                    Every setting is bit-identical — the canonical
+                    lane-order accumulation contract (see README \"Explicit
+                    SIMD\") — so this is a perf lever only
   --restarts R      independent annealing restarts per compiled subgraph,
                     best measured II kept (default 1)
   --cache FILE      persistent compile cache ([run] cache_path): memoized
@@ -189,6 +196,12 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
         cfg.cache = false;
         cfg.cache_path = None;
     }
+    // Native-backend kernel selection (bit-identical across settings).
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = runtime::KernelKind::parse(k).ok_or_else(|| {
+            anyhow::anyhow!("--kernel must be auto|scalar|simd|portable, got {k:?}")
+        })?;
+    }
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
     cfg.train.workers = args.get_usize("train-workers", cfg.train.workers);
@@ -225,7 +238,7 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
 
 fn cmd_smoke(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let engine = runtime::engine(&cfg.artifacts_dir)?;
+    let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
     // The backend's parameter layout must match the shared schema contract.
     let want = gnn::schema::param_specs();
     let got = engine.param_specs();
@@ -243,6 +256,9 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     }
     let elements: usize = got.iter().map(|s| s.shape.iter().product::<usize>()).sum();
     println!("platform: {}", engine.platform());
+    if let Some(k) = engine.kernel_variant() {
+        println!("kernels: {k}");
+    }
     println!("parameters: {} tensors / {elements} elements", got.len());
     println!("schema: OK");
     Ok(())
@@ -269,7 +285,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt").to_string();
     let ds = data::load_dataset(ds_path)?;
-    let engine = runtime::engine(&cfg.artifacts_dir)?;
+    let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
     let mut tc = cfg.train.clone();
     tc.log_every = 5;
     let kernel = if tc.fused { "fused" } else { "tape" };
@@ -281,8 +297,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.param_store().save(&ckpt)?;
     // `loss bits` prints the exact f64 so bit-identity across worker counts
     // and kernels is assertable from the CLI (the CI train smoke greps it).
+    let kvar = trainer.kernel_variant().unwrap_or("backend-managed");
     println!(
-        "trained {} epochs on {} samples in {:.1}s ({kernel} kernels, {workers} worker(s), final mse {:.5}, loss bits {:016x}) -> {ckpt}",
+        "trained {} epochs on {} samples in {:.1}s ({kernel} {kvar} kernels, {workers} worker(s), final mse {:.5}, loss bits {:016x}) -> {ckpt}",
         rep.epochs_run,
         ds.len(),
         rep.wall_seconds,
@@ -297,7 +314,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
     let ds = data::load_dataset(ds_path)?;
-    let engine = runtime::engine(&cfg.artifacts_dir)?;
+    let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
     let store = train::ParamStore::load(ckpt)?;
     let trainer = train::Trainer::new(engine, cfg.train.clone())?.with_params(&store)?;
     let all: Vec<usize> = (0..ds.len()).collect();
@@ -364,7 +381,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
             compiler::compile(&graph, &fabric, &obj, &compile_cfg)?
         }
         "learned" => {
-            let engine = runtime::engine(&cfg.artifacts_dir)?;
+            let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
             let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
             obj.set_score_cache_capacity(cfg.score_cache_capacity);
@@ -387,6 +404,9 @@ fn cmd_compile(args: &Args) -> Result<()> {
         report.total_latency,
         report.wall_seconds
     );
+    if let Some(k) = report.kernel {
+        println!("  kernels: {k}");
+    }
     for sg in &report.subgraphs {
         println!(
             "  {:<28} {:>3} nodes  II {:>8.0}  norm-tp {:.3}",
@@ -442,7 +462,7 @@ fn serve_objective(
         "heuristic" => std::sync::Arc::new(cost::HeuristicCost::new()),
         "oracle" => std::sync::Arc::new(cost::OracleCost::new(cfg.era)),
         "learned" => {
-            let engine = runtime::engine(&cfg.artifacts_dir)?;
+            let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
             let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
             let mut obj = cost::LearnedCost::load(engine, std::path::Path::new(ckpt))?;
             obj.set_score_cache_capacity(cfg.score_cache_capacity);
@@ -565,7 +585,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 64);
-    let engine = runtime::engine(&cfg.artifacts_dir)?;
+    let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
     let trainer = train::Trainer::new(engine.clone(), cfg.train.clone())?;
     let store = trainer.param_store();
     let service = coordinator::ScoringService::start(

@@ -179,6 +179,16 @@ pub trait ObjectiveFactory: Sync {
     fn score_cache_stats(&self) -> Option<crate::cost::ScoreCacheStats> {
         None
     }
+
+    /// The dispatched compute-kernel variant behind this factory's scores
+    /// (`"scalar"` / `"avx2"` / `"portable-unrolled"`), when an inference
+    /// engine with an explicit kernel layer is involved. `None` (the
+    /// default) for analytic objectives and backends without one; reports
+    /// and bench JSON omit the field. Scores are bit-identical across
+    /// variants, so this is provenance, not a cache-key ingredient.
+    fn kernel_variant(&self) -> Option<&'static str> {
+        None
+    }
 }
 
 /// Annealing schedule + move-mix parameters. The dataset generator draws

@@ -1,0 +1,1192 @@
+//! Explicit SIMD kernel layer for the native backend.
+//!
+//! Every hot floating-point primitive behind `forward_infer`,
+//! `backward_fused` and the Adam update lives here, in three
+//! runtime-dispatched variants selected by [`Kern`]:
+//!
+//! * [`Kern::Scalar`] — the restructured scalar reference;
+//! * [`Kern::Avx2`] (x86_64 only) — explicit AVX2 via `std::arch`, FMA-free;
+//! * [`Kern::Unrolled`] — a portable 8-lane unrolled fallback with no
+//!   architecture-specific code.
+//!
+//! ## The canonical lane-order accumulation contract
+//!
+//! All three variants are **bit-identical on every input shape**. For
+//! elementwise work (axpy, ReLU masking, max-scatter, Adam) that is free:
+//! each output element sees the same IEEE ops in the same order whether the
+//! loop runs 1 or 8 elements per step, and no variant uses FMA contraction
+//! (separate mul + add everywhere, matching Rust's default scalar
+//! semantics). Cross-element *reductions* are where naive vectorization
+//! diverges, so the scalar reference is restructured to accumulate in the
+//! same lane-strided order as an 8-wide vector register: [`dot`] and
+//! [`dot2`] accumulate `lanes[c % 8] += a[c] * b[c]` with `c` ascending and
+//! combine the eight partials with one fixed reduction tree
+//! (`((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, see `reduce_lanes`). The AVX2
+//! variant keeps the eight lane partials in one `__m256`, spills, folds any
+//! tail element into lane `c % 8`, and runs the *same* tree — identical
+//! bits by construction, not by accident.
+//!
+//! Two more conventions keep selection ops exact:
+//!
+//! * ReLU is `if x > 0.0 { x } else { 0.0 }` (compare + bitwise select),
+//!   never `max`, whose `-0.0` behavior differs between scalar `maxnum`
+//!   lowering and `maxps`;
+//! * matmul-style kernels skip a term when its activation is exactly
+//!   `0.0` — in every variant — so a skipped `-0.0` accumulator is never
+//!   rewritten to `+0.0` by an `x + 0.0*w` that only some variant performs.
+//!
+//! The parity is pinned by the in-module property tests (ragged lengths,
+//! remainder columns smaller than a vector lane, empty inputs) and by the
+//! engine-level suites in `runtime/native.rs` and `tests/kernel_parity.rs`.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use crate::gnn::schema::{ADAM_B1, ADAM_B2, ADAM_EPS};
+
+/// Lane width of the canonical accumulation contract (f32 lanes in one
+/// 256-bit register). The scalar reference is written against this width,
+/// so it is fixed even on targets without AVX2.
+pub const LANES: usize = 8;
+
+/// The user-facing kernel knob (`kernel = auto|scalar|simd|portable` in the
+/// config, `--kernel` on the CLI, `RDACOST_KERNEL` in the environment).
+/// Resolved to a concrete [`Kern`] once per engine by [`Kern::select`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Best available: AVX2 when the CPU has it, else the portable fallback.
+    #[default]
+    Auto,
+    /// The restructured scalar reference.
+    Scalar,
+    /// Explicit vector kernels (AVX2 on x86_64, portable-unrolled elsewhere).
+    Simd,
+    /// Force the portable unrolled fallback (the non-x86 `Simd` path).
+    Portable,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" => Some(KernelKind::Scalar),
+            "simd" => Some(KernelKind::Simd),
+            "portable" => Some(KernelKind::Portable),
+            _ => None,
+        }
+    }
+
+    /// The knob value as written in config/CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::Portable => "portable",
+        }
+    }
+
+    /// Read `RDACOST_KERNEL` (used by the CI fallback matrix); unset or
+    /// unrecognized values mean [`KernelKind::Auto`].
+    pub fn from_env() -> KernelKind {
+        match std::env::var("RDACOST_KERNEL") {
+            Ok(v) => KernelKind::parse(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "RDACOST_KERNEL={v} not recognized (want auto|scalar|simd|portable); \
+                     falling back to auto"
+                );
+                KernelKind::Auto
+            }),
+            Err(_) => KernelKind::Auto,
+        }
+    }
+}
+
+/// A concrete, dispatched kernel variant. Every primitive in this module
+/// takes one; all variants return identical bits (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kern {
+    Scalar,
+    /// Portable 8-lane unrolled fallback.
+    Unrolled,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Kern {
+    /// Resolve the user knob against the running CPU. `Auto` and `Simd`
+    /// pick AVX2 when `is_x86_feature_detected!` says so, else the portable
+    /// unrolled fallback; `Scalar`/`Portable` force their variant.
+    pub fn select(kind: KernelKind) -> Kern {
+        match kind {
+            KernelKind::Scalar => Kern::Scalar,
+            KernelKind::Portable => Kern::Unrolled,
+            KernelKind::Simd | KernelKind::Auto => {
+                #[cfg(target_arch = "x86_64")]
+                if is_x86_feature_detected!("avx2") {
+                    return Kern::Avx2;
+                }
+                Kern::Unrolled
+            }
+        }
+    }
+
+    /// The dispatched-variant tag reported in CLI banners, `CompileReport`
+    /// and bench JSON: `scalar`, `avx2` or `portable-unrolled`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kern::Scalar => "scalar",
+            Kern::Unrolled => "portable-unrolled",
+            #[cfg(target_arch = "x86_64")]
+            Kern::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Every kernel variant available on the running CPU, scalar first. Used by
+/// the parity suites to sweep all dispatch targets.
+pub fn available_kerns() -> Vec<Kern> {
+    let mut v = vec![Kern::Scalar, Kern::Unrolled];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        v.push(Kern::Avx2);
+    }
+    v
+}
+
+/// Canonical ReLU: compare + select, never `max` (module docs).
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x > 0.0 { x } else { 0.0 }
+}
+
+/// The fixed reduction tree combining the eight lane partials of a
+/// canonical lane-order reduction.
+#[inline]
+fn reduce_lanes(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+// ---- axpy / accumulate ------------------------------------------------------
+
+/// `out[c] += x * r[c]`; the whole call is skipped when `x == 0.0` (exact:
+/// a dead term must not rewrite `-0.0` accumulators, see module docs).
+#[inline]
+pub fn axpy(kern: Kern, out: &mut [f32], x: f32, r: &[f32]) {
+    debug_assert_eq!(out.len(), r.len());
+    if x == 0.0 {
+        return;
+    }
+    match kern {
+        Kern::Scalar => {
+            for (o, &rv) in out.iter_mut().zip(r) {
+                *o += x * rv;
+            }
+        }
+        Kern::Unrolled => axpy_unrolled(out, x, r),
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { axpy_avx2(out, x, r) },
+    }
+}
+
+fn axpy_unrolled(out: &mut [f32], x: f32, r: &[f32]) {
+    let n8 = out.len() / LANES * LANES;
+    for (o, rv) in out[..n8].chunks_exact_mut(LANES).zip(r[..n8].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            o[j] += x * rv[j];
+        }
+    }
+    for (o, &rv) in out[n8..].iter_mut().zip(&r[n8..]) {
+        *o += x * rv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(out: &mut [f32], x: f32, r: &[f32]) {
+    let n = out.len();
+    let n8 = n / LANES * LANES;
+    let xb = _mm256_set1_ps(x);
+    let op = out.as_mut_ptr();
+    let rp = r.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let o = _mm256_loadu_ps(op.add(i));
+        let rv = _mm256_loadu_ps(rp.add(i));
+        _mm256_storeu_ps(op.add(i), _mm256_add_ps(o, _mm256_mul_ps(xb, rv)));
+        i += LANES;
+    }
+    while i < n {
+        *op.add(i) += x * *rp.add(i);
+        i += 1;
+    }
+}
+
+/// `out[c] += src[c]` (bias-gradient accumulation).
+#[inline]
+pub fn acc(kern: Kern, out: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(out.len(), src.len());
+    match kern {
+        Kern::Scalar => {
+            for (o, &s) in out.iter_mut().zip(src) {
+                *o += s;
+            }
+        }
+        Kern::Unrolled => {
+            let n8 = out.len() / LANES * LANES;
+            for (o, s) in out[..n8].chunks_exact_mut(LANES).zip(src[..n8].chunks_exact(LANES)) {
+                for j in 0..LANES {
+                    o[j] += s[j];
+                }
+            }
+            for (o, &s) in out[n8..].iter_mut().zip(&src[n8..]) {
+                *o += s;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { acc_avx2(out, src) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn acc_avx2(out: &mut [f32], src: &[f32]) {
+    let n = out.len();
+    let n8 = n / LANES * LANES;
+    let op = out.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let o = _mm256_loadu_ps(op.add(i));
+        let s = _mm256_loadu_ps(sp.add(i));
+        _mm256_storeu_ps(op.add(i), _mm256_add_ps(o, s));
+        i += LANES;
+    }
+    while i < n {
+        *op.add(i) += *sp.add(i);
+        i += 1;
+    }
+}
+
+// ---- ReLU masking -----------------------------------------------------------
+
+/// `out[c] = relu(out[c]) * m` — the post-matmul activation + row mask.
+#[inline]
+pub fn relu_mask(kern: Kern, out: &mut [f32], m: f32) {
+    match kern {
+        Kern::Scalar => {
+            for o in out.iter_mut() {
+                *o = relu(*o) * m;
+            }
+        }
+        Kern::Unrolled => {
+            let n8 = out.len() / LANES * LANES;
+            for o in out[..n8].chunks_exact_mut(LANES) {
+                for j in 0..LANES {
+                    o[j] = relu(o[j]) * m;
+                }
+            }
+            for o in out[n8..].iter_mut() {
+                *o = relu(*o) * m;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { relu_mask_avx2(out, m) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_mask_avx2(out: &mut [f32], m: f32) {
+    let n = out.len();
+    let n8 = n / LANES * LANES;
+    let zero = _mm256_setzero_ps();
+    let mb = _mm256_set1_ps(m);
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let o = _mm256_loadu_ps(op.add(i));
+        // x > 0.0 ? x : +0.0, as an AND with the compare mask — where the
+        // mask is all-ones the bits of x pass through exactly.
+        let r = _mm256_and_ps(o, _mm256_cmp_ps::<_CMP_GT_OQ>(o, zero));
+        _mm256_storeu_ps(op.add(i), _mm256_mul_ps(r, mb));
+        i += LANES;
+    }
+    while i < n {
+        *op.add(i) = relu(*op.add(i)) * m;
+        i += 1;
+    }
+}
+
+/// `out[c] = relu(out[c])` (the head activations, no mask).
+#[inline]
+pub fn relu_slice(kern: Kern, out: &mut [f32]) {
+    match kern {
+        Kern::Scalar | Kern::Unrolled => {
+            for o in out.iter_mut() {
+                *o = relu(*o);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { relu_slice_avx2(out) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_slice_avx2(out: &mut [f32]) {
+    let n = out.len();
+    let n8 = n / LANES * LANES;
+    let zero = _mm256_setzero_ps();
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let o = _mm256_loadu_ps(op.add(i));
+        _mm256_storeu_ps(op.add(i), _mm256_and_ps(o, _mm256_cmp_ps::<_CMP_GT_OQ>(o, zero)));
+        i += LANES;
+    }
+    while i < n {
+        *op.add(i) = relu(*op.add(i));
+        i += 1;
+    }
+}
+
+/// ReLU-gate an upstream gradient: `da[c] = up[c]` where `act[c] > 0.0`,
+/// else `0.0`. Returns whether any gated value is nonzero (the backward's
+/// row-skip test). Pure bit selection — no arithmetic touches `up`.
+#[inline]
+pub fn relu_gate(kern: Kern, da: &mut [f32], act: &[f32], up: &[f32]) -> bool {
+    debug_assert_eq!(da.len(), act.len());
+    debug_assert_eq!(da.len(), up.len());
+    match kern {
+        Kern::Scalar | Kern::Unrolled => {
+            let mut any = false;
+            for ((d, &a), &u) in da.iter_mut().zip(act).zip(up) {
+                *d = if a > 0.0 { u } else { 0.0 };
+                any |= *d != 0.0;
+            }
+            any
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { relu_gate_avx2(da, act, up) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_gate_avx2(da: &mut [f32], act: &[f32], up: &[f32]) -> bool {
+    let n = da.len();
+    let n8 = n / LANES * LANES;
+    let zero = _mm256_setzero_ps();
+    let dp = da.as_mut_ptr();
+    let ap = act.as_ptr();
+    let up_ = up.as_ptr();
+    let mut anym = 0i32;
+    let mut i = 0;
+    while i < n8 {
+        let av = _mm256_loadu_ps(ap.add(i));
+        let uv = _mm256_loadu_ps(up_.add(i));
+        let dv = _mm256_and_ps(uv, _mm256_cmp_ps::<_CMP_GT_OQ>(av, zero));
+        _mm256_storeu_ps(dp.add(i), dv);
+        anym |= _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_NEQ_UQ>(dv, zero));
+        i += LANES;
+    }
+    let mut any = anym != 0;
+    while i < n {
+        let d = if *ap.add(i) > 0.0 { *up_.add(i) } else { 0.0 };
+        *dp.add(i) = d;
+        any |= d != 0.0;
+        i += 1;
+    }
+    any
+}
+
+// ---- max-scatter ------------------------------------------------------------
+
+/// Elementwise max-scatter (value only): `if m[c] > s[c] { s[c] = m[c] }`.
+#[inline]
+pub fn max_scatter(kern: Kern, s: &mut [f32], m: &[f32]) {
+    debug_assert_eq!(s.len(), m.len());
+    match kern {
+        Kern::Scalar | Kern::Unrolled => {
+            for (sv, &mv) in s.iter_mut().zip(m) {
+                if mv > *sv {
+                    *sv = mv;
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { max_scatter_avx2(s, m) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_scatter_avx2(s: &mut [f32], m: &[f32]) {
+    let n = s.len();
+    let n8 = n / LANES * LANES;
+    let sp = s.as_mut_ptr();
+    let mp = m.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let sv = _mm256_loadu_ps(sp.add(i));
+        let mv = _mm256_loadu_ps(mp.add(i));
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(mv, sv);
+        _mm256_storeu_ps(sp.add(i), _mm256_blendv_ps(sv, mv, mask));
+        i += LANES;
+    }
+    while i < n {
+        if *mp.add(i) > *sp.add(i) {
+            *sp.add(i) = *mp.add(i);
+        }
+        i += 1;
+    }
+}
+
+/// Elementwise max-scatter recording the winning message slot: where
+/// `m[c] > s[c]`, set `s[c] = m[c]` and `win[c] = slot`. The strict `>`
+/// keeps exact winner parity with the scalar reference (ties never steal).
+#[inline]
+pub fn max_scatter_win(kern: Kern, s: &mut [f32], win: &mut [i32], m: &[f32], slot: i32) {
+    debug_assert_eq!(s.len(), m.len());
+    debug_assert_eq!(s.len(), win.len());
+    match kern {
+        Kern::Scalar | Kern::Unrolled => {
+            for ((sv, w), &mv) in s.iter_mut().zip(win.iter_mut()).zip(m) {
+                if mv > *sv {
+                    *sv = mv;
+                    *w = slot;
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { max_scatter_win_avx2(s, win, m, slot) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_scatter_win_avx2(s: &mut [f32], win: &mut [i32], m: &[f32], slot: i32) {
+    let n = s.len();
+    let n8 = n / LANES * LANES;
+    let sp = s.as_mut_ptr();
+    let wp = win.as_mut_ptr();
+    let mp = m.as_ptr();
+    let sb = _mm256_set1_epi32(slot);
+    let mut i = 0;
+    while i < n8 {
+        let sv = _mm256_loadu_ps(sp.add(i));
+        let mv = _mm256_loadu_ps(mp.add(i));
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(mv, sv);
+        _mm256_storeu_ps(sp.add(i), _mm256_blendv_ps(sv, mv, mask));
+        // The compare mask is all-ones/all-zeros per 32-bit lane, so a
+        // byte-granular blend selects whole winner indices.
+        let wv = _mm256_loadu_si256(wp.add(i) as *const __m256i);
+        let wn = _mm256_blendv_epi8(wv, sb, _mm256_castps_si256(mask));
+        _mm256_storeu_si256(wp.add(i) as *mut __m256i, wn);
+        i += LANES;
+    }
+    while i < n {
+        if *mp.add(i) > *sp.add(i) {
+            *sp.add(i) = *mp.add(i);
+            *wp.add(i) = slot;
+        }
+        i += 1;
+    }
+}
+
+// ---- matvec / GEMM ----------------------------------------------------------
+
+/// Row-major matrix-vector accumulate: `out[c] += Σ_i a[i] * w[i*C + c]`
+/// with `i` ascending per element and terms with `a[i] == 0.0` skipped —
+/// the exact FP sequence of a chain of [`axpy`] calls. The vector variants
+/// keep each 8-column tile of `out` register-resident across the whole `i`
+/// loop instead of storing and reloading it per input coordinate.
+pub fn matvec_acc(kern: Kern, out: &mut [f32], a: &[f32], w: &[f32]) {
+    let c = out.len();
+    debug_assert_eq!(w.len(), a.len() * c);
+    match kern {
+        Kern::Scalar => {
+            for (i, &x) in a.iter().enumerate() {
+                if x != 0.0 {
+                    let r = &w[i * c..(i + 1) * c];
+                    for (o, &rv) in out.iter_mut().zip(r) {
+                        *o += x * rv;
+                    }
+                }
+            }
+        }
+        Kern::Unrolled => matvec_acc_unrolled(out, a, w),
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { matvec_acc_avx2(out, a, w) },
+    }
+}
+
+fn matvec_acc_unrolled(out: &mut [f32], a: &[f32], w: &[f32]) {
+    let c = out.len();
+    let c8 = c / LANES * LANES;
+    let mut t = 0;
+    while t < c8 {
+        let mut l = [0f32; LANES];
+        l.copy_from_slice(&out[t..t + LANES]);
+        for (i, &x) in a.iter().enumerate() {
+            if x != 0.0 {
+                let r = &w[i * c + t..i * c + t + LANES];
+                for j in 0..LANES {
+                    l[j] += x * r[j];
+                }
+            }
+        }
+        out[t..t + LANES].copy_from_slice(&l);
+        t += LANES;
+    }
+    for ci in c8..c {
+        let mut o = out[ci];
+        for (i, &x) in a.iter().enumerate() {
+            if x != 0.0 {
+                o += x * w[i * c + ci];
+            }
+        }
+        out[ci] = o;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matvec_acc_avx2(out: &mut [f32], a: &[f32], w: &[f32]) {
+    let c = out.len();
+    let c8 = c / LANES * LANES;
+    let op = out.as_mut_ptr();
+    let wp = w.as_ptr();
+    let mut t = 0;
+    while t < c8 {
+        let mut accv = _mm256_loadu_ps(op.add(t));
+        for (i, &x) in a.iter().enumerate() {
+            if x != 0.0 {
+                let rv = _mm256_loadu_ps(wp.add(i * c + t));
+                accv = _mm256_add_ps(accv, _mm256_mul_ps(_mm256_set1_ps(x), rv));
+            }
+        }
+        _mm256_storeu_ps(op.add(t), accv);
+        t += LANES;
+    }
+    for ci in c8..c {
+        let mut o = *op.add(ci);
+        for (i, &x) in a.iter().enumerate() {
+            if x != 0.0 {
+                o += x * *wp.add(i * c + ci);
+            }
+        }
+        *op.add(ci) = o;
+    }
+}
+
+/// Max panel rows of the register-tiled GEMM microkernel.
+pub const GEMM_MR: usize = 4;
+
+/// Register-tiled GEMM microkernel over a packed A panel:
+/// `out[r*C + c] += Σ_i panel[i*mr + r] * w[i*C + c]` for `mr ≤ 4` rows,
+/// `i` ascending per element, `panel[i*mr + r] == 0.0` terms skipped — the
+/// exact FP sequence of [`matvec_acc`] run row by row. The panel is packed
+/// column-major (all rows' coordinate `i` adjacent), so the AVX2 variant
+/// broadcasts 4 activations per weight-row load and keeps `mr × 16` output
+/// columns in registers across the whole `i` loop — one traversal of `w`
+/// feeds 4 output rows.
+pub fn gemm_panel(kern: Kern, out: &mut [f32], panel: &[f32], mr: usize, w: &[f32], c: usize) {
+    assert!(mr >= 1 && mr <= GEMM_MR, "gemm_panel: mr {mr} out of range");
+    debug_assert_eq!(out.len(), mr * c);
+    debug_assert_eq!(panel.len() % mr, 0);
+    debug_assert_eq!(w.len(), (panel.len() / mr) * c);
+    match kern {
+        Kern::Scalar => {
+            let k = panel.len() / mr;
+            for r in 0..mr {
+                let orow = &mut out[r * c..(r + 1) * c];
+                for i in 0..k {
+                    let x = panel[i * mr + r];
+                    if x != 0.0 {
+                        let wr = &w[i * c..(i + 1) * c];
+                        for (o, &rv) in orow.iter_mut().zip(wr) {
+                            *o += x * rv;
+                        }
+                    }
+                }
+            }
+        }
+        Kern::Unrolled => {
+            let k = panel.len() / mr;
+            for r in 0..mr {
+                let orow = &mut out[r * c..(r + 1) * c];
+                let c8 = c / LANES * LANES;
+                let mut t = 0;
+                while t < c8 {
+                    let mut l = [0f32; LANES];
+                    l.copy_from_slice(&orow[t..t + LANES]);
+                    for i in 0..k {
+                        let x = panel[i * mr + r];
+                        if x != 0.0 {
+                            let wr = &w[i * c + t..i * c + t + LANES];
+                            for j in 0..LANES {
+                                l[j] += x * wr[j];
+                            }
+                        }
+                    }
+                    orow[t..t + LANES].copy_from_slice(&l);
+                    t += LANES;
+                }
+                for ci in c8..c {
+                    let mut o = orow[ci];
+                    for i in 0..k {
+                        let x = panel[i * mr + r];
+                        if x != 0.0 {
+                            o += x * w[i * c + ci];
+                        }
+                    }
+                    orow[ci] = o;
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { gemm_panel_avx2(out, panel, mr, w, c) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_panel_avx2(out: &mut [f32], panel: &[f32], mr: usize, w: &[f32], c: usize) {
+    let k = panel.len() / mr;
+    let op = out.as_mut_ptr();
+    let wp = w.as_ptr();
+    let pp = panel.as_ptr();
+    let mut t = 0;
+    // 16-column tiles: 2 accumulator registers per panel row (8 total at
+    // mr = 4), one broadcast + two weight-row loads per i.
+    while t + 2 * LANES <= c {
+        let mut a0 = [_mm256_setzero_ps(); GEMM_MR];
+        let mut a1 = [_mm256_setzero_ps(); GEMM_MR];
+        for r in 0..mr {
+            a0[r] = _mm256_loadu_ps(op.add(r * c + t));
+            a1[r] = _mm256_loadu_ps(op.add(r * c + t + LANES));
+        }
+        for i in 0..k {
+            let b0 = _mm256_loadu_ps(wp.add(i * c + t));
+            let b1 = _mm256_loadu_ps(wp.add(i * c + t + LANES));
+            for r in 0..mr {
+                let x = *pp.add(i * mr + r);
+                if x != 0.0 {
+                    let xb = _mm256_set1_ps(x);
+                    a0[r] = _mm256_add_ps(a0[r], _mm256_mul_ps(xb, b0));
+                    a1[r] = _mm256_add_ps(a1[r], _mm256_mul_ps(xb, b1));
+                }
+            }
+        }
+        for r in 0..mr {
+            _mm256_storeu_ps(op.add(r * c + t), a0[r]);
+            _mm256_storeu_ps(op.add(r * c + t + LANES), a1[r]);
+        }
+        t += 2 * LANES;
+    }
+    // One remaining 8-column tile.
+    while t + LANES <= c {
+        let mut a0 = [_mm256_setzero_ps(); GEMM_MR];
+        for r in 0..mr {
+            a0[r] = _mm256_loadu_ps(op.add(r * c + t));
+        }
+        for i in 0..k {
+            let b0 = _mm256_loadu_ps(wp.add(i * c + t));
+            for r in 0..mr {
+                let x = *pp.add(i * mr + r);
+                if x != 0.0 {
+                    a0[r] = _mm256_add_ps(a0[r], _mm256_mul_ps(_mm256_set1_ps(x), b0));
+                }
+            }
+        }
+        for r in 0..mr {
+            _mm256_storeu_ps(op.add(r * c + t), a0[r]);
+        }
+        t += LANES;
+    }
+    // Remainder columns smaller than a lane: scalar, same i-ascending order.
+    for ci in t..c {
+        for r in 0..mr {
+            let mut o = *op.add(r * c + ci);
+            for i in 0..k {
+                let x = *pp.add(i * mr + r);
+                if x != 0.0 {
+                    o += x * *wp.add(i * c + ci);
+                }
+            }
+            *op.add(r * c + ci) = o;
+        }
+    }
+}
+
+// ---- canonical lane-order reductions ----------------------------------------
+
+/// Dot product in the canonical lane order (module docs): lane partials
+/// `l[c % 8] += a[c] * b[c]` with `c` ascending, combined by the fixed
+/// reduction tree. Identical bits in every variant.
+pub fn dot(kern: Kern, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match kern {
+        Kern::Scalar => {
+            let mut l = [0f32; LANES];
+            for (c, (&x, &y)) in a.iter().zip(b).enumerate() {
+                l[c % LANES] += x * y;
+            }
+            reduce_lanes(l)
+        }
+        Kern::Unrolled => {
+            let n = a.len();
+            let n8 = n / LANES * LANES;
+            let mut l = [0f32; LANES];
+            for (av, bv) in a[..n8].chunks_exact(LANES).zip(b[..n8].chunks_exact(LANES)) {
+                for j in 0..LANES {
+                    l[j] += av[j] * bv[j];
+                }
+            }
+            for c in n8..n {
+                l[c - n8] += a[c] * b[c];
+            }
+            reduce_lanes(l)
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { dot_avx2(a, b) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let n8 = n / LANES * LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut accv = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < n8 {
+        let av = _mm256_loadu_ps(ap.add(i));
+        let bv = _mm256_loadu_ps(bp.add(i));
+        accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+        i += LANES;
+    }
+    let mut l = [0f32; LANES];
+    _mm256_storeu_ps(l.as_mut_ptr(), accv);
+    // Tail elements fold into lane c % 8 — the same lane the scalar
+    // reference uses, because the tail starts at a multiple of 8.
+    for c in n8..n {
+        l[c - n8] += *ap.add(c) * *bp.add(c);
+    }
+    reduce_lanes(l)
+}
+
+/// Two canonical lane-order dot products sharing the right-hand side:
+/// `(dot(a, d), dot(b, d))`. The backward's dual `Wv`/`We` row reductions.
+pub fn dot2(kern: Kern, a: &[f32], b: &[f32], d: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a.len(), d.len());
+    debug_assert_eq!(b.len(), d.len());
+    match kern {
+        Kern::Scalar => {
+            let mut l1 = [0f32; LANES];
+            let mut l2 = [0f32; LANES];
+            for (c, &dv) in d.iter().enumerate() {
+                l1[c % LANES] += a[c] * dv;
+                l2[c % LANES] += b[c] * dv;
+            }
+            (reduce_lanes(l1), reduce_lanes(l2))
+        }
+        Kern::Unrolled => {
+            let n = d.len();
+            let n8 = n / LANES * LANES;
+            let mut l1 = [0f32; LANES];
+            let mut l2 = [0f32; LANES];
+            let mut t = 0;
+            while t < n8 {
+                for j in 0..LANES {
+                    l1[j] += a[t + j] * d[t + j];
+                    l2[j] += b[t + j] * d[t + j];
+                }
+                t += LANES;
+            }
+            for c in n8..n {
+                l1[c - n8] += a[c] * d[c];
+                l2[c - n8] += b[c] * d[c];
+            }
+            (reduce_lanes(l1), reduce_lanes(l2))
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { dot2_avx2(a, b, d) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot2_avx2(a: &[f32], b: &[f32], d: &[f32]) -> (f32, f32) {
+    let n = d.len();
+    let n8 = n / LANES * LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let dp = d.as_ptr();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < n8 {
+        let dv = _mm256_loadu_ps(dp.add(i));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), dv));
+        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(bp.add(i)), dv));
+        i += LANES;
+    }
+    let mut l1 = [0f32; LANES];
+    let mut l2 = [0f32; LANES];
+    _mm256_storeu_ps(l1.as_mut_ptr(), acc1);
+    _mm256_storeu_ps(l2.as_mut_ptr(), acc2);
+    for c in n8..n {
+        l1[c - n8] += *ap.add(c) * *dp.add(c);
+        l2[c - n8] += *bp.add(c) * *dp.add(c);
+    }
+    (reduce_lanes(l1), reduce_lanes(l2))
+}
+
+// ---- Adam -------------------------------------------------------------------
+
+/// One Adam element update (bias-corrected moments, in place), shared by
+/// every variant and by the functional/in-place train steps so all produce
+/// the identical FP sequence. Returns the new parameter value.
+#[inline]
+pub fn adam_elem(pv: f32, m: &mut f32, v: &mut f32, g: f32, lr: f32, b1c: f32, b2c: f32) -> f32 {
+    *m = ADAM_B1 * *m + (1.0 - ADAM_B1) * g;
+    *v = ADAM_B2 * *v + (1.0 - ADAM_B2) * g * g;
+    let m_hat = *m / b1c;
+    let v_hat = *v / b2c;
+    pv - lr * m_hat / (v_hat.sqrt() + ADAM_EPS)
+}
+
+/// Lane-wide Adam: [`adam_elem`] applied across a parameter row. Every op
+/// in the vector variant (mul, add, div, sqrt) is correctly rounded, and
+/// the op order mirrors the element update exactly, so bits match.
+pub fn adam_row(
+    kern: Kern,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1c: f32,
+    b2c: f32,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), v.len());
+    match kern {
+        Kern::Scalar | Kern::Unrolled => {
+            for j in 0..p.len() {
+                p[j] = adam_elem(p[j], &mut m[j], &mut v[j], g[j], lr, b1c, b2c);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { adam_row_avx2(p, m, v, g, lr, b1c, b2c) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn adam_row_avx2(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1c: f32,
+    b2c: f32,
+) {
+    let n = p.len();
+    let n8 = n / LANES * LANES;
+    let b1 = _mm256_set1_ps(ADAM_B1);
+    let omb1 = _mm256_set1_ps(1.0 - ADAM_B1);
+    let b2 = _mm256_set1_ps(ADAM_B2);
+    let omb2 = _mm256_set1_ps(1.0 - ADAM_B2);
+    let eps = _mm256_set1_ps(ADAM_EPS);
+    let lrb = _mm256_set1_ps(lr);
+    let b1cb = _mm256_set1_ps(b1c);
+    let b2cb = _mm256_set1_ps(b2c);
+    let pp = p.as_mut_ptr();
+    let mp = m.as_mut_ptr();
+    let vp = v.as_mut_ptr();
+    let gp = g.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let gv = _mm256_loadu_ps(gp.add(i));
+        // m = b1*m + (1-b1)*g
+        let mv = _mm256_add_ps(
+            _mm256_mul_ps(b1, _mm256_loadu_ps(mp.add(i))),
+            _mm256_mul_ps(omb1, gv),
+        );
+        _mm256_storeu_ps(mp.add(i), mv);
+        // v = b2*v + ((1-b2)*g)*g
+        let vv = _mm256_add_ps(
+            _mm256_mul_ps(b2, _mm256_loadu_ps(vp.add(i))),
+            _mm256_mul_ps(_mm256_mul_ps(omb2, gv), gv),
+        );
+        _mm256_storeu_ps(vp.add(i), vv);
+        // p -= (lr * (m/b1c)) / (sqrt(v/b2c) + eps)
+        let m_hat = _mm256_div_ps(mv, b1cb);
+        let v_hat = _mm256_div_ps(vv, b2cb);
+        let den = _mm256_add_ps(_mm256_sqrt_ps(v_hat), eps);
+        let upd = _mm256_div_ps(_mm256_mul_ps(lrb, m_hat), den);
+        _mm256_storeu_ps(pp.add(i), _mm256_sub_ps(_mm256_loadu_ps(pp.add(i)), upd));
+        i += LANES;
+    }
+    while i < n {
+        let (pv, gv) = (*pp.add(i), *gp.add(i));
+        *pp.add(i) = adam_elem(pv, &mut *mp.add(i), &mut *vp.add(i), gv, lr, b1c, b2c);
+        i += 1;
+    }
+}
+
+// ---- tests ------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every variant available on this machine. Scalar is the reference the
+    /// others are asserted against.
+    fn variants() -> Vec<Kern> {
+        available_kerns()
+    }
+
+    /// Ragged lengths: empty, below one lane, exactly one lane, lane ± 1,
+    /// multiple lanes with and without remainder.
+    const SIZES: [usize; 10] = [0, 1, 3, 7, 8, 9, 15, 16, 33, 64];
+
+    /// Adversarial value stream: mixes exact zeros (skip paths), negative
+    /// zeros (selection exactness), negatives and magnitudes spread over a
+    /// few orders.
+    fn values(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match rng.below(8) {
+                0 => 0.0,
+                1 => -0.0,
+                _ => (rng.f32() - 0.5) * 4.0_f32.powi((i % 5) as i32 - 2),
+            })
+            .collect()
+    }
+
+    fn assert_bits(tag: &str, a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len(), "{tag}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        let kinds = [KernelKind::Auto, KernelKind::Scalar, KernelKind::Simd, KernelKind::Portable];
+        for kind in kinds {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("SIMD"), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::parse("avx512"), None);
+        assert_eq!(Kern::select(KernelKind::Scalar), Kern::Scalar);
+        assert_eq!(Kern::select(KernelKind::Portable), Kern::Unrolled);
+        // Auto and Simd agree on any given machine.
+        assert_eq!(Kern::select(KernelKind::Auto), Kern::select(KernelKind::Simd));
+    }
+
+    #[test]
+    fn axpy_and_acc_parity_on_ragged_shapes() {
+        let mut rng = Rng::new(101);
+        for &n in &SIZES {
+            let base = values(&mut rng, n);
+            let r = values(&mut rng, n);
+            for x in [0.0f32, -0.0, 0.75, -1.25] {
+                let mut want = base.clone();
+                axpy(Kern::Scalar, &mut want, x, &r);
+                for &k in &variants()[1..] {
+                    let mut got = base.clone();
+                    axpy(k, &mut got, x, &r);
+                    assert_bits(&format!("axpy n={n} x={x} {k:?}"), &want, &got);
+                }
+            }
+            let mut want = base.clone();
+            acc(Kern::Scalar, &mut want, &r);
+            for &k in &variants()[1..] {
+                let mut got = base.clone();
+                acc(k, &mut got, &r);
+                assert_bits(&format!("acc n={n} {k:?}"), &want, &got);
+            }
+        }
+    }
+
+    #[test]
+    fn relu_family_parity_on_ragged_shapes() {
+        let mut rng = Rng::new(202);
+        for &n in &SIZES {
+            let base = values(&mut rng, n);
+            let up = values(&mut rng, n);
+            for m in [0.0f32, 1.0, 0.5] {
+                let mut want = base.clone();
+                relu_mask(Kern::Scalar, &mut want, m);
+                for &k in &variants()[1..] {
+                    let mut got = base.clone();
+                    relu_mask(k, &mut got, m);
+                    assert_bits(&format!("relu_mask n={n} m={m} {k:?}"), &want, &got);
+                }
+            }
+            let mut want = base.clone();
+            relu_slice(Kern::Scalar, &mut want);
+            for &k in &variants()[1..] {
+                let mut got = base.clone();
+                relu_slice(k, &mut got);
+                assert_bits(&format!("relu_slice n={n} {k:?}"), &want, &got);
+            }
+            let mut want = vec![7.0f32; n];
+            let want_any = relu_gate(Kern::Scalar, &mut want, &base, &up);
+            for &k in &variants()[1..] {
+                let mut got = vec![7.0f32; n];
+                let got_any = relu_gate(k, &mut got, &base, &up);
+                assert_bits(&format!("relu_gate n={n} {k:?}"), &want, &got);
+                assert_eq!(want_any, got_any, "relu_gate any n={n} {k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_scatter_parity_including_ties() {
+        let mut rng = Rng::new(303);
+        for &n in &SIZES {
+            let s0 = values(&mut rng, n);
+            // Force exact ties at a few slots: strict > must keep the old
+            // value and winner in every variant.
+            let mut m = values(&mut rng, n);
+            for i in (0..n).step_by(3) {
+                m[i] = s0[i];
+            }
+            let mut want_s = s0.clone();
+            let mut want_w = vec![-1i32; n];
+            max_scatter_win(Kern::Scalar, &mut want_s, &mut want_w, &m, 11);
+            for &k in &variants()[1..] {
+                let mut got_s = s0.clone();
+                let mut got_w = vec![-1i32; n];
+                max_scatter_win(k, &mut got_s, &mut got_w, &m, 11);
+                assert_bits(&format!("max_scatter_win s n={n} {k:?}"), &want_s, &got_s);
+                assert_eq!(want_w, got_w, "max_scatter_win winners n={n} {k:?}");
+            }
+            let mut want_v = s0.clone();
+            max_scatter(Kern::Scalar, &mut want_v, &m);
+            for &k in &variants()[1..] {
+                let mut got_v = s0.clone();
+                max_scatter(k, &mut got_v, &m);
+                assert_bits(&format!("max_scatter n={n} {k:?}"), &want_v, &got_v);
+            }
+            // Value-only and winner-recording scatter agree on values.
+            assert_bits(&format!("scatter value vs win n={n}"), &want_v, &want_s);
+        }
+    }
+
+    #[test]
+    fn matvec_parity_on_ragged_shapes() {
+        let mut rng = Rng::new(404);
+        for &c in &SIZES {
+            for &k_dim in &[0usize, 1, 5, 9, 64] {
+                let base = values(&mut rng, c);
+                let a = values(&mut rng, k_dim);
+                let w = values(&mut rng, k_dim * c);
+                let mut want = base.clone();
+                matvec_acc(Kern::Scalar, &mut want, &a, &w);
+                for &kn in &variants()[1..] {
+                    let mut got = base.clone();
+                    matvec_acc(kn, &mut got, &a, &w);
+                    assert_bits(&format!("matvec c={c} k={k_dim} {kn:?}"), &want, &got);
+                }
+                // matvec must equal the axpy chain it documents.
+                let mut chain = base.clone();
+                for (i, &x) in a.iter().enumerate() {
+                    axpy(Kern::Scalar, &mut chain, x, &w[i * c..(i + 1) * c]);
+                }
+                assert_bits(&format!("matvec vs axpy chain c={c} k={k_dim}"), &chain, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_parity_on_ragged_shapes() {
+        let mut rng = Rng::new(505);
+        for &c in &SIZES[1..] {
+            for &k_dim in &[1usize, 7, 33] {
+                for mr in 1..=GEMM_MR {
+                    let rows: Vec<Vec<f32>> = (0..mr).map(|_| values(&mut rng, k_dim)).collect();
+                    let mut panel = vec![0.0f32; k_dim * mr];
+                    for (r, row) in rows.iter().enumerate() {
+                        for i in 0..k_dim {
+                            panel[i * mr + r] = row[i];
+                        }
+                    }
+                    let w = values(&mut rng, k_dim * c);
+                    let base = values(&mut rng, mr * c);
+                    let mut want = base.clone();
+                    gemm_panel(Kern::Scalar, &mut want, &panel, mr, &w, c);
+                    for &kn in &variants()[1..] {
+                        let mut got = base.clone();
+                        gemm_panel(kn, &mut got, &panel, mr, &w, c);
+                        assert_bits(&format!("gemm c={c} k={k_dim} mr={mr} {kn:?}"), &want, &got);
+                    }
+                    // Each GEMM row must equal a standalone matvec.
+                    let mut by_row = base.clone();
+                    for (r, row) in rows.iter().enumerate() {
+                        matvec_acc(Kern::Scalar, &mut by_row[r * c..(r + 1) * c], row, &w);
+                    }
+                    assert_bits(&format!("gemm vs matvec c={c} k={k_dim} mr={mr}"), &by_row, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_parity_on_ragged_shapes() {
+        let mut rng = Rng::new(606);
+        for n in 0..=70usize {
+            let a = values(&mut rng, n);
+            let b = values(&mut rng, n);
+            let d = values(&mut rng, n);
+            let want = dot(Kern::Scalar, &a, &d);
+            let (want1, want2) = dot2(Kern::Scalar, &a, &b, &d);
+            assert_eq!(want.to_bits(), want1.to_bits(), "dot vs dot2 first n={n}");
+            for &k in &variants()[1..] {
+                assert_eq!(want.to_bits(), dot(k, &a, &d).to_bits(), "dot n={n} {k:?}");
+                let (g1, g2) = dot2(k, &a, &b, &d);
+                assert_eq!(want1.to_bits(), g1.to_bits(), "dot2.0 n={n} {k:?}");
+                assert_eq!(want2.to_bits(), g2.to_bits(), "dot2.1 n={n} {k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn adam_row_matches_elem_loop_in_every_variant() {
+        let mut rng = Rng::new(707);
+        for &n in &SIZES {
+            let p0 = values(&mut rng, n);
+            let m0 = values(&mut rng, n);
+            let v0: Vec<f32> = values(&mut rng, n).iter().map(|x| x.abs()).collect();
+            let g = values(&mut rng, n);
+            let (lr, b1c, b2c) = (2e-3f32, 0.9f32, 0.99f32);
+            let mut want_p = p0.clone();
+            let mut want_m = m0.clone();
+            let mut want_v = v0.clone();
+            for j in 0..n {
+                want_p[j] =
+                    adam_elem(want_p[j], &mut want_m[j], &mut want_v[j], g[j], lr, b1c, b2c);
+            }
+            for &k in variants().iter() {
+                let mut gp = p0.clone();
+                let mut gm = m0.clone();
+                let mut gv = v0.clone();
+                adam_row(k, &mut gp, &mut gm, &mut gv, &g, lr, b1c, b2c);
+                assert_bits(&format!("adam p n={n} {k:?}"), &want_p, &gp);
+                assert_bits(&format!("adam m n={n} {k:?}"), &want_m, &gm);
+                assert_bits(&format!("adam v n={n} {k:?}"), &want_v, &gv);
+            }
+        }
+    }
+}

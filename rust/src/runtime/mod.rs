@@ -19,6 +19,7 @@
 //! [`engine`] picks the backend: PJRT when the feature is compiled in *and*
 //! an `artifacts/manifest.json` exists, native otherwise.
 
+pub mod kernels;
 mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -32,6 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::gnn::Bucket;
 
+pub use kernels::KernelKind;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use native::NativeEngine;
 #[cfg(feature = "pjrt")]
@@ -156,6 +158,16 @@ pub trait InferenceBackend: Send + Sync {
     fn supports_dynamic_batch(&self) -> bool {
         false
     }
+
+    /// The dispatched compute-kernel variant (`"scalar"`, `"avx2"`,
+    /// `"portable-unrolled"`), when the backend has an explicit kernel
+    /// layer. `None` for backends without one (e.g. PJRT, where XLA owns
+    /// code generation). Surfaced in the compile banner, `CompileReport`,
+    /// `ServeSummary` and the bench JSONs so perf numbers record which
+    /// code path produced them.
+    fn kernel_variant(&self) -> Option<&'static str> {
+        None
+    }
 }
 
 /// The engine type consumers hold: a shared trait object.
@@ -167,19 +179,35 @@ pub type Engine = dyn InferenceBackend;
 /// present, returns the PJRT engine over those artifacts; otherwise the
 /// pure-Rust native engine (which ignores `artifacts_dir`).
 pub fn engine(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Engine>> {
+    engine_with_kernel(artifacts_dir, KernelKind::from_env())
+}
+
+/// [`engine`] with an explicit kernel selection for the native backend.
+/// The PJRT backend (when it wins the dispatch) ignores `kind` — XLA owns
+/// its own code generation.
+pub fn engine_with_kernel(
+    artifacts_dir: impl AsRef<Path>,
+    kind: KernelKind,
+) -> Result<Arc<Engine>> {
     let dir = artifacts_dir.as_ref();
     #[cfg(feature = "pjrt")]
     if dir.join("manifest.json").exists() {
+        let _ = kind;
         return Ok(Arc::new(pjrt::PjrtEngine::new(dir)?));
     }
     #[cfg(not(feature = "pjrt"))]
     let _ = dir;
-    Ok(native_engine())
+    Ok(native_engine_with_kernel(kind))
 }
 
 /// The pure-Rust backend, unconditionally.
 pub fn native_engine() -> Arc<Engine> {
-    Arc::new(NativeEngine::new())
+    native_engine_with_kernel(KernelKind::from_env())
+}
+
+/// The pure-Rust backend with an explicit kernel selection.
+pub fn native_engine_with_kernel(kind: KernelKind) -> Arc<Engine> {
+    Arc::new(NativeEngine::with_kernel(kind))
 }
 
 #[cfg(test)]

@@ -69,6 +69,21 @@
 //! `workers = 1 ≡ N` exactly, for both kernels. One Adam update
 //! ([`adam_elem`], shared by the functional and in-place entry points)
 //! applies after the reduce.
+//!
+//! ## Explicit SIMD kernels and the canonical lane-order contract
+//!
+//! All inner arithmetic is delegated to [`super::kernels`]: explicit,
+//! runtime-dispatched vector primitives (AVX2 / portable-unrolled / scalar)
+//! selected once per engine by the `kernel` knob. Every variant returns
+//! identical bits on every shape because the *scalar reference itself* is
+//! written against the canonical lane-order accumulation contract:
+//! dot-style reductions accumulate into eight `c % 8` lane partials
+//! combined by one fixed reduction tree, matmul terms skip exact-zero
+//! activations in every variant, ReLU is compare+select (never `max`), and
+//! no path uses FMA contraction — see the [`super::kernels`] module docs.
+//! The tape kernels pin [`Kern::Scalar`]; the fused kernels take the
+//! engine's dispatched [`Kern`], so every tape-vs-fused parity suite in
+//! this module doubles as a scalar-vs-SIMD bit-identity test.
 
 use std::cell::RefCell;
 use std::ops::Range;
@@ -77,12 +92,12 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::gnn::schema::{
-    self, ABLATION_FLAGS, ADAM_B1, ADAM_B2, ADAM_EPS, ANNOT_HI, ANNOT_LO, EDGE_FEAT_DIM,
-    HEAD_HIDDEN, HIDDEN_DIM, MAX_STAGES, NODE_FEAT_DIM, NUM_LAYERS, OP_EMB_DIM, OP_TYPE_COUNT,
-    STAGE_EMB_DIM,
+    self, ABLATION_FLAGS, ADAM_B1, ADAM_B2, ANNOT_HI, ANNOT_LO, EDGE_FEAT_DIM, HEAD_HIDDEN,
+    HIDDEN_DIM, MAX_STAGES, NODE_FEAT_DIM, NUM_LAYERS, OP_EMB_DIM, OP_TYPE_COUNT, STAGE_EMB_DIM,
 };
 use crate::gnn::Bucket;
 
+use super::kernels::{self as kn, adam_elem, Kern, KernelKind, GEMM_MR};
 use super::tensor::{Dtype, Tensor};
 use super::{InferenceBackend, TensorSpec, TrainBatch, TrainOptions, TrainState};
 
@@ -110,6 +125,10 @@ const NUM_PARAMS: usize = P_HEAD_B3 + 1;
 /// of reusable training buffers; safe to share across threads.
 pub struct NativeEngine {
     specs: Vec<TensorSpec>,
+    /// The dispatched kernel variant every fused path on this engine runs
+    /// with. Resolved once at construction; all variants are bit-identical
+    /// (module docs), so this is purely a throughput knob.
+    kernel: Kern,
     /// Reusable training buffers — fused-kernel scratch slabs and shard
     /// gradient accumulators — pooled across train steps so the hot loop
     /// performs no per-step slab allocation.
@@ -123,12 +142,30 @@ struct TrainPool {
 }
 
 impl NativeEngine {
+    /// Default construction: `RDACOST_KERNEL` (for the CI fallback matrix)
+    /// or auto-dispatch.
     pub fn new() -> NativeEngine {
+        Self::with_kernel(KernelKind::from_env())
+    }
+
+    /// Build an engine with an explicit kernel selection (the `kernel`
+    /// config knob / `--kernel` CLI flag).
+    pub fn with_kernel(kind: KernelKind) -> NativeEngine {
         let specs = schema::param_specs()
             .into_iter()
             .map(|(name, shape)| TensorSpec { name, dtype: Dtype::F32, shape })
             .collect();
-        NativeEngine { specs, train_pool: Mutex::new(TrainPool::default()) }
+        NativeEngine {
+            specs,
+            kernel: Kern::select(kind),
+            train_pool: Mutex::new(TrainPool::default()),
+        }
+    }
+
+    /// Human-readable name of the dispatched kernel variant
+    /// (`scalar` / `portable-unrolled` / `avx2`).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     fn check_params<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
@@ -162,6 +199,10 @@ impl InferenceBackend for NativeEngine {
         "native-cpu".to_string()
     }
 
+    fn kernel_variant(&self) -> Option<&'static str> {
+        Some(self.kernel.name())
+    }
+
     fn param_specs(&self) -> &[TensorSpec] {
         &self.specs
     }
@@ -189,7 +230,7 @@ impl InferenceBackend for NativeEngine {
             // The annealer's K=1 hot path: tape-free kernel, thread-local
             // scratch, zero allocation per call.
             INFER_SCRATCH.with(|cell| {
-                preds[0] = forward_infer(&p, &g, flags, &mut cell.borrow_mut());
+                preds[0] = forward_infer(self.kernel, &p, &g, flags, &mut cell.borrow_mut());
             });
         } else if batch > 1 {
             let workers = std::thread::available_parallelism()
@@ -207,7 +248,7 @@ impl InferenceBackend for NativeEngine {
                         let mut scratch = InferScratch::new();
                         for (j, out) in slot.iter_mut().enumerate() {
                             let g = GraphView::slice(t8, bucket, wi * chunk + j)?;
-                            *out = forward_infer(p_ref, &g, flags, &mut scratch);
+                            *out = forward_infer(self.kernel, p_ref, &g, flags, &mut scratch);
                         }
                         Ok(())
                     }));
@@ -340,8 +381,10 @@ impl InferenceBackend for NativeEngine {
                 opts.fused,
             )?
         };
-        // Zero-churn Adam: the same element update as the functional path,
-        // applied directly into the owned state buffers — no tensor clones.
+        // Zero-churn Adam: the same element update as the functional path
+        // (adam_row is bit-identical to the adam_elem loop in every kernel
+        // variant), applied directly into the owned state buffers — no
+        // tensor clones.
         let new_step = state.step + 1.0;
         let b1c = 1.0 - ADAM_B1.powf(new_step);
         let b2c = 1.0 - ADAM_B2.powf(new_step);
@@ -350,9 +393,7 @@ impl InferenceBackend for NativeEngine {
             let pv = state.params[i].as_f32_mut()?;
             let mv = state.adam_m[i].as_f32_mut()?;
             let vv = state.adam_v[i].as_f32_mut()?;
-            for j in 0..pv.len() {
-                pv[j] = adam_elem(pv[j], &mut mv[j], &mut vv[j], gv[j], learning_rate, b1c, b2c);
-            }
+            kn::adam_row(self.kernel, pv, mv, vv, gv, learning_rate, b1c, b2c);
         }
         state.step = new_step;
         let loss = acc.loss;
@@ -476,18 +517,11 @@ struct Tape {
     pred: f32,
 }
 
-/// `out[c] += x @ w[row_off..]` for one input coordinate.
-#[inline]
-fn axpy_row(out: &mut [f32], x: f32, w: &[f32], row: usize) {
-    if x != 0.0 {
-        let r = &w[row * H..(row + 1) * H];
-        for c in 0..H {
-            out[c] += x * r[c];
-        }
-    }
-}
-
 fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tape {
+    // The tape is the readable reference: every inner loop runs the scalar
+    // kernel variant, which the module-level lane-order contract makes
+    // bit-identical to whatever variant the fused paths dispatch.
+    const SK: Kern = Kern::Scalar;
     let (use_node, use_edge, use_annot) = (flags[0], flags[1], flags[2]);
     let (n, e) = (g.n, g.e);
     let live_nodes: Vec<usize> = (0..n).filter(|&v| g.node_mask[v] != 0.0).collect();
@@ -514,27 +548,21 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
         }
         let out = &mut h0[v * H..(v + 1) * H];
         out.copy_from_slice(p[P_NODE_B]);
-        for i in 0..XV {
-            axpy_row(out, x[i], p[P_NODE_W], i);
-        }
-        let m = g.node_mask[v];
-        for c in 0..H {
-            out[c] = out[c].max(0.0) * m;
-        }
+        kn::matvec_acc(SK, out, x, p[P_NODE_W]);
+        kn::relu_mask(SK, out, g.node_mask[v]);
     }
 
     // Edge embedding: h_e = relu((edge_feat * use_edge) @ W + b) * mask.
     let mut h_e = vec![0.0f32; e * H];
     for &ei in &live_edges {
+        let mut ef = [0.0f32; EDGE_FEAT_DIM];
+        for (i, f) in ef.iter_mut().enumerate() {
+            *f = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
+        }
         let out = &mut h_e[ei * H..(ei + 1) * H];
         out.copy_from_slice(p[P_EDGE_B]);
-        for i in 0..EDGE_FEAT_DIM {
-            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
-        }
-        let m = g.edge_mask[ei];
-        for c in 0..H {
-            out[c] = out[c].max(0.0) * m;
-        }
+        kn::matvec_acc(SK, out, &ef, p[P_EDGE_W]);
+        kn::relu_mask(SK, out, g.edge_mask[ei]);
     }
 
     // Message-passing layers.
@@ -559,36 +587,28 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
             for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
                 let out = &mut msg[slot * H..(slot + 1) * H];
                 out.copy_from_slice(web);
-                for i in 0..H {
-                    axpy_row(out, h_e[ei * H + i], we, i);
-                }
-                for i in 0..H {
-                    axpy_row(out, h[nb * H + i], we, H + i);
-                }
-                for c in 0..H {
-                    out[c] = out[c].max(0.0) * em;
-                }
+                kn::matvec_acc(SK, out, &h_e[ei * H..(ei + 1) * H], &we[..H * H]);
+                kn::matvec_acc(SK, out, &h[nb * H..(nb + 1) * H], &we[H * H..]);
+                kn::relu_mask(SK, out, em);
             }
         }
 
-        // Elementwise max-scatter into the endpoints (zero baseline).
+        // Elementwise max-scatter into the endpoints (zero baseline). The
+        // split-row order (all H fwd channels, then all H bwd channels) is
+        // bit-identical to the channel-interleaved form: per (node, channel)
+        // slot the compare sequence is unchanged, self-loops included.
         let mut s = vec![0.0f32; n * H];
         let mut win = vec![-1i32; n * H];
         for &ei in &live_edges {
             let src = g.edge_src[ei].max(0) as usize % n;
             let dst = g.edge_dst[ei].max(0) as usize % n;
-            for c in 0..H {
-                let mf = msg[(2 * ei) * H + c];
-                if mf > s[dst * H + c] {
-                    s[dst * H + c] = mf;
-                    win[dst * H + c] = (2 * ei) as i32;
-                }
-                let mb = msg[(2 * ei + 1) * H + c];
-                if mb > s[src * H + c] {
-                    s[src * H + c] = mb;
-                    win[src * H + c] = (2 * ei + 1) as i32;
-                }
-            }
+            let (mf, mb) = msg[2 * ei * H..].split_at(H);
+            let sdst = &mut s[dst * H..(dst + 1) * H];
+            let wdst = &mut win[dst * H..(dst + 1) * H];
+            kn::max_scatter_win(SK, sdst, wdst, mf, (2 * ei) as i32);
+            let ssrc = &mut s[src * H..(src + 1) * H];
+            let wsrc = &mut win[src * H..(src + 1) * H];
+            kn::max_scatter_win(SK, ssrc, wsrc, &mb[..H], (2 * ei + 1) as i32);
         }
 
         // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
@@ -596,16 +616,9 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
         for &v in &live_nodes {
             let out = &mut hn[v * H..(v + 1) * H];
             out.copy_from_slice(wvb);
-            for i in 0..H {
-                axpy_row(out, h[v * H + i], wv, i);
-            }
-            for i in 0..H {
-                axpy_row(out, s[v * H + i], wv, H + i);
-            }
-            let m = g.node_mask[v];
-            for c in 0..H {
-                out[c] = out[c].max(0.0) * m;
-            }
+            kn::matvec_acc(SK, out, &h[v * H..(v + 1) * H], &wv[..H * H]);
+            kn::matvec_acc(SK, out, &s[v * H..(v + 1) * H], &wv[H * H..]);
+            kn::relu_mask(SK, out, g.node_mask[v]);
         }
 
         msgs.push(msg);
@@ -620,10 +633,7 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
     let mut hg = vec![0.0f32; H];
     let h_last = &hs[NUM_LAYERS];
     for &v in &live_nodes {
-        let m = g.node_mask[v];
-        for c in 0..H {
-            hg[c] += h_last[v * H + c] * m;
-        }
+        kn::axpy(SK, &mut hg, g.node_mask[v], &h_last[v * H..(v + 1) * H]);
     }
     for c in 0..H {
         hg[c] /= denom;
@@ -631,35 +641,12 @@ fn forward(p: &[&[f32]], g: &GraphView<'_>, flags: [f32; ABLATION_FLAGS]) -> Tap
 
     // Regressor head.
     let mut z1 = p[P_HEAD_B1].to_vec();
-    for i in 0..H {
-        let x = hg[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                z1[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        z1[c] = z1[c].max(0.0);
-    }
+    kn::matvec_acc(SK, &mut z1, &hg, p[P_HEAD_W1]);
+    kn::relu_slice(SK, &mut z1);
     let mut z2 = p[P_HEAD_B2].to_vec();
-    for i in 0..HH {
-        let x = z1[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                z2[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        z2[c] = z2[c].max(0.0);
-    }
-    let mut o = p[P_HEAD_B3][0];
-    for i in 0..HH {
-        o += z2[i] * p[P_HEAD_W3][i];
-    }
+    kn::matvec_acc(SK, &mut z2, &z1, p[P_HEAD_W2]);
+    kn::relu_slice(SK, &mut z2);
+    let o = p[P_HEAD_B3][0] + kn::dot(SK, &z2, p[P_HEAD_W3]);
     let pred = 1.0 / (1.0 + (-o).exp());
 
     Tape { live_nodes, live_edges, xv, h_e, hs, msgs, ss, winners, denom, hg, z1, z2, pred }
@@ -689,6 +676,12 @@ struct InferScratch {
     hg: Vec<f32>,
     z1: Vec<f32>,
     z2: Vec<f32>,
+    /// Live (unmasked) node ids, rebuilt per call; the GEMM row groups.
+    live: Vec<usize>,
+    /// `[K, mr]` column-major packed input panel for the GEMM microkernel.
+    panel: Vec<f32>,
+    /// `[mr, H]` GEMM output tile (bias-initialized, fully overwritten).
+    tile: Vec<f32>,
 }
 
 impl InferScratch {
@@ -704,12 +697,16 @@ impl InferScratch {
             hg: vec![0.0; H],
             z1: vec![0.0; HH],
             z2: vec![0.0; HH],
+            live: Vec::new(),
+            panel: vec![0.0; GEMM_MR * XV.max(2 * H)],
+            tile: vec![0.0; GEMM_MR * H],
         }
     }
 
     /// Size for an `(n, e)` bucket and zero every slab. Dead rows are never
     /// written afterwards, so the zero fill is what makes mask-skipping
-    /// exact.
+    /// exact. (`panel`/`tile` are fully overwritten before every read and
+    /// need no zeroing.)
     fn reset(&mut self, n: usize, e: usize) {
         self.h_e.resize(e * H, 0.0);
         self.h_e.fill(0.0);
@@ -718,6 +715,7 @@ impl InferScratch {
             buf.fill(0.0);
         }
         self.hg.fill(0.0);
+        self.live.clear();
     }
 }
 
@@ -727,11 +725,15 @@ thread_local! {
 }
 
 /// Tape-free forward pass: same arithmetic as [`forward`], in the same
-/// order, but fused and allocation-free. Bitwise parity with the tape
-/// kernel is a hard contract (see module docs and the
+/// per-element order, but fused, allocation-free, and dispatched to `kern`
+/// — which the canonical lane-order contract makes bit-identical to the
+/// tape's pinned scalar variant (see module docs and the
 /// `infer_matches_tape_forward` test); when editing one kernel, mirror the
-/// change — including operation *order* — in the other.
+/// change — including operation *order* — in the other. The node embedding
+/// and node update run through the register-tiled GEMM microkernel over
+/// packed [`GEMM_MR`]-row panels of live nodes.
 fn forward_infer(
+    kern: Kern,
     p: &[&[f32]],
     g: &GraphView<'_>,
     flags: [f32; ABLATION_FLAGS],
@@ -740,38 +742,40 @@ fn forward_infer(
     let (use_node, use_edge, use_annot) = (flags[0], flags[1], flags[2]);
     let (n, e) = (g.n, g.e);
     scratch.reset(n, e);
+    scratch.live.extend((0..n).filter(|&v| g.node_mask[v] != 0.0));
 
-    // Node embedding + projection, fused: the gated input vector x_v is
-    // never materialized — each coordinate feeds its axpy row directly, in
-    // the same i = 0..XV order as the tape kernel.
-    for v in 0..n {
-        let m = g.node_mask[v];
-        if m == 0.0 {
-            continue;
-        }
-        let out = &mut scratch.h[v * H..(v + 1) * H];
-        out.copy_from_slice(p[P_NODE_B]);
-        for d in 0..NODE_FEAT_DIM {
-            let mut f = g.node_feat[v * NODE_FEAT_DIM + d];
-            if (ANNOT_LO..ANNOT_HI).contains(&d) {
-                f *= use_annot;
+    // Node embedding + projection through the GEMM microkernel: pack up to
+    // GEMM_MR live nodes' gated inputs into one column-major panel, run a
+    // single register-tiled matmul against W, then ReLU+mask each output
+    // row. Per (row, column) the add sequence matches the tape's matvec
+    // exactly — the GEMM just keeps more of it in registers.
+    for chunk in scratch.live.chunks(GEMM_MR) {
+        let mr = chunk.len();
+        for (r, &v) in chunk.iter().enumerate() {
+            for d in 0..NODE_FEAT_DIM {
+                let mut f = g.node_feat[v * NODE_FEAT_DIM + d];
+                if (ANNOT_LO..ANNOT_HI).contains(&d) {
+                    f *= use_annot;
+                }
+                scratch.panel[d * mr + r] = f;
             }
-            axpy_row(out, f, p[P_NODE_W], d);
+            let (t, st) = (g.op_type(v), g.stage(v));
+            for d in 0..OP_EMB_DIM {
+                scratch.panel[(NODE_FEAT_DIM + d) * mr + r] =
+                    p[P_OP_EMB][t * OP_EMB_DIM + d] * use_node;
+            }
+            for d in 0..STAGE_EMB_DIM {
+                scratch.panel[(NODE_FEAT_DIM + OP_EMB_DIM + d) * mr + r] =
+                    p[P_STAGE_EMB][st * STAGE_EMB_DIM + d] * use_node;
+            }
+            scratch.tile[r * H..(r + 1) * H].copy_from_slice(p[P_NODE_B]);
         }
-        let (t, s) = (g.op_type(v), g.stage(v));
-        for d in 0..OP_EMB_DIM {
-            axpy_row(out, p[P_OP_EMB][t * OP_EMB_DIM + d] * use_node, p[P_NODE_W], NODE_FEAT_DIM + d);
-        }
-        for d in 0..STAGE_EMB_DIM {
-            axpy_row(
-                out,
-                p[P_STAGE_EMB][s * STAGE_EMB_DIM + d] * use_node,
-                p[P_NODE_W],
-                NODE_FEAT_DIM + OP_EMB_DIM + d,
-            );
-        }
-        for c in 0..H {
-            out[c] = out[c].max(0.0) * m;
+        let pn = &scratch.panel[..XV * mr];
+        kn::gemm_panel(kern, &mut scratch.tile[..mr * H], pn, mr, p[P_NODE_W], H);
+        for (r, &v) in chunk.iter().enumerate() {
+            let out = &mut scratch.h[v * H..(v + 1) * H];
+            out.copy_from_slice(&scratch.tile[r * H..(r + 1) * H]);
+            kn::relu_mask(kern, out, g.node_mask[v]);
         }
     }
 
@@ -781,14 +785,14 @@ fn forward_infer(
         if m == 0.0 {
             continue;
         }
+        let mut ef = [0.0f32; EDGE_FEAT_DIM];
+        for (i, f) in ef.iter_mut().enumerate() {
+            *f = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
+        }
         let out = &mut scratch.h_e[ei * H..(ei + 1) * H];
         out.copy_from_slice(p[P_EDGE_B]);
-        for i in 0..EDGE_FEAT_DIM {
-            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
-        }
-        for c in 0..H {
-            out[c] = out[c].max(0.0) * m;
-        }
+        kn::matvec_acc(kern, out, &ef, p[P_EDGE_W]);
+        kn::relu_mask(kern, out, m);
     }
 
     // Message-passing layers: messages are scattered as they are computed.
@@ -812,49 +816,37 @@ fn forward_infer(
             // directions of one edge: compute it once, copy per direction.
             // The per-element add sequence matches the tape kernel exactly.
             scratch.base.copy_from_slice(web);
-            for i in 0..H {
-                axpy_row(&mut scratch.base, scratch.h_e[ei * H + i], we, i);
-            }
+            let he = &scratch.h_e[ei * H..(ei + 1) * H];
+            kn::matvec_acc(kern, &mut scratch.base, he, &we[..H * H]);
             scratch.m_fwd.copy_from_slice(&scratch.base);
-            for i in 0..H {
-                axpy_row(&mut scratch.m_fwd, scratch.h[src * H + i], we, H + i);
-            }
+            let hsrc = &scratch.h[src * H..(src + 1) * H];
+            kn::matvec_acc(kern, &mut scratch.m_fwd, hsrc, &we[H * H..]);
+            kn::relu_mask(kern, &mut scratch.m_fwd, em);
+            kn::max_scatter(kern, &mut scratch.s[dst * H..(dst + 1) * H], &scratch.m_fwd);
             scratch.m_bwd.copy_from_slice(&scratch.base);
-            for i in 0..H {
-                axpy_row(&mut scratch.m_bwd, scratch.h[dst * H + i], we, H + i);
-            }
-            let s_dst = &mut scratch.s[dst * H..(dst + 1) * H];
-            for c in 0..H {
-                let mf = scratch.m_fwd[c].max(0.0) * em;
-                if mf > s_dst[c] {
-                    s_dst[c] = mf;
-                }
-            }
-            let s_src = &mut scratch.s[src * H..(src + 1) * H];
-            for c in 0..H {
-                let mb = scratch.m_bwd[c].max(0.0) * em;
-                if mb > s_src[c] {
-                    s_src[c] = mb;
-                }
-            }
+            let hdst = &scratch.h[dst * H..(dst + 1) * H];
+            kn::matvec_acc(kern, &mut scratch.m_bwd, hdst, &we[H * H..]);
+            kn::relu_mask(kern, &mut scratch.m_bwd, em);
+            kn::max_scatter(kern, &mut scratch.s[src * H..(src + 1) * H], &scratch.m_bwd);
         }
 
-        // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
-        for v in 0..n {
-            let m = g.node_mask[v];
-            if m == 0.0 {
-                continue;
+        // Node update: h' = relu(cat(h, s) @ Wv + b) * mask, again through
+        // the GEMM microkernel over packed cat(h, s) panels (K = 2H).
+        for chunk in scratch.live.chunks(GEMM_MR) {
+            let mr = chunk.len();
+            for (r, &v) in chunk.iter().enumerate() {
+                for i in 0..H {
+                    scratch.panel[i * mr + r] = scratch.h[v * H + i];
+                    scratch.panel[(H + i) * mr + r] = scratch.s[v * H + i];
+                }
+                scratch.tile[r * H..(r + 1) * H].copy_from_slice(wvb);
             }
-            let out = &mut scratch.hn[v * H..(v + 1) * H];
-            out.copy_from_slice(wvb);
-            for i in 0..H {
-                axpy_row(out, scratch.h[v * H + i], wv, i);
-            }
-            for i in 0..H {
-                axpy_row(out, scratch.s[v * H + i], wv, H + i);
-            }
-            for c in 0..H {
-                out[c] = out[c].max(0.0) * m;
+            let pn = &scratch.panel[..2 * H * mr];
+            kn::gemm_panel(kern, &mut scratch.tile[..mr * H], pn, mr, wv, H);
+            for (r, &v) in chunk.iter().enumerate() {
+                let out = &mut scratch.hn[v * H..(v + 1) * H];
+                out.copy_from_slice(&scratch.tile[r * H..(r + 1) * H]);
+                kn::relu_mask(kern, out, g.node_mask[v]);
             }
         }
         std::mem::swap(&mut scratch.h, &mut scratch.hn);
@@ -862,21 +854,13 @@ fn forward_infer(
 
     // Masked mean pool.
     let mut mask_sum = 0.0f32;
-    for v in 0..n {
-        if g.node_mask[v] != 0.0 {
-            mask_sum += g.node_mask[v];
-        }
+    for &v in &scratch.live {
+        mask_sum += g.node_mask[v];
     }
     let denom = mask_sum.max(1.0);
-    for v in 0..n {
-        let m = g.node_mask[v];
-        if m == 0.0 {
-            continue;
-        }
+    for &v in &scratch.live {
         let row = &scratch.h[v * H..(v + 1) * H];
-        for c in 0..H {
-            scratch.hg[c] += row[c] * m;
-        }
+        kn::axpy(kern, &mut scratch.hg, g.node_mask[v], row);
     }
     for c in 0..H {
         scratch.hg[c] /= denom;
@@ -884,35 +868,12 @@ fn forward_infer(
 
     // Regressor head.
     scratch.z1.copy_from_slice(p[P_HEAD_B1]);
-    for i in 0..H {
-        let x = scratch.hg[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                scratch.z1[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        scratch.z1[c] = scratch.z1[c].max(0.0);
-    }
+    kn::matvec_acc(kern, &mut scratch.z1, &scratch.hg, p[P_HEAD_W1]);
+    kn::relu_slice(kern, &mut scratch.z1);
     scratch.z2.copy_from_slice(p[P_HEAD_B2]);
-    for i in 0..HH {
-        let x = scratch.z1[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                scratch.z2[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        scratch.z2[c] = scratch.z2[c].max(0.0);
-    }
-    let mut o = p[P_HEAD_B3][0];
-    for i in 0..HH {
-        o += scratch.z2[i] * p[P_HEAD_W3][i];
-    }
+    kn::matvec_acc(kern, &mut scratch.z2, &scratch.z1, p[P_HEAD_W2]);
+    kn::relu_slice(kern, &mut scratch.z2);
+    let o = p[P_HEAD_B3][0] + kn::dot(kern, &scratch.z2, p[P_HEAD_W3]);
     1.0 / (1.0 + (-o).exp())
 }
 
@@ -927,6 +888,8 @@ fn backward(
     dpred: f32,
     grads: &mut [Vec<f32>],
 ) {
+    // Like [`forward`], the tape backward pins the scalar kernel variant.
+    const SK: Kern = Kern::Scalar;
     let (use_node, use_edge, _) = (flags[0], flags[1], flags[2]);
     let n = g.n;
     let e = g.e;
@@ -992,48 +955,21 @@ fn backward(
         let mut ds = vec![0.0f32; n * H];
         let mut da = vec![0.0f32; H];
         for &v in &tape.live_nodes {
-            let mut any = false;
-            for c in 0..H {
-                // h_out = relu(a) * mask, so h_out > 0 gates both.
-                da[c] = if h_out[v * H + c] > 0.0 { dh[v * H + c] } else { 0.0 };
-                any |= da[c] != 0.0;
-            }
-            if !any {
+            // h_out = relu(a) * mask, so h_out > 0 gates both.
+            let h_row = &h_out[v * H..(v + 1) * H];
+            if !kn::relu_gate(SK, &mut da, h_row, &dh[v * H..(v + 1) * H]) {
                 continue;
             }
-            {
-                let gb = &mut grads[P_LAYER0 + 4 * k + 3];
-                for c in 0..H {
-                    gb[c] += da[c];
-                }
-            }
+            kn::acc(SK, &mut grads[P_LAYER0 + 4 * k + 3], &da);
             for i in 0..H {
-                let x1 = h_in[v * H + i];
-                if x1 != 0.0 {
-                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
-                    let row = &mut gw[i * H..(i + 1) * H];
-                    for c in 0..H {
-                        row[c] += x1 * da[c];
-                    }
-                }
-                let x2 = s[v * H + i];
-                if x2 != 0.0 {
-                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
-                    let row = &mut gw[(H + i) * H..(H + i + 1) * H];
-                    for c in 0..H {
-                        row[c] += x2 * da[c];
-                    }
-                }
+                let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                kn::axpy(SK, &mut gw[i * H..(i + 1) * H], h_in[v * H + i], &da);
+                kn::axpy(SK, &mut gw[(H + i) * H..(H + i + 1) * H], s[v * H + i], &da);
             }
             for i in 0..H {
                 let r1 = &wv[i * H..(i + 1) * H];
                 let r2 = &wv[(H + i) * H..(H + i + 1) * H];
-                let mut acc1 = 0.0f32;
-                let mut acc2 = 0.0f32;
-                for c in 0..H {
-                    acc1 += r1[c] * da[c];
-                    acc2 += r2[c] * da[c];
-                }
+                let (acc1, acc2) = kn::dot2(SK, r1, r2, &da);
                 dh_in[v * H + i] += acc1;
                 ds[v * H + i] = acc2;
             }
@@ -1058,47 +994,20 @@ fn backward(
             for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
                 let drow = &dmsg[slot * H..(slot + 1) * H];
                 let mrow = &msg[slot * H..(slot + 1) * H];
-                let mut any = false;
-                for c in 0..H {
-                    da[c] = if mrow[c] > 0.0 { drow[c] } else { 0.0 };
-                    any |= da[c] != 0.0;
-                }
-                if !any {
+                if !kn::relu_gate(SK, &mut da, mrow, drow) {
                     continue;
                 }
-                {
-                    let gb = &mut grads[P_LAYER0 + 4 * k + 1];
-                    for c in 0..H {
-                        gb[c] += da[c];
-                    }
-                }
+                kn::acc(SK, &mut grads[P_LAYER0 + 4 * k + 1], &da);
                 for i in 0..H {
-                    let x1 = tape.h_e[ei * H + i];
-                    if x1 != 0.0 {
-                        let gw = &mut grads[P_LAYER0 + 4 * k];
-                        let row = &mut gw[i * H..(i + 1) * H];
-                        for c in 0..H {
-                            row[c] += x1 * da[c];
-                        }
-                    }
+                    let gw = &mut grads[P_LAYER0 + 4 * k];
+                    kn::axpy(SK, &mut gw[i * H..(i + 1) * H], tape.h_e[ei * H + i], &da);
                     let x2 = h_in[nb * H + i];
-                    if x2 != 0.0 {
-                        let gw = &mut grads[P_LAYER0 + 4 * k];
-                        let row = &mut gw[(H + i) * H..(H + i + 1) * H];
-                        for c in 0..H {
-                            row[c] += x2 * da[c];
-                        }
-                    }
+                    kn::axpy(SK, &mut gw[(H + i) * H..(H + i + 1) * H], x2, &da);
                 }
                 for i in 0..H {
                     let r1 = &we[i * H..(i + 1) * H];
                     let r2 = &we[(H + i) * H..(H + i + 1) * H];
-                    let mut acc1 = 0.0f32;
-                    let mut acc2 = 0.0f32;
-                    for c in 0..H {
-                        acc1 += r1[c] * da[c];
-                        acc2 += r2[c] * da[c];
-                    }
+                    let (acc1, acc2) = kn::dot2(SK, r1, r2, &da);
                     dhe[ei * H + i] += acc1;
                     dh_in[nb * H + i] += acc2;
                 }
@@ -1112,48 +1021,24 @@ fn backward(
     let mut da = vec![0.0f32; H];
     for &v in &tape.live_nodes {
         let h0 = &tape.hs[0][v * H..(v + 1) * H];
-        let mut any = false;
-        for c in 0..H {
-            da[c] = if h0[c] > 0.0 { dh[v * H + c] } else { 0.0 };
-            any |= da[c] != 0.0;
-        }
-        if !any {
+        if !kn::relu_gate(SK, &mut da, h0, &dh[v * H..(v + 1) * H]) {
             continue;
         }
-        {
-            let gb = &mut grads[P_NODE_B];
-            for c in 0..H {
-                gb[c] += da[c];
-            }
-        }
+        kn::acc(SK, &mut grads[P_NODE_B], &da);
         for i in 0..XV {
-            let x = tape.xv[v * XV + i];
-            if x != 0.0 {
-                let gw = &mut grads[P_NODE_W];
-                let row = &mut gw[i * H..(i + 1) * H];
-                for c in 0..H {
-                    row[c] += x * da[c];
-                }
-            }
+            let gw = &mut grads[P_NODE_W];
+            kn::axpy(SK, &mut gw[i * H..(i + 1) * H], tape.xv[v * XV + i], &da);
         }
         if use_node != 0.0 {
             let (t, st) = (g.op_type(v), g.stage(v));
             for d in 0..OP_EMB_DIM {
                 let i = NODE_FEAT_DIM + d;
-                let r = &p[P_NODE_W][i * H..(i + 1) * H];
-                let mut acc = 0.0f32;
-                for c in 0..H {
-                    acc += r[c] * da[c];
-                }
+                let acc = kn::dot(SK, &p[P_NODE_W][i * H..(i + 1) * H], &da);
                 grads[P_OP_EMB][t * OP_EMB_DIM + d] += acc * use_node;
             }
             for d in 0..STAGE_EMB_DIM {
                 let i = NODE_FEAT_DIM + OP_EMB_DIM + d;
-                let r = &p[P_NODE_W][i * H..(i + 1) * H];
-                let mut acc = 0.0f32;
-                for c in 0..H {
-                    acc += r[c] * da[c];
-                }
+                let acc = kn::dot(SK, &p[P_NODE_W][i * H..(i + 1) * H], &da);
                 grads[P_STAGE_EMB][st * STAGE_EMB_DIM + d] += acc * use_node;
             }
         }
@@ -1162,29 +1047,14 @@ fn backward(
     // Edge embedding backward: h_e = relu(ef @ W + b) * em.
     for &ei in &tape.live_edges {
         let he = &tape.h_e[ei * H..(ei + 1) * H];
-        let mut any = false;
-        for c in 0..H {
-            da[c] = if he[c] > 0.0 { dhe[ei * H + c] } else { 0.0 };
-            any |= da[c] != 0.0;
-        }
-        if !any {
+        if !kn::relu_gate(SK, &mut da, he, &dhe[ei * H..(ei + 1) * H]) {
             continue;
         }
-        {
-            let gb = &mut grads[P_EDGE_B];
-            for c in 0..H {
-                gb[c] += da[c];
-            }
-        }
+        kn::acc(SK, &mut grads[P_EDGE_B], &da);
         for i in 0..EDGE_FEAT_DIM {
             let x = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
-            if x != 0.0 {
-                let gw = &mut grads[P_EDGE_W];
-                let row = &mut gw[i * H..(i + 1) * H];
-                for c in 0..H {
-                    row[c] += x * da[c];
-                }
-            }
+            let gw = &mut grads[P_EDGE_W];
+            kn::axpy(SK, &mut gw[i * H..(i + 1) * H], x, &da);
         }
     }
 }
@@ -1300,12 +1170,14 @@ impl TrainScratch {
 /// Fused training forward: identical arithmetic and op order to [`forward`],
 /// recording into a reusable [`TrainScratch`] instead of a fresh [`Tape`],
 /// with the per-edge directional partial shared like [`forward_infer`] and
-/// each message max-scattered the moment its row is complete. The scatter
-/// runs in the tape kernel's exact compare order (edges ascending, fwd then
-/// bwd per channel), so the winner indices — not just the max values — match
-/// bit-for-bit. Parity with the tape pair is pinned by the
-/// `backward_matches_tape` test.
+/// each message max-scattered the moment its row is complete. Dispatched to
+/// `kern` — bit-identical to the tape's pinned scalar variant by the
+/// lane-order contract — and per s-slot the scatter compare sequence is
+/// edge-ascending exactly like the tape kernel, so the winner indices — not
+/// just the max values — match bit-for-bit. Parity with the tape pair is
+/// pinned by the `backward_matches_tape` test.
 fn forward_train(
+    kern: Kern,
     p: &[&[f32]],
     g: &GraphView<'_>,
     flags: [f32; ABLATION_FLAGS],
@@ -1345,27 +1217,21 @@ fn forward_train(
             }
             let out = &mut h0[v * H..(v + 1) * H];
             out.copy_from_slice(p[P_NODE_B]);
-            for i in 0..XV {
-                axpy_row(out, x[i], p[P_NODE_W], i);
-            }
-            let m = g.node_mask[v];
-            for c in 0..H {
-                out[c] = out[c].max(0.0) * m;
-            }
+            kn::matvec_acc(kern, out, x, p[P_NODE_W]);
+            kn::relu_mask(kern, out, g.node_mask[v]);
         }
     }
 
     // Edge embedding: h_e = relu((edge_feat * use_edge) @ W + b) * mask.
     for &ei in live_edges.iter() {
+        let mut ef = [0.0f32; EDGE_FEAT_DIM];
+        for (i, f) in ef.iter_mut().enumerate() {
+            *f = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
+        }
         let out = &mut h_e[ei * H..(ei + 1) * H];
         out.copy_from_slice(p[P_EDGE_B]);
-        for i in 0..EDGE_FEAT_DIM {
-            axpy_row(out, g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge, p[P_EDGE_W], i);
-        }
-        let m = g.edge_mask[ei];
-        for c in 0..H {
-            out[c] = out[c].max(0.0) * m;
-        }
+        kn::matvec_acc(kern, out, &ef, p[P_EDGE_W]);
+        kn::relu_mask(kern, out, g.edge_mask[ei]);
     }
 
     // Message-passing layers.
@@ -1389,50 +1255,33 @@ fn forward_train(
             // compute it once, copy per direction. The per-element add
             // sequence matches the tape kernel exactly.
             base.copy_from_slice(web);
-            for i in 0..H {
-                axpy_row(base, h_e[ei * H + i], we, i);
-            }
+            kn::matvec_acc(kern, base, &h_e[ei * H..(ei + 1) * H], &we[..H * H]);
             for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
                 let out = &mut msg[slot * H..(slot + 1) * H];
                 out.copy_from_slice(base);
-                for i in 0..H {
-                    axpy_row(out, h[nb * H + i], we, H + i);
-                }
-                for c in 0..H {
-                    out[c] = out[c].max(0.0) * em;
-                }
+                kn::matvec_acc(kern, out, &h[nb * H..(nb + 1) * H], &we[H * H..]);
+                kn::relu_mask(kern, out, em);
             }
             // Scatter both directions now; per s-slot the compare sequence
             // is edge-ascending either way, identical to the tape kernel's
-            // separate scatter loop.
-            for c in 0..H {
-                let mf = msg[(2 * ei) * H + c];
-                if mf > s[dst * H + c] {
-                    s[dst * H + c] = mf;
-                    win[dst * H + c] = (2 * ei) as i32;
-                }
-                let mb = msg[(2 * ei + 1) * H + c];
-                if mb > s[src * H + c] {
-                    s[src * H + c] = mb;
-                    win[src * H + c] = (2 * ei + 1) as i32;
-                }
-            }
+            // separate scatter loop (split rows, fwd then bwd — self-loops
+            // included, the per-slot compare order is unchanged).
+            let (mf, mb) = msg[2 * ei * H..].split_at(H);
+            let sdst = &mut s[dst * H..(dst + 1) * H];
+            let wdst = &mut win[dst * H..(dst + 1) * H];
+            kn::max_scatter_win(kern, sdst, wdst, mf, (2 * ei) as i32);
+            let ssrc = &mut s[src * H..(src + 1) * H];
+            let wsrc = &mut win[src * H..(src + 1) * H];
+            kn::max_scatter_win(kern, ssrc, wsrc, &mb[..H], (2 * ei + 1) as i32);
         }
 
         // Node update: h' = relu(cat(h, s) @ Wv + b) * mask.
         for &v in live_nodes.iter() {
             let out = &mut hn[v * H..(v + 1) * H];
             out.copy_from_slice(wvb);
-            for i in 0..H {
-                axpy_row(out, h[v * H + i], wv, i);
-            }
-            for i in 0..H {
-                axpy_row(out, s[v * H + i], wv, H + i);
-            }
-            let m = g.node_mask[v];
-            for c in 0..H {
-                out[c] = out[c].max(0.0) * m;
-            }
+            kn::matvec_acc(kern, out, &h[v * H..(v + 1) * H], &wv[..H * H]);
+            kn::matvec_acc(kern, out, &s[v * H..(v + 1) * H], &wv[H * H..]);
+            kn::relu_mask(kern, out, g.node_mask[v]);
         }
     }
 
@@ -1441,10 +1290,7 @@ fn forward_train(
     *denom = mask_sum.max(1.0);
     let h_last = &hs[NUM_LAYERS];
     for &v in live_nodes.iter() {
-        let m = g.node_mask[v];
-        for c in 0..H {
-            hg[c] += h_last[v * H + c] * m;
-        }
+        kn::axpy(kern, hg, g.node_mask[v], &h_last[v * H..(v + 1) * H]);
     }
     for c in 0..H {
         hg[c] /= *denom;
@@ -1452,35 +1298,12 @@ fn forward_train(
 
     // Regressor head.
     z1.copy_from_slice(p[P_HEAD_B1]);
-    for i in 0..H {
-        let x = hg[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W1][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                z1[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        z1[c] = z1[c].max(0.0);
-    }
+    kn::matvec_acc(kern, z1, hg, p[P_HEAD_W1]);
+    kn::relu_slice(kern, z1);
     z2.copy_from_slice(p[P_HEAD_B2]);
-    for i in 0..HH {
-        let x = z1[i];
-        if x != 0.0 {
-            let r = &p[P_HEAD_W2][i * HH..(i + 1) * HH];
-            for c in 0..HH {
-                z2[c] += x * r[c];
-            }
-        }
-    }
-    for c in 0..HH {
-        z2[c] = z2[c].max(0.0);
-    }
-    let mut o = p[P_HEAD_B3][0];
-    for i in 0..HH {
-        o += z2[i] * p[P_HEAD_W3][i];
-    }
+    kn::matvec_acc(kern, z2, z1, p[P_HEAD_W2]);
+    kn::relu_slice(kern, z2);
+    let o = p[P_HEAD_B3][0] + kn::dot(kern, z2, p[P_HEAD_W3]);
     *pred = 1.0 / (1.0 + (-o).exp());
 }
 
@@ -1492,6 +1315,7 @@ fn forward_train(
 /// `dmsg`; `dz2` and `da` are fully assigned before every read), so slab
 /// reuse can never leak state between samples or layers.
 fn backward_fused(
+    kern: Kern,
     p: &[&[f32]],
     g: &GraphView<'_>,
     flags: [f32; ABLATION_FLAGS],
@@ -1586,48 +1410,21 @@ fn backward_fused(
         dh_in.fill(0.0);
         ds.fill(0.0);
         for &v in live_nodes.iter() {
-            let mut any = false;
-            for c in 0..H {
-                // h_out = relu(a) * mask, so h_out > 0 gates both.
-                da[c] = if h_out[v * H + c] > 0.0 { dh[v * H + c] } else { 0.0 };
-                any |= da[c] != 0.0;
-            }
-            if !any {
+            // h_out = relu(a) * mask, so h_out > 0 gates both.
+            let h_row = &h_out[v * H..(v + 1) * H];
+            if !kn::relu_gate(kern, da, h_row, &dh[v * H..(v + 1) * H]) {
                 continue;
             }
-            {
-                let gb = &mut grads[P_LAYER0 + 4 * k + 3];
-                for c in 0..H {
-                    gb[c] += da[c];
-                }
-            }
+            kn::acc(kern, &mut grads[P_LAYER0 + 4 * k + 3], da);
             for i in 0..H {
-                let x1 = h_in[v * H + i];
-                if x1 != 0.0 {
-                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
-                    let row = &mut gw[i * H..(i + 1) * H];
-                    for c in 0..H {
-                        row[c] += x1 * da[c];
-                    }
-                }
-                let x2 = s[v * H + i];
-                if x2 != 0.0 {
-                    let gw = &mut grads[P_LAYER0 + 4 * k + 2];
-                    let row = &mut gw[(H + i) * H..(H + i + 1) * H];
-                    for c in 0..H {
-                        row[c] += x2 * da[c];
-                    }
-                }
+                let gw = &mut grads[P_LAYER0 + 4 * k + 2];
+                kn::axpy(kern, &mut gw[i * H..(i + 1) * H], h_in[v * H + i], da);
+                kn::axpy(kern, &mut gw[(H + i) * H..(H + i + 1) * H], s[v * H + i], da);
             }
             for i in 0..H {
                 let r1 = &wv[i * H..(i + 1) * H];
                 let r2 = &wv[(H + i) * H..(H + i + 1) * H];
-                let mut acc1 = 0.0f32;
-                let mut acc2 = 0.0f32;
-                for c in 0..H {
-                    acc1 += r1[c] * da[c];
-                    acc2 += r2[c] * da[c];
-                }
+                let (acc1, acc2) = kn::dot2(kern, r1, r2, da);
                 dh_in[v * H + i] += acc1;
                 ds[v * H + i] = acc2;
             }
@@ -1652,47 +1449,20 @@ fn backward_fused(
             for (slot, nb) in [(2 * ei, src), (2 * ei + 1, dst)] {
                 let drow = &dmsg[slot * H..(slot + 1) * H];
                 let mrow = &msg[slot * H..(slot + 1) * H];
-                let mut any = false;
-                for c in 0..H {
-                    da[c] = if mrow[c] > 0.0 { drow[c] } else { 0.0 };
-                    any |= da[c] != 0.0;
-                }
-                if !any {
+                if !kn::relu_gate(kern, da, mrow, drow) {
                     continue;
                 }
-                {
-                    let gb = &mut grads[P_LAYER0 + 4 * k + 1];
-                    for c in 0..H {
-                        gb[c] += da[c];
-                    }
-                }
+                kn::acc(kern, &mut grads[P_LAYER0 + 4 * k + 1], da);
                 for i in 0..H {
-                    let x1 = h_e[ei * H + i];
-                    if x1 != 0.0 {
-                        let gw = &mut grads[P_LAYER0 + 4 * k];
-                        let row = &mut gw[i * H..(i + 1) * H];
-                        for c in 0..H {
-                            row[c] += x1 * da[c];
-                        }
-                    }
+                    let gw = &mut grads[P_LAYER0 + 4 * k];
+                    kn::axpy(kern, &mut gw[i * H..(i + 1) * H], h_e[ei * H + i], da);
                     let x2 = h_in[nb * H + i];
-                    if x2 != 0.0 {
-                        let gw = &mut grads[P_LAYER0 + 4 * k];
-                        let row = &mut gw[(H + i) * H..(H + i + 1) * H];
-                        for c in 0..H {
-                            row[c] += x2 * da[c];
-                        }
-                    }
+                    kn::axpy(kern, &mut gw[(H + i) * H..(H + i + 1) * H], x2, da);
                 }
                 for i in 0..H {
                     let r1 = &we[i * H..(i + 1) * H];
                     let r2 = &we[(H + i) * H..(H + i + 1) * H];
-                    let mut acc1 = 0.0f32;
-                    let mut acc2 = 0.0f32;
-                    for c in 0..H {
-                        acc1 += r1[c] * da[c];
-                        acc2 += r2[c] * da[c];
-                    }
+                    let (acc1, acc2) = kn::dot2(kern, r1, r2, da);
                     dhe[ei * H + i] += acc1;
                     dh_in[nb * H + i] += acc2;
                 }
@@ -1705,48 +1475,24 @@ fn backward_fused(
     // Node embedding backward: h0 = relu(x_v @ W + b) * mask.
     for &v in live_nodes.iter() {
         let h0 = &hs[0][v * H..(v + 1) * H];
-        let mut any = false;
-        for c in 0..H {
-            da[c] = if h0[c] > 0.0 { dh[v * H + c] } else { 0.0 };
-            any |= da[c] != 0.0;
-        }
-        if !any {
+        if !kn::relu_gate(kern, da, h0, &dh[v * H..(v + 1) * H]) {
             continue;
         }
-        {
-            let gb = &mut grads[P_NODE_B];
-            for c in 0..H {
-                gb[c] += da[c];
-            }
-        }
+        kn::acc(kern, &mut grads[P_NODE_B], da);
         for i in 0..XV {
-            let x = xv[v * XV + i];
-            if x != 0.0 {
-                let gw = &mut grads[P_NODE_W];
-                let row = &mut gw[i * H..(i + 1) * H];
-                for c in 0..H {
-                    row[c] += x * da[c];
-                }
-            }
+            let gw = &mut grads[P_NODE_W];
+            kn::axpy(kern, &mut gw[i * H..(i + 1) * H], xv[v * XV + i], da);
         }
         if use_node != 0.0 {
             let (t, st) = (g.op_type(v), g.stage(v));
             for d in 0..OP_EMB_DIM {
                 let i = NODE_FEAT_DIM + d;
-                let r = &p[P_NODE_W][i * H..(i + 1) * H];
-                let mut acc = 0.0f32;
-                for c in 0..H {
-                    acc += r[c] * da[c];
-                }
+                let acc = kn::dot(kern, &p[P_NODE_W][i * H..(i + 1) * H], da);
                 grads[P_OP_EMB][t * OP_EMB_DIM + d] += acc * use_node;
             }
             for d in 0..STAGE_EMB_DIM {
                 let i = NODE_FEAT_DIM + OP_EMB_DIM + d;
-                let r = &p[P_NODE_W][i * H..(i + 1) * H];
-                let mut acc = 0.0f32;
-                for c in 0..H {
-                    acc += r[c] * da[c];
-                }
+                let acc = kn::dot(kern, &p[P_NODE_W][i * H..(i + 1) * H], da);
                 grads[P_STAGE_EMB][st * STAGE_EMB_DIM + d] += acc * use_node;
             }
         }
@@ -1755,29 +1501,14 @@ fn backward_fused(
     // Edge embedding backward: h_e = relu(ef @ W + b) * em.
     for &ei in live_edges.iter() {
         let he = &h_e[ei * H..(ei + 1) * H];
-        let mut any = false;
-        for c in 0..H {
-            da[c] = if he[c] > 0.0 { dhe[ei * H + c] } else { 0.0 };
-            any |= da[c] != 0.0;
-        }
-        if !any {
+        if !kn::relu_gate(kern, da, he, &dhe[ei * H..(ei + 1) * H]) {
             continue;
         }
-        {
-            let gb = &mut grads[P_EDGE_B];
-            for c in 0..H {
-                gb[c] += da[c];
-            }
-        }
+        kn::acc(kern, &mut grads[P_EDGE_B], da);
         for i in 0..EDGE_FEAT_DIM {
             let x = g.edge_feat[ei * EDGE_FEAT_DIM + i] * use_edge;
-            if x != 0.0 {
-                let gw = &mut grads[P_EDGE_W];
-                let row = &mut gw[i * H..(i + 1) * H];
-                for c in 0..H {
-                    row[c] += x * da[c];
-                }
-            }
+            let gw = &mut grads[P_EDGE_W];
+            kn::axpy(kern, &mut gw[i * H..(i + 1) * H], x, da);
         }
     }
 }
@@ -1843,9 +1574,11 @@ fn tree_reduce(shards: &mut [ShardGrads]) {
 
 /// Accumulate the loss/grad contributions of one shard's `rows` into `acc`,
 /// rows ascending. `fused` picks the kernel pair; both are bitwise
-/// identical (see module docs).
+/// identical (see module docs). `kern` dispatches the fused pair's vector
+/// variant; the tape pair always runs its pinned scalar reference.
 #[allow(clippy::too_many_arguments)]
 fn accumulate_shard(
+    kern: Kern,
     p: &[&[f32]],
     bucket: Bucket,
     t8: &[Tensor],
@@ -1866,10 +1599,10 @@ fn accumulate_shard(
         let g = GraphView::slice(t8, bucket, b)?;
         let w = weights[b] / norm;
         if fused {
-            forward_train(p, &g, flags, scratch);
+            forward_train(kern, p, &g, flags, scratch);
             let diff = scratch.pred - labels[b];
             acc.loss += w * diff * diff;
-            backward_fused(p, &g, flags, scratch, 2.0 * w * diff, &mut acc.grads);
+            backward_fused(kern, p, &g, flags, scratch, 2.0 * w * diff, &mut acc.grads);
         } else {
             let tape = forward(p, &g, flags);
             let diff = tape.pred - labels[b];
@@ -1878,18 +1611,6 @@ fn accumulate_shard(
         }
     }
     Ok(())
-}
-
-/// One Adam element update, shared by the functional and in-place train
-/// steps so both produce the identical FP sequence. Updates the moments in
-/// place and returns the new parameter value.
-#[inline]
-fn adam_elem(pv: f32, m: &mut f32, v: &mut f32, g: f32, lr: f32, b1c: f32, b2c: f32) -> f32 {
-    *m = ADAM_B1 * *m + (1.0 - ADAM_B1) * g;
-    *v = ADAM_B2 * *v + (1.0 - ADAM_B2) * g * g;
-    let m_hat = *m / b1c;
-    let v_hat = *v / b2c;
-    pv - lr * m_hat / (v_hat.sqrt() + ADAM_EPS)
 }
 
 /// Weighted-MSE loss + parameter gradients over one stacked batch in the
@@ -1901,6 +1622,7 @@ fn adam_elem(pv: f32, m: &mut f32, v: &mut f32, g: f32, lr: f32, b1c: f32, b2c: 
 /// same bits.
 #[allow(clippy::too_many_arguments)]
 fn loss_and_grads(
+    kern: Kern,
     p: &[&[f32]],
     bucket: Bucket,
     batch: usize,
@@ -1917,7 +1639,7 @@ fn loss_and_grads(
     for (si, acc) in shards.iter_mut().enumerate() {
         let rows = si * TRAIN_SHARD_ROWS..((si + 1) * TRAIN_SHARD_ROWS).min(batch);
         accumulate_shard(
-            p, bucket, t8, labels, weights, flags, norm, rows, fused, &mut scratch, acc,
+            kern, p, bucket, t8, labels, weights, flags, norm, rows, fused, &mut scratch, acc,
         )?;
     }
     tree_reduce(&mut shards);
@@ -1971,12 +1693,13 @@ impl NativeEngine {
         // Contiguous shard ranges per worker; the assignment affects only
         // which thread fills which accumulator, never the reduce order.
         let shards_per = num_shards.div_ceil(workers);
+        let kern = self.kernel;
         let run = |wi: usize, chunk: &mut [ShardGrads], scratch: &mut TrainScratch| -> Result<()> {
             for (j, acc) in chunk.iter_mut().enumerate() {
                 let si = wi * shards_per + j;
                 let rows = si * TRAIN_SHARD_ROWS..((si + 1) * TRAIN_SHARD_ROWS).min(batch);
                 accumulate_shard(
-                    p, bucket, t8, labels, weights, flags, norm, rows, fused, scratch, acc,
+                    kern, p, bucket, t8, labels, weights, flags, norm, rows, fused, scratch, acc,
                 )?;
             }
             Ok(())
@@ -2119,8 +1842,10 @@ mod tests {
     #[test]
     fn infer_matches_tape_forward() {
         // The tape-free kernel must be bitwise identical to the training
-        // forward, across graphs, ablation settings, and scratch reuse
-        // (stale state from a previous call must not leak).
+        // forward, across graphs, ablation settings, scratch reuse (stale
+        // state from a previous call must not leak) — and every dispatched
+        // kernel variant: the tape pins the scalar reference, so this test
+        // doubles as the scalar ≡ SIMD parity pin for `forward_infer`.
         let params = init_params(23);
         let p: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
         let mut rng = Rng::new(9);
@@ -2128,24 +1853,26 @@ mod tests {
         let flag_sets =
             [[1.0f32, 1.0, 1.0], [0.0, 1.0, 1.0], [1.0, 0.0, 1.0], [1.0, 1.0, 0.0], [0.0, 0.0, 0.0]];
         let mut scratch = InferScratch::new();
-        for gt in &graphs {
-            let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
-            let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
-            for flags in flag_sets {
-                let tape = forward(&p, &g, flags).pred;
-                let fused = forward_infer(&p, &g, flags, &mut scratch);
-                assert_eq!(tape.to_bits(), fused.to_bits(), "flags {flags:?}");
+        for kern in kn::available_kerns() {
+            for gt in &graphs {
+                let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
+                let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+                for flags in flag_sets {
+                    let tape = forward(&p, &g, flags).pred;
+                    let fused = forward_infer(kern, &p, &g, flags, &mut scratch);
+                    assert_eq!(tape.to_bits(), fused.to_bits(), "{kern:?}, flags {flags:?}");
+                }
             }
+            // Fully padded graph (no live rows): both kernels fall through
+            // to the head biases.
+            let empty = GraphTensors::zeroed(BUCKETS[0]);
+            let stacked = stack_batch(&[&empty], BUCKETS[0], 1).unwrap();
+            let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+            let flags = [1.0f32, 1.0, 1.0];
+            let tape = forward(&p, &g, flags).pred;
+            let fused = forward_infer(kern, &p, &g, flags, &mut scratch);
+            assert_eq!(tape.to_bits(), fused.to_bits(), "{kern:?}, empty graph");
         }
-        // Fully padded graph (no live rows): both kernels fall through to
-        // the head biases.
-        let empty = GraphTensors::zeroed(BUCKETS[0]);
-        let stacked = stack_batch(&[&empty], BUCKETS[0], 1).unwrap();
-        let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
-        let flags = [1.0f32, 1.0, 1.0];
-        let tape = forward(&p, &g, flags).pred;
-        let fused = forward_infer(&p, &g, flags, &mut scratch);
-        assert_eq!(tape.to_bits(), fused.to_bits());
     }
 
     #[test]
@@ -2153,7 +1880,10 @@ mod tests {
         // The fused forward/backward pair must reproduce the tape pair
         // bit-for-bit: same prediction, same winner routing, same gradient
         // for every parameter element — across graphs, ablation settings,
-        // and scratch reuse (stale slab state must not leak between calls).
+        // scratch reuse (stale slab state must not leak between calls), and
+        // every dispatched kernel variant (the tape pins the scalar
+        // reference, so this doubles as the scalar ≡ SIMD parity pin for
+        // `forward_train`/`backward_fused`).
         let params = init_params(29);
         let p: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
         let mut rng = Rng::new(31);
@@ -2162,30 +1892,36 @@ mod tests {
         let flag_sets =
             [[1.0f32, 1.0, 1.0], [0.0, 1.0, 1.0], [1.0, 0.0, 1.0], [1.0, 1.0, 0.0], [0.0, 0.0, 0.0]];
         let mut scratch = TrainScratch::new();
-        for gt in &graphs {
-            let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
-            let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
-            for flags in flag_sets {
-                let dpred = 0.37f32;
-                let tape = forward(&p, &g, flags);
-                let mut g_tape: Vec<Vec<f32>> =
-                    p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
-                backward(&p, &g, flags, &tape, dpred, &mut g_tape);
-                forward_train(&p, &g, flags, &mut scratch);
-                assert_eq!(tape.pred.to_bits(), scratch.pred.to_bits(), "pred, flags {flags:?}");
-                for k in 0..NUM_LAYERS {
-                    assert_eq!(tape.winners[k], scratch.winners[k], "winners, layer {k}");
-                }
-                let mut g_fused: Vec<Vec<f32>> =
-                    p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
-                backward_fused(&p, &g, flags, &mut scratch, dpred, &mut g_fused);
-                for (i, (a, b)) in g_tape.iter().zip(&g_fused).enumerate() {
-                    for (j, (x, y)) in a.iter().zip(b).enumerate() {
-                        assert_eq!(
-                            x.to_bits(),
-                            y.to_bits(),
-                            "grad param {i} elem {j}, flags {flags:?}"
-                        );
+        for kern in kn::available_kerns() {
+            for gt in &graphs {
+                let stacked = stack_batch(&[gt], BUCKETS[0], 1).unwrap();
+                let g = GraphView::slice(&stacked, BUCKETS[0], 0).unwrap();
+                for flags in flag_sets {
+                    let dpred = 0.37f32;
+                    let tape = forward(&p, &g, flags);
+                    let mut g_tape: Vec<Vec<f32>> =
+                        p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
+                    backward(&p, &g, flags, &tape, dpred, &mut g_tape);
+                    forward_train(kern, &p, &g, flags, &mut scratch);
+                    assert_eq!(
+                        tape.pred.to_bits(),
+                        scratch.pred.to_bits(),
+                        "pred, {kern:?}, flags {flags:?}"
+                    );
+                    for k in 0..NUM_LAYERS {
+                        assert_eq!(tape.winners[k], scratch.winners[k], "winners, layer {k}");
+                    }
+                    let mut g_fused: Vec<Vec<f32>> =
+                        p.iter().map(|pv| vec![0.0f32; pv.len()]).collect();
+                    backward_fused(kern, &p, &g, flags, &mut scratch, dpred, &mut g_fused);
+                    for (i, (a, b)) in g_tape.iter().zip(&g_fused).enumerate() {
+                        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "grad param {i} elem {j}, {kern:?}, flags {flags:?}"
+                            );
+                        }
                     }
                 }
             }
@@ -2231,37 +1967,44 @@ mod tests {
             weights: Tensor::f32(&[batch], vec![1.0; batch]),
             flags: flags_tensor([1.0, 1.0, 1.0]),
         };
-        for (workers, fused) in
-            [(1usize, false), (1, true), (2, true), (4, true), (3, false), (0, true)]
-        {
-            let mut state = TrainState {
-                params: params.clone(),
-                adam_m: zeros_like(&params),
-                adam_v: zeros_like(&params),
-                step: 0.0,
-            };
-            let opts = TrainOptions { workers, fused };
-            for (si, want) in f_losses.iter().enumerate() {
-                let loss = eng
-                    .train_step_inplace(BUCKETS[0], batch, &mut state, &data, lr, &opts)
-                    .unwrap();
-                assert_eq!(
-                    loss.to_bits(),
-                    want.to_bits(),
-                    "loss step {si}, workers {workers} fused {fused}"
-                );
-            }
-            assert_eq!(state.step, 3.0);
-            for i in 0..NUM_PARAMS {
-                let tag = format!("param {i}, workers {workers} fused {fused}");
-                for (which, got, want) in [
-                    ("p", &state.params[i], &f_params[i]),
-                    ("m", &state.adam_m[i], &f_m[i]),
-                    ("v", &state.adam_v[i], &f_v[i]),
-                ] {
-                    let (a, b) = (got.as_f32().unwrap(), want.as_f32().unwrap());
-                    for (x, y) in a.iter().zip(b) {
-                        assert_eq!(x.to_bits(), y.to_bits(), "{which} {tag}");
+        // Sweep explicit kernel selections too: the in-place trajectory must
+        // match the functional scalar reference bit-for-bit on every
+        // dispatched variant (gradients AND the lane-wide Adam update).
+        let kinds = [KernelKind::Auto, KernelKind::Scalar, KernelKind::Portable, KernelKind::Simd];
+        for kind in kinds {
+            let eng = NativeEngine::with_kernel(kind);
+            for (workers, fused) in
+                [(1usize, false), (1, true), (2, true), (4, true), (3, false), (0, true)]
+            {
+                let mut state = TrainState {
+                    params: params.clone(),
+                    adam_m: zeros_like(&params),
+                    adam_v: zeros_like(&params),
+                    step: 0.0,
+                };
+                let opts = TrainOptions { workers, fused };
+                for (si, want) in f_losses.iter().enumerate() {
+                    let loss = eng
+                        .train_step_inplace(BUCKETS[0], batch, &mut state, &data, lr, &opts)
+                        .unwrap();
+                    assert_eq!(
+                        loss.to_bits(),
+                        want.to_bits(),
+                        "loss step {si}, {kind:?} workers {workers} fused {fused}"
+                    );
+                }
+                assert_eq!(state.step, 3.0);
+                for i in 0..NUM_PARAMS {
+                    let tag = format!("param {i}, {kind:?} workers {workers} fused {fused}");
+                    for (which, got, want) in [
+                        ("p", &state.params[i], &f_params[i]),
+                        ("m", &state.adam_m[i], &f_m[i]),
+                        ("v", &state.adam_v[i], &f_v[i]),
+                    ] {
+                        let (a, b) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+                        for (x, y) in a.iter().zip(b) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "{which} {tag}");
+                        }
                     }
                 }
             }
@@ -2340,16 +2083,17 @@ mod tests {
         let weights = [1.0f32, 1.0];
         let flags = [1.0f32, 1.0, 1.0];
 
+        let sk = Kern::Scalar;
         let loss_of = |ps: &[Tensor]| -> f32 {
             let views: Vec<&[f32]> = ps.iter().map(|t| t.as_f32().unwrap()).collect();
-            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
+            loss_and_grads(sk, &views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
                 .unwrap()
                 .0
         };
 
         let views: Vec<&[f32]> = params.iter().map(|t| t.as_f32().unwrap()).collect();
         let (_, grads) =
-            loss_and_grads(&views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
+            loss_and_grads(sk, &views, BUCKETS[0], batch, &t8, &labels, &weights, flags, false)
                 .unwrap();
 
         // Random unit-ish direction over all parameters.

@@ -349,6 +349,7 @@ impl CompileService {
             queue_wait,
             cache: self.cache_snapshot(),
             score_cache: self.shared.objective.score_cache_stats(),
+            kernel: self.shared.objective.kernel_variant(),
         }
     }
 
@@ -482,6 +483,11 @@ pub struct ServeSummary {
     /// Score-cache counters from the objective's scoring hot loop (`None`
     /// unless the objective carries a score cache).
     pub score_cache: Option<ScoreCacheStats>,
+    /// The objective's dispatched compute-kernel variant (`"scalar"` /
+    /// `"avx2"` / `"portable-unrolled"`); `None` for analytic objectives.
+    /// Provenance for the perf numbers — results are bit-identical across
+    /// variants.
+    pub kernel: Option<&'static str>,
 }
 
 impl ServeSummary {
@@ -533,6 +539,9 @@ impl ServeSummary {
                     .set("evictions", s.evictions),
             );
         }
+        if let Some(k) = self.kernel {
+            j = j.set("kernel", k);
+        }
         j
     }
 
@@ -546,9 +555,10 @@ impl ServeSummary {
             .score_cache
             .map(|s| format!(", score cache {}", s.summary()))
             .unwrap_or_default();
+        let kernel_line = self.kernel.map(|k| format!(", {k} kernels")).unwrap_or_default();
         format!(
             "{} completed / {} submitted ({} shed, {} expired, {} failed) in {:.1}s — \
-             {:.1} req/s, p50 {:.1}ms, p95 {:.1}ms, p99 {:.1}ms{}{}",
+             {:.1} req/s, p50 {:.1}ms, p95 {:.1}ms, p99 {:.1}ms{}{}{}",
             self.completed,
             self.submitted,
             self.shed,
@@ -561,6 +571,7 @@ impl ServeSummary {
             self.latency.p99_ms(),
             cache_line,
             score_line,
+            kernel_line,
         )
     }
 }

@@ -165,6 +165,14 @@ impl Trainer {
         &self.state
     }
 
+    /// The engine's dispatched compute-kernel variant (`"scalar"` /
+    /// `"avx2"` / `"portable-unrolled"`), `None` for backends without an
+    /// explicit kernel layer. Surfaced in the train banner and bench JSON;
+    /// the fit is bit-identical across variants.
+    pub fn kernel_variant(&self) -> Option<&'static str> {
+        self.engine.kernel_variant()
+    }
+
     /// Train on the samples at `indices` of `dataset`. Errors on an empty
     /// index set — silently "fitting" nothing used to report a flat 0.0
     /// loss curve, which reads as a perfectly trained model.

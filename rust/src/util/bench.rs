@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// One benchmark's collected statistics, in nanoseconds per iteration.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -140,6 +142,101 @@ impl Bencher {
     }
 }
 
+/// `--baseline FILE` from the bench binary's argv (cargo forwards
+/// everything after `--` to `harness = false` targets). `None` when absent.
+pub fn baseline_arg() -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--baseline" {
+            return args.next();
+        }
+        if let Some(p) = a.strip_prefix("--baseline=") {
+            return Some(p.to_string());
+        }
+    }
+    None
+}
+
+/// Whether hard perf-ratio floors should be enforced. Quick-mode numbers
+/// come from loaded shared CI runners where ratio floors flake, so floors
+/// apply only in full mode — unless `RDACOST_BENCH_ENFORCE=1` opts in.
+/// Bit-identity assertions must stay unconditional; only *perf* floors
+/// route through this.
+pub fn enforce_floors(quick: bool) -> bool {
+    !quick || std::env::var("RDACOST_BENCH_ENFORCE").is_ok()
+}
+
+/// Compare a just-measured bench report against a baseline JSON file (the
+/// `--baseline benchmarks/BENCH_*.json` mode) and print one delta line per
+/// numeric metric. The checked-in `benchmarks/` files are schema references
+/// (`measured = false`, null numbers): against those every delta prints as
+/// `n/a`, which still pins the report shape; against a previously measured
+/// artifact the percentages are real regressions/improvements.
+pub fn compare_to_baseline(current: &Json, path: &str) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("baseline {path}: {e} (skipping compare)");
+            return;
+        }
+    };
+    let base = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("baseline {path}: {e} (skipping compare)");
+            return;
+        }
+    };
+    if base.get("measured").and_then(Json::as_bool) == Some(false) {
+        println!("baseline {path}: schema reference (measured = false), deltas print as n/a");
+    }
+    println!("baseline compare vs {path}:");
+    for line in compare_lines(current, &base) {
+        println!("  {line}");
+    }
+}
+
+/// The delta lines behind [`compare_to_baseline`]: one per numeric leaf of
+/// `current`, paired positionally with the same path in `base` (objects by
+/// key, arrays by index — the baseline schema files keep array order).
+pub fn compare_lines(current: &Json, base: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    walk_compare("", current, Some(base), &mut out);
+    out
+}
+
+fn walk_compare(prefix: &str, cur: &Json, base: Option<&Json>, out: &mut Vec<String>) {
+    match cur {
+        Json::Num(x) => {
+            let line = match base.and_then(Json::as_f64) {
+                Some(b) if b != 0.0 => {
+                    format!("{prefix}: {x} (baseline {b}, {:+.1}%)", 100.0 * (x / b - 1.0))
+                }
+                Some(b) => format!("{prefix}: {x} (baseline {b})"),
+                None => format!("{prefix}: {x} (baseline n/a)"),
+            };
+            out.push(line);
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                walk_compare(&key, v, base.and_then(|b| b.get(k)), out);
+            }
+        }
+        Json::Arr(v) => {
+            for (i, item) in v.iter().enumerate() {
+                let b = base.and_then(Json::as_arr).and_then(|a| a.get(i));
+                walk_compare(&format!("{prefix}[{i}]"), item, b, out);
+            }
+        }
+        _ => {}
+    }
+}
+
 /// Human format for nanosecond quantities.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -183,6 +280,45 @@ mod tests {
         assert!(fmt_ns(5e3).contains("µs"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn compare_lines_pairs_leaves_with_baseline() {
+        let current = Json::obj()
+            .set("evals_per_sec", 200.0)
+            .set("hit_rate", 0.5)
+            .set("nested", Json::obj().set("x", 3.0))
+            .set("arr", Json::Arr(vec![Json::from(1.0), Json::from(2.0)]))
+            .set("label", "ignored");
+        let base = Json::obj()
+            .set("evals_per_sec", 100.0)
+            .set("hit_rate", Json::Null)
+            .set("nested", Json::obj().set("x", 0.0))
+            .set("arr", Json::Arr(vec![Json::from(4.0)]));
+        let lines = compare_lines(&current, &base);
+        // Matched nonzero baseline: percentage delta.
+        assert!(lines.iter().any(|l| l.contains("evals_per_sec: 200") && l.contains("+100.0%")));
+        // Null baseline leaf (schema reference): n/a.
+        assert!(lines.iter().any(|l| l.starts_with("hit_rate:") && l.contains("n/a")));
+        // Zero baseline: printed without a percentage.
+        assert!(lines
+            .iter()
+            .any(|l| l.starts_with("nested.x:") && l.contains("baseline 0") && !l.contains('%')));
+        // Arrays pair by index; unmatched indices fall back to n/a.
+        assert!(lines.iter().any(|l| l.starts_with("arr[0]:") && l.contains("-75.0%")));
+        assert!(lines.iter().any(|l| l.starts_with("arr[1]:") && l.contains("n/a")));
+        // Non-numeric leaves produce no line.
+        assert!(!lines.iter().any(|l| l.contains("label")));
+    }
+
+    #[test]
+    fn floors_enforced_only_in_full_mode() {
+        // Full mode always enforces; quick mode defers to RDACOST_BENCH_ENFORCE,
+        // which is unset in the test environment.
+        assert!(enforce_floors(false));
+        if std::env::var("RDACOST_BENCH_ENFORCE").is_err() {
+            assert!(!enforce_floors(true));
+        }
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Integration: the explicit-SIMD kernel layer is bit-exact at the engine
+//! level, not just per primitive.
+//!
+//! `runtime::kernels` pins scalar ≡ vector per primitive with in-module
+//! property tests; these tests pin the same contract end-to-end through the
+//! public surface: `LearnedCost::predict_batch` at batch=1 and K=8 (plus an
+//! empty, fully-padded graph), and a whole `Trainer::fit` — params, Adam
+//! moments, step counter and loss curve — must produce identical bits on
+//! engines built with every `KernelKind`. Auto is included so whatever CI's
+//! host dispatches to is also pinned against the scalar reference.
+
+use std::sync::Arc;
+
+use rdacost::arch::{Fabric, FabricConfig};
+use rdacost::cost::{Ablation, LearnedCost};
+use rdacost::data::{generate, GenConfig};
+use rdacost::gnn::{self, GraphTensors, BUCKETS};
+use rdacost::runtime::{native_engine_with_kernel, Engine, KernelKind};
+use rdacost::train::{TrainConfig, Trainer};
+use rdacost::util::rng::Rng;
+
+const KINDS: [KernelKind; 4] =
+    [KernelKind::Scalar, KernelKind::Portable, KernelKind::Simd, KernelKind::Auto];
+
+fn engine(kind: KernelKind) -> Arc<Engine> {
+    native_engine_with_kernel(kind)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Eight placements of the same workload (same bucket) — a realistic
+/// annealer candidate fleet for batched scoring.
+fn candidate_fleet() -> Vec<GraphTensors> {
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = rdacost::dfg::builders::mha(32, 128, 4);
+    let mut rng = Rng::new(23);
+    (0..8)
+        .map(|_| {
+            let placement = rdacost::placer::random_placement(&graph, &fabric, &mut rng).unwrap();
+            let routing = rdacost::router::route_all(&fabric, &graph, &placement).unwrap();
+            gnn::encode(&graph, &fabric, &placement, &routing).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn kernel_variant_surfaced_per_kind() {
+    for kind in KINDS {
+        let variant = engine(kind).kernel_variant().expect("native engine reports its kernels");
+        match kind {
+            KernelKind::Scalar => assert_eq!(variant, "scalar"),
+            KernelKind::Portable => assert_eq!(variant, "portable-unrolled"),
+            // Simd / Auto land on whatever the host dispatches to.
+            _ => assert!(
+                variant == "avx2" || variant == "portable-unrolled",
+                "{kind:?}: unexpected variant {variant}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn predict_bits_identical_across_kernel_engines() {
+    let fleet = candidate_fleet();
+    let refs: Vec<&GraphTensors> = fleet.iter().collect();
+    let empty = GraphTensors::zeroed(BUCKETS[0]);
+
+    let scalar_eng = engine(KernelKind::Scalar);
+    let trainer = Trainer::new(scalar_eng.clone(), TrainConfig::default()).unwrap();
+    let store = trainer.param_store();
+    let reference = LearnedCost::from_store(scalar_eng, &store, Ablation::default()).unwrap();
+    let want_k8 = bits(&reference.predict_batch(&refs, refs.len()).unwrap());
+    let want_k1 = bits(&reference.predict_batch(&refs, 1).unwrap());
+    let want_empty = reference.predict_encoded(&empty).unwrap().to_bits();
+
+    for kind in KINDS {
+        let learned = LearnedCost::from_store(engine(kind), &store, Ablation::default()).unwrap();
+        let got_k8 = bits(&learned.predict_batch(&refs, refs.len()).unwrap());
+        assert_eq!(got_k8, want_k8, "{kind:?}: K=8 batch diverged from scalar");
+        let got_k1 = bits(&learned.predict_batch(&refs, 1).unwrap());
+        assert_eq!(got_k1, want_k1, "{kind:?}: batch=1 diverged from scalar");
+        for (i, g) in refs.iter().enumerate() {
+            let single = learned.predict_encoded(g).unwrap().to_bits();
+            assert_eq!(single, want_k1[i], "{kind:?}: single predict {i} diverged");
+        }
+        let got_empty = learned.predict_encoded(&empty).unwrap().to_bits();
+        assert_eq!(got_empty, want_empty, "{kind:?}: fully-padded graph diverged");
+    }
+}
+
+#[test]
+fn training_bits_identical_across_kernel_engines() {
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(31);
+    let gen_cfg = GenConfig { total: 16, ..GenConfig::default() };
+    let ds = generate(&fabric, &gen_cfg, &mut rng).unwrap();
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch: 4,
+        log_every: 0,
+        fused: true,
+        workers: 2,
+        ..TrainConfig::default()
+    };
+
+    let fit = |kind: KernelKind| {
+        let mut trainer = Trainer::new(engine(kind), cfg.clone()).unwrap();
+        let report = trainer.fit(&ds, &idx).unwrap();
+        (trainer, report)
+    };
+    let (ref_t, ref_rep) = fit(KernelKind::Scalar);
+    let want_curve: Vec<u64> = ref_rep.loss_curve.iter().map(|l| l.to_bits()).collect();
+
+    for kind in [KernelKind::Portable, KernelKind::Simd, KernelKind::Auto] {
+        let (t, rep) = fit(kind);
+        let (sa, sb) = (t.state(), ref_t.state());
+        assert_eq!(sa.params, sb.params, "{kind:?}: params diverged from scalar");
+        assert_eq!(sa.adam_m, sb.adam_m, "{kind:?}: Adam m diverged from scalar");
+        assert_eq!(sa.adam_v, sb.adam_v, "{kind:?}: Adam v diverged from scalar");
+        assert_eq!(sa.step.to_bits(), sb.step.to_bits(), "{kind:?}: step diverged");
+        let curve: Vec<u64> = rep.loss_curve.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(curve, want_curve, "{kind:?}: loss curve diverged from scalar");
+    }
+}
