@@ -92,7 +92,8 @@ fn main() {
         .set("speedup_w2_over_w1", speedup_w2)
         .set("speedup_w4_over_w1", speedup_w4)
         .set("identical_results_across_workers", identical)
-        .set("quick_mode", quick);
+        .set("quick_mode", quick)
+        .set("phase_profile", reference.phase_profile.to_json());
     std::fs::write("BENCH_compile.json", report.to_pretty()).unwrap();
     println!("wrote BENCH_compile.json");
 }

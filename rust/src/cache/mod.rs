@@ -376,7 +376,7 @@ impl PnrCache {
             match read_file(path) {
                 Ok(rows) => rows,
                 Err(e) => {
-                    eprintln!("PnR cache {path:?} unreadable at save ({e:#}); overwriting");
+                    crate::log_warn!("PnR cache {path:?} unreadable at save ({e:#}); overwriting");
                     Vec::new()
                 }
             }

@@ -74,6 +74,10 @@ use crate::dfg::{partition, Dfg};
 use crate::placer::{anneal, AnnealParams, Objective, ObjectiveFactory, Placement};
 use crate::router::route_all_with;
 use crate::sim;
+use crate::telemetry::profile::{
+    PHASE_ANNEAL, PHASE_CACHE_LOOKUP, PHASE_CANONICALIZE, PHASE_MEASURE_ROUTE, PHASE_PARTITION,
+};
+use crate::telemetry::{self, metrics, PhaseBreakdown, PhaseProfile};
 use crate::util::rng::Rng;
 
 /// Per-subgraph compile outcome.
@@ -125,6 +129,12 @@ pub struct CompileReport {
     /// objectives. Provenance only: results are bit-identical across
     /// variants.
     pub kernel: Option<&'static str>,
+    /// Wall time + call count per compile phase, aggregate and per
+    /// subgraph (partition order). Always collected — a handful of
+    /// `Instant` reads per subgraph — and deliberately *not* part of
+    /// [`SubgraphReport`], which is `PartialEq`-compared by the determinism
+    /// suites and must stay wall-time-free.
+    pub phase_profile: PhaseProfile,
 }
 
 /// Compile settings.
@@ -236,7 +246,7 @@ impl<'a> CompileSession<'a> {
                 // entries (a lookalike under the same name could differ);
                 // in-memory dedup stays safe because this cache instance
                 // serves exactly this compile call's objective.
-                eprintln!(
+                crate::log_warn!(
                     "compile cache: objective {:?} has no cache fingerprint; \
                      {path} gets no entries (in-memory dedup only)",
                     objective.name()
@@ -277,42 +287,62 @@ impl<'a> CompileSession<'a> {
         pnr_cache: Option<&PnrCache>,
     ) -> Result<CompileReport> {
         let t0 = std::time::Instant::now();
-        let parts = partition::partition(graph, self.fabric)?;
+        let _compile_span = telemetry::span("compile", "compile");
+        let mut profile = PhaseProfile::default();
+        metrics::counter("compile.sessions").inc();
+
+        let parts = {
+            let _s = telemetry::span(PHASE_PARTITION, "compile");
+            let t = std::time::Instant::now();
+            let parts = partition::partition(graph, self.fabric)?;
+            profile.add_trunk(PHASE_PARTITION, t.elapsed());
+            parts
+        };
         let n = parts.subgraphs.len();
+        metrics::counter("compile.subgraphs").add(n as u64);
         // Canonical forms drive the seed streams (and the cache keys), so
         // they are computed whether or not the cache is enabled.
-        let canons: Vec<Canon> = parts.subgraphs.iter().map(canonicalize).collect();
+        let canons: Vec<Canon> = {
+            let _s = telemetry::span(PHASE_CANONICALIZE, "compile")
+                .map(|s| s.arg("subgraphs", n as f64));
+            let t = std::time::Instant::now();
+            let canons = parts.subgraphs.iter().map(canonicalize).collect();
+            profile.add_trunk(PHASE_CANONICALIZE, t.elapsed());
+            canons
+        };
 
         // Shared fan-out layer: subgraphs are claimed by index, each worker
         // draws one scoring handle, and results land in partition order.
         // A panicking objective (or a bug in PnR) must not abort the
         // process via a cross-thread double panic — `catch_unwind` maps it
         // to a clean `Err` at every worker count.
-        let slots: Vec<Result<SubgraphReport>> = crate::coordinator::work::fan_out_indexed(
-            self.cfg.workers,
-            n,
-            || objective.handle(),
-            |handle, i| {
-                let sg = &parts.subgraphs[i];
-                let canon = &canons[i];
-                std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    self.compile_subgraph(sg, canon, handle.as_ref(), pnr_cache)
-                }))
-                .unwrap_or_else(|payload| {
-                    Err(anyhow!(
-                        "subgraph {i} ({}) place-and-route panicked: {}",
-                        sg.name,
-                        panic_message(payload)
-                    ))
-                })
-            },
-        );
+        let slots: Vec<Result<(SubgraphReport, PhaseBreakdown)>> =
+            crate::coordinator::work::fan_out_indexed(
+                self.cfg.workers,
+                n,
+                || objective.handle(),
+                |handle, i| {
+                    let sg = &parts.subgraphs[i];
+                    let canon = &canons[i];
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        self.compile_subgraph(sg, canon, handle.as_ref(), pnr_cache)
+                    }))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow!(
+                            "subgraph {i} ({}) place-and-route panicked: {}",
+                            sg.name,
+                            panic_message(payload)
+                        ))
+                    })
+                },
+            );
 
         let mut subgraphs = Vec::with_capacity(n);
         let mut total_ii = 0.0;
         let mut total_latency = 0.0;
         for slot in slots {
-            let rep = slot?;
+            let (rep, phases) = slot?;
+            profile.push_subgraph(&rep.name, phases);
             total_ii += rep.ii_cycles;
             total_latency += rep.latency_cycles;
             subgraphs.push(rep);
@@ -334,6 +364,7 @@ impl<'a> CompileSession<'a> {
             cache: cache_stats,
             score_cache: objective.score_cache_stats(),
             kernel: objective.kernel_variant(),
+            phase_profile: profile,
         })
     }
 
@@ -348,16 +379,22 @@ impl<'a> CompileSession<'a> {
         canon: &Canon,
         handle: &dyn Objective,
         pnr_cache: Option<&PnrCache>,
-    ) -> Result<SubgraphReport> {
+    ) -> Result<(SubgraphReport, PhaseBreakdown)> {
+        let mut phases = PhaseBreakdown::default();
         // Cache lookup. A concurrent worker computing the same fingerprint
         // blocks us until it publishes (compute-once semantics); a miss
         // hands back a reservation we fulfill below — or abandon on the
         // error paths (`?`), releasing any blocked siblings to take over.
         let mut reservation = None;
         if let Some(c) = pnr_cache {
-            match c.lookup(canon.fingerprint, &canon.bytes) {
+            let _s = telemetry::span(PHASE_CACHE_LOOKUP, "compile");
+            let t = std::time::Instant::now();
+            let lookup = c.lookup(canon.fingerprint, &canon.bytes);
+            phases.add(PHASE_CACHE_LOOKUP, t.elapsed());
+            match lookup {
                 cache::Lookup::Hit(hit) => {
-                    return Ok(SubgraphReport {
+                    metrics::counter("compile.cache.hits").inc();
+                    let rep = SubgraphReport {
                         name: sg.name.clone(),
                         nodes: sg.num_nodes(),
                         ii_cycles: hit.ii_cycles,
@@ -366,9 +403,13 @@ impl<'a> CompileSession<'a> {
                         anneal_evaluations: hit.anneal_evaluations as usize,
                         anneal_score_batches: hit.anneal_score_batches as usize,
                         anneal_restarts: hit.anneal_restarts as usize,
-                    });
+                    };
+                    return Ok((rep, phases));
                 }
-                cache::Lookup::Miss(r) => reservation = r,
+                cache::Lookup::Miss(r) => {
+                    metrics::counter("compile.cache.misses").inc();
+                    reservation = r;
+                }
             }
         }
 
@@ -378,14 +419,31 @@ impl<'a> CompileSession<'a> {
         let mut best: Option<(sim::SimReport, Placement)> = None;
         for r in 0..restarts {
             let mut rng = pnr_rng(self.cfg.seed, canon.fingerprint, r);
-            let (placement, _, log) =
-                anneal(&canon.graph, self.fabric, handle, &self.cfg.anneal, &mut rng)?;
+            let (placement, _, log) = {
+                let _s = telemetry::span(PHASE_ANNEAL, "compile")
+                    .map(|s| s.arg("nodes", sg.num_nodes() as f64).arg("restart", r as f64));
+                let t = std::time::Instant::now();
+                let out = anneal(&canon.graph, self.fabric, handle, &self.cfg.anneal, &mut rng)?;
+                phases.add(PHASE_ANNEAL, t.elapsed());
+                out
+            };
             // Final honest measurement: clean batch route + simulator —
             // never the annealer's (possibly incremental) working routing.
-            let routing =
-                route_all_with(self.fabric, &canon.graph, &placement, self.cfg.anneal.router)?;
-            let report =
-                sim::measure(self.fabric, &canon.graph, &placement, &routing, self.cfg.era)?;
+            let report = {
+                let _s = telemetry::span(PHASE_MEASURE_ROUTE, "compile");
+                let t = std::time::Instant::now();
+                let routing = route_all_with(
+                    self.fabric,
+                    &canon.graph,
+                    &placement,
+                    self.cfg.anneal.router,
+                )?;
+                let report =
+                    sim::measure(self.fabric, &canon.graph, &placement, &routing, self.cfg.era)?;
+                phases.add(PHASE_MEASURE_ROUTE, t.elapsed());
+                report
+            };
+            metrics::counter("compile.anneal.evaluations").add(log.evaluations as u64);
             evaluations += log.evaluations;
             score_batches += log.score_batches;
             // Strict `<`: ties keep the earliest restart, so the winner is
@@ -414,7 +472,7 @@ impl<'a> CompileSession<'a> {
             });
         }
 
-        Ok(SubgraphReport {
+        let rep = SubgraphReport {
             name: sg.name.clone(),
             nodes: sg.num_nodes(),
             ii_cycles: report.ii_cycles,
@@ -423,7 +481,8 @@ impl<'a> CompileSession<'a> {
             anneal_evaluations: evaluations,
             anneal_score_batches: score_batches,
             anneal_restarts: restarts,
-        })
+        };
+        Ok((rep, phases))
     }
 }
 
@@ -606,6 +665,7 @@ mod tests {
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
             kernel: None,
+            phase_profile: PhaseProfile::default(),
         };
         assert_eq!(empty.throughput, 0.0);
         assert!(empty.throughput.is_finite());
@@ -692,6 +752,7 @@ mod tests {
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
             kernel: None,
+            phase_profile: PhaseProfile::default(),
         };
         let b = CompileReport {
             model: "x".into(),
@@ -704,6 +765,7 @@ mod tests {
             cache: CacheStatsSnapshot::default(),
             score_cache: None,
             kernel: None,
+            phase_profile: PhaseProfile::default(),
         };
         assert!((a.throughput_gain_pct(&b) - 11.111).abs() < 0.01);
         assert!((a.latency_reduction_pct(&b) - 10.0).abs() < 1e-9);

@@ -22,6 +22,7 @@
 //! cache = true
 //! cache_path = "results/pnr.cache"
 //! kernel = "auto"
+//! trace = "results/trace.json"
 //!
 //! [dataset]
 //! total = 5878
@@ -140,6 +141,11 @@ pub struct RunConfig {
     /// `runtime::kernels` — so this trades wall time only. Defaults from
     /// `RDACOST_KERNEL` when set.
     pub kernel: KernelKind,
+    /// Chrome trace-event capture path (`[run] trace` / `--trace`); `None`
+    /// (the default) leaves the tracer disabled — one atomic load per span
+    /// site, nothing recorded. Tracing is observation-only: results are
+    /// bit-identical with it on or off. Defaults from `RDACOST_TRACE`.
+    pub trace: Option<String>,
     pub dataset: GenConfig,
     pub train: TrainConfig,
     pub anneal: AnnealParams,
@@ -167,6 +173,7 @@ impl Default for RunConfig {
             cache: true,
             cache_path: None,
             kernel: KernelKind::from_env(),
+            trace: std::env::var("RDACOST_TRACE").ok().filter(|s| !s.is_empty()),
             dataset: GenConfig::default(),
             train: TrainConfig::default(),
             anneal: AnnealParams::default(),
@@ -209,6 +216,9 @@ impl RunConfig {
             cfg.kernel = KernelKind::parse(&k).ok_or_else(|| {
                 anyhow::anyhow!("config run.kernel = {k:?}: want auto|scalar|simd|portable")
             })?;
+        }
+        if let Some(t) = raw.values.remove("run.trace") {
+            cfg.trace = Some(t);
         }
 
         raw.take_parse("dataset.total", &mut cfg.dataset.total)?;
@@ -288,6 +298,7 @@ restarts = 3
 cache = false
 cache_path = "results/pnr.cache"
 kernel = "simd"
+trace = "results/trace.json"
 
 [dataset]
 total = 100
@@ -322,6 +333,7 @@ workers = 3
         assert!(!cfg.cache);
         assert_eq!(cfg.cache_path.as_deref(), Some("results/pnr.cache"));
         assert_eq!(cfg.kernel, KernelKind::Simd);
+        assert_eq!(cfg.trace.as_deref(), Some("results/trace.json"));
         assert_eq!(cfg.dataset.total, 100);
         assert_eq!(cfg.dataset.proposals_per_step, 1); // knobs are per-section
         assert_eq!(cfg.train.epochs, 5);

@@ -55,7 +55,7 @@ pub fn generate_parallel(
         duplicates_skipped += stats.duplicates_skipped;
     }
     if duplicates_skipped > 0 {
-        eprintln!(
+        crate::log_info!(
             "dataset generation: skipped {duplicates_skipped} duplicate (graph, decision) \
              sample(s) within shards"
         );
@@ -71,7 +71,7 @@ pub fn generate_parallel(
         .filter(|s| !seen.insert(sample_fingerprint(s)))
         .count();
     if cross_shard > 0 {
-        eprintln!(
+        crate::log_warn!(
             "dataset generation: {cross_shard} cross-shard duplicate sample(s) survived \
              (per-shard dedup only; regenerate with --workers 1 for a fully deduped corpus)"
         );

@@ -46,6 +46,7 @@ use crate::gnn::{self, Bucket, EncodeDelta, EncodeState, GraphTensors};
 use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
+use crate::telemetry::metrics;
 use crate::train::ParamStore;
 
 /// Dispatcher admission bound: far above any realistic in-flight fleet
@@ -62,8 +63,11 @@ struct Request {
     enqueued: Instant,
 }
 
-/// Counters exposed for benches and EXPERIMENTS.md §Perf.
-#[derive(Debug, Default)]
+/// Counters exposed for benches and EXPERIMENTS.md §Perf. Each counter also
+/// mirrors into the global metrics registry under `scoring.*` (handles
+/// cached at construction), which is how `serve --report-every` lines show
+/// dispatcher pressure.
+#[derive(Debug)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
@@ -72,9 +76,36 @@ pub struct ServiceStats {
     /// Encode/score failures mapped to 0.0 by [`ServiceObjective`] handles
     /// (the dispatcher logs the underlying batch failure itself).
     pub scoring_errors: AtomicU64,
+    m_requests: metrics::Counter,
+    m_batches: metrics::Counter,
+    m_full_batches: metrics::Counter,
+    m_deadline_flushes: metrics::Counter,
+    m_scoring_errors: metrics::Counter,
+}
+
+impl Default for ServiceStats {
+    fn default() -> ServiceStats {
+        ServiceStats {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            full_batches: AtomicU64::new(0),
+            deadline_flushes: AtomicU64::new(0),
+            scoring_errors: AtomicU64::new(0),
+            m_requests: metrics::counter("scoring.requests"),
+            m_batches: metrics::counter("scoring.batches"),
+            m_full_batches: metrics::counter("scoring.full_batches"),
+            m_deadline_flushes: metrics::counter("scoring.deadline_flushes"),
+            m_scoring_errors: metrics::counter("scoring.errors"),
+        }
+    }
 }
 
 impl ServiceStats {
+    fn note_scoring_errors(&self, n: u64) {
+        self.scoring_errors.fetch_add(n, Ordering::Relaxed);
+        self.m_scoring_errors.add(n);
+    }
+
     /// Mean occupancy of executed batches (1.0 = always full).
     pub fn occupancy(&self, batch_size: usize) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -159,7 +190,7 @@ impl ScoringService {
         max_wait: Duration,
     ) -> Result<ScoringService> {
         params.matches_specs(engine.param_specs())?;
-        let queue = Arc::new(BoundedQueue::new(QUEUE_CAPACITY));
+        let queue = Arc::new(BoundedQueue::with_metrics(QUEUE_CAPACITY, "scoring.queue"));
         let rx = queue.clone();
         let stats = Arc::new(ServiceStats::default());
         let stats2 = stats.clone();
@@ -245,7 +276,7 @@ impl ServiceObjective {
         match result {
             Ok(s) => s,
             Err(_) => {
-                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_scoring_errors(1);
                 0.0
             }
         }
@@ -283,7 +314,7 @@ impl ServiceObjective {
                 score
             }
             Err(_) => {
-                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_scoring_errors(1);
                 0.0
             }
         }
@@ -305,7 +336,7 @@ impl Objective for ServiceObjective {
         match armed {
             Ok(state) => cell.state = Some(state),
             Err(_) => {
-                self.stats.scoring_errors.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_scoring_errors(1);
                 return 0.0;
             }
         }
@@ -439,7 +470,7 @@ impl Objective for ServiceObjective {
                 out.into_iter().map(|s| s.expect("every candidate scored")).collect()
             }
             Err(_) => {
-                self.stats.scoring_errors.fetch_add(miss.len() as u64, Ordering::Relaxed);
+                self.stats.note_scoring_errors(miss.len() as u64);
                 out.into_iter().map(|s| s.unwrap_or(0.0)).collect()
             }
         }
@@ -521,11 +552,13 @@ fn dispatcher_loop(
         match rx.pop_timeout(timeout) {
             PopTimeout::Item(req) => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.m_requests.inc();
                 let b = req.graph.bucket;
                 let entry = queues.entry(b.tag()).or_insert((b, Vec::new()));
                 entry.1.push(req);
                 if entry.1.len() >= batch {
                     stats.full_batches.fetch_add(1, Ordering::Relaxed);
+                    stats.m_full_batches.inc();
                     let (bucket, q) = queues.remove(&b.tag()).unwrap();
                     execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
                 }
@@ -544,6 +577,7 @@ fn dispatcher_loop(
                     let (bucket, q) = queues.remove(&k).unwrap();
                     if !q.is_empty() {
                         stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+                        stats.m_deadline_flushes.inc();
                         execute_batch(&engine, &params, ablation, batch, bucket, q, &stats);
                     }
                 }
@@ -582,6 +616,7 @@ fn flush_overdue(
     for k in overdue {
         let (bucket, q) = queues.remove(&k).unwrap();
         stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        stats.m_deadline_flushes.inc();
         execute_batch(engine, params, ablation, batch, bucket, q, stats);
     }
 }
@@ -596,6 +631,7 @@ fn execute_batch(
     stats: &ServiceStats,
 ) {
     stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.m_batches.inc();
     // Chunk in case a deadline flush accumulated more than one batch.
     for chunk in requests.chunks(batch) {
         let graphs: Vec<&GraphTensors> = chunk.iter().map(|r| &r.graph).collect();
@@ -616,7 +652,7 @@ fn execute_batch(
                 // Propagate the failure message to every waiting client —
                 // an answered error beats an opaque dropped channel.
                 let msg = format!("{e:#}");
-                eprintln!("scoring batch failed: {msg}");
+                crate::log_warn!("scoring batch failed: {msg}");
                 for req in chunk {
                     let _ = req.reply.send(Err(msg.clone()));
                 }

@@ -15,6 +15,8 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use crate::telemetry::metrics::{self, Counter, Gauge};
+
 /// Run `count` indexed tasks on up to `workers` threads and return the
 /// results in index order.
 ///
@@ -140,6 +142,11 @@ pub struct BoundedQueue<T> {
     inner: Mutex<QueueInner<T>>,
     available: Condvar,
     capacity: usize,
+    /// Registry mirror handles (`<prefix>.depth` gauge, `<prefix>.shed`
+    /// counter), cached at construction so the hot path never touches the
+    /// registry map. `None` for queues built with [`BoundedQueue::new`].
+    depth_gauge: Option<Gauge>,
+    shed_counter: Option<Counter>,
 }
 
 impl<T> BoundedQueue<T> {
@@ -152,7 +159,20 @@ impl<T> BoundedQueue<T> {
             }),
             available: Condvar::new(),
             capacity: capacity.max(1),
+            depth_gauge: None,
+            shed_counter: None,
         }
+    }
+
+    /// Like [`BoundedQueue::new`], but also publishes queue pressure into
+    /// the global metrics registry as `<prefix>.depth` (gauge, updated on
+    /// every push/pop) and `<prefix>.shed` (counter, bumped on every
+    /// [`PushError::Full`] rejection).
+    pub fn with_metrics(capacity: usize, prefix: &str) -> BoundedQueue<T> {
+        let mut queue = BoundedQueue::new(capacity);
+        queue.depth_gauge = Some(metrics::gauge(&format!("{prefix}.depth")));
+        queue.shed_counter = Some(metrics::counter(&format!("{prefix}.shed")));
+        queue
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
@@ -179,11 +199,17 @@ impl<T> BoundedQueue<T> {
             return Err(PushError::Closed(item));
         }
         if q.heap.len() >= self.capacity {
+            if let Some(shed) = &self.shed_counter {
+                shed.inc();
+            }
             return Err(PushError::Full(item));
         }
         let seq = q.seq;
         q.seq += 1;
         q.heap.push(QueueEntry { priority, seq, item });
+        if let Some(depth) = &self.depth_gauge {
+            depth.set(q.heap.len() as u64);
+        }
         drop(q);
         self.available.notify_one();
         Ok(())
@@ -195,6 +221,9 @@ impl<T> BoundedQueue<T> {
         let mut q = self.lock();
         loop {
             if let Some(entry) = q.heap.pop() {
+                if let Some(depth) = &self.depth_gauge {
+                    depth.set(q.heap.len() as u64);
+                }
                 return Some(entry.item);
             }
             if q.closed {
@@ -216,6 +245,9 @@ impl<T> BoundedQueue<T> {
         let mut q = self.lock();
         loop {
             if let Some(entry) = q.heap.pop() {
+                if let Some(depth) = &self.depth_gauge {
+                    depth.set(q.heap.len() as u64);
+                }
                 return PopTimeout::Item(entry.item);
             }
             if q.closed {
@@ -336,6 +368,20 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_with_metrics_mirrors_depth_and_shed() {
+        let q: BoundedQueue<u32> = BoundedQueue::with_metrics(2, "test.workq");
+        q.try_push(0, 1).unwrap();
+        q.try_push(0, 2).unwrap();
+        let shed_before = metrics::snapshot().counter("test.workq.shed");
+        assert!(matches!(q.try_push(0, 3), Err(PushError::Full(3))));
+        let snap = metrics::snapshot();
+        assert_eq!(snap.gauges.get("test.workq.depth"), Some(&2));
+        assert_eq!(snap.counter("test.workq.shed"), shed_before + 1);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(metrics::snapshot().gauges.get("test.workq.depth"), Some(&1));
     }
 
     #[test]

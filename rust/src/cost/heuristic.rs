@@ -314,7 +314,7 @@ mod tests {
                 );
             }
         }
-        let rho = crate::metrics::spearman(&est, &truth);
+        let rho = crate::metrics::spearman(&est, &truth).unwrap();
         assert!(rho > 0.15, "heuristic should be informative pooled, rho={rho}");
     }
 

@@ -46,6 +46,7 @@ use crate::gnn::{self, Bucket, EncodeDelta, EncodeState, GraphTensors};
 use crate::placer::{Objective, ObjectiveFactory, Placement};
 use crate::router::Routing;
 use crate::runtime::{Engine, Tensor};
+use crate::telemetry::{self, metrics};
 use crate::train::ParamStore;
 
 /// Ablation switches (Table III + the annotation-removal claim). All-on is
@@ -168,6 +169,11 @@ pub struct LearnedCost {
     /// keys: the WL canonicalization runs once per distinct structure.
     canon_memo: Mutex<HashMap<u128, u128>>,
     incr: Mutex<IncrCell>,
+    /// Registry mirrors of the shared counters (`learned.*`), cached so the
+    /// scoring hot loop never touches the registry map.
+    m_evaluations: metrics::Counter,
+    m_scoring_errors: metrics::Counter,
+    m_padded_slots: metrics::Counter,
 }
 
 /// The score-cache key namespace component derived from the model itself.
@@ -213,6 +219,9 @@ impl LearnedCost {
             model_fp,
             canon_memo: Mutex::new(HashMap::new()),
             incr: Mutex::new(IncrCell::empty()),
+            m_evaluations: metrics::counter("learned.evaluations"),
+            m_scoring_errors: metrics::counter("learned.scoring_errors"),
+            m_padded_slots: metrics::counter("learned.padded_slots"),
         })
     }
 
@@ -237,6 +246,9 @@ impl LearnedCost {
             model_fp: self.model_fp,
             canon_memo: Mutex::new(HashMap::new()),
             incr: Mutex::new(IncrCell::empty()),
+            m_evaluations: self.m_evaluations.clone(),
+            m_scoring_errors: self.m_scoring_errors.clone(),
+            m_padded_slots: self.m_padded_slots.clone(),
         }
     }
 
@@ -310,6 +322,7 @@ impl LearnedCost {
     }
 
     fn cache_get(&self, key: Option<u128>) -> Option<f64> {
+        let _span = telemetry::span("cache_probe", "score");
         self.score_cache.as_ref()?.get(key?)
     }
 
@@ -356,6 +369,8 @@ impl LearnedCost {
         bucket: Bucket,
         batch: usize,
     ) -> Result<Vec<f64>> {
+        let _span =
+            telemetry::span("gnn_infer", "score").map(|s| s.arg("graphs", graphs.len() as f64));
         let n_params = self.params.len();
         let dynamic = self.engine.supports_dynamic_batch();
         let mut preds = Vec::with_capacity(graphs.len());
@@ -365,13 +380,18 @@ impl LearnedCost {
             // so this is bit-identical to the padded call); fixed-batch
             // backends pad and the wasted slots are counted.
             let eff = if dynamic { chunk.len() } else { batch };
-            self.padded_slots.fetch_add((eff - chunk.len()) as u64, Ordering::Relaxed);
+            let wasted = (eff - chunk.len()) as u64;
+            self.padded_slots.fetch_add(wasted, Ordering::Relaxed);
+            if wasted > 0 {
+                self.m_padded_slots.add(wasted);
+            }
             scratch.inputs.truncate(n_params);
             let batch_tensors = gnn::stack_batch(chunk, bucket, eff)?;
             scratch.inputs.extend(batch_tensors);
             scratch.inputs.push(gnn::flags_tensor(self.ablation.flags()));
             let out = self.engine.infer(bucket, eff, &scratch.inputs)?;
             self.evaluations.fetch_add(1, Ordering::Relaxed);
+            self.m_evaluations.inc();
             preds.extend(out[0].as_f32()?[..chunk.len()].iter().map(|&x| x as f64));
         }
         Ok(preds)
@@ -399,8 +419,9 @@ impl LearnedCost {
     /// masquerade as "every placement scores 0.0".
     fn note_scoring_error(&self, err: &anyhow::Error) {
         let n = self.scoring_errors.fetch_add(1, Ordering::Relaxed) + 1;
+        self.m_scoring_errors.inc();
         if n == 1 || n % 1000 == 0 {
-            eprintln!(
+            crate::log_warn!(
                 "learned-cost: scoring failed ({n} failure(s) so far; returning 0.0): {err:#}"
             );
         }
@@ -434,11 +455,14 @@ impl Objective for LearnedCost {
             cell.staged_len = 0;
             // Arm the live encoding even on a cache hit: subsequent
             // score_moved deltas branch off this base.
-            let armed = match cell.state.take() {
-                Some(mut state) => {
-                    state.reset(graph, fabric, placement, routing).map(|()| state)
+            let armed = {
+                let _span = telemetry::span("encode", "score");
+                match cell.state.take() {
+                    Some(mut state) => {
+                        state.reset(graph, fabric, placement, routing).map(|()| state)
+                    }
+                    None => EncodeState::new(graph, fabric, placement, routing),
                 }
-                None => EncodeState::new(graph, fabric, placement, routing),
             };
             match armed {
                 Ok(state) => cell.state = Some(state),
@@ -470,11 +494,13 @@ impl Objective for LearnedCost {
             }
             let mut scratch = self.lock_scratch();
             let mut slots = scratch.take(bucket, 1);
-            let result = gnn::encode_into(graph, fabric, placement, routing, &mut slots[0])
-                .and_then(|()| {
-                    self.infer_locked(&mut scratch, &[&slots[0]], bucket, 1)
-                        .map(|v| v[0])
-                });
+            let encoded = {
+                let _span = telemetry::span("encode", "score");
+                gnn::encode_into(graph, fabric, placement, routing, &mut slots[0])
+            };
+            let result = encoded.and_then(|()| {
+                self.infer_locked(&mut scratch, &[&slots[0]], bucket, 1).map(|v| v[0])
+            });
             scratch.put(bucket, slots);
             match result {
                 Ok(score) => {
@@ -510,7 +536,10 @@ impl Objective for LearnedCost {
             drop(cell);
             return self.score(graph, fabric, placement, routing);
         };
-        let delta = state.apply_move(graph, fabric, placement, routing, touched, changed_edges);
+        let delta = {
+            let _span = telemetry::span("encode_delta", "score");
+            state.apply_move(graph, fabric, placement, routing, touched, changed_edges)
+        };
         cell.last_delta = Some(delta);
         // The state already advanced, so a cache hit still leaves undo_moved
         // able to revert it.

@@ -289,7 +289,9 @@ pub fn generate(fabric: &Fabric, cfg: &GenConfig, rng: &mut Rng) -> Result<Datas
         skipped += stats.duplicates_skipped;
     }
     if skipped > 0 {
-        eprintln!("dataset generation: skipped {skipped} duplicate (graph, decision) sample(s)");
+        crate::log_info!(
+            "dataset generation: skipped {skipped} duplicate (graph, decision) sample(s)"
+        );
     }
     Ok(Dataset { samples })
 }

@@ -15,9 +15,9 @@ use super::common::{cross_validate, cv_metrics_for, Ctx};
 pub fn run(ctx: &Ctx, folds: usize) -> Result<()> {
     let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
 
-    eprintln!("annotations: training WITH performance annotations");
+    crate::log_info!("annotations: training WITH performance annotations");
     let with = cross_validate(ctx, &ds, folds, Ablation::default())?;
-    eprintln!("annotations: training WITHOUT performance annotations");
+    crate::log_info!("annotations: training WITHOUT performance annotations");
     let without = cross_validate(
         ctx,
         &ds,

@@ -33,12 +33,12 @@ impl Ctx {
     pub fn dataset_cached(&self, path: &str) -> Result<Dataset> {
         if std::path::Path::new(path).exists() {
             let ds = load_dataset(path)?;
-            eprintln!("loaded {} samples from {path}", ds.len());
+            crate::log_info!("loaded {} samples from {path}", ds.len());
             return Ok(ds);
         }
         let fabric = crate::arch::Fabric::new(self.cfg.fabric.clone());
         let t0 = std::time::Instant::now();
-        eprintln!(
+        crate::log_info!(
             "generating {} samples (era={}, workers={}, seed={}) ...",
             self.cfg.dataset.total,
             self.cfg.era.name(),
@@ -46,7 +46,7 @@ impl Ctx {
             self.cfg.seed
         );
         let ds = generate_parallel(&fabric, &self.cfg.dataset, self.cfg.seed, self.cfg.workers)?;
-        eprintln!("generated {} samples in {:.1}s", ds.len(), t0.elapsed().as_secs_f64());
+        crate::log_info!("generated {} samples in {:.1}s", ds.len(), t0.elapsed().as_secs_f64());
         save_dataset(&ds, path)?;
         Ok(ds)
     }
@@ -60,16 +60,20 @@ impl Ctx {
         for r in rows {
             writeln!(f, "{r}")?;
         }
-        eprintln!("wrote {path:?}");
+        crate::log_info!("wrote {path:?}");
         Ok(())
     }
 }
 
-/// RE + Spearman of the stored heuristic predictions on `indices`.
+/// RE + Spearman of the stored heuristic predictions on `indices`
+/// (`NaN`s on an empty index set — the metrics are undefined there).
 pub fn heuristic_metrics(ds: &Dataset, indices: &[usize]) -> (f64, f64) {
     let pred: Vec<f64> = indices.iter().map(|&i| ds.samples[i].heuristic_pred as f64).collect();
     let truth: Vec<f64> = indices.iter().map(|&i| ds.samples[i].label() as f64).collect();
-    (metrics::relative_error(&pred, &truth), metrics::spearman(&pred, &truth))
+    (
+        metrics::relative_error(&pred, &truth).unwrap_or(f64::NAN),
+        metrics::spearman(&pred, &truth).unwrap_or(f64::NAN),
+    )
 }
 
 /// K-fold cross-validated GNN metrics: trains one model per fold.
@@ -88,7 +92,7 @@ pub fn cross_validate(
 ) -> Result<CvResult> {
     let splits = metrics::kfold(ds.len(), folds, ctx.cfg.seed ^ 0xF01D);
     let tcfg = &ctx.cfg.train;
-    eprintln!(
+    crate::log_info!(
         "  training {folds} folds x {} epochs (batch {}, {} kernels, {} worker(s))",
         tcfg.epochs,
         tcfg.batch,
@@ -103,7 +107,7 @@ pub fn cross_validate(
         let rep = trainer.fit(ds, &train_idx)?;
         train_seconds += rep.wall_seconds;
         let preds = trainer.predict(ds, &test_idx)?;
-        eprintln!(
+        crate::log_info!(
             "  fold {}/{folds}: train mse {:.5} ({:.1}s)",
             fi + 1,
             rep.final_train_loss,
@@ -135,8 +139,8 @@ pub fn cv_metrics_for(
         return (f64::NAN, f64::NAN, 0);
     }
     (
-        metrics::relative_error(&preds, &truth),
-        metrics::spearman(&preds, &truth),
+        metrics::relative_error(&preds, &truth).unwrap_or(f64::NAN),
+        metrics::spearman(&preds, &truth).unwrap_or(f64::NAN),
         preds.len(),
     )
 }
@@ -161,8 +165,8 @@ pub fn heuristic_metrics_for(
         return (f64::NAN, f64::NAN, 0);
     }
     (
-        metrics::relative_error(&preds, &truth),
-        metrics::spearman(&preds, &truth),
+        metrics::relative_error(&preds, &truth).unwrap_or(f64::NAN),
+        metrics::spearman(&preds, &truth).unwrap_or(f64::NAN),
         preds.len(),
     )
 }

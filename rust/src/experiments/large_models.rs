@@ -21,15 +21,15 @@ use super::common::Ctx;
 pub fn trained_store(ctx: &Ctx) -> Result<ParamStore> {
     let ckpt = format!("results/gnn_{}.ckpt", ctx.cfg.era.name());
     if std::path::Path::new(&ckpt).exists() {
-        eprintln!("loading trained model from {ckpt}");
+        crate::log_info!("loading trained model from {ckpt}");
         return ParamStore::load(&ckpt);
     }
     let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
-    eprintln!("training cost model on {} samples ...", ds.len());
+    crate::log_info!("training cost model on {} samples ...", ds.len());
     let mut trainer = Trainer::new(ctx.engine.clone(), ctx.cfg.train.clone())?;
     let all: Vec<usize> = (0..ds.len()).collect();
     let rep = trainer.fit(&ds, &all)?;
-    eprintln!("trained in {:.1}s (final mse {:.5})", rep.wall_seconds, rep.final_train_loss);
+    crate::log_info!("trained in {:.1}s (final mse {:.5})", rep.wall_seconds, rep.final_train_loss);
     let store = trainer.param_store();
     store.save(&ckpt)?;
     Ok(store)
@@ -57,24 +57,24 @@ pub fn compile_both(
         cache_path: ctx.cfg.cache_path.clone(),
     };
     let heuristic = HeuristicCost::new();
-    eprintln!(
+    crate::log_info!(
         "  compiling {} with heuristic ({} workers) ...",
         graph.name,
         cfg.workers.max(1)
     );
     let rep_h = compile(graph, &fabric, &heuristic, &cfg)?;
     if cfg.cache {
-        eprintln!("    cache: {}", rep_h.cache.summary());
+        crate::log_info!("    cache: {}", rep_h.cache.summary());
     }
     let learned = LearnedCost::from_store(ctx.engine.clone(), store, Ablation::default())?;
-    eprintln!(
+    crate::log_info!(
         "  compiling {} with learned model ({} workers sharing one engine) ...",
         graph.name,
         cfg.workers.max(1)
     );
     let rep_l = compile(graph, &fabric, &learned, &cfg)?;
     if cfg.cache {
-        eprintln!("    cache: {}", rep_l.cache.summary());
+        crate::log_info!("    cache: {}", rep_l.cache.summary());
     }
     Ok(ModelResult { model: graph.name.clone(), heuristic: rep_h, learned: rep_l })
 }

@@ -23,7 +23,7 @@ use super::common::Ctx;
 
 pub fn run(ctx: &Ctx, trials: usize) -> Result<()> {
     let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
-    eprintln!("micro-pnr: training the cost model on {} samples", ds.len());
+    crate::log_info!("micro-pnr: training the cost model on {} samples", ds.len());
     let mut trainer = Trainer::new(ctx.engine.clone(), ctx.cfg.train.clone())?;
     let all: Vec<usize> = (0..ds.len()).collect();
     trainer.fit(&ds, &all)?;

@@ -17,7 +17,7 @@ use super::common::{cross_validate, cv_metrics_for, heuristic_metrics_for, Ctx};
 
 pub fn run(ctx: &Ctx, folds: usize) -> Result<()> {
     let ds = ctx.dataset_cached(&format!("results/dataset_{}.bin", ctx.cfg.era.name()))?;
-    eprintln!("quality: {} samples, {folds}-fold CV", ds.len());
+    crate::log_info!("quality: {} samples, {folds}-fold CV", ds.len());
 
     let cv = cross_validate(ctx, &ds, folds, Ablation::default())?;
 

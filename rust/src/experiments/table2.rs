@@ -31,7 +31,7 @@ pub fn run(ctx_template: &Ctx, folds: usize, seq: u64, blocks: Option<u64>) -> R
         cfg.era = era;
         cfg.dataset.era = era;
         let ctx = Ctx::new(cfg)?;
-        eprintln!(
+        crate::log_info!(
             "== era {} ({} compile workers, {} restart(s)/subgraph) ==",
             era.name(),
             ctx.cfg.workers.max(1),

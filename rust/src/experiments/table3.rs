@@ -26,7 +26,7 @@ pub fn run(ctx: &Ctx, folds: usize) -> Result<()> {
     println!("              MLP     FFN     MHA        MLP     FFN     MHA");
     let mut rows = Vec::new();
     for (name, ablation) in configs {
-        eprintln!("table3: training config {name:?}");
+        crate::log_info!("table3: training config {name:?}");
         let cv = cross_validate(ctx, &ds, folds, ablation)?;
         let mut res = Vec::new();
         let mut ranks = Vec::new();

@@ -45,6 +45,7 @@ pub mod router;
 pub mod runtime;
 pub mod service;
 pub mod sim;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 
@@ -74,6 +75,10 @@ USAGE: rdacost <subcommand> [options]
              [--expect-no-shed] [--expect-cache-hits]
                                 compile service under generated traffic
   serve-demo [--clients N] [--requests N]          scoring-service demo
+  trace      check FILE        validate an exported Chrome trace-event JSON
+                               (balanced begin/end spans, monotonic
+                               timestamps, typed fields) — the jq-free gate
+                               CI runs on smoke-test traces
 
 Common options:
   --config FILE     TOML config (see rust/src/config)
@@ -126,6 +131,18 @@ Common options:
                     bitwise-equal, so this is an A/B perf lever ([train]
                     fused)
   --quick           CI-speed profile: small corpus, few epochs, short anneals
+  --trace FILE      capture a structured trace of the run and write Chrome
+                    trace-event JSON to FILE ([run] trace, or the
+                    RDACOST_TRACE env var); load it in chrome://tracing or
+                    ui.perfetto.dev, validate with `rdacost trace check`.
+                    Tracing defaults off and is observation-only — results
+                    are bit-identical with it on or off (see README
+                    \"Observability\")
+
+Environment:
+  RDACOST_TRACE     default trace output path (same as --trace)
+  RDACOST_LOG       stderr log level: error|warn|info|debug (default info)
+  RDACOST_KERNEL    default kernel selection (same as --kernel)
 
 Serve options (compile-as-a-service; see README \"Compile service\"):
   --rate R          target arrivals per second (default 20)
@@ -162,6 +179,7 @@ pub fn cli_main(args: &Args) -> Result<()> {
         Some("bench") => cmd_bench(args),
         Some("serve") => cmd_serve(args),
         Some("serve-demo") => cmd_serve_demo(args),
+        Some("trace") => cmd_trace(args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -202,6 +220,10 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
             anyhow::anyhow!("--kernel must be auto|scalar|simd|portable, got {k:?}")
         })?;
     }
+    // Trace capture (observation-only; CLI > config > RDACOST_TRACE).
+    if let Some(path) = args.get("trace") {
+        cfg.trace = Some(path.to_string());
+    }
     cfg.dataset.total = args.get_usize("total", cfg.dataset.total);
     cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
     cfg.train.workers = args.get_usize("train-workers", cfg.train.workers);
@@ -236,8 +258,64 @@ fn run_config(args: &Args) -> Result<config::RunConfig> {
     Ok(cfg)
 }
 
+/// Begin a trace capture when the run config asks for one; the returned
+/// path is handed back to [`finish_trace`] at the end of the command.
+fn arm_trace(cfg: &config::RunConfig) -> Option<String> {
+    cfg.trace.as_ref().map(|path| {
+        telemetry::trace::begin_capture();
+        path.clone()
+    })
+}
+
+/// End an armed capture and write the Chrome trace-event JSON.
+fn finish_trace(armed: Option<String>) -> Result<()> {
+    let Some(path) = armed else { return Ok(()) };
+    let records = telemetry::trace::end_capture();
+    let doc = telemetry::trace::export_json(&records);
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).map_or(0, |a| a.len());
+    std::fs::write(&path, doc.to_string())?;
+    println!("trace -> {path} ({events} event(s))");
+    Ok(())
+}
+
+/// The `metrics` text block every entry point appends: one stable-schema
+/// snapshot of the global registry (omitted while nothing registered).
+fn print_metrics_block() {
+    let snap = telemetry::metrics::snapshot();
+    if !snap.is_empty() {
+        print!("{}", snap.render());
+    }
+}
+
+/// `trace check FILE` — parse and validate an exported trace so CI can gate
+/// on trace health without jq.
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("check") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: rdacost trace check FILE"))?;
+            let text = std::fs::read_to_string(path)?;
+            let doc = util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let report = telemetry::trace::check(&doc)
+                .map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e}"))?;
+            println!("{path}: {}", report.render());
+            Ok(())
+        }
+        _ => bail!("usage: rdacost trace check FILE"),
+    }
+}
+
 fn cmd_smoke(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
     // The backend's parameter layout must match the shared schema contract.
     let want = gnn::schema::param_specs();
@@ -261,11 +339,14 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     }
     println!("parameters: {} tensors / {elements} elements", got.len());
     println!("schema: OK");
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let out = args.get_or("out", "results/dataset.bin").to_string();
     let fabric = arch::Fabric::new(cfg.fabric.clone());
     let t0 = std::time::Instant::now();
@@ -277,11 +358,14 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         cfg.era.name(),
         t0.elapsed().as_secs_f64()
     );
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt").to_string();
     let ds = data::load_dataset(ds_path)?;
@@ -306,11 +390,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         rep.final_train_loss,
         rep.final_train_loss.to_bits()
     );
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let ds_path = args.get_or("dataset", "results/dataset.bin");
     let ckpt = args.get_or("ckpt", "results/gnn.ckpt");
     let ds = data::load_dataset(ds_path)?;
@@ -323,11 +410,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     println!("on {} samples:", eval.count);
     println!("  GNN       RE {:.3}  rank {:.3}", eval.relative_error, eval.spearman);
     println!("  heuristic RE {h_re:.3}  rank {h_rank:.3}");
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let model = args
         .get("model")
         .ok_or_else(|| anyhow::anyhow!("--model required"))?;
@@ -422,6 +512,9 @@ fn cmd_compile(args: &Args) -> Result<()> {
     if let Some(sc) = &report.score_cache {
         println!("  score cache: {}", sc.summary());
     }
+    print!("{}", report.phase_profile.render());
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }
 
@@ -433,6 +526,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .ok_or_else(|| anyhow::anyhow!("bench needs a target: table1|fig2|table3|table2|micro-pnr|large-models|annotations"))?;
     let folds = args.get_usize("folds", 5);
+    let trace = arm_trace(&cfg);
     let ctx = experiments::common::Ctx::new(cfg)?;
     let seq = args.get_u64("seq", 32);
     // Default to truncated large models (4 blocks) unless --full-models.
@@ -441,7 +535,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     } else {
         Some(args.get_u64("blocks", 4))
     };
-    match which {
+    let result = match which {
         // Table I and Fig 2 share one CV pass; either name runs both.
         "table1" | "fig2" | "quality" => experiments::quality::run(&ctx, folds),
         "table3" => experiments::table3::run(&ctx, folds),
@@ -450,7 +544,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "large-models" => experiments::large_models::run(&ctx, seq, blocks),
         "table2" => experiments::table2::run(&ctx, folds, seq, blocks),
         other => bail!("unknown bench target {other:?}"),
-    }
+    };
+    finish_trace(trace)?;
+    print_metrics_block();
+    result
 }
 
 /// The shareable objective for a compile service, per `--cost`.
@@ -474,6 +571,7 @@ fn serve_objective(
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let rate = args.get_f64("rate", 20.0);
     let duration = std::time::Duration::from_secs_f64(args.get_f64("duration", 10.0));
     let zipf = match args.get("zipf") {
@@ -565,6 +663,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(out, j.to_pretty())?;
         println!("summary -> {out}");
     }
+    // The trace and metrics must land even when an --expect-* assertion is
+    // about to fail the run — CI uploads them for the post-mortem.
+    finish_trace(trace)?;
+    print_metrics_block();
     if args.flag("expect-no-shed") && summary.shed > 0 {
         bail!(
             "expected zero shed requests, got {} (queue depth {queue_depth} too small \
@@ -583,6 +685,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_serve_demo(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let trace = arm_trace(&cfg);
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 64);
     let engine = runtime::engine_with_kernel(&cfg.artifacts_dir, cfg.kernel)?;
@@ -631,5 +734,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         total / dt,
         service.stats.occupancy(32)
     );
+    finish_trace(trace)?;
+    print_metrics_block();
     Ok(())
 }

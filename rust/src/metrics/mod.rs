@@ -2,15 +2,17 @@
 //! **Spearman rank correlation** under 5-fold cross-validation (§IV-A-b).
 
 /// Mean relative error `mean(|pred - truth| / max(|truth|, eps))`.
-pub fn relative_error(pred: &[f64], truth: &[f64]) -> f64 {
-    assert_eq!(pred.len(), truth.len());
-    assert!(!pred.is_empty());
+///
+/// `None` when the slices are empty or their lengths differ — the metric is
+/// undefined there, and the old panicking contract turned "no held-out
+/// samples" into a crash deep inside an experiment sweep.
+pub fn relative_error(pred: &[f64], truth: &[f64]) -> Option<f64> {
+    if pred.is_empty() || pred.len() != truth.len() {
+        return None;
+    }
     let eps = 1e-9;
-    pred.iter()
-        .zip(truth)
-        .map(|(p, t)| (p - t).abs() / t.abs().max(eps))
-        .sum::<f64>()
-        / pred.len() as f64
+    let sum: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t).abs() / t.abs().max(eps)).sum();
+    Some(sum / pred.len() as f64)
 }
 
 /// Fractional ranks with ties averaged (midranks), as Spearman requires.
@@ -59,8 +61,14 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 }
 
 /// Spearman rank correlation (Pearson over midranks; handles ties).
-pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
-    pearson(&ranks(xs), &ranks(ys))
+///
+/// `None` when the slices are empty or their lengths differ (same contract
+/// as [`relative_error`]).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.len() != ys.len() {
+        return None;
+    }
+    Some(pearson(&ranks(xs), &ranks(ys)))
 }
 
 /// Deterministic k-fold split: returns `k` (train, test) index partitions of
@@ -106,30 +114,38 @@ mod tests {
     #[test]
     fn re_zero_on_perfect() {
         let t = [0.5, 0.9, 0.1];
-        assert_eq!(relative_error(&t, &t), 0.0);
+        assert_eq!(relative_error(&t, &t), Some(0.0));
     }
 
     #[test]
     fn re_scales() {
         let pred = [1.1];
         let truth = [1.0];
-        assert!((relative_error(&pred, &truth) - 0.1).abs() < 1e-12);
+        assert!((relative_error(&pred, &truth).unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn re_and_spearman_undefined_on_empty_or_mismatch() {
+        assert_eq!(relative_error(&[], &[]), None);
+        assert_eq!(relative_error(&[1.0], &[1.0, 2.0]), None);
+        assert_eq!(spearman(&[], &[]), None);
+        assert_eq!(spearman(&[1.0], &[1.0, 2.0]), None);
     }
 
     #[test]
     fn spearman_perfect_monotone() {
         let x = [1.0, 2.0, 3.0, 4.0];
         let y = [10.0, 20.0, 25.0, 100.0]; // monotone, nonlinear
-        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!((spearman(&x, &y).unwrap() - 1.0).abs() < 1e-12);
         let yrev = [100.0, 25.0, 20.0, 10.0];
-        assert!((spearman(&x, &yrev) + 1.0).abs() < 1e-12);
+        assert!((spearman(&x, &yrev).unwrap() + 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn spearman_with_ties() {
         let x = [1.0, 1.0, 2.0, 3.0];
         let y = [1.0, 1.0, 2.0, 3.0];
-        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!((spearman(&x, &y).unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -137,7 +153,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(7);
         let x: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
         let y: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
-        assert!(spearman(&x, &y).abs() < 0.08);
+        assert!(spearman(&x, &y).unwrap().abs() < 0.08);
     }
 
     #[test]

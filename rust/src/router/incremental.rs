@@ -147,6 +147,8 @@ impl RoutingState {
         placement: &Placement,
         moved: &[NodeId],
     ) -> Result<RouteDelta> {
+        let _span = crate::telemetry::span("route_delta", "route")
+            .map(|s| s.arg("moved", moved.len() as f64));
         // Gather incident edges off the DFG's per-node adjacency —
         // O(deg(moved)), not a full-graph scan.
         let mut affected: Vec<usize> = Vec::new();

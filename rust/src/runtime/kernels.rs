@@ -91,7 +91,7 @@ impl KernelKind {
     pub fn from_env() -> KernelKind {
         match std::env::var("RDACOST_KERNEL") {
             Ok(v) => KernelKind::parse(&v).unwrap_or_else(|| {
-                eprintln!(
+                crate::log_warn!(
                     "RDACOST_KERNEL={v} not recognized (want auto|scalar|simd|portable); \
                      falling back to auto"
                 );

@@ -44,6 +44,8 @@ use crate::compiler::{CompileConfig, CompileReport, CompileSession};
 use crate::coordinator::{BoundedQueue, PushError};
 use crate::dfg::Dfg;
 use crate::placer::ObjectiveFactory;
+use crate::telemetry::metrics::{self, MetricsSnapshot};
+use crate::telemetry::trace;
 use crate::util::json::Json;
 
 pub mod histogram;
@@ -175,6 +177,8 @@ struct QueuedRequest {
 }
 
 /// Counters + histograms shared by workers, the reporter, and the summary.
+/// Each per-instance value also mirrors into the global metrics registry
+/// under `serve.*` (handles cached here, so recording stays one atomic op).
 struct ServeStats {
     submitted: AtomicU64,
     completed: AtomicU64,
@@ -183,6 +187,13 @@ struct ServeStats {
     compile_errors: AtomicU64,
     queue_wait: Mutex<LatencyHistogram>,
     latency: Mutex<LatencyHistogram>,
+    m_submitted: metrics::Counter,
+    m_completed: metrics::Counter,
+    m_shed: metrics::Counter,
+    m_expired: metrics::Counter,
+    m_compile_errors: metrics::Counter,
+    m_queue_wait: metrics::Histogram,
+    m_latency: metrics::Histogram,
 }
 
 impl ServeStats {
@@ -195,6 +206,13 @@ impl ServeStats {
             compile_errors: AtomicU64::new(0),
             queue_wait: Mutex::new(LatencyHistogram::new()),
             latency: Mutex::new(LatencyHistogram::new()),
+            m_submitted: metrics::counter("serve.submitted"),
+            m_completed: metrics::counter("serve.completed"),
+            m_shed: metrics::counter("serve.shed"),
+            m_expired: metrics::counter("serve.expired"),
+            m_compile_errors: metrics::counter("serve.compile_errors"),
+            m_queue_wait: metrics::histogram("serve.queue_wait"),
+            m_latency: metrics::histogram("serve.latency"),
         }
     }
 
@@ -203,12 +221,14 @@ impl ServeStats {
         if let Ok(mut h) = self.queue_wait.lock() {
             h.record(d);
         }
+        self.m_queue_wait.record(d);
     }
 
     fn record_latency(&self, d: Duration) {
         if let Ok(mut h) = self.latency.lock() {
             h.record(d);
         }
+        self.m_latency.record(d);
     }
 }
 
@@ -246,7 +266,7 @@ impl CompileService {
             fabric,
             objective,
             compile_cfg: cfg.compile.clone(),
-            queue: BoundedQueue::new(cfg.queue_depth),
+            queue: BoundedQueue::with_metrics(cfg.queue_depth, "serve.queue"),
             cache,
             stats: ServeStats::new(),
             finished_seq: AtomicU64::new(0),
@@ -283,6 +303,7 @@ impl CompileService {
         req: CompileRequest,
     ) -> std::result::Result<CompileTicket, ServeError> {
         self.shared.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.stats.m_submitted.inc();
         let (tx, rx) = mpsc::channel();
         let queued = QueuedRequest {
             graph: req.graph,
@@ -292,8 +313,11 @@ impl CompileService {
         };
         match self.shared.queue.try_push(req.priority, queued) {
             Ok(()) => Ok(CompileTicket { rx }),
-            Err(PushError::Full(_)) => {
+            Err(PushError::Full(shed)) => {
                 self.shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                self.shared.stats.m_shed.inc();
+                let now = Instant::now();
+                trace::record_complete("request.shed", "serve", shed.submitted, now, &[]);
                 Err(ServeError::QueueFull { depth: self.shared.queue.capacity() })
             }
             Err(PushError::Closed(_)) => Err(ServeError::ShutDown),
@@ -350,6 +374,7 @@ impl CompileService {
             cache: self.cache_snapshot(),
             score_cache: self.shared.objective.score_cache_stats(),
             kernel: self.shared.objective.kernel_variant(),
+            metrics: metrics::snapshot(),
         }
     }
 
@@ -384,11 +409,14 @@ impl Drop for CompileService {
 
 fn worker_loop(shared: &Shared) {
     while let Some(req) = shared.queue.pop() {
-        let waited = req.submitted.elapsed();
+        let dequeued = Instant::now();
+        let waited = dequeued.saturating_duration_since(req.submitted);
         shared.stats.record_queue_wait(waited);
+        trace::record_complete("request.queued", "serve", req.submitted, dequeued, &[]);
         let result = match req.deadline {
             Some(deadline) if waited >= deadline => {
                 shared.stats.expired.fetch_add(1, Ordering::Relaxed);
+                shared.stats.m_expired.inc();
                 Err(ServeError::DeadlineExpired { waited_ms: waited.as_millis() as u64 })
             }
             _ => {
@@ -400,20 +428,35 @@ fn worker_loop(shared: &Shared) {
                 ) {
                     Ok(report) => {
                         shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.m_completed.inc();
                         Ok(report)
                     }
                     Err(e) => {
                         shared.stats.compile_errors.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.m_compile_errors.inc();
                         Err(ServeError::Compile(format!("{e:#}")))
                     }
                 }
             }
         };
-        let total_latency = req.submitted.elapsed();
+        let finished = Instant::now();
+        let total_latency = finished.saturating_duration_since(req.submitted);
         if result.is_ok() {
             // Only served compiles shape the latency distribution; expired
             // and failed requests are counted, not mixed into quantiles.
             shared.stats.record_latency(total_latency);
+        }
+        if trace::enabled() {
+            // One X event per answered request, named by outcome, spanning
+            // submit → answer so overlap across workers stays visible.
+            let outcome = match &result {
+                Ok(_) => "request.served",
+                Err(ServeError::DeadlineExpired { .. }) => "request.expired",
+                Err(_) => "request.error",
+            };
+            let queue_wait_us = waited.as_micros().min(u64::MAX as u128) as f64;
+            let args = [("queue_wait_us", queue_wait_us)];
+            trace::record_complete(outcome, "serve", req.submitted, finished, &args);
         }
         let finished_seq = shared.finished_seq.fetch_add(1, Ordering::SeqCst);
         // A caller that dropped its ticket just doesn't read the answer.
@@ -450,14 +493,21 @@ fn reporter_loop(shared: &Shared, stop: &(Mutex<bool>, Condvar), every: Duration
             .score_cache_stats()
             .map(|s| format!(" score_cache_hit_rate={:.2}", s.hit_rate()))
             .unwrap_or_default();
-        eprintln!(
-            "serve: queued={} completed={} shed={} expired={} p50={:.1}ms p99={:.1}ms{}{}",
+        // Queue pressure + scoring-dispatcher counters come from the global
+        // registry, so the line reflects every subsystem in the process.
+        let snap = metrics::snapshot();
+        crate::log_info!(
+            "serve: queued={}/{} completed={} shed={} expired={} p50={:.1}ms p99={:.1}ms \
+             deadline_flushes={} scoring_errors={}{}{}",
             shared.queue.len(),
+            shared.queue.capacity(),
             stats.completed.load(Ordering::Relaxed),
             stats.shed.load(Ordering::Relaxed),
             stats.expired.load(Ordering::Relaxed),
             latency.p50_ms(),
             latency.p99_ms(),
+            snap.counter("scoring.deadline_flushes"),
+            snap.counter("scoring.errors"),
             cache_line,
             score_line,
         );
@@ -488,6 +538,9 @@ pub struct ServeSummary {
     /// Provenance for the perf numbers — results are bit-identical across
     /// variants.
     pub kernel: Option<&'static str>,
+    /// Point-in-time copy of the global metrics registry (`serve.*`,
+    /// `compile.*`, `scoring.*`, ...), taken when the summary was built.
+    pub metrics: MetricsSnapshot,
 }
 
 impl ServeSummary {
@@ -542,7 +595,7 @@ impl ServeSummary {
         if let Some(k) = self.kernel {
             j = j.set("kernel", k);
         }
-        j
+        j.set("metrics", self.metrics.to_json())
     }
 
     /// One-line human rendering for CLI output.

@@ -1,0 +1,219 @@
+//! Leveled stderr logging: `log_error!` / `log_warn!` / `log_info!` /
+//! `log_debug!` macros replacing the raw `eprintln!` sites.
+//!
+//! Two properties the ad-hoc prints lacked:
+//!
+//! * **Atomic lines.** Each log statement formats into one buffer and
+//!   issues one locked `write_all`, so worker threads (compile session,
+//!   service workers, scoring dispatcher) stop interleaving torn lines.
+//! * **Filtering.** `RDACOST_LOG=error|warn|info|debug` (default `info`)
+//!   picks the maximum level; disabled levels cost one relaxed atomic load
+//!   at the macro site, before any formatting.
+//!
+//! `error`/`warn` lines carry an `error:`/`warn:` prefix; `info`/`debug`
+//! print bare, preserving the exact output existing CI greps and tests
+//! match (e.g. the train smoke's `epoch` banner lines).
+//!
+//! [`RateLimited`] generalizes `LearnedCost`'s scoring-error throttle: the
+//! first occurrence and every Nth after it pass, everything else is
+//! suppressed but still counted.
+
+use std::fmt;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Log severity; smaller is more severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel meaning "not initialized yet" — real values are 0..=3.
+const UNSET: u8 = u8::MAX;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn init_level() -> u8 {
+    let lvl = std::env::var("RDACOST_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Force the maximum level (tests; overrides `RDACOST_LOG`).
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether `level` would print. One relaxed load on the steady state.
+#[inline]
+pub fn level_enabled(level: Level) -> bool {
+    let mut max = MAX_LEVEL.load(Ordering::Relaxed);
+    if max == UNSET {
+        max = init_level();
+    }
+    level as u8 <= max
+}
+
+/// Format and emit one log line (used via the `log_*!` macros, not
+/// directly). The line is assembled in full, then written with the stderr
+/// lock held so concurrent workers never tear it.
+pub fn write(level: Level, args: fmt::Arguments<'_>) {
+    if !level_enabled(level) {
+        return;
+    }
+    let prefix = match level {
+        Level::Error => "error: ",
+        Level::Warn => "warn: ",
+        Level::Info | Level::Debug => "",
+    };
+    let mut line = String::with_capacity(prefix.len() + 80);
+    line.push_str(prefix);
+    if fmt::write(&mut line, args).is_err() {
+        return;
+    }
+    line.push('\n');
+    let stderr = std::io::stderr();
+    let mut handle = stderr.lock();
+    let _ = handle.write_all(line.as_bytes());
+}
+
+/// Log at error level (prefixed `error:`; always on unless filtered out).
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+/// Log at warn level (prefixed `warn:`).
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+/// Log at info level (bare line — the default verbosity).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at debug level (bare line; off by default, `RDACOST_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+/// Pass/suppress throttle for high-frequency failure paths: [`tick`]
+/// returns `Some(n)` (the 1-based occurrence count) on the first call and
+/// every `every`-th after it, `None` otherwise. Thread-safe, allocation
+/// free.
+///
+/// ```
+/// use rdacost::telemetry::log::RateLimited;
+/// static ERRORS: RateLimited = RateLimited::new(1000);
+/// if let Some(n) = ERRORS.tick() {
+///     eprintln!("scoring failed ({n} so far)");
+/// }
+/// ```
+///
+/// [`tick`]: RateLimited::tick
+#[derive(Debug)]
+pub struct RateLimited {
+    every: u64,
+    count: AtomicU64,
+}
+
+impl RateLimited {
+    pub const fn new(every: u64) -> RateLimited {
+        RateLimited { every: if every == 0 { 1 } else { every }, count: AtomicU64::new(0) }
+    }
+
+    /// Count an occurrence; `Some(total)` if this one should be logged.
+    pub fn tick(&self) -> Option<u64> {
+        let n = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+        if n == 1 || n % self.every == 0 {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Total occurrences counted so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" warning "), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn level_ordering_filters() {
+        set_max_level(Level::Warn);
+        assert!(level_enabled(Level::Error));
+        assert!(level_enabled(Level::Warn));
+        assert!(!level_enabled(Level::Info));
+        assert!(!level_enabled(Level::Debug));
+        set_max_level(Level::Debug);
+        assert!(level_enabled(Level::Debug));
+        // Restore the default so parallel tests keep their expected output.
+        set_max_level(Level::Info);
+    }
+
+    #[test]
+    fn rate_limit_first_and_every_nth() {
+        let rl = RateLimited::new(10);
+        assert_eq!(rl.tick(), Some(1));
+        for n in 2..10 {
+            assert_eq!(rl.tick(), None, "occurrence {n} should be suppressed");
+        }
+        assert_eq!(rl.tick(), Some(10));
+        for _ in 11..20 {
+            assert_eq!(rl.tick(), None);
+        }
+        assert_eq!(rl.tick(), Some(20));
+        assert_eq!(rl.count(), 20);
+    }
+
+    #[test]
+    fn rate_limit_every_zero_is_every_one() {
+        let rl = RateLimited::new(0);
+        assert_eq!(rl.tick(), Some(1));
+        assert_eq!(rl.tick(), Some(2));
+    }
+}

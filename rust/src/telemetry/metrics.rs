@@ -1,0 +1,276 @@
+//! Global typed metrics registry: named counters, gauges, and latency
+//! histograms with one deterministic snapshot schema.
+//!
+//! The per-subsystem stats structs (`ServeStats`, scoring's `ServiceStats`,
+//! cache counters, `LearnedCost`'s evaluation counters) keep their local
+//! atomics — per-instance tests depend on them — and additionally publish
+//! into this registry at the same increment sites. Registry values are
+//! therefore **process-global cumulative**: two compile sessions in one
+//! process add into the same `compile.subgraphs` counter, which is exactly
+//! the semantics a scrape endpoint wants.
+//!
+//! Handles are cheap `Arc` clones; hot paths fetch them once (e.g.
+//! `BoundedQueue` caches its depth gauge at construction) so steady-state
+//! recording is a single atomic op, never a registry-map lock.
+//!
+//! Snapshots ([`snapshot`]) iterate `BTreeMap`s, so rendering order — in the
+//! `metrics` text block every CLI entry point prints, and in the `metrics`
+//! object inside `ServeSummary` JSON — is alphabetical and stable across
+//! runs and worker counts (pinned by `rust/tests/telemetry.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::service::{HistogramSummary, LatencyHistogram};
+use crate::util::json::Json;
+
+/// Monotone counter.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, worker count).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared latency histogram (µs, log-linear buckets — see
+/// [`crate::service::LatencyHistogram`]).
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.lock().record(d);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.lock().record_us(us);
+    }
+
+    pub fn summary(&self) -> HistogramSummary {
+        self.lock().summary()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, LatencyHistogram> {
+        match self.0.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Mutex<LatencyHistogram>>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Get-or-create the counter registered under `name`.
+pub fn counter(name: &str) -> Counter {
+    let mut map = lock(&registry().counters);
+    Counter(Arc::clone(map.entry(name.to_string()).or_default()))
+}
+
+/// Get-or-create the gauge registered under `name`.
+pub fn gauge(name: &str) -> Gauge {
+    let mut map = lock(&registry().gauges);
+    Gauge(Arc::clone(map.entry(name.to_string()).or_default()))
+}
+
+/// Get-or-create the histogram registered under `name`.
+pub fn histogram(name: &str) -> Histogram {
+    let mut map = lock(&registry().histograms);
+    Histogram(Arc::clone(
+        map.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(LatencyHistogram::new()))),
+    ))
+}
+
+/// Point-in-time copy of every registered metric, in stable (alphabetical)
+/// order. This is the one schema all surfaces render: the CLI `metrics`
+/// text block, `ServeSummary.metrics` JSON, and the bench reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistogramSummary>,
+}
+
+impl MetricsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Counter value, 0 if never registered.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Per-counter increase since `earlier` (saturating, since counters are
+    /// monotone). The registry-determinism test compares deltas across
+    /// worker counts.
+    pub fn counter_deltas(&self, earlier: &MetricsSnapshot) -> BTreeMap<String, u64> {
+        self.counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), v.saturating_sub(earlier.counter(k))))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, &v) in &self.counters {
+            counters = counters.set(k, v);
+        }
+        let mut gauges = Json::obj();
+        for (k, &v) in &self.gauges {
+            gauges = gauges.set(k, v);
+        }
+        let mut hists = Json::obj();
+        for (k, s) in &self.histograms {
+            hists = hists.set(
+                k,
+                Json::obj()
+                    .set("count", s.count)
+                    .set("p50_us", s.p50_us)
+                    .set("p95_us", s.p95_us)
+                    .set("p99_us", s.p99_us)
+                    .set("mean_us", s.mean_us)
+                    .set("max_us", s.max_us),
+            );
+        }
+        Json::obj().set("counters", counters).set("gauges", gauges).set("histograms", hists)
+    }
+
+    /// The `metrics` text block appended to CLI output: one `name = value`
+    /// line per metric, alphabetical.
+    pub fn render(&self) -> String {
+        let mut out = String::from("metrics:\n");
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("  {k} = {v}\n"));
+        }
+        for (k, s) in &self.histograms {
+            out.push_str(&format!(
+                "  {k} = count {} p50 {}us p99 {}us max {}us\n",
+                s.count, s.p50_us, s.p99_us, s.max_us
+            ));
+        }
+        out
+    }
+}
+
+/// Snapshot every registered metric.
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    let counters =
+        lock(&reg.counters).iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect();
+    let gauges =
+        lock(&reg.gauges).iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect();
+    let histograms = lock(&reg.histograms)
+        .iter()
+        .map(|(k, v)| {
+            let h = match v.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            (k.clone(), h.summary())
+        })
+        .collect();
+    MetricsSnapshot { counters, gauges, histograms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share_by_name() {
+        let a = counter("test.metrics.counter_a");
+        let b = counter("test.metrics.counter_a");
+        let before = a.get();
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), before + 5, "same name must share the cell");
+        assert!(snapshot().counter("test.metrics.counter_a") >= before + 5);
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins() {
+        let g = gauge("test.metrics.gauge");
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(snapshot().gauges.get("test.metrics.gauge"), Some(&3));
+    }
+
+    #[test]
+    fn histograms_summarize() {
+        let h = histogram("test.metrics.hist");
+        h.record_us(100);
+        h.record(Duration::from_micros(300));
+        let s = snapshot().histograms.get("test.metrics.hist").copied().unwrap();
+        assert!(s.count >= 2);
+        assert!(s.max_us >= 300);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic_text() {
+        counter("test.metrics.json_b").inc();
+        counter("test.metrics.json_a").inc();
+        let snap = snapshot();
+        assert_eq!(snap.to_json().to_string(), snap.to_json().to_string());
+        let text = snap.render();
+        let pos_a = text.find("test.metrics.json_a").unwrap();
+        let pos_b = text.find("test.metrics.json_b").unwrap();
+        assert!(pos_a < pos_b, "render order must be alphabetical");
+    }
+
+    #[test]
+    fn counter_deltas_subtract() {
+        let c = counter("test.metrics.delta");
+        let before = snapshot();
+        c.add(3);
+        let after = snapshot();
+        assert_eq!(after.counter_deltas(&before).get("test.metrics.delta"), Some(&3));
+    }
+}

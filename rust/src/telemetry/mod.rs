@@ -1,0 +1,39 @@
+//! Unified observability: structured tracing, a typed metrics registry,
+//! leveled logging, and per-phase compile profiling.
+//!
+//! Four layers, all zero-external-dep and **observation-only** — nothing in
+//! this module may change what the compiler produces, only what it reports
+//! (pinned by `rust/tests/telemetry.rs`, which asserts tracing-ON runs are
+//! bit-identical to tracing-OFF):
+//!
+//! * [`trace`] — a process-global tracer with RAII span guards. Disabled
+//!   (the default), a span site costs **one relaxed atomic load** — no
+//!   allocation, no locks, no timestamps. Enabled, spans record into a
+//!   bounded in-memory buffer and export as Chrome trace-event JSON
+//!   (loadable in `chrome://tracing` / Perfetto). Knobs: `--trace FILE`,
+//!   `[run] trace`, or `RDACOST_TRACE`; validate exports with the binary's
+//!   own `trace check FILE` subcommand.
+//! * [`metrics`] — a global registry of named [`metrics::Counter`]s,
+//!   [`metrics::Gauge`]s and [`metrics::Histogram`]s (the histogram reuses
+//!   [`crate::service::LatencyHistogram`]). The scattered per-subsystem
+//!   stats structs (`ServeStats`, `ServiceStats`, cache counters,
+//!   `LearnedCost` counters) publish into it at their existing increment
+//!   sites, so one [`metrics::MetricsSnapshot`] — rendered into
+//!   `ServeSummary` JSON and the `metrics` text block every CLI entry
+//!   point prints — replaces eight ad-hoc schemas.
+//! * [`log`] — leveled log macros (`log_error!` … `log_debug!`) replacing
+//!   raw `eprintln!`: one write syscall per line (worker threads stop
+//!   interleaving torn lines), filtered by `RDACOST_LOG`
+//!   (error|warn|info|debug, default info), with [`log::RateLimited`] for
+//!   high-frequency failure paths.
+//! * [`profile`] — coarse per-phase wall/call accounting for the compile
+//!   pipeline, carried on `CompileReport::phase_profile` (aggregate and
+//!   per-subgraph) and emitted into the BENCH JSONs.
+
+pub mod log;
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use profile::{PhaseBreakdown, PhaseProfile, PhaseStat};
+pub use trace::span;

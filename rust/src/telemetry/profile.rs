@@ -1,0 +1,169 @@
+//! Per-phase wall-time/call-count accounting for the compile pipeline.
+//!
+//! A [`PhaseProfile`] rides on `CompileReport::phase_profile`: one
+//! aggregate [`PhaseBreakdown`] plus one per compiled subgraph, each mapping
+//! a phase name (see the `PHASE_*` constants) to calls and accumulated wall
+//! µs. Collection is always on — a handful of `Instant` reads per subgraph —
+//! and deliberately lives on `CompileReport` (not `SubgraphReport`): the
+//! subgraph report is `PartialEq`-compared by the determinism and cache
+//! suites, and wall time can never participate in those comparisons.
+//!
+//! The JSON schema (`{"aggregate": {phase: {calls, wall_us}},
+//! "subgraphs": [{"name", "phases"}]}`) is pinned by
+//! `rust/tests/telemetry.rs` and emitted into `BENCH_compile.json`, so
+//! per-phase time finally regresses visibly across PRs instead of hiding
+//! inside one end-to-end wall number.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Trunk-level phases (once per compile).
+pub const PHASE_PARTITION: &str = "partition";
+pub const PHASE_CANONICALIZE: &str = "canonicalize";
+/// Subgraph-level phases (once per subgraph compile).
+pub const PHASE_CACHE_LOOKUP: &str = "cache_lookup";
+pub const PHASE_ANNEAL: &str = "anneal";
+pub const PHASE_MEASURE_ROUTE: &str = "measure_route";
+
+/// Wall time and call count for one phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub calls: u64,
+    pub wall_us: u64,
+}
+
+impl PhaseStat {
+    pub fn add(&mut self, wall: Duration) {
+        self.calls += 1;
+        self.wall_us += wall.as_micros().min(u64::MAX as u128) as u64;
+    }
+
+    pub fn merge(&mut self, other: &PhaseStat) {
+        self.calls += other.calls;
+        self.wall_us += other.wall_us;
+    }
+}
+
+/// Phase name → stat, deterministically ordered.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown(pub BTreeMap<&'static str, PhaseStat>);
+
+impl PhaseBreakdown {
+    /// Record one timed call of `phase`.
+    pub fn add(&mut self, phase: &'static str, wall: Duration) {
+        self.0.entry(phase).or_default().add(wall);
+    }
+
+    /// Fold another breakdown into this one.
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        for (phase, stat) in &other.0 {
+            self.0.entry(phase).or_default().merge(stat);
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> PhaseStat {
+        self.0.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (phase, stat) in &self.0 {
+            obj = obj.set(phase, Json::obj().set("calls", stat.calls).set("wall_us", stat.wall_us));
+        }
+        obj
+    }
+}
+
+/// The compile report's phase decomposition: totals across the session plus
+/// the per-subgraph breakdowns in compile order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    pub aggregate: PhaseBreakdown,
+    pub subgraphs: Vec<(String, PhaseBreakdown)>,
+}
+
+impl PhaseProfile {
+    /// Record a trunk-level phase (partition, canonicalize) into the
+    /// aggregate only.
+    pub fn add_trunk(&mut self, phase: &'static str, wall: Duration) {
+        self.aggregate.add(phase, wall);
+    }
+
+    /// Attach one subgraph's breakdown, folding it into the aggregate.
+    pub fn push_subgraph(&mut self, name: &str, breakdown: PhaseBreakdown) {
+        self.aggregate.merge(&breakdown);
+        self.subgraphs.push((name.to_string(), breakdown));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut subs = Vec::with_capacity(self.subgraphs.len());
+        for (name, breakdown) in &self.subgraphs {
+            subs.push(Json::obj().set("name", name.as_str()).set("phases", breakdown.to_json()));
+        }
+        Json::obj().set("aggregate", self.aggregate.to_json()).set("subgraphs", Json::Arr(subs))
+    }
+
+    /// Human-readable block for the compile banner: one line per aggregate
+    /// phase, `phase: calls x, total ms`.
+    pub fn render(&self) -> String {
+        let mut out = String::from("phase profile:\n");
+        for (phase, stat) in &self.aggregate.0 {
+            out.push_str(&format!(
+                "  {phase}: {} call(s), {:.1} ms\n",
+                stat.calls,
+                stat.wall_us as f64 / 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_and_merges() {
+        let mut a = PhaseBreakdown::default();
+        a.add(PHASE_ANNEAL, Duration::from_micros(100));
+        a.add(PHASE_ANNEAL, Duration::from_micros(50));
+        a.add(PHASE_CACHE_LOOKUP, Duration::from_micros(5));
+        assert_eq!(a.get(PHASE_ANNEAL), PhaseStat { calls: 2, wall_us: 150 });
+        let mut b = PhaseBreakdown::default();
+        b.add(PHASE_ANNEAL, Duration::from_micros(25));
+        a.merge(&b);
+        assert_eq!(a.get(PHASE_ANNEAL), PhaseStat { calls: 3, wall_us: 175 });
+        assert_eq!(a.get("missing"), PhaseStat::default());
+    }
+
+    #[test]
+    fn profile_aggregates_subgraphs() {
+        let mut profile = PhaseProfile::default();
+        profile.add_trunk(PHASE_PARTITION, Duration::from_micros(40));
+        let mut sg = PhaseBreakdown::default();
+        sg.add(PHASE_ANNEAL, Duration::from_micros(900));
+        profile.push_subgraph("block0", sg.clone());
+        profile.push_subgraph("block1", sg);
+        assert_eq!(profile.aggregate.get(PHASE_PARTITION).calls, 1);
+        assert_eq!(profile.aggregate.get(PHASE_ANNEAL), PhaseStat { calls: 2, wall_us: 1800 });
+        assert_eq!(profile.subgraphs.len(), 2);
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let mut profile = PhaseProfile::default();
+        profile.add_trunk(PHASE_PARTITION, Duration::from_micros(12));
+        let mut sg = PhaseBreakdown::default();
+        sg.add(PHASE_ANNEAL, Duration::from_micros(7));
+        profile.push_subgraph("sg", sg);
+        let json = profile.to_json();
+        assert_eq!(
+            json.to_string(),
+            r#"{"aggregate":{"anneal":{"calls":1,"wall_us":7},"partition":{"calls":1,"wall_us":12}},"subgraphs":[{"name":"sg","phases":{"anneal":{"calls":1,"wall_us":7}}}]}"#
+        );
+        let text = profile.render();
+        assert!(text.contains("anneal: 1 call(s)"));
+    }
+}

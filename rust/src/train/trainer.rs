@@ -25,6 +25,7 @@ use crate::data::Dataset;
 use crate::gnn::{self, Bucket};
 use crate::metrics;
 use crate::runtime::{Engine, Tensor, TensorSpec, TrainBatch, TrainOptions, TrainState};
+use crate::telemetry::{self, metrics as telem};
 use crate::util::rng::Rng;
 
 use super::checkpoint::ParamStore;
@@ -181,6 +182,10 @@ impl Trainer {
         if indices.is_empty() {
             bail!("Trainer::fit: no training samples (empty index set)");
         }
+        let _fit_span =
+            telemetry::span("fit", "train").map(|s| s.arg("samples", indices.len() as f64));
+        let m_epochs = telem::counter("train.epochs");
+        let m_steps = telem::counter("train.steps");
         let mut rng = Rng::new(self.config.seed ^ 0xF17);
         let mut loss_curve = Vec::with_capacity(self.config.epochs);
 
@@ -222,6 +227,8 @@ impl Trainer {
         let opts = TrainOptions { workers: self.config.workers, fused: self.config.fused };
         let mut order: Vec<usize> = (0..chunks.len()).collect();
         for epoch in 0..self.config.epochs {
+            let _epoch_span =
+                telemetry::span("epoch", "train").map(|s| s.arg("epoch", epoch as f64));
             rng.shuffle(&mut order);
             let mut epoch_loss = 0.0f64;
             for &ci in &order {
@@ -236,10 +243,12 @@ impl Trainer {
                 )?;
                 epoch_loss += loss as f64;
             }
+            m_epochs.inc();
+            m_steps.add(order.len() as u64);
             let mean_loss = epoch_loss / chunks.len() as f64;
             loss_curve.push(mean_loss);
             if self.config.log_every > 0 && (epoch + 1) % self.config.log_every == 0 {
-                eprintln!("epoch {:>3}: train mse {:.5}", epoch + 1, mean_loss);
+                crate::log_info!("epoch {:>3}: train mse {:.5}", epoch + 1, mean_loss);
             }
         }
 
@@ -279,18 +288,23 @@ impl Trainer {
         Ok(preds)
     }
 
-    /// Evaluate RE + Spearman on held-out indices.
+    /// Evaluate RE + Spearman on held-out indices. Errors on an empty index
+    /// set — the metrics are undefined over zero samples.
     pub fn evaluate(&self, dataset: &Dataset, indices: &[usize]) -> Result<EvalReport> {
         let preds = self.predict(dataset, indices)?;
         let truth: Vec<f64> = indices
             .iter()
             .map(|&i| dataset.samples[i].label() as f64)
             .collect();
-        Ok(EvalReport {
-            relative_error: metrics::relative_error(&preds, &truth),
-            spearman: metrics::spearman(&preds, &truth),
-            count: indices.len(),
-        })
+        let relative_error = match metrics::relative_error(&preds, &truth) {
+            Some(re) => re,
+            None => bail!("Trainer::evaluate: no held-out samples (empty index set)"),
+        };
+        let spearman = match metrics::spearman(&preds, &truth) {
+            Some(rho) => rho,
+            None => bail!("Trainer::evaluate: no held-out samples (empty index set)"),
+        };
+        Ok(EvalReport { relative_error, spearman, count: indices.len() })
     }
 }
 

@@ -176,14 +176,14 @@ pub fn compare_to_baseline(current: &Json, path: &str) {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("baseline {path}: {e} (skipping compare)");
+            crate::log_warn!("baseline {path}: {e} (skipping compare)");
             return;
         }
     };
     let base = match Json::parse(&text) {
         Ok(j) => j,
         Err(e) => {
-            eprintln!("baseline {path}: {e} (skipping compare)");
+            crate::log_warn!("baseline {path}: {e} (skipping compare)");
             return;
         }
     };

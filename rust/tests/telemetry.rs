@@ -1,0 +1,289 @@
+//! Telemetry contracts:
+//!
+//! * **observation only** — a compile or training run with tracing ON is
+//!   bit-identical to the same run with tracing OFF (results, loss curves,
+//!   trained parameters);
+//! * **disabled path is free** — span sites exercised while no capture is
+//!   active return `None` and leave the record counter untouched;
+//! * **stable export schema** — the Chrome trace-event JSON has exactly the
+//!   pinned top-level keys, every event uses only the pinned field set, and
+//!   the exporter's own `trace::check` validator accepts it;
+//! * **registry determinism** — compile counter deltas are identical for
+//!   `workers=1` and `workers=2`;
+//! * **lifecycle coverage** — a serve run with served, shed and expired
+//!   requests exports all four `request.*` span names, and the exported
+//!   file passes the `trace check FILE` CLI gate.
+//!
+//! Trace capture and the metrics registry are process-global, so every test
+//! takes `TELEMETRY_LOCK` — the harness threads are serialized here.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use rdacost::arch::{Era, Fabric, FabricConfig};
+use rdacost::compiler::{compile, CompileConfig, CompileReport};
+use rdacost::cost::HeuristicCost;
+use rdacost::data::{generate_family, Dataset, GenConfig};
+use rdacost::dfg::{builders, WorkloadFamily};
+use rdacost::placer::{AnnealParams, Objective, ObjectiveFactory};
+use rdacost::runtime::native_engine;
+use rdacost::service::{CompileRequest, CompileService, ServeConfig, ServeError};
+use rdacost::telemetry::{metrics, trace};
+use rdacost::train::{ParamStore, TrainConfig, Trainer};
+use rdacost::util::cli::Args;
+use rdacost::util::rng::Rng;
+
+static TELEMETRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn quick_cfg(iterations: usize, workers: usize) -> CompileConfig {
+    CompileConfig {
+        era: Era::Past,
+        anneal: AnnealParams { iterations, ..AnnealParams::default() },
+        seed: 0x7E1E,
+        workers,
+        restarts: 1,
+        cache: true,
+        cache_path: None,
+    }
+}
+
+fn two_block_graph() -> rdacost::dfg::Dfg {
+    builders::transformer_public("tele-2blk", 2, 8, 64, 128, 4)
+}
+
+/// Everything except wall time and the phase profile, bit-for-bit.
+fn assert_reports_identical(a: &CompileReport, b: &CompileReport, what: &str) {
+    assert_eq!(a.model, b.model, "{what}: model");
+    assert_eq!(a.total_ii.to_bits(), b.total_ii.to_bits(), "{what}: total_ii");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{what}: throughput");
+    assert_eq!(a.total_latency.to_bits(), b.total_latency.to_bits(), "{what}: total_latency");
+    assert_eq!(a.subgraphs.len(), b.subgraphs.len(), "{what}: subgraph count");
+    for (sa, sb) in a.subgraphs.iter().zip(&b.subgraphs) {
+        assert_eq!(sa, sb, "{what}: subgraph {} diverged", sa.name);
+    }
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_off_for_compile() {
+    let _g = serialized();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = two_block_graph();
+    let heuristic = HeuristicCost::new();
+
+    let off = compile(&graph, &fabric, &heuristic, &quick_cfg(30, 1)).unwrap();
+    trace::begin_capture();
+    let on = compile(&graph, &fabric, &heuristic, &quick_cfg(30, 1)).unwrap();
+    let records = trace::end_capture();
+
+    assert!(!records.is_empty(), "tracing on recorded no spans");
+    assert_reports_identical(&off, &on, "tracing on/off");
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_off_for_training() {
+    let _g = serialized();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = Rng::new(17);
+    let gen_cfg = GenConfig { total: 0, ..GenConfig::default() };
+    let samples = generate_family(WorkloadFamily::Gemm, 12, &fabric, &gen_cfg, &mut rng).unwrap();
+    let dataset = Dataset { samples };
+    let idx: Vec<usize> = (0..dataset.len()).collect();
+    let tc = TrainConfig { epochs: 3, ..TrainConfig::default() };
+
+    let fit_once = || -> (Vec<f64>, ParamStore) {
+        let mut trainer = Trainer::new(native_engine(), tc.clone()).unwrap();
+        let rep = trainer.fit(&dataset, &idx).unwrap();
+        (rep.loss_curve, trainer.param_store())
+    };
+    let (off_curve, off_params) = fit_once();
+    trace::begin_capture();
+    let (on_curve, on_params) = fit_once();
+    let records = trace::end_capture();
+
+    assert!(records.iter().any(|r| r.name == "fit"), "no fit span recorded");
+    assert!(records.iter().any(|r| r.name == "epoch"), "no epoch spans recorded");
+    assert_eq!(off_curve.len(), on_curve.len(), "loss curve length diverged");
+    for (i, (a, b)) in off_curve.iter().zip(&on_curve).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss curve diverged under tracing at epoch {i}");
+    }
+    assert_eq!(off_params, on_params, "trained parameters diverged under tracing");
+}
+
+#[test]
+fn disabled_span_sites_record_nothing() {
+    let _g = serialized();
+    assert!(!trace::enabled(), "no capture should be active");
+    let before = trace::record_count();
+    for _ in 0..100 {
+        let s = trace::span("noop", "test");
+        assert!(s.is_none(), "span() must return None while disabled");
+    }
+    let t = Instant::now();
+    trace::record_complete("noop", "test", t, t, &[("k", 1.0)]);
+    assert_eq!(trace::record_count(), before, "disabled span sites must record nothing");
+}
+
+#[test]
+fn exported_trace_has_pinned_schema_and_passes_check() {
+    let _g = serialized();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = two_block_graph();
+    let heuristic = HeuristicCost::new();
+
+    trace::begin_capture();
+    compile(&graph, &fabric, &heuristic, &quick_cfg(30, 1)).unwrap();
+    let records = trace::end_capture();
+    let doc = trace::export_json(&records);
+
+    let top: Vec<&str> = doc.as_obj().unwrap().keys().map(|s| s.as_str()).collect();
+    assert_eq!(top, vec!["displayTimeUnit", "meta", "traceEvents"], "top-level schema drifted");
+
+    let allowed: BTreeSet<&str> =
+        ["args", "cat", "dur", "name", "ph", "pid", "tid", "ts"].into_iter().collect();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "empty traceEvents for a real compile");
+    let mut last_ts = f64::MIN;
+    for ev in events {
+        for key in ev.as_obj().unwrap().keys() {
+            assert!(allowed.contains(key.as_str()), "unexpected event field {key:?}");
+        }
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "timestamps must be non-decreasing");
+        last_ts = ts;
+    }
+
+    let report = trace::check(&doc).expect("exported trace must pass its own validator");
+    assert_eq!(report.events, events.len());
+    assert!(report.begin_end_pairs > 0, "no nested spans exported");
+    let expected =
+        ["compile", "partition", "canonicalize", "cache_lookup", "anneal", "measure_route"];
+    for name in expected {
+        assert!(report.names.contains_key(name), "trace missing span name {name:?}");
+    }
+}
+
+#[test]
+fn registry_counter_deltas_identical_across_worker_counts() {
+    let _g = serialized();
+    let fabric = Fabric::new(FabricConfig::default());
+    let graph = two_block_graph();
+    let heuristic = HeuristicCost::new();
+
+    let mut compile_with = |workers: usize| {
+        let before = metrics::snapshot();
+        let rep = compile(&graph, &fabric, &heuristic, &quick_cfg(25, workers)).unwrap();
+        (rep, metrics::snapshot().counter_deltas(&before))
+    };
+    let (rep1, d1) = compile_with(1);
+    let (rep2, d2) = compile_with(2);
+
+    assert_reports_identical(&rep1, &rep2, "workers 1 vs 2");
+    for key in [
+        "compile.sessions",
+        "compile.subgraphs",
+        "compile.cache.hits",
+        "compile.cache.misses",
+        "compile.anneal.evaluations",
+    ] {
+        assert_eq!(d1.get(key), d2.get(key), "{key} delta diverged across worker counts");
+    }
+    assert!(d1.get("compile.subgraphs").copied().unwrap_or(0) > 0, "no subgraphs counted");
+    assert!(d1.get("compile.anneal.evaluations").copied().unwrap_or(0) > 0, "no anneal work");
+}
+
+/// Wraps [`HeuristicCost`] behind a gate so the single worker can be held
+/// busy while the test stages a full queue and an expired deadline.
+struct GatedCost {
+    inner: HeuristicCost,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl GatedCost {
+    fn new() -> (Arc<GatedCost>, Arc<(Mutex<bool>, Condvar)>) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let cost = Arc::new(GatedCost { inner: HeuristicCost::new(), gate: Arc::clone(&gate) });
+        (cost, gate)
+    }
+}
+
+impl ObjectiveFactory for GatedCost {
+    fn handle(&self) -> Box<dyn Objective + Send + '_> {
+        let (lock, cvar) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cvar.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.handle()
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-heuristic"
+    }
+}
+
+#[test]
+fn serve_trace_covers_all_request_outcomes_and_passes_cli_gate() {
+    let _g = serialized();
+    trace::begin_capture();
+
+    let fabric = Arc::new(Fabric::new(FabricConfig::default()));
+    let (cost, gate) = GatedCost::new();
+    let cfg = ServeConfig {
+        queue_depth: 1,
+        workers: 1,
+        compile: quick_cfg(30, 1),
+        report_every: None,
+    };
+    let svc = CompileService::start(fabric, cost, cfg).expect("start");
+
+    // Plug the only worker, then fill the queue (depth 1) with a request
+    // whose deadline lapses while it waits; a third submission is shed.
+    let plug = svc.submit(CompileRequest::new(builders::mlp(2, &[8, 8]))).expect("plug admitted");
+    let t0 = Instant::now();
+    while svc.queue_len() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never picked up the plug");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let doomed = svc
+        .submit(CompileRequest::new(builders::mlp(3, &[8, 8])).deadline(Duration::from_millis(1)))
+        .expect("doomed admitted");
+    let shed = svc.submit(CompileRequest::new(builders::mlp(4, &[8, 8])));
+    assert_eq!(shed.err(), Some(ServeError::QueueFull { depth: 1 }));
+
+    std::thread::sleep(Duration::from_millis(30));
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+
+    assert!(plug.wait().expect("plug replied").result.is_ok());
+    let doomed_resp = doomed.wait().expect("doomed replied");
+    assert!(
+        matches!(doomed_resp.result, Err(ServeError::DeadlineExpired { .. })),
+        "expected DeadlineExpired, got {:?}",
+        doomed_resp.result
+    );
+    svc.shutdown().expect("shutdown");
+
+    let records = trace::end_capture();
+    let doc = trace::export_json(&records);
+    let report = trace::check(&doc).expect("serve trace must validate");
+    for name in ["request.queued", "request.served", "request.expired", "request.shed"] {
+        assert!(report.names.contains_key(name), "serve trace missing {name:?}");
+    }
+
+    // The CI gate: write the file, validate it through the CLI subcommand.
+    let path = std::env::temp_dir().join(format!("rdacost-telemetry-{}.json", std::process::id()));
+    let path_str = path.to_str().unwrap().to_string();
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let ok = Args::parse(["trace", "check", path_str.as_str()].map(String::from));
+    rdacost::cli_main(&ok).expect("trace check must accept the exported file");
+    std::fs::write(&path, "{ not json").unwrap();
+    let bad = Args::parse(["trace", "check", path_str.as_str()].map(String::from));
+    assert!(rdacost::cli_main(&bad).is_err(), "trace check must reject corrupt input");
+    std::fs::remove_file(&path).ok();
+}
